@@ -1,0 +1,175 @@
+//! Table 2 ablations (+ our extras) on the tiny GPT:
+//!   2a  salient selection criterion (ℓ1 vs ℓ2)
+//!   2b  grouping granularity (global vs row-wise)
+//!   2c  shared mean (off vs on)
+//!   2d  partition candidates (10/20/40/80)
+//!   extras: scale scope (Block vs RowGlobal), Haar levels (1 vs 2),
+//!           OBQ error propagation via identity-Hessian comparison
+//!
+//!     cargo run --release --example ablations [-- --which 2a] [-- --quick]
+
+use hbllm::calib::CtxMap;
+use hbllm::coordinator::{quantize_model, QuantJobConfig};
+use hbllm::model::Weights;
+use hbllm::pipeline::{EvalScope, Session};
+use hbllm::quant::grouping::Granularity;
+use hbllm::quant::hbllm::{Hbllm, HbllmOpts, ScaleScope, Variant};
+use hbllm::quant::salient::Criterion;
+use hbllm::util::bench::Table;
+use hbllm::util::cli::Args;
+use hbllm::util::fmt_sig;
+
+struct Ctx {
+    session: Session,
+    scope: EvalScope,
+    job: QuantJobConfig,
+}
+
+impl Ctx {
+    /// quantize + eval wiki2s/ptbs PPL (the columns Table 2 reports)
+    fn run(&mut self, label: &str, variant: Variant, f: impl Fn(&mut HbllmOpts)) -> anyhow::Result<[String; 3]> {
+        let mut opts = HbllmOpts::default();
+        f(&mut opts);
+        let q = Hbllm::with_opts(variant, opts);
+        let (qw, _) = self.session.quantize(&q, &self.scope, &self.job)?;
+        let runner = self.session.runner(&qw, false)?;
+        let wiki = hbllm::eval::perplexity(&runner, &self.session.corpus("wiki2s")?, self.scope.ppl_windows)?;
+        let ptb = hbllm::eval::perplexity(&runner, &self.session.corpus("ptbs")?, self.scope.ppl_windows)?;
+        eprintln!("[ablate] {label}: wiki2s {wiki:.3} ptbs {ptb:.3}");
+        Ok([label.to_string(), fmt_sig(wiki, 4), fmt_sig(ptb, 4)])
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let session = Session::open(&Session::default_root())?;
+    let scope = if args.has_flag("quick") {
+        EvalScope { ppl_windows: 12, qa_items: 4, calib_windows: 8 }
+    } else {
+        EvalScope { ppl_windows: 32, qa_items: 8, calib_windows: 16 }
+    };
+    let which = args.get_or("which", "all").to_string();
+    let mut ctx = Ctx { session, scope, job: QuantJobConfig { quiet: true, ..Default::default() } };
+
+    let run_sec = |s: &str| which == "all" || which == s;
+
+    if run_sec("2a") {
+        let mut t = Table::new(&["criterion (method)", "wiki2s", "ptbs"]);
+        for (v, vn) in [(Variant::Row, "row"), (Variant::Col, "col")] {
+            for (c, cn) in [(Criterion::L1, "l1"), (Criterion::L2, "l2")] {
+                t.row(&ctx.run(&format!("{cn} ({vn})"), v, |o| o.criterion = c)?);
+            }
+        }
+        println!("\n== Table 2a: salient column selection criterion ==");
+        t.print();
+    }
+
+    if run_sec("2b") {
+        let mut t = Table::new(&["granularity (method)", "wiki2s", "ptbs"]);
+        for (v, vn) in [(Variant::Row, "row"), (Variant::Col, "col")] {
+            for (g, gn) in [(Granularity::Global, "global"), (Granularity::RowWise, "row-wise")] {
+                t.row(&ctx.run(&format!("{gn} ({vn})"), v, |o| o.granularity = g)?);
+            }
+        }
+        println!("\n== Table 2b: grouping granularity ==");
+        t.print();
+    }
+
+    if run_sec("2c") {
+        let mut t = Table::new(&["shared mean (method)", "wiki2s", "ptbs"]);
+        for (v, vn) in [(Variant::Row, "row"), (Variant::Col, "col")] {
+            for (s, sn) in [(false, "off"), (true, "on")] {
+                t.row(&ctx.run(&format!("{sn} ({vn})"), v, |o| o.shared_mean = s)?);
+            }
+        }
+        println!("\n== Table 2c: intra-band shared mean ==");
+        t.print();
+    }
+
+    if run_sec("2d") {
+        let mut t = Table::new(&["candidates", "wiki2s", "ptbs"]);
+        for n in [10usize, 20, 40, 80] {
+            t.row(&ctx.run(&format!("{n}"), Variant::Row, |o| o.n_candidates = n)?);
+        }
+        println!("\n== Table 2d: partition candidate count (HBLLM-row) ==");
+        t.print();
+    }
+
+    if run_sec("scope") {
+        let mut t = Table::new(&["scale scope", "wiki2s", "ptbs"]);
+        t.row(&ctx.run("RowGlobal (paper bits)", Variant::Row, |o| o.scale_scope = ScaleScope::RowGlobal)?);
+        t.row(&ctx.run("Block (fp16/block)", Variant::Row, |o| o.scale_scope = ScaleScope::Block)?);
+        println!("\n== Extra: scale scope (storage/fidelity trade, DESIGN.md) ==");
+        t.print();
+    }
+
+    if run_sec("levels") {
+        let mut t = Table::new(&["haar levels", "wiki2s", "ptbs"]);
+        for l in [1usize, 2] {
+            t.row(&ctx.run(&format!("{l}"), Variant::Row, |o| o.levels = l)?);
+        }
+        println!("\n== Extra: multi-level Haar (paper future work) ==");
+        t.print();
+    }
+
+    if run_sec("group-encoding") {
+        let mut t = Table::new(&["group encoding", "wiki2s", "ptbs"]);
+        t.row(&ctx.run("deployable (shared order)", Variant::Row, |_| {})?);
+        t.row(&ctx.run("oracle (+1 bit bitmap)", Variant::Row, |o| o.oracle_grouping = true)?);
+        println!("\n== Extra: deployable vs oracle group encoding (DESIGN.md) ==");
+        t.print();
+    }
+
+    if run_sec("salient-k") {
+        let mut t = Table::new(&["salient K", "wiki2s", "ptbs"]);
+        t.row(&ctx.run("searched (paper)", Variant::Row, |_| {})?);
+        for k in [0usize, 4, 16] {
+            t.row(&ctx.run(&format!("fixed {k}"), Variant::Row, |o| {
+                o.search_salient_k = false;
+                o.fixed_k = k;
+            })?);
+        }
+        println!("\n== Extra: salient column count K ==");
+        t.print();
+    }
+
+    if run_sec("calib") {
+        // calibration-sample sweep: rebuild contexts per setting
+        let mut t = Table::new(&["calib windows", "wiki2s", "ptbs"]);
+        for n in [4usize, 8, 16] {
+            let mut fresh = Session::open(&Session::default_root())?;
+            let mut sc = ctx.scope;
+            sc.calib_windows = n;
+            let q = Hbllm::row();
+            let (qw, _) = fresh.quantize(&q, &sc, &ctx.job)?;
+            let runner = fresh.runner(&qw, false)?;
+            let wiki = hbllm::eval::perplexity(&runner, &fresh.corpus("wiki2s")?, sc.ppl_windows)?;
+            let ptb = hbllm::eval::perplexity(&runner, &fresh.corpus("ptbs")?, sc.ppl_windows)?;
+            t.row(&[format!("{n}"), fmt_sig(wiki, 4), fmt_sig(ptb, 4)]);
+            eprintln!("[ablate] calib {n}: {wiki:.3}/{ptb:.3}");
+        }
+        println!("\n== Extra: calibration sample count ==");
+        t.print();
+    }
+
+    if run_sec("obq") {
+        // OBQ on/off: identity Hessian removes both saliency signal and
+        // error propagation
+        let mut t = Table::new(&["hessian", "wiki2s", "ptbs"]);
+        t.row(&ctx.run("calibrated (OBQ)", Variant::Row, |_| {})?);
+        {
+            let q = Hbllm::row();
+            let identity = CtxMap::identity_for(ctx.session.fp_weights());
+            let mut w: Weights = ctx.session.clone_weights();
+            quantize_model(&mut w, &identity, &q, &ctx.job)?;
+            let runner = ctx.session.runner(&w, false)?;
+            let wiki = hbllm::eval::perplexity(&runner, &ctx.session.corpus("wiki2s")?, ctx.scope.ppl_windows)?;
+            let ptb = hbllm::eval::perplexity(&runner, &ctx.session.corpus("ptbs")?, ctx.scope.ppl_windows)?;
+            t.row(&["identity (no calib)".into(), fmt_sig(wiki, 4), fmt_sig(ptb, 4)]);
+        }
+        println!("\n== Extra: calibration / OBQ contribution ==");
+        t.print();
+    }
+
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! END-TO-END driver (the repo's full-stack validation): load the tiny GPT
+//! trained at build time, calibrate on c4s, quantize every linear layer
+//! with HBLLM-row + key baselines, and evaluate perplexity on the three
+//! corpora and accuracy on the 9 QA families — all through the AOT HLO
+//! modules on the PJRT runtime (Python is not involved).
+//!
+//!     make artifacts && cargo run --release --example e2e_quant_eval
+//!
+//! Flags: --quick (smaller eval), --methods a,b,c, --pallas (use the
+//! Pallas-attention HLO entry).
+
+use hbllm::coordinator::scheduler::aggregate_wbits;
+use hbllm::coordinator::QuantJobConfig;
+use hbllm::pipeline::{EvalScope, Session};
+use hbllm::quant;
+use hbllm::util::bench::Table;
+use hbllm::util::cli::Args;
+use hbllm::util::fmt_sig;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let root = Session::default_root();
+    let mut session = Session::open(&root)?;
+    let quick = args.has_flag("quick");
+    let scope = if quick {
+        EvalScope { ppl_windows: 16, qa_items: 8, calib_windows: 8 }
+    } else {
+        EvalScope::default()
+    };
+    let pallas = args.has_flag("pallas");
+    let methods: Vec<String> = args
+        .get("methods")
+        .map(|s| s.split(',').map(String::from).collect())
+        .unwrap_or_else(|| {
+            vec!["billm".into(), "arb-rc".into(), "hbllm-row".into(), "hbllm-col".into()]
+        });
+    let job = QuantJobConfig { quiet: true, ..Default::default() };
+
+    let cfg = session.fp_weights().config.clone();
+    println!(
+        "model: {} ({:.2}M params), eval entry: {}, scope: {} ppl-windows / {} qa-items\n",
+        cfg.name,
+        session.fp_weights().total_elements() as f64 / 1e6,
+        if pallas { "pallas-attention HLO" } else { "jnp-attention HLO" },
+        scope.ppl_windows,
+        scope.qa_items,
+    );
+
+    let t0 = Instant::now();
+    let fp_runner = session.runner(session.fp_weights(), pallas)?;
+    let fp = session.evaluate(&fp_runner, &scope)?;
+    println!("fp32 eval done in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let mut t = Table::new(&[
+        "method", "W-bits", "c4s", "wiki2s", "ptbs", "AvgQA", "relPPL", "quant-s",
+    ]);
+    t.row(&[
+        "fp32".into(),
+        "32.00".into(),
+        fmt_sig(fp.ppl_of("c4s"), 4),
+        fmt_sig(fp.ppl_of("wiki2s"), 4),
+        fmt_sig(fp.ppl_of("ptbs"), 4),
+        format!("{:.1}%", 100.0 * fp.avg_qa),
+        "1.00".into(),
+        "-".into(),
+    ]);
+
+    for name in &methods {
+        let method = quant::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown method {name}"))?;
+        let tq = Instant::now();
+        let (qw, results) = session.quantize(method.as_ref(), &scope, &job)?;
+        let quant_s = tq.elapsed().as_secs_f64();
+        let runner = session.runner(&qw, pallas)?;
+        let rep = session.evaluate(&runner, &scope)?;
+        t.row(&[
+            name.clone(),
+            fmt_sig(aggregate_wbits(&results), 4),
+            fmt_sig(rep.ppl_of("c4s"), 4),
+            fmt_sig(rep.ppl_of("wiki2s"), 4),
+            fmt_sig(rep.ppl_of("ptbs"), 4),
+            format!("{:.1}%", 100.0 * rep.avg_qa),
+            fmt_sig(rep.mean_rel_ppl(&fp), 3),
+            format!("{quant_s:.1}"),
+        ]);
+        println!("{name}: done ({quant_s:.1}s quant)");
+    }
+    println!();
+    t.print();
+    println!("\ntotal {:.1}s — recorded in EXPERIMENTS.md §E2E", t0.elapsed().as_secs_f64());
+    Ok(())
+}

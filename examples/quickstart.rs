@@ -1,0 +1,40 @@
+//! Quickstart: quantize one synthetic LLM-like layer with HBLLM and the
+//! baselines, compare reconstruction error, W-bits and CIQ.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! No artifacts needed — this exercises the pure quantization library.
+
+use hbllm::quant::{by_name, ciq, synth, table_methods};
+use hbllm::util::bench::Table;
+use hbllm::util::fmt_sig;
+
+fn main() {
+    // A 256×512 layer with heavy tails + planted outlier columns, and a
+    // correlated calibration Hessian — the structure real LLM layers show.
+    let (w, ctx) = synth::llm_like_layer(256, 512, 42);
+    println!(
+        "synthetic layer: {}x{} (max |w| = {:.2})\n",
+        w.rows,
+        w.cols,
+        w.max_abs()
+    );
+
+    let mut t = Table::new(&["method", "W-bits@7B", "rel-MSE", "CIQ max", "CIQ mean"]);
+    let w_norm = w.frob_norm().powi(2) / (w.rows * w.cols) as f64;
+    for name in table_methods() {
+        let q = by_name(name).unwrap();
+        let out = q.quantize(&w, &ctx);
+        t.row(&[
+            name.to_string(),
+            fmt_sig(q.avg_wbits(4096, 4096), 4),
+            fmt_sig(out.mse / w_norm, 3),
+            format!("{}", ciq::row_ciq_max(&out.w_hat)),
+            format!("{:.1}", ciq::row_ciq_mean(&out.w_hat)),
+        ]);
+    }
+    t.print();
+    println!("\nLower rel-MSE at ~1.1 bits is the paper's claim: the Haar");
+    println!("transform + structure-aware grouping buys expressiveness (CIQ)");
+    println!("that plain binarization cannot reach.");
+}

@@ -1,0 +1,78 @@
+//! Serving demo: quantize the tiny GPT with HBLLM-row, start the batched
+//! TCP scoring server, fire concurrent clients at it, and report
+//! latency/throughput percentiles.
+//!
+//!     cargo run --release --example serve_quantized [-- --requests 64] [-- --clients 8]
+
+use hbllm::coordinator::{serve, BatcherConfig, QuantJobConfig};
+use hbllm::pipeline::{EvalScope, Session};
+use hbllm::quant;
+use hbllm::util::cli::Args;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let n_requests = args.get_usize("requests", 64);
+    let n_clients = args.get_usize("clients", 8);
+
+    let mut session = Session::open(&Session::default_root())?;
+    let scope = EvalScope { ppl_windows: 4, qa_items: 4, calib_windows: 8 };
+    let method = quant::by_name("hbllm-row").unwrap();
+    eprintln!("quantizing with hbllm-row...");
+    let (qw, _) = session.quantize(method.as_ref(), &scope, &QuantJobConfig { quiet: true, ..Default::default() })?;
+    let runner = session.runner(&qw, false)?;
+
+    // request corpus: lines from wiki2s
+    let corpus = session.corpus("wiki2s")?;
+    let lines: Vec<String> = String::from_utf8_lossy(&corpus.data)
+        .lines()
+        .filter(|l| l.len() > 20)
+        .take(n_requests)
+        .map(String::from)
+        .collect();
+
+    let (listener, addr) = serve::bind("127.0.0.1:0")?;
+    eprintln!("serving on {addr}; {n_clients} clients x {} requests", lines.len());
+
+    let t0 = Instant::now();
+    let clients: Vec<std::thread::JoinHandle<Vec<Duration>>> = (0..n_clients)
+        .map(|c| {
+            let lines = lines.clone();
+            std::thread::spawn(move || {
+                let mut lat = Vec::new();
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut stream = stream;
+                for (i, line) in lines.iter().enumerate() {
+                    if i % n_clients != c {
+                        continue;
+                    }
+                    let t = Instant::now();
+                    stream.write_all(line.as_bytes()).unwrap();
+                    stream.write_all(b"\n").unwrap();
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    assert!(resp.starts_with("ppl "), "bad response {resp}");
+                    lat.push(t.elapsed());
+                }
+                lat
+            })
+        })
+        .collect();
+
+    serve::serve_on(listener, &runner, BatcherConfig::default(), Some(n_clients))?;
+    let mut lats: Vec<Duration> = Vec::new();
+    for c in clients {
+        lats.extend(c.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort();
+    let q = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize].as_secs_f64() * 1e3;
+    println!("\n== serving results (batched scoring of quantized model) ==");
+    println!("requests   : {}", lats.len());
+    println!("throughput : {:.1} req/s", lats.len() as f64 / wall);
+    println!("latency    : p50 {:.1}ms  p90 {:.1}ms  p99 {:.1}ms", q(0.5), q(0.9), q(0.99));
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Appendix B/C analog: *why* the Haar transform helps binarization.
+//!
+//! For each trained linear layer we measure, per row:
+//!   * band energy split (low vs high Haar band),
+//!   * kurtosis before vs after the transform (binarization error of the
+//!     optimal 1-bit fit grows with |kurtosis - 1|; sign quantization is
+//!     exact iff |v - μ| is constant),
+//!   * the optimal single-group 1-bit relative error in weight space vs
+//!     Haar space vs Haar space with the 2-group split.
+//!
+//!     cargo run --release --example spectrum
+
+use hbllm::haar;
+use hbllm::pipeline::Session;
+use hbllm::quant::{binarize, grouping};
+use hbllm::tensor::Matrix;
+use hbllm::util::bench::Table;
+
+fn rel_err_1bit(rows: &Matrix) -> f64 {
+    let mut err = 0f64;
+    let mut sig = 0f64;
+    for i in 0..rows.rows {
+        let (p, e) = binarize::fit_and_error(rows.row(i).iter().copied());
+        let _ = p;
+        err += e;
+        sig += rows.row(i).iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+    }
+    err / sig.max(1e-30)
+}
+
+fn rel_err_grouped(rows: &Matrix) -> f64 {
+    let mut err = 0f64;
+    let mut sig = 0f64;
+    for i in 0..rows.rows {
+        let vals = rows.row(i);
+        let (_, e) = grouping::fit_row_oracle(vals, 40, true);
+        err += e;
+        sig += vals.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+    }
+    err / sig.max(1e-30)
+}
+
+fn kurtosis(vals: &[f32]) -> f64 {
+    let n = vals.len() as f64;
+    let mean = vals.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var = vals.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    if var <= 0.0 {
+        return 0.0;
+    }
+    vals.iter().map(|&v| (v as f64 - mean).powi(4)).sum::<f64>() / n / var.powi(2)
+}
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open(&Session::default_root())?;
+    let w = session.fp_weights();
+    let mut t = Table::new(&[
+        "layer", "lo-energy", "kurt(W)", "kurt(haar)", "err 1bit W",
+        "err 1bit haar", "err 2grp haar",
+    ]);
+    for name in ["l0.wq", "l0.w1", "l2.wo", "l3.w2"] {
+        let mat = w.get(name).as_mat().transpose(); // paper orientation
+        let c = haar::fwd_rows(&mat);
+        let h = c.cols / 2;
+        let lo: f64 = (0..c.rows)
+            .map(|i| c.row(i)[..h].iter().map(|&v| (v as f64).powi(2)).sum::<f64>())
+            .sum();
+        let hi: f64 = (0..c.rows)
+            .map(|i| c.row(i)[h..].iter().map(|&v| (v as f64).powi(2)).sum::<f64>())
+            .sum();
+        t.row(&[
+            name.into(),
+            format!("{:.1}%", 100.0 * lo / (lo + hi)),
+            format!("{:.2}", kurtosis(&mat.data)),
+            format!("{:.2}", kurtosis(&c.data)),
+            format!("{:.3}", rel_err_1bit(&mat)),
+            format!("{:.3}", rel_err_1bit(&c)),
+            format!("{:.3}", rel_err_grouped(&c)),
+        ]);
+    }
+    println!("== Weight spectrum analysis (appendix B/C analog, trained tiny GPT) ==");
+    t.print();
+    println!("\nreading: the 2-group split in the Haar domain (last column) is the");
+    println!("mechanism behind HBLLM's CIQ gain — it must beat both 1-bit columns.");
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Table 1 + Figure 1 reproduction: perplexity (c4s/wiki2s/ptbs), AvgQA and
+//! W-bits for every method the paper tables list, on the tiny GPT.
+//!
+//!     cargo run --release --example table1 [-- --quick] [-- --fig1]
+//!
+//! Paper shape to verify (not absolute numbers — see DESIGN.md
+//! §Substitutions): FullPrecision < HBLLM-row ≲ HBLLM-col < ARB-RC < ARB-X
+//! ≈ BiLLM ≪ PB-LLM on perplexity; FrameQuant competitive but at 2.2 bits;
+//! HBLLM W-bits lowest among 1-bit methods.
+
+use hbllm::coordinator::scheduler::aggregate_wbits;
+use hbllm::coordinator::QuantJobConfig;
+use hbllm::pipeline::{EvalScope, Session};
+use hbllm::quant;
+use hbllm::util::bench::Table;
+use hbllm::util::cli::Args;
+use hbllm::util::fmt_sig;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let mut session = Session::open(&Session::default_root())?;
+    let scope = if args.has_flag("quick") {
+        EvalScope { ppl_windows: 16, qa_items: 8, calib_windows: 8 }
+    } else {
+        EvalScope::default()
+    };
+    let job = QuantJobConfig { quiet: true, ..Default::default() };
+
+    let fp_runner = session.runner(session.fp_weights(), false)?;
+    let fp = session.evaluate(&fp_runner, &scope)?;
+
+    let mut t1 = Table::new(&["method", "W-bits", "W-bits@7B", "c4s", "wiki2s", "ptbs", "AvgQA"]);
+    t1.row(&[
+        "FullPrecision".into(),
+        "32.00".into(),
+        "16.00".into(),
+        fmt_sig(fp.ppl_of("c4s"), 4),
+        fmt_sig(fp.ppl_of("wiki2s"), 4),
+        fmt_sig(fp.ppl_of("ptbs"), 4),
+        format!("{:.2}%", 100.0 * fp.avg_qa),
+    ]);
+
+    let mut fig1: Vec<(String, f64)> = Vec::new();
+    for name in quant::table_methods() {
+        let method = quant::by_name(name).unwrap();
+        let (qw, results) = session.quantize(method.as_ref(), &scope, &job)?;
+        let runner = session.runner(&qw, false)?;
+        let rep = session.evaluate(&runner, &scope)?;
+        t1.row(&[
+            name.into(),
+            fmt_sig(aggregate_wbits(&results), 4),
+            fmt_sig(method.avg_wbits(4096, 4096), 4),
+            fmt_sig(rep.ppl_of("c4s"), 4),
+            fmt_sig(rep.ppl_of("wiki2s"), 4),
+            fmt_sig(rep.ppl_of("ptbs"), 4),
+            format!("{:.2}%", 100.0 * rep.avg_qa),
+        ]);
+        fig1.push((name.to_string(), rep.mean_rel_ppl(&fp)));
+        eprintln!("[table1] {name} done");
+    }
+
+    println!("\n== Table 1 (tiny GPT; W-bits@7B = storage model at LLaMA-7B dims) ==");
+    t1.print();
+
+    println!("\n== Figure 1: average relative perplexity (normalized to FP) ==");
+    let max_rel = fig1.iter().map(|(_, r)| *r).fold(1.0f64, f64::max);
+    let mut tf = Table::new(&["method", "rel-PPL", "bar"]);
+    for (name, rel) in &fig1 {
+        let width = ((rel / max_rel) * 40.0).round() as usize;
+        tf.row(&[name.clone(), fmt_sig(*rel, 3), "#".repeat(width.max(1))]);
+    }
+    tf.print();
+    Ok(())
+}

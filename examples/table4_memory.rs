@@ -1,0 +1,75 @@
+//! Table 4 reproduction: model storage per method — measured on the tiny
+//! GPT and extrapolated to LLaMA-7B/13B dims through the same storage model.
+//!
+//!     cargo run --release --example table4_memory
+
+use hbllm::pipeline::Session;
+use hbllm::quant::{self, storage};
+use hbllm::util::bench::Table;
+
+/// The transformer-block matrix dims of a LLaMA-style model.
+fn llama_dims(d: usize, dff: usize, layers: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for _ in 0..layers {
+        out.extend([(d, d), (d, d), (d, d), (d, d), (dff, d), (d, dff)]);
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    // (name, dims, fp16-side params: embeddings + norms)
+    let models: Vec<(&str, Vec<(usize, usize)>, usize)> = vec![
+        ("LLaMA-7B", llama_dims(4096, 11008, 32), 32000 * 4096 * 2 + 70 * 4096),
+        ("LLaMA-13B", llama_dims(5120, 13824, 40), 32000 * 5120 * 2 + 90 * 5120),
+    ];
+    // our tiny model, if artifacts exist
+    let tiny = Session::open(&Session::default_root()).ok().map(|s| {
+        let cfg = &s.fp_weights().config;
+        let dims: Vec<(usize, usize)> = cfg
+            .linear_names()
+            .iter()
+            .map(|n| {
+                let m = s.fp_weights().get(n).as_mat();
+                (m.cols, m.rows) // paper orientation
+            })
+            .collect();
+        let linear_elems: usize = dims.iter().map(|(a, b)| a * b).sum();
+        let fp_side = s.fp_weights().total_elements() - linear_elems;
+        ("tiny-GPT".to_string(), dims, fp_side)
+    });
+
+    let mut t = Table::new(&["method", "tiny-GPT", "LLaMA-7B", "LLaMA-13B"]);
+    let mut methods: Vec<(&str, Box<dyn Fn(usize, usize) -> f64>)> = vec![
+        ("FP16", Box::new(|_, _| 16.0)),
+        ("BiLLM", Box::new(|n, m| storage::billm_bits(n, m, 128).per_weight(n, m))),
+        ("ARB-LLM_X", Box::new(|n, m| storage::arb_x_bits(n, m, 128).per_weight(n, m))),
+        ("ARB-LLM_RC", Box::new(|n, m| storage::arb_rc_bits(n, m, 128).per_weight(n, m))),
+        ("PB-LLM", Box::new(|n, m| storage::pbllm_bits(n, m).per_weight(n, m))),
+        ("FrameQuant", Box::new(|n, m| storage::framequant_bits(n, m, 1.1).per_weight(n, m))),
+    ];
+    for name in ["hbllm-row", "hbllm-col"] {
+        let q = quant::by_name(name).unwrap();
+        let label: &'static str = if name == "hbllm-row" { "HBLLM-row" } else { "HBLLM-col" };
+        methods.push((label, Box::new(move |n, m| q.avg_wbits(n, m))));
+    }
+
+    for (name, wbits) in &methods {
+        let mut row = vec![name.to_string()];
+        match &tiny {
+            Some((_, dims, fp_side)) => {
+                let gb = storage::model_storage_gb(dims, |n, m| wbits(n, m), *fp_side);
+                row.push(format!("{:.2}MB", gb * 1000.0));
+            }
+            None => row.push("-".into()),
+        }
+        for (_, dims, fp_side) in &models {
+            let gb = storage::model_storage_gb(dims, |n, m| wbits(n, m), *fp_side);
+            row.push(format!("{gb:.2}GB"));
+        }
+        t.row(&row);
+    }
+    println!("== Table 4: model storage (storage model; fp16 embeddings/norms included) ==");
+    t.print();
+    println!("\npaper shape: HBLLM-col < ARB-RC ≈ BiLLM ≈ PB-LLM < HBLLM-row < ARB-X ≪ FrameQuant ≪ FP16");
+    Ok(())
+}

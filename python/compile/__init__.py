@@ -1,0 +1,1 @@
+# HBLLM build path (L1 kernels + L2 model + AOT).

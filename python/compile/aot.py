@@ -1,0 +1,210 @@
+"""AOT build path: data -> train -> export weights + HLO-text artifacts.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Everything is cached: re-running is a no-op unless inputs changed
+(`make artifacts` guards with a stamp file as well).
+
+Outputs under --out-dir (default ../artifacts):
+  data/{train,c4s,wiki2s,ptbs}.bin        byte corpora
+  tasks/<family>.bin                      QA task files (9 families)
+  weights/model_tiny.{bin,json}           trained f32 weights + metadata
+  weights/ckpt_tiny.npz                   training checkpoint (build cache)
+  hlo/nll_tiny.hlo.txt                    NLL eval entry (Pallas attention)
+  hlo/nll_tiny_ref.hlo.txt                NLL eval entry (jnp attention)
+  hlo/logits_tiny.hlo.txt                 full-logits entry (generation)
+  hlo/binary_gemm.hlo.txt                 fused 1-bit dequant matmul kernel
+  hlo/haar_fwd.hlo.txt, haar_roundtrip.hlo.txt
+  manifest.json, train_log_tiny.txt
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .common import CONFIGS, EVAL_BATCH, ModelConfig
+from . import datagen
+from .kernels.binary_linear import binary_linear
+from .kernels.haar import haar_fwd, haar_inv
+from .model import flatten_params, make_logits_fn, make_nll_fn
+from .train import train
+
+CORPora_SIZES = {"train": 1_000_000, "c4s": 65_536, "wiki2s": 65_536, "ptbs": 65_536}
+TASK_ITEMS = 40
+TRAIN_STEPS = int(os.environ.get("HBLLM_TRAIN_STEPS", "300"))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_hlo(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def build_data(out, log):
+    os.makedirs(f"{out}/data", exist_ok=True)
+    os.makedirs(f"{out}/tasks", exist_ok=True)
+    lang = datagen.Language()
+    for kind, size in CORPora_SIZES.items():
+        path = f"{out}/data/{kind}.bin"
+        if not os.path.exists(path):
+            data = datagen.gen_corpus(lang, kind, size)
+            with open(path, "wb") as f:
+                f.write(data)
+            log(f"data/{kind}.bin: {size} bytes")
+    for fam in datagen.TASK_FAMILIES:
+        path = f"{out}/tasks/{fam}.bin"
+        if not os.path.exists(path):
+            items = datagen.make_task_items(lang, fam, TASK_ITEMS)
+            datagen.write_task_file(path, items)
+            log(f"tasks/{fam}.bin: {len(items)} items")
+
+
+def build_weights(out, cfg: ModelConfig, log):
+    os.makedirs(f"{out}/weights", exist_ok=True)
+    ckpt = f"{out}/weights/ckpt_{cfg.name}.npz"
+    if os.path.exists(ckpt):
+        raw = np.load(ckpt)
+        params = {k: jnp.asarray(raw[k]) for k in raw.files}
+        log(f"loaded cached checkpoint {ckpt}")
+    else:
+        with open(f"{out}/data/train.bin", "rb") as f:
+            data = f.read()
+        lines = []
+
+        def tee(msg):
+            lines.append(msg)
+            log(msg)
+
+        t0 = time.time()
+        params, loss_log = train(cfg, data, steps=TRAIN_STEPS, log_fn=tee)
+        tee(f"trained {cfg.name} ({cfg.n_params()/1e6:.2f}M params) in {time.time()-t0:.1f}s")
+        np.savez(ckpt, **{k: np.asarray(v) for k, v in params.items()})
+        with open(f"{out}/train_log_{cfg.name}.txt", "w") as f:
+            f.write("\n".join(lines) + "\n")
+
+    # Raw f32 little-endian in canonical order + JSON metadata.
+    meta = {"config": cfg.to_json_dict(), "dtype": "f32", "tensors": {}}
+    offset = 0
+    with open(f"{out}/weights/model_{cfg.name}.bin", "wb") as f:
+        for name in cfg.param_order():
+            arr = np.asarray(params[name], dtype="<f4")
+            assert arr.shape == cfg.param_shape(name)
+            meta["tensors"][name] = {"offset": offset, "shape": list(arr.shape)}
+            f.write(arr.tobytes())
+            offset += arr.size
+    meta["total_elements"] = offset
+    with open(f"{out}/weights/model_{cfg.name}.json", "w") as f:
+        json.dump(meta, f, indent=1)
+    log(f"weights/model_{cfg.name}.bin: {offset} f32 elements")
+    return params
+
+
+def build_hlo(out, cfg: ModelConfig, params, log):
+    os.makedirs(f"{out}/hlo", exist_ok=True)
+    tok_spec = jax.ShapeDtypeStruct((EVAL_BATCH, cfg.seq_len), jnp.int32)
+    param_specs = [
+        jax.ShapeDtypeStruct(cfg.param_shape(n), jnp.float32) for n in cfg.param_order()
+    ]
+
+    exports = [
+        (f"nll_{cfg.name}.hlo.txt", make_nll_fn(cfg, use_pallas=True), (tok_spec, *param_specs)),
+        (f"nll_{cfg.name}_ref.hlo.txt", make_nll_fn(cfg, use_pallas=False), (tok_spec, *param_specs)),
+        (f"logits_{cfg.name}.hlo.txt", make_logits_fn(cfg, use_pallas=False), (tok_spec, *param_specs)),
+    ]
+    for fname, fn, args in exports:
+        path = f"{out}/hlo/{fname}"
+        if not os.path.exists(path):
+            n = export_hlo(fn, args, path)
+            log(f"hlo/{fname}: {n} chars")
+
+    # Kernel-level artifacts (integration-tested from Rust).
+    n, m, b = 512, 512, 8
+    kpath = f"{out}/hlo/binary_gemm.hlo.txt"
+    if not os.path.exists(kpath):
+        export_hlo(
+            lambda s, a, u, x: (binary_linear(s, a, u, x),),
+            (
+                jax.ShapeDtypeStruct((n, m), jnp.float32),
+                jax.ShapeDtypeStruct((n, 2), jnp.float32),
+                jax.ShapeDtypeStruct((n, 2), jnp.float32),
+                jax.ShapeDtypeStruct((m, b), jnp.float32),
+            ),
+            kpath,
+        )
+        log("hlo/binary_gemm.hlo.txt")
+    hpath = f"{out}/hlo/haar_fwd.hlo.txt"
+    if not os.path.exists(hpath):
+        export_hlo(
+            lambda x: (haar_fwd(x),),
+            (jax.ShapeDtypeStruct((256, 512), jnp.float32),),
+            hpath,
+        )
+        log("hlo/haar_fwd.hlo.txt")
+    rpath = f"{out}/hlo/haar_roundtrip.hlo.txt"
+    if not os.path.exists(rpath):
+        export_hlo(
+            lambda x: (haar_inv(haar_fwd(x)),),
+            (jax.ShapeDtypeStruct((256, 512), jnp.float32),),
+            rpath,
+        )
+        log("hlo/haar_roundtrip.hlo.txt")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--config", default="tiny", choices=list(CONFIGS))
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    cfg = CONFIGS[args.config]
+
+    def log(msg):
+        print(f"[aot] {msg}", flush=True)
+
+    t0 = time.time()
+    build_data(out, log)
+    params = build_weights(out, cfg, log)
+    build_hlo(out, cfg, params, log)
+
+    manifest = {
+        "config": cfg.name,
+        "eval_batch": EVAL_BATCH,
+        "corpora": list(CORPora_SIZES),
+        "task_families": datagen.TASK_FAMILIES,
+        "entry_points": {
+            "nll": f"hlo/nll_{cfg.name}.hlo.txt",
+            "nll_ref": f"hlo/nll_{cfg.name}_ref.hlo.txt",
+            "logits": f"hlo/logits_{cfg.name}.hlo.txt",
+            "binary_gemm": "hlo/binary_gemm.hlo.txt",
+            "haar_fwd": "hlo/haar_fwd.hlo.txt",
+            "haar_roundtrip": "hlo/haar_roundtrip.hlo.txt",
+        },
+        "weights": {cfg.name: f"weights/model_{cfg.name}.json"},
+    }
+    with open(f"{out}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Shared configuration for the HBLLM build path (L1/L2).
+
+Everything here is build-time only: the Rust runtime reads the exported
+`model_<cfg>.json` metadata instead of importing this module.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Byte-level GPT configuration.
+
+    The architecture is deliberately minimal and exactly replicated by the
+    pure-Rust forward in `rust/src/model/` (used for calibration capture):
+    learned token+position embeddings, pre-RMSNorm blocks, causal MHA,
+    tanh-GELU MLP, untied unembedding, no biases.
+    """
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    vocab: int = 256  # byte-level
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_order(self):
+        """Canonical flat ordering of parameters.
+
+        This order defines the positional argument list of every exported
+        HLO entry point and the layout of the weight binary. The Rust side
+        reads the same list from model_<cfg>.json.
+        """
+        names = ["tok_emb", "pos_emb"]
+        for i in range(self.n_layers):
+            names += [
+                f"l{i}.ln1",
+                f"l{i}.wq",
+                f"l{i}.wk",
+                f"l{i}.wv",
+                f"l{i}.wo",
+                f"l{i}.ln2",
+                f"l{i}.w1",
+                f"l{i}.w2",
+            ]
+        names += ["ln_f", "unemb"]
+        return names
+
+    def param_shape(self, name: str):
+        d, f, v, s = self.d_model, self.d_ff, self.vocab, self.seq_len
+        if name == "tok_emb":
+            return (v, d)
+        if name == "pos_emb":
+            return (s, d)
+        if name == "unemb":
+            return (d, v)
+        if name == "ln_f":
+            return (d,)
+        base = name.split(".")[-1]
+        return {
+            "ln1": (d,),
+            "ln2": (d,),
+            "wq": (d, d),
+            "wk": (d, d),
+            "wv": (d, d),
+            "wo": (d, d),
+            "w1": (d, f),
+            "w2": (f, d),
+        }[base]
+
+    def n_params(self) -> int:
+        total = 0
+        for n in self.param_order():
+            c = 1
+            for dim in self.param_shape(n):
+                c *= dim
+            total += c
+        return total
+
+    def to_json_dict(self):
+        d = asdict(self)
+        d["d_head"] = self.d_head
+        d["param_order"] = self.param_order()
+        d["param_shapes"] = {n: list(self.param_shape(n)) for n in self.param_order()}
+        return d
+
+
+CONFIGS = {
+    # trained at build time; drives all e2e experiments
+    "tiny": ModelConfig("tiny", d_model=256, n_layers=4, n_heads=4, d_ff=1024, seq_len=128),
+    # larger sweep points for Table 3/4 scaling (quantized but not trained by default)
+    "small": ModelConfig("small", d_model=384, n_layers=6, n_heads=6, d_ff=1536, seq_len=128),
+    "base": ModelConfig("base", d_model=512, n_layers=8, n_heads=8, d_ff=2048, seq_len=128),
+    # micro config for fast unit tests only
+    "micro": ModelConfig("micro", d_model=32, n_layers=1, n_heads=2, d_ff=64, seq_len=16),
+}
+
+# Batch size baked into the exported eval entry points. The Rust evaluator
+# pads the final partial batch.
+EVAL_BATCH = 8
+
+# Calibration / data-generation seeds (deterministic build).
+DATA_SEED = 20250711
+TRAIN_SEED = 7

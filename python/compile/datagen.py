@@ -1,0 +1,288 @@
+"""Synthetic language, corpora and QA tasks (stand-ins for C4/Wiki2/PTB + the
+9 zero-shot benchmarks; see DESIGN.md §Substitutions).
+
+One Zipfian vocabulary with part-of-speech structure and a small template
+grammar generates all text. Three eval corpora shift the mixture the way the
+paper's three perplexity sets differ in register:
+
+  * c4s    — diverse templates, noisy punctuation, web-ish.
+  * wiki2s — longer declarative sentences, headings, lower temperature.
+  * ptbs   — short sentences, frequent <unk> substitution.
+
+QA task families mirror the mechanics of the paper's 9 benchmarks: every item
+is (prompt, options, correct-index) and is scored by comparing option NLLs,
+exactly like lm-eval-harness does for multiple-choice tasks. Correct options
+continue the synthetic grammar; distractors violate it in family-specific
+ways (shuffled words, wrong word class, inconsistent entity, corrupted
+endings, rare-word swaps, ...).
+
+Binary task format (read by rust/src/eval/tasks.rs):
+  file  := header item*
+  header:= u32 magic 0x48425154 ("HBQT"), u32 n_items
+  item  := u16 prompt_len, prompt bytes,
+           u8 n_options, u8 correct_idx,
+           n_options * (u16 len, bytes)
+"""
+
+import random
+import struct
+
+from .common import DATA_SEED
+
+TASK_MAGIC = 0x48425154
+
+CONSONANTS = "bcdfghjklmnpqrstvwz"
+VOWELS = "aeiou"
+
+
+def _make_word(rng, syllables):
+    return "".join(rng.choice(CONSONANTS) + rng.choice(VOWELS) for _ in range(syllables))
+
+
+class Language:
+    """Deterministic synthetic language: Zipf vocab split into POS classes."""
+
+    def __init__(self, seed=DATA_SEED, vocab_size=1200):
+        rng = random.Random(seed)
+        words = []
+        seen = set()
+        while len(words) < vocab_size:
+            w = _make_word(rng, rng.randint(1, 4))
+            if w not in seen:
+                seen.add(w)
+                words.append(w)
+        self.rng_seed = seed
+        # POS classes: determiners(5), nouns(45%), verbs(25%), adjectives(20%), adverbs(rest)
+        self.det = ["ta", "ku", "mo", "se", "ri"]
+        n = vocab_size
+        self.nouns = words[: int(0.45 * n)]
+        self.verbs = words[int(0.45 * n) : int(0.70 * n)]
+        self.adjs = words[int(0.70 * n) : int(0.90 * n)]
+        self.advs = words[int(0.90 * n) :]
+
+    def _zipf(self, rng, pool, temp=1.0):
+        # Zipf-like sampling: rank r with p ~ 1/r^temp via inverse CDF trick.
+        u = rng.random()
+        r = int(len(pool) * (u ** (1.0 + temp)))
+        return pool[min(r, len(pool) - 1)]
+
+    def noun_phrase(self, rng, temp=1.0):
+        parts = [rng.choice(self.det)]
+        if rng.random() < 0.55:
+            parts.append(self._zipf(rng, self.adjs, temp))
+        parts.append(self._zipf(rng, self.nouns, temp))
+        return parts
+
+    def verb_phrase(self, rng, temp=1.0):
+        parts = [self._zipf(rng, self.verbs, temp)]
+        if rng.random() < 0.35:
+            parts.append(self._zipf(rng, self.advs, temp))
+        return parts
+
+    def sentence(self, rng, temp=1.0, min_clauses=1, max_clauses=2):
+        words = []
+        for c in range(rng.randint(min_clauses, max_clauses)):
+            if c:
+                words.append(rng.choice(["and", "but", "so"]))
+            words += self.noun_phrase(rng, temp)
+            words += self.verb_phrase(rng, temp)
+            words += self.noun_phrase(rng, temp)
+        return words
+
+    def paragraph(self, rng, n_sents, temp=1.0, short=False):
+        out = []
+        for _ in range(n_sents):
+            ws = self.sentence(rng, temp, 1, 1 if short else 3)
+            out.append(" ".join(ws) + ".")
+        return " ".join(out)
+
+
+def gen_corpus(lang: Language, kind: str, n_bytes: int, seed_offset=0) -> bytes:
+    rng = random.Random(DATA_SEED + 1000 + seed_offset + sum(map(ord, kind)))
+    chunks = []
+    size = 0
+    while size < n_bytes:
+        k = rng.choice(["c4s", "wiki2s", "ptbs"]) if kind == "train" else kind
+        if k == "c4s":
+            text = lang.paragraph(rng, rng.randint(2, 6), temp=1.0)
+            if rng.random() < 0.3:
+                text = text.replace(".", rng.choice([".", "!", "?", "..."]), 1)
+            text += "\n"
+        elif k == "wiki2s":
+            if rng.random() < 0.12:
+                text = "= " + " ".join(lang.noun_phrase(rng, 0.6)) + " =\n"
+            else:
+                text = lang.paragraph(rng, rng.randint(4, 8), temp=0.6) + "\n"
+        elif k == "ptbs":
+            text = lang.paragraph(rng, rng.randint(1, 3), temp=0.9, short=True)
+            ws = text.split(" ")
+            for i in range(len(ws)):
+                if rng.random() < 0.04:
+                    ws[i] = "<unk>"
+            text = " ".join(ws) + "\n"
+        else:
+            raise ValueError(kind)
+        b = text.encode("utf-8")
+        chunks.append(b)
+        size += len(b)
+    return b"".join(chunks)[:n_bytes]
+
+
+# ---------------------------------------------------------------------------
+# QA task families (9, mirroring the paper's benchmark list)
+# ---------------------------------------------------------------------------
+
+def _corrupt_shuffle(rng, words):
+    w = list(words)
+    while len(w) > 1:
+        rng.shuffle(w)
+        if w != list(words):
+            break
+    return w
+
+
+def _item_continuation(lang, rng, n_distract, corrupt):
+    """Prompt = sentence prefix; correct = grammatical continuation."""
+    ws = lang.sentence(rng, 1.0, 2, 3)
+    cut = rng.randint(len(ws) // 3, 2 * len(ws) // 3)
+    prompt = " ".join(ws[:cut]) + " "
+    good = " ".join(ws[cut:]) + "."
+    options = [good]
+    for _ in range(n_distract):
+        options.append(corrupt(rng, ws[cut:]))
+    order = list(range(len(options)))
+    rng.shuffle(order)
+    correct = order.index(0)
+    return prompt, [options[i] for i in order], correct
+
+
+def make_task_items(lang: Language, family: str, n_items: int, seed_offset=0):
+    rng = random.Random(DATA_SEED + 2000 + seed_offset + sum(map(ord, family)))
+    items = []
+    for _ in range(n_items):
+        if family == "piqa_s":
+            # 2 options; distractor = word-shuffled continuation
+            items.append(_item_continuation(
+                lang, rng, 1, lambda r, w: " ".join(_corrupt_shuffle(r, w)) + "."))
+        elif family == "copa_s":
+            # cause->effect: correct effect reuses the subject noun
+            np1 = lang.noun_phrase(rng)
+            vp = lang.verb_phrase(rng)
+            obj = lang.noun_phrase(rng)
+            prompt = " ".join(np1 + vp + obj) + " so "
+            good = " ".join(np1 + lang.verb_phrase(rng)) + "."
+            bad = " ".join(lang.noun_phrase(rng) + [rng.choice(lang.nouns)]) + "."
+            opts = [good, bad]
+            order = [0, 1] if rng.random() < 0.5 else [1, 0]
+            items.append((prompt, [opts[i] for i in order], order.index(0)))
+        elif family == "boolq_s":
+            # statement-repetition consistency: after seeing a sentence and
+            # its verbatim restart, the true continuation is the original
+            # tail; the distractor is the tail of an unrelated sentence
+            ws = lang.sentence(rng, 1.0, 1, 1)
+            other = lang.sentence(rng, 1.0, 1, 1)
+            cut = max(1, len(ws) // 2)
+            prompt = " ".join(ws) + ". " + " ".join(ws[:cut]) + " "
+            good = " ".join(ws[cut:]) + "."
+            bad = " ".join(other[cut:] if len(other) > cut else other) + "."
+            opts = [good, bad]
+            order = [0, 1] if rng.random() < 0.5 else [1, 0]
+            items.append((prompt, [opts[i] for i in order], order.index(0)))
+        elif family == "winogrande_s":
+            # entity consistency: correct continuation repeats the earlier noun
+            noun = rng.choice(lang.nouns)
+            other = rng.choice(lang.nouns)
+            det = rng.choice(lang.det)
+            vp1 = lang.verb_phrase(rng)
+            vp2 = lang.verb_phrase(rng)
+            prompt = f"{det} {noun} {' '.join(vp1)} and {det} "
+            items.append((prompt, [f"{noun} {' '.join(vp2)}.", f"{other} {' '.join(vp2)}."], 0))
+        elif family == "arc_e_s":
+            # word-class agreement in the verb slot: a common verb vs a
+            # common noun (frequency-matched so byte statistics don't give
+            # the answer away — only positional grammar does)
+            np = lang.noun_phrase(rng)
+            prompt = " ".join(np) + " "
+            good = rng.choice(lang.verbs[:200])
+            bad = rng.choice(lang.nouns[:200])
+            opts = [good + ".", bad + "."]
+            order = [0, 1] if rng.random() < 0.5 else [1, 0]
+            items.append((prompt, [opts[i] for i in order], order.index(0)))
+        elif family == "arc_c_s":
+            # harder: common verb vs rare verb (frequency sensitivity)
+            np = lang.noun_phrase(rng)
+            prompt = " ".join(np) + " "
+            good = lang.verbs[rng.randint(0, 30)]
+            bad = lang.verbs[rng.randint(len(lang.verbs) - 30, len(lang.verbs) - 1)]
+            opts = [good + ".", bad + "."]
+            order = [0, 1] if rng.random() < 0.5 else [1, 0]
+            items.append((prompt, [opts[i] for i in order], order.index(0)))
+        elif family == "hellaswag_s":
+            # 4 options: 1 good + 3 shuffled corruptions
+            items.append(_item_continuation(
+                lang, rng, 3, lambda r, w: " ".join(_corrupt_shuffle(r, w)) + "."))
+        elif family == "obqa_s":
+            # 4 options: good, shuffled, wrong-class, rare-word
+            ws = lang.sentence(rng, 1.0, 2, 2)
+            cut = len(ws) // 2
+            prompt = " ".join(ws[:cut]) + " "
+            good = " ".join(ws[cut:]) + "."
+            shuf = " ".join(_corrupt_shuffle(rng, ws[cut:])) + "."
+            other = lang.sentence(rng, 1.0, 2, 2)
+            alt = " ".join(_corrupt_shuffle(rng, other[: len(ws) - cut])) + "."
+            rare = " ".join(lang.nouns[rng.randint(len(lang.nouns) - 40, len(lang.nouns) - 1)]
+                            for _ in ws[cut:]) + "."
+            opts = [good, shuf, alt, rare]
+            order = list(range(4))
+            rng.shuffle(order)
+            items.append((prompt, [opts[i] for i in order], order.index(0)))
+        elif family == "lambada_s":
+            # long context; predict the final word (true vs random noun)
+            para = lang.paragraph(rng, 3, temp=0.8)
+            ws = lang.sentence(rng, 0.8, 1, 1)
+            prompt = para + " " + " ".join(ws[:-1]) + " "
+            good = ws[-1] + "."
+            bad = rng.choice(lang.nouns) + "."
+            opts = [good, bad]
+            order = [0, 1] if rng.random() < 0.5 else [1, 0]
+            items.append((prompt, [opts[i] for i in order], order.index(0)))
+        else:
+            raise ValueError(family)
+    return items
+
+
+TASK_FAMILIES = [
+    "piqa_s", "boolq_s", "obqa_s", "winogrande_s", "arc_e_s",
+    "arc_c_s", "hellaswag_s", "copa_s", "lambada_s",
+]
+
+
+def write_task_file(path, items):
+    with open(path, "wb") as f:
+        f.write(struct.pack("<II", TASK_MAGIC, len(items)))
+        for prompt, options, correct in items:
+            pb = prompt.encode("utf-8")
+            f.write(struct.pack("<H", len(pb)))
+            f.write(pb)
+            f.write(struct.pack("<BB", len(options), correct))
+            for o in options:
+                ob = o.encode("utf-8")
+                f.write(struct.pack("<H", len(ob)))
+                f.write(ob)
+
+
+def read_task_file(path):
+    with open(path, "rb") as f:
+        magic, n = struct.unpack("<II", f.read(8))
+        assert magic == TASK_MAGIC
+        items = []
+        for _ in range(n):
+            (plen,) = struct.unpack("<H", f.read(2))
+            prompt = f.read(plen).decode("utf-8")
+            nopt, correct = struct.unpack("<BB", f.read(2))
+            opts = []
+            for _ in range(nopt):
+                (olen,) = struct.unpack("<H", f.read(2))
+                opts.append(f.read(olen).decode("utf-8"))
+            items.append((prompt, opts, correct))
+    return items

@@ -1,0 +1,5 @@
+# L1: Pallas kernels for HBLLM compute hot-spots.
+from . import ref  # noqa: F401
+from .attention import attention  # noqa: F401
+from .binary_linear import binary_linear  # noqa: F401
+from .haar import haar_fwd, haar_fwd_cols, haar_inv, haar_inv_cols  # noqa: F401

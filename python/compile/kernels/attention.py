@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: blocked causal attention (used by the L2 forward).
+
+Flash-style query blocking with the full K/V panel resident per head: at the
+sequence lengths this model targets (<=128) K/V fit comfortably in VMEM, so
+the online-softmax rescaling loop is unnecessary — each grid step computes an
+exact softmax over the causally-masked logits of one query block. Grid is
+(heads, q_blocks); numerics match `ref.attention_ref` to f32 tolerance.
+
+interpret=True (CPU PJRT); lowers to plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 64
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, seq: int):
+    qi = pl.program_id(1)
+    q = q_ref[...][0]  # [bq, d]
+    k = k_ref[...][0]  # [s, d]
+    v = v_ref[...][0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = jnp.where(k_pos <= q_pos, logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def attention(q, k, v, block_q: int = DEFAULT_BLOCK_Q):
+    """Causal attention. q,k,v: [h, s, d] -> [h, s, d]."""
+    h, s, d = q.shape
+    block_q = min(block_q, s)
+    assert s % block_q == 0, f"seq {s} must be a multiple of block_q {block_q}"
+    grid = (h, s // block_q)
+    kern = functools.partial(_attn_kernel, block_q=block_q, seq=s)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((1, s, d), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda hi, qi: (hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda hi, qi: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: fused 1-bit Haar dequantization + matmul (the hot path).
+
+This is the deployment kernel of HBLLM (§3.6 + §4.5): weights live as Haar-
+domain sign bits plus per-row per-band (alpha, mu); reconstruction is a local
+2-tap synthesis, so it fuses into the tile load and feeds the matmul unit
+directly — the paper's O(d) inverse-transform argument.
+
+TPU mapping: each grid step loads a [BLOCK_N, m] sign panel + the matching
+alpha/mu column pair into VMEM, reconstructs W in-register (VPU: one fma +
+butterfly), then issues an MXU matmul against the resident x panel. A global
+orthogonal transform (FrameQuant) cannot tile this way: every output tile
+would need all d columns of the inverse rotation.
+
+interpret=True (CPU PJRT); lowers to plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 64
+
+
+def _binary_linear_kernel(s_ref, a_ref, u_ref, x_ref, o_ref):
+    s = s_ref[...]  # [bn, m] signs (+-1)
+    a = a_ref[...]  # [bn, 2]
+    u = u_ref[...]  # [bn, 2]
+    x = x_ref[...]  # [m, b]
+    m = s.shape[-1]
+    h = m // 2
+    # Dequantize per band, then inline Haar synthesis:
+    #   w[2k]   = lo[k] + hi[k]
+    #   w[2k+1] = lo[k] - hi[k]
+    lo = a[:, 0:1] * s[:, :h] + u[:, 0:1]
+    hi = a[:, 1:2] * s[:, h:] + u[:, 1:2]
+    w = jnp.stack([lo + hi, lo - hi], axis=-1).reshape(s.shape[0], m)
+    o_ref[...] = jnp.dot(w, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def binary_linear(signs, alpha, mu, x, block_n: int = DEFAULT_BLOCK_N):
+    """Compute HaarInv(alpha * signs + mu) @ x without materializing W in HBM.
+
+    signs: [n, m] floats in {-1, +1}; alpha, mu: [n, 2]; x: [m, b] -> [n, b].
+    """
+    n, m = signs.shape
+    b = x.shape[1]
+    assert m % 2 == 0 and x.shape[0] == m
+    block_n = min(block_n, n)
+    pad = (-n) % block_n
+    if pad:
+        z = jnp.zeros((pad, m), signs.dtype)
+        signs = jnp.concatenate([signs, z], axis=0)
+        alpha = jnp.concatenate([alpha, jnp.zeros((pad, 2), alpha.dtype)], axis=0)
+        mu = jnp.concatenate([mu, jnp.zeros((pad, 2), mu.dtype)], axis=0)
+    grid = (signs.shape[0] // block_n,)
+    out = pl.pallas_call(
+        _binary_linear_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 2), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 2), lambda i: (i, 0)),
+            pl.BlockSpec((m, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((signs.shape[0], b), jnp.float32),
+        interpret=True,
+    )(signs, alpha, mu, x)
+    return out[:n]

@@ -1,0 +1,74 @@
+"""L1 Pallas kernels: 1-level 1D Haar analysis/synthesis along rows.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the transform is a 2-tap
+stencil, so each VMEM tile of the input produces the matching tiles of both
+sub-bands with no cross-tile halo along rows — the BlockSpec streams
+[BLOCK_ROWS, m] row panels HBM->VMEM and the butterfly runs entirely on the
+VPU. Always lowered with interpret=True here (CPU PJRT cannot execute
+Mosaic custom-calls); interpret mode lowers to plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _haar_fwd_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    lo = (x[:, 0::2] + x[:, 1::2]) * 0.5
+    hi = (x[:, 0::2] - x[:, 1::2]) * 0.5
+    o_ref[...] = jnp.concatenate([lo, hi], axis=-1)
+
+
+def _haar_inv_kernel(c_ref, o_ref):
+    c = c_ref[...]
+    m = c.shape[-1]
+    lo, hi = c[:, : m // 2], c[:, m // 2 :]
+    out = jnp.stack([lo + hi, lo - hi], axis=-1).reshape(c.shape[0], m)
+    o_ref[...] = out
+
+
+def _rows_call(kernel, x, block_rows):
+    n, m = x.shape
+    assert m % 2 == 0, f"Haar needs an even trailing dim, got {m}"
+    block_rows = min(block_rows, n)
+    # Pad rows up to a multiple of the block; extra rows are discarded.
+    pad = (-n) % block_rows
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, m), x.dtype)], axis=0)
+    grid = (x.shape[0] // block_rows,)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def haar_fwd(x, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Row-wise Haar analysis: [n, m] -> [n, m] (low half ++ high half)."""
+    return _rows_call(_haar_fwd_kernel, x, block_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def haar_inv(c, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Row-wise Haar synthesis: exact inverse of `haar_fwd`."""
+    return _rows_call(_haar_inv_kernel, c, block_rows)
+
+
+def haar_fwd_cols(x, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Column-wise analysis (pairs adjacent rows), via transpose."""
+    return haar_fwd(x.T, block_rows=block_rows).T
+
+
+def haar_inv_cols(c, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Column-wise synthesis."""
+    return haar_inv(c.T, block_rows=block_rows).T

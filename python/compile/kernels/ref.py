@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+The Haar convention follows the paper §3.6 exactly: analysis kernels
+[1/2, 1/2] (low) and [1/2, -1/2] (high) with stride 2, synthesis
+w[2k] = l[k] + h[k], w[2k+1] = l[k] - h[k]. This pair is biorthogonal
+(H_inv @ H = I) though not orthonormal; the quantizer only needs exact
+invertibility, which `test_haar_kernel.py` asserts to float32 exactness.
+"""
+
+import jax.numpy as jnp
+
+
+def haar_fwd_ref(x):
+    """1-level 1D Haar along the last axis. Last dim must be even.
+
+    Returns [..., m] with low coefficients in [..., :m//2], high in the rest.
+    """
+    lo = (x[..., 0::2] + x[..., 1::2]) * 0.5
+    hi = (x[..., 0::2] - x[..., 1::2]) * 0.5
+    return jnp.concatenate([lo, hi], axis=-1)
+
+
+def haar_inv_ref(c):
+    """Inverse of `haar_fwd_ref`."""
+    m = c.shape[-1]
+    lo, hi = c[..., : m // 2], c[..., m // 2 :]
+    even = lo + hi
+    odd = lo - hi
+    out = jnp.stack([even, odd], axis=-1)
+    return out.reshape(*c.shape[:-1], m)
+
+
+def binary_linear_ref(signs, alpha, mu, x):
+    """Dequantize row-Haar 1-bit weights and multiply.
+
+    signs: [n, m] in {-1, +1} (float), Haar-domain sign bits.
+    alpha: [n, 2] per-row scale, one per frequency band (low, high).
+    mu:    [n, 2] per-row shared mean, one per band.
+    x:     [m, b] activations.
+
+    Reconstructs C[i, j] = alpha[i, band(j)] * signs[i, j] + mu[i, band(j)],
+    W = HaarInv_row(C), returns W @ x  ->  [n, b].
+    """
+    n, m = signs.shape
+    h = m // 2
+    band = jnp.concatenate([jnp.zeros(h, jnp.int32), jnp.ones(h, jnp.int32)])
+    a = alpha[:, band]  # [n, m]
+    u = mu[:, band]
+    coeff = a * signs + u
+    w = haar_inv_ref(coeff)
+    return w @ x
+
+
+def attention_ref(q, k, v):
+    """Causal softmax attention. q,k,v: [h, s, d]. Returns [h, s, d]."""
+    s = q.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None, :, :], logits, jnp.asarray(-1e30, q.dtype))
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v)

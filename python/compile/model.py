@@ -1,0 +1,128 @@
+"""L2: the byte-level GPT used for all HBLLM experiments (build-time JAX).
+
+The forward is written so that the pure-Rust replica in `rust/src/model/`
+(used for calibration-activation capture) matches it op-for-op in f32:
+learned token+position embeddings, pre-RMSNorm blocks, causal MHA through the
+L1 Pallas attention kernel, tanh-GELU MLP, untied unembedding, no biases.
+
+Exported entry points (see aot.py):
+  * nll(tokens, *params)    -> per-position next-token NLL [B, S-1]
+  * logits(tokens, *params) -> full logits [B, S, V]
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .kernels.attention import attention as pallas_attention
+
+RMS_EPS = 1e-5
+_GELU_C = 0.7978845608028654  # sqrt(2/pi)
+
+
+def rmsnorm(x, g):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + RMS_EPS) * g
+
+
+def gelu_tanh(x):
+    return 0.5 * x * (1.0 + jnp.tanh(_GELU_C * (x + 0.044715 * x * x * x)))
+
+
+def init_params(cfg: ModelConfig, key):
+    """Scaled-normal init; returns {name: array} in cfg.param_order() order."""
+    params = {}
+    keys = jax.random.split(key, len(cfg.param_order()))
+    for k, name in zip(keys, cfg.param_order()):
+        shape = cfg.param_shape(name)
+        if len(shape) == 1:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            std = 0.02 if name in ("tok_emb", "pos_emb") else 1.0 / jnp.sqrt(fan_in)
+            params[name] = std * jax.random.normal(k, shape, jnp.float32)
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params):
+    return [params[n] for n in cfg.param_order()]
+
+
+def unflatten_params(cfg: ModelConfig, flat):
+    return dict(zip(cfg.param_order(), flat))
+
+
+def _attend(cfg: ModelConfig, x, wq, wk, wv, wo, use_pallas: bool):
+    """x: [B, S, D]."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def split_heads(t):
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)  # [B,h,S,dh]
+
+    q, k, v = (split_heads(x @ w) for w in (wq, wk, wv))
+    if use_pallas:
+        # Kernel signature is [h, s, d]; fold batch into heads.
+        qf = q.reshape(b * h, s, dh)
+        kf = k.reshape(b * h, s, dh)
+        vf = v.reshape(b * h, s, dh)
+        of = pallas_attention(qf, kf, vf)
+        o = of.reshape(b, h, s, dh)
+    else:
+        from .kernels.ref import attention_ref
+
+        o = jax.vmap(attention_ref)(q.reshape(b, h, s, dh), k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return o @ wo
+
+
+def forward(cfg: ModelConfig, params, tokens, use_pallas: bool = True):
+    """tokens: i32 [B, S] -> logits f32 [B, S, V]."""
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, : tokens.shape[1]]
+    for i in range(cfg.n_layers):
+        p = lambda n: params[f"l{i}.{n}"]  # noqa: E731
+        hx = rmsnorm(x, p("ln1"))
+        x = x + _attend(cfg, hx, p("wq"), p("wk"), p("wv"), p("wo"), use_pallas)
+        hx = rmsnorm(x, p("ln2"))
+        x = x + gelu_tanh(hx @ p("w1")) @ p("w2")
+    x = rmsnorm(x, params["ln_f"])
+    return x @ params["unemb"]
+
+
+def nll(cfg: ModelConfig, params, tokens, use_pallas: bool = True):
+    """Per-position next-token negative log likelihood: [B, S-1]."""
+    logits = forward(cfg, params, tokens, use_pallas)[:, :-1]
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt_logit = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return logz - tgt_logit
+
+
+def mean_nll(cfg: ModelConfig, params, tokens, use_pallas: bool = True):
+    return jnp.mean(nll(cfg, params, tokens, use_pallas))
+
+
+# ---------------------------------------------------------------------------
+# Positional-arg wrappers for AOT export (weights as explicit HLO parameters
+# so the Rust side can swap quantized weights without re-lowering).
+# ---------------------------------------------------------------------------
+
+def make_nll_fn(cfg: ModelConfig, use_pallas: bool = True):
+    def fn(tokens, *flat):
+        return (nll(cfg, unflatten_params(cfg, list(flat)), tokens, use_pallas),)
+
+    return fn
+
+
+def make_logits_fn(cfg: ModelConfig, use_pallas: bool = True):
+    def fn(tokens, *flat):
+        return (forward(cfg, unflatten_params(cfg, list(flat)), tokens, use_pallas),)
+
+    return fn
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def jit_mean_nll(cfg: ModelConfig, params, tokens):
+    return mean_nll(cfg, params, tokens, use_pallas=False)

@@ -1,0 +1,69 @@
+"""Build-time pretraining of the byte-level GPT on the synthetic corpus.
+
+A few hundred Adam steps are enough to give the weights the structure the
+quantizers care about (anisotropic rows, activation-correlated columns) and
+to make perplexity/QA evaluation meaningful. Runs once under `make
+artifacts`; the loss curve is logged for EXPERIMENTS.md.
+"""
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import TRAIN_SEED, ModelConfig
+from .model import init_params, mean_nll
+
+
+def sample_batch(rng: np.random.Generator, data: np.ndarray, batch: int, seq: int):
+    starts = rng.integers(0, len(data) - seq - 1, size=batch)
+    return np.stack([data[s : s + seq] for s in starts]).astype(np.int32)
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros((), jnp.int32)}
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1, 2))
+def train_step(cfg: ModelConfig, params, opt, tokens, lr):
+    loss, grads = jax.value_and_grad(lambda p: mean_nll(cfg, p, tokens, use_pallas=False))(params)
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+    scale = jnp.minimum(1.0, 1.0 / (gnorm + 1e-6))
+    t = opt["t"] + 1
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    new_m, new_v, new_p = {}, {}, {}
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    for k, g in grads.items():
+        g = g * scale
+        m = b1 * opt["m"][k] + (1 - b1) * g
+        v = b2 * opt["v"][k] + (1 - b2) * g * g
+        new_m[k], new_v[k] = m, v
+        new_p[k] = params[k] - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+    return new_p, {"m": new_m, "v": new_v, "t": t}, loss
+
+
+def train(cfg: ModelConfig, data: bytes, steps: int = 300, batch: int = 8,
+          lr_max: float = 3e-3, log_every: int = 20, log_fn=print):
+    """Train and return (params, loss_log[(step, loss)])."""
+    arr = np.frombuffer(data, dtype=np.uint8)
+    rng = np.random.default_rng(TRAIN_SEED)
+    params = init_params(cfg, jax.random.PRNGKey(TRAIN_SEED))
+    opt = adam_init(params)
+    log = []
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        warm = min(1.0, step / 30.0)
+        cos = 0.5 * (1 + np.cos(np.pi * step / steps))
+        lr = lr_max * warm * (0.1 + 0.9 * cos)
+        tokens = jnp.asarray(sample_batch(rng, arr, batch, cfg.seq_len))
+        params, opt, loss = train_step(cfg, params, opt, tokens, jnp.float32(lr))
+        if step == 1 or step % log_every == 0 or step == steps:
+            l = float(loss)
+            log.append((step, l))
+            log_fn(f"step {step:4d}  loss {l:.4f}  lr {lr:.2e}  {time.time()-t0:.1f}s")
+    return params, log

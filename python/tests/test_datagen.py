@@ -1,0 +1,71 @@
+"""Data substrate: determinism, task-file roundtrip, corpus statistics."""
+
+import os
+import tempfile
+
+import numpy as np
+
+from compile import datagen
+
+
+def test_language_deterministic():
+    a, b = datagen.Language(seed=1), datagen.Language(seed=1)
+    assert a.nouns == b.nouns and a.verbs == b.verbs
+    c = datagen.Language(seed=2)
+    assert a.nouns != c.nouns
+
+
+def test_corpora_deterministic_and_distinct():
+    lang = datagen.Language()
+    kinds = ["train", "c4s", "wiki2s", "ptbs"]
+    blobs = {k: datagen.gen_corpus(lang, k, 20_000) for k in kinds}
+    again = {k: datagen.gen_corpus(lang, k, 20_000) for k in kinds}
+    for k in kinds:
+        assert blobs[k] == again[k], f"{k} not deterministic"
+        assert len(blobs[k]) == 20_000
+    # registers must differ
+    assert blobs["c4s"] != blobs["wiki2s"] != blobs["ptbs"]
+    # ptbs carries <unk>; wiki2s carries headings
+    assert b"<unk>" in blobs["ptbs"]
+    assert b"= " in blobs["wiki2s"]
+
+
+def test_corpus_is_ascii():
+    lang = datagen.Language()
+    blob = datagen.gen_corpus(lang, "c4s", 10_000)
+    arr = np.frombuffer(blob, np.uint8)
+    assert arr.max() < 128
+
+
+def test_task_items_have_valid_answers():
+    lang = datagen.Language()
+    for fam in datagen.TASK_FAMILIES:
+        items = datagen.make_task_items(lang, fam, 12)
+        assert len(items) == 12
+        for prompt, opts, correct in items:
+            assert 2 <= len(opts) <= 4
+            assert 0 <= correct < len(opts)
+            assert len(prompt) > 0
+            assert len(set(opts)) > 1, f"{fam}: degenerate options"
+
+
+def test_task_file_roundtrip():
+    lang = datagen.Language()
+    items = datagen.make_task_items(lang, "piqa_s", 7)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.bin")
+        datagen.write_task_file(path, items)
+        back = datagen.read_task_file(path)
+    assert back == items
+
+
+def test_answer_position_not_biased():
+    """Correct answers must not all sit at index 0 (NLL scorer would cheat)."""
+    lang = datagen.Language()
+    positions = []
+    for fam in datagen.TASK_FAMILIES:
+        if fam == "boolq_s":  # fixed yes/no order by construction
+            continue
+        for _, _, c in datagen.make_task_items(lang, fam, 30):
+            positions.append(c)
+    assert 0.2 < np.mean([p > 0 for p in positions]) < 0.8

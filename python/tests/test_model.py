@@ -1,0 +1,74 @@
+"""L2 correctness: model shapes, NLL semantics, trainability (micro config)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.common import CONFIGS
+from compile.model import (
+    flatten_params,
+    forward,
+    init_params,
+    mean_nll,
+    nll,
+    unflatten_params,
+)
+from compile.train import train
+
+CFG = CONFIGS["micro"]
+
+
+def params_and_tokens(batch=3, seed=0):
+    p = init_params(CFG, jax.random.PRNGKey(seed))
+    t = jnp.asarray(
+        np.random.RandomState(seed).randint(0, CFG.vocab, (batch, CFG.seq_len)),
+        jnp.int32,
+    )
+    return p, t
+
+
+def test_shapes():
+    p, t = params_and_tokens()
+    assert forward(CFG, p, t).shape == (3, CFG.seq_len, CFG.vocab)
+    assert nll(CFG, p, t).shape == (3, CFG.seq_len - 1)
+
+
+def test_pallas_and_ref_paths_agree():
+    p, t = params_and_tokens()
+    a = forward(CFG, p, t, use_pallas=True)
+    b = forward(CFG, p, t, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_nll_is_positive_and_near_uniform_at_init():
+    p, t = params_and_tokens()
+    m = float(mean_nll(CFG, p, t))
+    assert 0 < m < 8
+    # Random init should be within a nat or so of uniform ln(256) = 5.55
+    assert abs(m - np.log(CFG.vocab)) < 1.5
+
+
+def test_param_flatten_roundtrip():
+    p, _ = params_and_tokens()
+    flat = flatten_params(CFG, p)
+    assert len(flat) == len(CFG.param_order())
+    back = unflatten_params(CFG, flat)
+    for k in p:
+        np.testing.assert_array_equal(np.asarray(p[k]), np.asarray(back[k]))
+
+
+def test_causal_dependency():
+    """Changing token t must not change logits before t."""
+    p, t = params_and_tokens(batch=1)
+    base = np.asarray(forward(CFG, p, t))
+    t2 = t.at[0, 10].set((t[0, 10] + 1) % CFG.vocab)
+    pert = np.asarray(forward(CFG, p, t2))
+    np.testing.assert_allclose(pert[0, :10], base[0, :10], rtol=1e-5, atol=1e-5)
+    assert np.abs(pert[0, 10:] - base[0, 10:]).max() > 1e-6
+
+
+def test_training_reduces_loss():
+    data = b"abcabcabcabc" * 500
+    params, log = train(CFG, data, steps=30, batch=4, lr_max=1e-2, log_every=29, log_fn=lambda s: None)
+    first, last = log[0][1], log[-1][1]
+    assert last < first - 0.5, f"loss did not drop: {first} -> {last}"

@@ -1,0 +1,34 @@
+//! End-to-end eval throughput through the PJRT runtime: tokens/s of the
+//! batched NLL entry (the L3 hot path after `make artifacts`). Drives the
+//! §Perf L3 measurements in EXPERIMENTS.md.
+
+use hbllm::pipeline::Session;
+use hbllm::util::bench::{bench, Table};
+
+fn main() -> anyhow::Result<()> {
+    let root = Session::default_root();
+    let Ok(session) = Session::open(&root) else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return Ok(());
+    };
+    let corpus = session.corpus("c4s")?;
+    let seq = session.fp_weights().config.seq_len;
+    let batch = session.eval_batch;
+
+    let mut t = Table::new(&["entry", "batch lat (ms)", "tokens/s"]);
+    for (label, pallas) in [("nll_ref (jnp attn)", false), ("nll (pallas attn)", true)] {
+        let runner = session.runner(session.fp_weights(), pallas)?;
+        let tokens: Vec<i32> = corpus.data[..batch * seq].iter().map(|&b| b as i32).collect();
+        // warmup
+        runner.nll(&tokens)?;
+        let m = bench(label, 2.0, || {
+            runner.nll(&tokens).unwrap();
+        });
+        let tps = (batch * seq) as f64 / m.median_s();
+        t.row(&[label.into(), format!("{:.1}", m.median_ms()), format!("{tps:.0}")]);
+        eprintln!("[e2e] {label}: {:.1}ms", m.median_ms());
+    }
+    println!("\n== E2E eval throughput (PJRT CPU, batch {batch} × seq {seq}) ==");
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! §3.6 reproduction: transform cost scaling — local Haar O(d) vs global
+//! orthogonal (FrameQuant butterfly ≈ O(d log d), dense rotation O(d²)).
+
+use hbllm::haar;
+use hbllm::quant::framequant::Butterfly;
+use hbllm::tensor::Matrix;
+use hbllm::util::bench::{bench, black_box, Table};
+use hbllm::util::rng::Pcg32;
+
+fn main() {
+    let dims = [512usize, 1024, 2048, 4096, 8192];
+    let mut t = Table::new(&["d", "haar (µs)", "butterfly (µs)", "dense-rot (µs)", "haar ratio vs dense"]);
+    for &d in &dims {
+        let mut rng = Pcg32::seeded(1);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+
+        let mh = bench("haar", 0.3, || {
+            black_box(haar::fwd_1d(&x)[0]);
+        });
+        let bf = Butterfly::new(d, 3, 3);
+        let mb = bench("butterfly", 0.3, || {
+            black_box(bf.fwd(&x)[0]);
+        });
+        // dense rotation row: one d×d matvec (what a global orthogonal
+        // transform costs at dequantization time, per §2.3)
+        let rot = Matrix::from_fn(1024.min(d), d, |_, _| rng.normal_f32());
+        let scale = d as f64 / rot.rows as f64; // extrapolate to full d×d
+        let md = bench("dense", 0.3, || {
+            black_box(rot.matvec(&x)[0]);
+        });
+        t.row(&[
+            format!("{d}"),
+            format!("{:.1}", mh.median_ns / 1e3),
+            format!("{:.1}", mb.median_ns / 1e3),
+            format!("{:.1}", md.median_ns / 1e3 * scale),
+            format!("{:.0}x", md.median_ns * scale / mh.median_ns),
+        ]);
+        eprintln!("[haar_cost] d={d} done");
+    }
+    println!("\n== §3.6: transform cost — O(d) Haar vs O(d²) global rotation ==");
+    t.print();
+    println!("\nthe gap must GROW linearly with d (paper's deployment argument).");
+}

@@ -1,0 +1,60 @@
+//! Table 3 reproduction: quantization wall-clock per method per model size.
+//!
+//! Paper shape (LLaMA-1 7B/13B/30B on 4×3090): PB-LLM < FrameQuant < BiLLM
+//! < HBLLM (≈1.2–1.3× BiLLM) < ARB-RC < ARB-X; HBLLM scales to sizes ARB/
+//! FrameQuant cannot. Here: synthetic LLM-like layer sets at three dims.
+
+use hbllm::quant::{by_name, synth};
+use hbllm::util::bench::Table;
+use std::time::Instant;
+
+fn main() {
+    // (label, n, m, layers) — one layer-set quantization per cell
+    let sizes = [("d256", 256usize, 256usize, 4usize), ("d512", 512, 512, 2), ("d768", 768, 768, 1)];
+    let methods = ["pb-llm", "framequant-1.1", "billm", "hbllm-row", "hbllm-col", "arb-rc", "arb-x"];
+
+    // pre-generate layers + Hessian factorizations (shared across methods,
+    // exactly like the real pipeline shares `Session::contexts`)
+    eprintln!("[table3] generating layer sets...");
+    let layer_sets: Vec<Vec<_>> = sizes
+        .iter()
+        .map(|&(_, n, m, layers)| {
+            (0..layers)
+                .map(|l| synth::llm_like_layer(n, m, 100 + l as u64))
+                .collect()
+        })
+        .collect();
+
+    let mut t = Table::new(&["method", "d256 (s)", "d512 (s)", "d768 (s)", "vs billm @d512"]);
+    let mut billm_d512 = 0.0f64;
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    for name in methods {
+        let q = by_name(name).unwrap();
+        let mut secs = Vec::new();
+        for set in &layer_sets {
+            let t0 = Instant::now();
+            for (w, ctx) in set {
+                let out = q.quantize(w, ctx);
+                std::hint::black_box(out.mse);
+            }
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+        if name == "billm" {
+            billm_d512 = secs[1];
+        }
+        eprintln!("[table3] {name}: {secs:?}");
+        rows.push((name.to_string(), secs));
+    }
+    for (name, secs) in rows {
+        t.row(&[
+            name.clone(),
+            format!("{:.2}", secs[0]),
+            format!("{:.2}", secs[1]),
+            format!("{:.2}", secs[2]),
+            format!("{:.2}x", secs[1] / billm_d512.max(1e-9)),
+        ]);
+    }
+    println!("\n== Table 3: quantization time (synthetic layer sets; excludes shared Hessian factorization) ==");
+    t.print();
+    println!("\npaper claim to check: HBLLM ≈ 1.2–1.3× BiLLM; ARB variants slowest.");
+}

@@ -1,0 +1,145 @@
+//! Calibration: run the pure-Rust forward over calibration windows and
+//! accumulate the GPTQ Hessian H = 2 Σ x xᵀ per shared-input group
+//! (wq/wk/wv share one Hessian; wo, w1, w2 get their own).
+
+use crate::model::{activation_key, forward, Capture, Weights};
+use crate::quant::{HessianCtx, DEFAULT_LAMBDA};
+use crate::tensor::linalg::Sq;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Accumulated Hessians keyed by activation-group name (e.g. "l0.attn_in").
+pub struct Calibration {
+    pub hessians: BTreeMap<String, Sq>,
+    pub samples: usize,
+}
+
+/// Run calibration over `windows` (each a byte sequence ≤ seq_len).
+pub fn collect(w: &Weights, windows: &[&[u8]]) -> Calibration {
+    let mut hessians: BTreeMap<String, Sq> = BTreeMap::new();
+    let mut samples = 0usize;
+    for win in windows {
+        let mut cap = Capture::default();
+        forward(w, win, Some(&mut cap));
+        samples += win.len();
+        for (key, act) in cap.activations {
+            let d = act.cols;
+            let h = hessians.entry(key).or_insert_with(|| Sq::zeros(d));
+            // H += 2 Σ_t x_t x_tᵀ
+            for t in 0..act.rows {
+                let row = act.row(t);
+                for a in 0..d {
+                    let xa = 2.0 * row[a] as f64;
+                    if xa == 0.0 {
+                        continue;
+                    }
+                    let hrow = &mut h.data[a * d..(a + 1) * d];
+                    for (b, &xb) in row.iter().enumerate() {
+                        hrow[b] += xa * xb as f64;
+                    }
+                }
+            }
+        }
+    }
+    Calibration { hessians, samples }
+}
+
+impl Calibration {
+    /// Hessian context for one linear layer (by canonical linear name).
+    pub fn ctx_for(&self, linear_name: &str) -> Result<HessianCtx> {
+        let key = activation_key(linear_name);
+        let h = self
+            .hessians
+            .get(&key)
+            .ok_or_else(|| anyhow::anyhow!("no hessian for {key}"))?;
+        HessianCtx::new(h.clone(), DEFAULT_LAMBDA).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Factor every Hessian once (Cholesky of the damped inverse is O(d³) —
+    /// sharing across methods and across wq/wk/wv matters).
+    pub fn contexts(&self) -> Result<CtxMap> {
+        let mut map = BTreeMap::new();
+        for (key, h) in &self.hessians {
+            let ctx = HessianCtx::new(h.clone(), DEFAULT_LAMBDA)
+                .map_err(|e| anyhow::anyhow!("{key}: {e}"))?;
+            map.insert(key.clone(), Arc::new(ctx));
+        }
+        Ok(CtxMap { map })
+    }
+}
+
+/// Pre-factored Hessian contexts keyed by activation group.
+#[derive(Clone)]
+pub struct CtxMap {
+    map: BTreeMap<String, Arc<HessianCtx>>,
+}
+
+impl CtxMap {
+    pub fn for_linear(&self, linear_name: &str) -> Result<Arc<HessianCtx>> {
+        let key = activation_key(linear_name);
+        self.map
+            .get(&key)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no hessian context for {key}"))
+    }
+
+    /// Build a CtxMap with identity Hessians (no-calibration mode).
+    pub fn identity_for(weights: &crate::model::Weights) -> CtxMap {
+        let mut map = BTreeMap::new();
+        for name in weights.config.linear_names() {
+            let key = activation_key(&name);
+            if !map.contains_key(&key) {
+                let d = weights.get(&name).as_mat().rows; // [in, out]: in = rows
+                map.insert(key, Arc::new(HessianCtx::identity(d)));
+            }
+        }
+        CtxMap { map }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tests::micro_weights;
+
+    #[test]
+    fn collects_one_hessian_per_group() {
+        let w = micro_weights(7);
+        let win: Vec<u8> = (0..12u8).map(|i| i * 3).collect();
+        let calib = collect(&w, &[&win]);
+        // 2 layers × 4 groups
+        assert_eq!(calib.hessians.len(), 8);
+        let h = &calib.hessians["l0.attn_in"];
+        assert_eq!(h.n, 16);
+        // symmetric PSD-ish: diag positive, symmetric
+        for i in 0..h.n {
+            assert!(h.get(i, i) > 0.0);
+            for j in 0..h.n {
+                assert!((h.get(i, j) - h.get(j, i)).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn ctx_factors() {
+        let w = micro_weights(8);
+        let win: Vec<u8> = (0..12u8).collect();
+        let calib = collect(&w, &[&win, &win]);
+        for name in ["l0.wq", "l0.wo", "l1.w1", "l1.w2"] {
+            let ctx = calib.ctx_for(name).unwrap();
+            assert!(ctx.hinv_diag.iter().all(|&d| d > 0.0), "{name}");
+        }
+    }
+
+    #[test]
+    fn more_windows_more_mass() {
+        let w = micro_weights(9);
+        let win: Vec<u8> = (5..12u8).collect();
+        let c1 = collect(&w, &[&win]);
+        let c2 = collect(&w, &[&win, &win]);
+        let t1 = c1.hessians["l0.attn_in"].get(0, 0);
+        let t2 = c2.hessians["l0.attn_in"].get(0, 0);
+        assert!((t2 - 2.0 * t1).abs() < 1e-6 * t1.abs().max(1.0));
+    }
+}

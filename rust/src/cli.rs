@@ -1,0 +1,250 @@
+//! CLI command dispatch for the `hbllm` binary.
+//!
+//! Subcommands:
+//!   info                         artifact + platform summary
+//!   quantize  --method M         quantize, report per-layer metrics
+//!   eval      --method M         quantize + perplexity/QA row
+//!   serve     --method M --addr  batched TCP scoring server
+//!   ciq                          CIQ expressiveness table (§3.1)
+
+use crate::coordinator::{serve, BatcherConfig, QuantJobConfig};
+use crate::pipeline::{EvalScope, Session};
+use crate::quant::{self, ciq, synth, Quantizer};
+use crate::util::bench::Table;
+use crate::util::cli::Args;
+use crate::util::fmt_sig;
+use anyhow::{anyhow, Result};
+
+pub fn run(args: Args) -> Result<()> {
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(&args),
+        "quantize" => quantize(&args),
+        "eval" => eval(&args),
+        "serve" => serve_cmd(&args),
+        "generate" => generate_cmd(&args),
+        "ciq" => ciq_cmd(&args),
+        "help" | _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+hbllm — wavelet-enhanced 1-bit PTQ for LLMs (NeurIPS 2025 reproduction)
+
+USAGE: hbllm <command> [options]
+
+COMMANDS:
+  info                     show artifacts, model and PJRT platform
+  quantize --method M      quantize the model, print per-layer metrics
+  eval --method M          quantize + evaluate (perplexity on c4s/wiki2s/ptbs + AvgQA)
+  serve --method M         TCP scoring server (line in -> `ppl <v>` out)
+  generate [--method M]    sample text from the (optionally quantized) model
+  ciq                      CIQ expressiveness table (paper §3.1)
+
+OPTIONS:
+  --artifacts DIR          artifacts root (default: artifacts/ or $HBLLM_ARTIFACTS)
+  --method M               rtn|billm|arb-x|arb-rc|pb-llm|framequant-1.1|hbllm-row|hbllm-col
+  --workers N              quantization worker threads
+  --ppl-windows N          eval windows per corpus (default 64)
+  --qa-items N             QA items per family (default 25)
+  --calib-windows N        calibration windows (default 16)
+  --addr HOST:PORT         serve address (default 127.0.0.1:7431)
+  --pallas                 use the Pallas-attention HLO entry for eval
+";
+
+fn session(args: &Args) -> Result<Session> {
+    let root = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Session::default_root);
+    Session::open(&root)
+}
+
+fn scope(args: &Args) -> EvalScope {
+    EvalScope {
+        ppl_windows: args.get_usize("ppl-windows", 64),
+        qa_items: args.get_usize("qa-items", 25),
+        calib_windows: args.get_usize("calib-windows", 16),
+    }
+}
+
+fn job(args: &Args) -> QuantJobConfig {
+    let mut cfg = QuantJobConfig::default();
+    if let Some(w) = args.get("workers") {
+        cfg.workers = w.parse().unwrap_or(cfg.workers);
+    }
+    cfg.quiet = args.has_flag("quiet");
+    cfg
+}
+
+fn method(args: &Args) -> Result<Box<dyn Quantizer>> {
+    let name = args.get("method").ok_or_else(|| anyhow!("--method required"))?;
+    quant::by_name(name).ok_or_else(|| anyhow!("unknown method {name}"))
+}
+
+fn info(args: &Args) -> Result<()> {
+    let s = session(args)?;
+    let cfg = &s.fp_weights().config;
+    println!("artifacts : {}", s.root.display());
+    println!("platform  : {}", s.runtime.platform());
+    println!(
+        "model     : {} (d={} L={} heads={} ff={} seq={} vocab={}) — {:.2}M params",
+        cfg.name,
+        cfg.d_model,
+        cfg.n_layers,
+        cfg.n_heads,
+        cfg.d_ff,
+        cfg.seq_len,
+        cfg.vocab,
+        s.fp_weights().total_elements() as f64 / 1e6
+    );
+    println!("linears   : {}", cfg.linear_names().len());
+    println!("methods   : {}", quant::table_methods().join(", "));
+    Ok(())
+}
+
+fn quantize(args: &Args) -> Result<()> {
+    let mut s = session(args)?;
+    let m = method(args)?;
+    let (_, results) = s.quantize(m.as_ref(), &scope(args), &job(args))?;
+    let mut t = Table::new(&["layer", "shape", "mse", "wbits", "sec"]);
+    for r in &results {
+        t.row(&[
+            r.name.clone(),
+            format!("{}x{}", r.rows, r.cols),
+            format!("{:.3e}", r.mse),
+            fmt_sig(r.wbits, 4),
+            format!("{:.2}", r.seconds),
+        ]);
+    }
+    t.print();
+    let agg = crate::coordinator::scheduler::aggregate_wbits(&results);
+    println!("aggregate W-bits: {}", fmt_sig(agg, 4));
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let mut s = session(args)?;
+    let m = method(args)?;
+    let sc = scope(args);
+    let jb = job(args);
+    let pallas = args.has_flag("pallas");
+
+    let fp_runner = s.runner(s.fp_weights(), pallas)?;
+    let fp = s.evaluate(&fp_runner, &sc)?;
+    let (qw, results) = s.quantize(m.as_ref(), &sc, &jb)?;
+    let runner = s.runner(&qw, pallas)?;
+    let report = s.evaluate(&runner, &sc)?;
+
+    let mut t = Table::new(&["method", "W-bits", "c4s", "wiki2s", "ptbs", "AvgQA", "relPPL"]);
+    t.row(&[
+        "fp32".into(),
+        "32.00".into(),
+        fmt_sig(fp.ppl_of("c4s"), 4),
+        fmt_sig(fp.ppl_of("wiki2s"), 4),
+        fmt_sig(fp.ppl_of("ptbs"), 4),
+        format!("{:.1}%", 100.0 * fp.avg_qa),
+        "1.00".into(),
+    ]);
+    let agg = crate::coordinator::scheduler::aggregate_wbits(&results);
+    t.row(&[
+        m.name(),
+        fmt_sig(agg, 4),
+        fmt_sig(report.ppl_of("c4s"), 4),
+        fmt_sig(report.ppl_of("wiki2s"), 4),
+        fmt_sig(report.ppl_of("ptbs"), 4),
+        format!("{:.1}%", 100.0 * report.avg_qa),
+        fmt_sig(report.mean_rel_ppl(&fp), 3),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn serve_cmd(args: &Args) -> Result<()> {
+    let mut s = session(args)?;
+    let m = method(args)?;
+    let sc = scope(args);
+    let (qw, _) = s.quantize(m.as_ref(), &sc, &job(args))?;
+    let runner = s.runner(&qw, args.has_flag("pallas"))?;
+    let addr = args.get_or("addr", "127.0.0.1:7431");
+    let (listener, local) = serve::bind(addr)?;
+    println!("serving quantized ({}) model on {local}", m.name());
+    println!("protocol: one text per line -> `ppl <value>`");
+    serve::serve_on(listener, &runner, BatcherConfig::default(), None)
+}
+
+fn generate_cmd(args: &Args) -> Result<()> {
+    let mut s = session(args)?;
+    let weights = match args.get("method") {
+        Some(_) => {
+            let m = method(args)?;
+            eprintln!("quantizing with {}...", m.name());
+            s.quantize(m.as_ref(), &scope(args), &job(args))?.0
+        }
+        None => s.clone_weights(),
+    };
+    let runner = s.logits_runner(&weights)?;
+    let prompt = args.get_or("prompt", "ta kivo ").as_bytes().to_vec();
+    let n_new = args.get_usize("tokens", 120);
+    let temp = args.get_f64("temperature", 0.8) as f32;
+    let mut rng = crate::util::rng::Pcg32::seeded(args.get_usize("seed", 0) as u64);
+    let out = runner.generate(&prompt, n_new, temp, &mut rng)?;
+    println!("{}", String::from_utf8_lossy(&out));
+    Ok(())
+}
+
+fn ciq_cmd(_args: &Args) -> Result<()> {
+    // §3.1 expressiveness table on a synthetic LLM-like layer
+    let (w, ctx) = synth::llm_like_layer(64, 128, 1);
+    let mut t = Table::new(&["method", "CIQ max", "CIQ mean", "theory bound"]);
+    for name in ["rtn", "billm", "arb-x", "arb-rc", "hbllm-col", "hbllm-row"] {
+        let q = quant::by_name(name).unwrap();
+        let out = q.quantize(&w, &ctx);
+        let bound = ciq::theoretical_bound(name, 128);
+        t.row(&[
+            name.into(),
+            format!("{}", ciq::row_ciq_max(&out.w_hat)),
+            format!("{:.1}", ciq::row_ciq_mean(&out.w_hat)),
+            if bound == usize::MAX { "-".into() } else { format!("{bound}") },
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn help_runs() {
+        run(parse("help")).unwrap();
+    }
+
+    #[test]
+    fn unknown_method_errors() {
+        let args = parse("eval --method bogus");
+        assert!(method(&args).is_err());
+        assert!(method(&parse("eval --method hbllm-row")).is_ok());
+    }
+
+    #[test]
+    fn scope_defaults_and_overrides() {
+        let sc = scope(&parse("eval --ppl-windows 5"));
+        assert_eq!(sc.ppl_windows, 5);
+        assert_eq!(sc.qa_items, 25);
+    }
+
+    #[test]
+    fn ciq_command_runs() {
+        run(parse("ciq")).unwrap();
+    }
+}

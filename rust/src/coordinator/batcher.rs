@@ -1,0 +1,151 @@
+//! Dynamic request batcher: collect scoring requests up to `max_batch` or
+//! `max_wait`, then flush to the scorer in one PJRT call. Generic over the
+//! scoring function so it is testable without a PJRT runtime.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) }
+    }
+}
+
+pub struct Request {
+    pub text: Vec<u8>,
+    pub reply: Sender<Result<f64, String>>,
+}
+
+/// The batcher owns the receive side; the scorer closure owns the model
+/// runtime (PJRT types are not Sync, so scoring stays on this thread).
+pub struct Batcher {
+    pub cfg: BatcherConfig,
+    rx: Receiver<Request>,
+}
+
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: Sender<Request>,
+}
+
+impl BatcherHandle {
+    /// Blocking score call: mean NLL/byte for `text`.
+    pub fn score(&self, text: &[u8]) -> Result<f64, String> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Request { text: text.to_vec(), reply: tx })
+            .map_err(|_| "batcher gone".to_string())?;
+        rx.recv().map_err(|_| "batcher dropped request".to_string())?
+    }
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> (Batcher, BatcherHandle) {
+        let (tx, rx) = channel();
+        (Batcher { cfg, rx }, BatcherHandle { tx })
+    }
+
+    /// Run the batch loop until all senders hang up. `score_batch` maps a
+    /// slice of texts to one score per text.
+    pub fn run(self, mut score_batch: impl FnMut(&[Vec<u8>]) -> Vec<Result<f64, String>>) {
+        let mut pending: Vec<Request> = Vec::new();
+        loop {
+            // wait for the first request of a batch
+            if pending.is_empty() {
+                match self.rx.recv() {
+                    Ok(r) => pending.push(r),
+                    Err(_) => return, // all senders dropped
+                }
+            }
+            // top up until full or the wait budget expires
+            let deadline = Instant::now() + self.cfg.max_wait;
+            while pending.len() < self.cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match self.rx.recv_timeout(deadline - now) {
+                    Ok(r) => pending.push(r),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            let texts: Vec<Vec<u8>> = pending.iter().map(|r| r.text.clone()).collect();
+            let scores = score_batch(&texts);
+            debug_assert_eq!(scores.len(), texts.len());
+            for (req, score) in pending.drain(..).zip(scores) {
+                let _ = req.reply.send(score);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (batcher, handle) = Batcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(200),
+        });
+        let max_seen = Arc::new(AtomicUsize::new(0));
+        let ms = max_seen.clone();
+        let worker = std::thread::spawn(move || {
+            batcher.run(move |texts| {
+                ms.fetch_max(texts.len(), Ordering::Relaxed);
+                texts.iter().map(|t| Ok(t.len() as f64)).collect()
+            });
+        });
+        std::thread::scope(|s| {
+            for i in 0..8 {
+                let h = handle.clone();
+                s.spawn(move || {
+                    let text = vec![b'x'; i + 1];
+                    assert_eq!(h.score(&text).unwrap(), (i + 1) as f64);
+                });
+            }
+        });
+        drop(handle);
+        worker.join().unwrap();
+        let seen = max_seen.load(Ordering::Relaxed);
+        assert!(seen >= 2, "never batched: max batch seen {seen}");
+        assert!(seen <= 4, "exceeded max_batch: {seen}");
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_timeout() {
+        let (batcher, handle) = Batcher::new(BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(10),
+        });
+        let worker = std::thread::spawn(move || {
+            batcher.run(|texts| texts.iter().map(|_| Ok(1.0)).collect());
+        });
+        let t0 = Instant::now();
+        assert_eq!(handle.score(b"solo").unwrap(), 1.0);
+        assert!(t0.elapsed() < Duration::from_secs(1), "timeout flush too slow");
+        drop(handle);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn propagates_errors() {
+        let (batcher, handle) = Batcher::new(BatcherConfig::default());
+        let worker = std::thread::spawn(move || {
+            batcher.run(|texts| texts.iter().map(|_| Err("boom".to_string())).collect());
+        });
+        assert_eq!(handle.score(b"x"), Err("boom".to_string()));
+        drop(handle);
+        worker.join().unwrap();
+    }
+}

@@ -1,0 +1,86 @@
+//! Thread-safe progress/metrics collector for long-running jobs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+pub struct Progress {
+    pub total: usize,
+    done: AtomicUsize,
+    started: Instant,
+    label: String,
+    quiet: bool,
+    log: Mutex<Vec<String>>,
+}
+
+impl Progress {
+    pub fn new(label: &str, total: usize, quiet: bool) -> Progress {
+        Progress {
+            total,
+            done: AtomicUsize::new(0),
+            started: Instant::now(),
+            label: label.to_string(),
+            quiet,
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn tick(&self, item: &str) {
+        let done = self.done.fetch_add(1, Ordering::Relaxed) + 1;
+        let msg = format!(
+            "[{}] {}/{} {} ({:.1}s)",
+            self.label,
+            done,
+            self.total,
+            item,
+            self.started.elapsed().as_secs_f64()
+        );
+        if !self.quiet {
+            eprintln!("{msg}");
+        }
+        self.log.lock().unwrap().push(msg);
+    }
+
+    pub fn done_count(&self) -> usize {
+        self.done.load(Ordering::Relaxed)
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn messages(&self) -> Vec<String> {
+        self.log.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_ticks() {
+        let p = Progress::new("test", 3, true);
+        p.tick("a");
+        p.tick("b");
+        assert_eq!(p.done_count(), 2);
+        assert_eq!(p.messages().len(), 2);
+        assert!(p.messages()[0].contains("1/3"));
+    }
+
+    #[test]
+    fn thread_safe() {
+        let p = std::sync::Arc::new(Progress::new("mt", 100, true));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let p = p.clone();
+                s.spawn(move || {
+                    for _ in 0..25 {
+                        p.tick("x");
+                    }
+                });
+            }
+        });
+        assert_eq!(p.done_count(), 100);
+    }
+}

@@ -1,0 +1,185 @@
+//! Per-layer quantization job scheduler: a deterministic work-stealing pool
+//! over the model's linear layers.
+//!
+//! Invariants (property-tested): every layer quantized exactly once, output
+//! independent of worker count, original weights untouched on failure.
+
+use super::progress::Progress;
+use crate::calib::CtxMap;
+use crate::model::Weights;
+use crate::quant::{BitsBreakdown, Quantizer};
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Clone)]
+pub struct QuantJobConfig {
+    pub workers: usize,
+    pub quiet: bool,
+}
+
+impl Default for QuantJobConfig {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        QuantJobConfig { workers: workers.min(8), quiet: false }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerResult {
+    pub name: String,
+    pub mse: f64,
+    pub wbits: f64,
+    pub bits: f64,
+    pub seconds: f64,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Quantize every linear layer of `weights` in place with `method`, using
+/// the Hessians in `calib`. Returns per-layer metrics (sorted by name).
+///
+/// Matrices are stored [in, out] (x @ W); the quantizer contract is paper
+/// orientation [out, in], so each layer transposes in and back out.
+pub fn quantize_model(
+    weights: &mut Weights,
+    ctxs: &CtxMap,
+    method: &dyn Quantizer,
+    cfg: &QuantJobConfig,
+) -> Result<Vec<LayerResult>> {
+    let names = weights.config.linear_names();
+    let progress = Progress::new(&method.name(), names.len(), cfg.quiet);
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<(String, Matrix, LayerResult)>> = Mutex::new(Vec::new());
+    let failure: Mutex<Option<String>> = Mutex::new(None);
+
+    std::thread::scope(|s| {
+        for _ in 0..cfg.workers.max(1) {
+            s.spawn(|| loop {
+                let idx = next.fetch_add(1, Ordering::Relaxed);
+                if idx >= names.len() {
+                    return;
+                }
+                let name = &names[idx];
+                let run = || -> Result<(Matrix, LayerResult)> {
+                    let w_model = weights.get(name).as_mat(); // [in, out]
+                    let w_paper = w_model.transpose(); // [out, in]
+                    let ctx = ctxs.for_linear(name)?;
+                    let t0 = Instant::now();
+                    let out = method.quantize(&w_paper, &ctx);
+                    let seconds = t0.elapsed().as_secs_f64();
+                    let bits: BitsBreakdown = out.bits;
+                    let res = LayerResult {
+                        name: name.clone(),
+                        mse: out.mse,
+                        wbits: bits.per_weight(w_paper.rows, w_paper.cols),
+                        bits: bits.total(),
+                        seconds,
+                        rows: w_paper.rows,
+                        cols: w_paper.cols,
+                    };
+                    Ok((out.w_hat.transpose(), res))
+                };
+                match run() {
+                    Ok((w_hat_model, res)) => {
+                        progress.tick(name);
+                        results.lock().unwrap().push((name.clone(), w_hat_model, res));
+                    }
+                    Err(e) => {
+                        *failure.lock().unwrap() = Some(format!("{name}: {e}"));
+                        return;
+                    }
+                }
+            });
+        }
+    });
+
+    if let Some(msg) = failure.into_inner().unwrap() {
+        // leave `weights` untouched on failure
+        return Err(anyhow!("quantization failed: {msg}"));
+    }
+    let mut results = results.into_inner().unwrap();
+    results.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut metrics = Vec::with_capacity(results.len());
+    for (name, w_hat, res) in results {
+        weights.set_matrix(&name, w_hat);
+        metrics.push(res);
+    }
+    Ok(metrics)
+}
+
+/// Aggregate W-bits across layers (weighted by element count).
+pub fn aggregate_wbits(results: &[LayerResult]) -> f64 {
+    let total_elems: f64 = results.iter().map(|r| (r.rows * r.cols) as f64).sum();
+    let total_bits: f64 = results.iter().map(|r| r.bits).sum();
+    if total_elems == 0.0 {
+        0.0
+    } else {
+        total_bits / total_elems
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib;
+    use crate::model::tests::micro_weights;
+    use crate::quant::by_name;
+
+    fn calibrated() -> (crate::model::Weights, CtxMap) {
+        let w = micro_weights(11);
+        let win: Vec<u8> = (0..12u8).map(|i| i.wrapping_mul(37)).collect();
+        let win2: Vec<u8> = (0..12u8).map(|i| i.wrapping_mul(11).wrapping_add(3)).collect();
+        let c = calib::collect(&w, &[&win, &win2]).contexts().unwrap();
+        (w, c)
+    }
+
+    #[test]
+    fn quantizes_every_layer_once() {
+        let (mut w, c) = calibrated();
+        let q = by_name("rtn").unwrap();
+        let res = quantize_model(&mut w, &c, q.as_ref(), &QuantJobConfig { workers: 3, quiet: true })
+            .unwrap();
+        assert_eq!(res.len(), w.config.linear_names().len());
+        let mut names: Vec<&str> = res.iter().map(|r| r.name.as_str()).collect();
+        names.dedup();
+        assert_eq!(names.len(), res.len(), "duplicate layer results");
+    }
+
+    #[test]
+    fn worker_count_does_not_change_output() {
+        let q = by_name("hbllm-row").unwrap();
+        let mut outs = Vec::new();
+        for workers in [1usize, 4] {
+            let (mut w, c) = calibrated();
+            quantize_model(&mut w, &c, q.as_ref(), &QuantJobConfig { workers, quiet: true })
+                .unwrap();
+            outs.push(w.get("l0.wq").as_mat().clone());
+        }
+        assert_eq!(outs[0].data, outs[1].data, "nondeterministic across worker counts");
+    }
+
+    #[test]
+    fn weights_actually_change() {
+        let (mut w, c) = calibrated();
+        let before = w.get("l1.w2").as_mat().clone();
+        let q = by_name("billm").unwrap();
+        quantize_model(&mut w, &c, q.as_ref(), &QuantJobConfig { workers: 2, quiet: true }).unwrap();
+        let after = w.get("l1.w2").as_mat();
+        assert!(before.mse(after) > 0.0, "weights unchanged");
+        // non-linear tensors untouched
+        assert_eq!(w.get("tok_emb").as_mat().data.len(), 256 * 16);
+    }
+
+    #[test]
+    fn aggregate_wbits_weighted() {
+        let res = vec![
+            LayerResult { name: "a".into(), mse: 0.0, wbits: 1.0, bits: 100.0, seconds: 0.0, rows: 10, cols: 10 },
+            LayerResult { name: "b".into(), mse: 0.0, wbits: 2.0, bits: 600.0, seconds: 0.0, rows: 10, cols: 30 },
+        ];
+        let agg = aggregate_wbits(&res);
+        assert!((agg - 700.0 / 400.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,120 @@
+//! Line-protocol TCP scoring server over the quantized model.
+//!
+//! Protocol: one UTF-8 text per line in; `ppl <value>\n` out (byte-level
+//! perplexity of the text under the served model), `err <msg>\n` on error.
+//! The PJRT runtime stays on the batcher thread (xla handles are not Sync);
+//! connection handlers only exchange messages through the batcher.
+
+use super::batcher::{Batcher, BatcherConfig, BatcherHandle};
+use crate::runtime::NllRunner;
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+/// Score a batch of texts: mean NLL/byte -> perplexity per text.
+pub fn score_texts(runner: &NllRunner, texts: &[Vec<u8>]) -> Vec<Result<f64, String>> {
+    let seq = runner.seq;
+    let mut out = Vec::with_capacity(texts.len());
+    for chunk in texts.chunks(runner.batch) {
+        let mut tokens = vec![b'\n' as i32; runner.batch * seq];
+        let mut lens = Vec::with_capacity(chunk.len());
+        for (r, text) in chunk.iter().enumerate() {
+            let take = text.len().min(seq);
+            for (c, &b) in text[..take].iter().enumerate() {
+                tokens[r * seq + c] = b as i32;
+            }
+            lens.push(take);
+        }
+        match runner.nll(&tokens) {
+            Ok(nll) => {
+                let per_row = seq - 1;
+                for (r, &len) in lens.iter().enumerate() {
+                    let hi = len.saturating_sub(1).max(1).min(per_row);
+                    let mean: f64 = nll[r * per_row..r * per_row + hi]
+                        .iter()
+                        .map(|&v| v as f64)
+                        .sum::<f64>()
+                        / hi as f64;
+                    out.push(Ok(mean.exp()));
+                }
+            }
+            Err(e) => {
+                for _ in chunk {
+                    out.push(Err(e.to_string()));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn handle_conn(stream: TcpStream, handle: BatcherHandle) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.is_empty() {
+            continue;
+        }
+        let resp = match handle.score(line.as_bytes()) {
+            Ok(ppl) => format!("ppl {ppl:.4}\n"),
+            Err(e) => format!("err {e}\n"),
+        };
+        if writer.write_all(resp.as_bytes()).is_err() {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Bind the listening socket (separately from serving, so callers can learn
+/// the ephemeral port before the blocking serve loop starts).
+pub fn bind(addr: &str) -> Result<(TcpListener, std::net::SocketAddr)> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    Ok((listener, local))
+}
+
+/// Serve until `max_conns` connections have been handled (forever if None).
+///
+/// PJRT handles are not `Send`, so the batcher loop (which owns `runner`)
+/// runs on the *calling* thread; the accept loop and per-connection readers
+/// run on spawned threads and communicate through the batcher channel.
+pub fn serve_on(
+    listener: TcpListener,
+    runner: &NllRunner,
+    cfg: BatcherConfig,
+    max_conns: Option<usize>,
+) -> Result<()> {
+    let (batcher, handle) = Batcher::new(cfg);
+    let accept = std::thread::spawn(move || {
+        let mut served = 0usize;
+        for stream in listener.incoming() {
+            match stream {
+                Ok(s) => {
+                    let h = handle.clone();
+                    std::thread::spawn(move || handle_conn(s, h));
+                    served += 1;
+                    if let Some(max) = max_conns {
+                        if served >= max {
+                            break;
+                        }
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        // `handle` drops here; the batcher loop below exits once every
+        // per-connection clone is gone too
+    });
+    batcher.run(|texts| score_texts(runner, texts));
+    accept.join().ok();
+    Ok(())
+}

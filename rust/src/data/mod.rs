@@ -1,0 +1,246 @@
+//! Data substrate: byte-level tokenizer (vocab = 256), corpora, evaluation
+//! windows, and the QA task binary format written by
+//! `python/compile/datagen.py`.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+pub const TASK_MAGIC: u32 = 0x48425154; // "HBQT"
+
+/// Byte-level "tokenizer": tokens are bytes; kept as a type to document the
+/// contract with the model (vocab 256) and centralize pad handling.
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+    /// newline is the least-harmful pad byte in our corpora
+    pub const PAD: u8 = b'\n';
+
+    pub fn encode(text: &str) -> Vec<u8> {
+        text.as_bytes().to_vec()
+    }
+
+    pub fn decode(tokens: &[u8]) -> String {
+        String::from_utf8_lossy(tokens).into_owned()
+    }
+}
+
+/// A loaded corpus (plain bytes).
+pub struct Corpus {
+    pub name: String,
+    pub data: Vec<u8>,
+}
+
+impl Corpus {
+    pub fn load(path: &Path) -> Result<Corpus> {
+        let data = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        Ok(Corpus { name, data })
+    }
+
+    /// Non-overlapping evaluation windows of `seq_len` bytes, at most
+    /// `max_windows`.
+    pub fn windows(&self, seq_len: usize, max_windows: usize) -> Vec<&[u8]> {
+        self.data
+            .chunks_exact(seq_len)
+            .take(max_windows)
+            .collect()
+    }
+}
+
+/// One multiple-choice QA item.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskItem {
+    pub prompt: String,
+    pub options: Vec<String>,
+    pub correct: usize,
+}
+
+/// A QA task family loaded from `artifacts/tasks/<family>.bin`.
+pub struct TaskFile {
+    pub family: String,
+    pub items: Vec<TaskItem>,
+}
+
+impl TaskFile {
+    pub fn load(path: &Path) -> Result<TaskFile> {
+        let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        let family = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let mut cur = Cursor { b: &raw, i: 0 };
+        let magic = cur.u32()?;
+        if magic != TASK_MAGIC {
+            bail!("bad task magic {magic:#x} in {path:?}");
+        }
+        let n = cur.u32()? as usize;
+        let mut items = Vec::with_capacity(n);
+        for _ in 0..n {
+            let plen = cur.u16()? as usize;
+            let prompt = cur.str(plen)?;
+            let nopt = cur.u8()? as usize;
+            let correct = cur.u8()? as usize;
+            if correct >= nopt {
+                bail!("correct index {correct} out of range ({nopt} options)");
+            }
+            let mut options = Vec::with_capacity(nopt);
+            for _ in 0..nopt {
+                let olen = cur.u16()? as usize;
+                options.push(cur.str(olen)?);
+            }
+            items.push(TaskItem { prompt, options, correct });
+        }
+        Ok(TaskFile { family, items })
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated task file at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn str(&mut self, n: usize) -> Result<String> {
+        Ok(String::from_utf8_lossy(self.take(n)?).into_owned())
+    }
+}
+
+/// Pack byte windows into fixed [batch, seq] i32 token batches, padding the
+/// final partial batch by repeating the last row (callers track `valid`).
+pub struct Batch {
+    pub tokens: Vec<i32>, // batch*seq, row-major
+    pub batch: usize,
+    pub seq: usize,
+    /// number of real (non-padding) rows
+    pub valid: usize,
+}
+
+pub fn batches(windows: &[&[u8]], batch: usize, seq: usize) -> Vec<Batch> {
+    let mut out = Vec::new();
+    for chunk in windows.chunks(batch) {
+        let mut tokens = vec![ByteTokenizer::PAD as i32; batch * seq];
+        for (r, win) in chunk.iter().enumerate() {
+            for (c, &b) in win.iter().take(seq).enumerate() {
+                tokens[r * seq + c] = b as i32;
+            }
+        }
+        // replicate the last real row into padding rows (keeps PJRT shapes
+        // fixed without skewing stats — padded rows are masked by `valid`)
+        for r in chunk.len()..batch {
+            let (src, dst) = tokens.split_at_mut(r * seq);
+            dst[..seq].copy_from_slice(&src[(chunk.len() - 1) * seq..chunk.len() * seq]);
+        }
+        out.push(Batch { tokens, batch, seq, valid: chunk.len() });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_non_overlapping() {
+        let c = Corpus { name: "t".into(), data: (0..100u8).collect() };
+        let w = c.windows(32, 10);
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[0][31], 31);
+        assert_eq!(w[1][0], 32);
+    }
+
+    #[test]
+    fn windows_capped() {
+        let c = Corpus { name: "t".into(), data: vec![0; 1000] };
+        assert_eq!(c.windows(10, 5).len(), 5);
+    }
+
+    #[test]
+    fn batch_padding() {
+        let data: Vec<u8> = (0..50).collect();
+        let wins: Vec<&[u8]> = data.chunks_exact(10).collect(); // 5 windows
+        let bs = batches(&wins, 4, 10);
+        assert_eq!(bs.len(), 2);
+        assert_eq!(bs[0].valid, 4);
+        assert_eq!(bs[1].valid, 1);
+        // padding rows replicate the last valid row
+        assert_eq!(bs[1].tokens[1 * 10], bs[1].tokens[0]);
+        assert_eq!(bs[0].tokens[0], 0);
+        assert_eq!(bs[0].tokens[39], 39);
+    }
+
+    #[test]
+    fn task_roundtrip_with_python_format() {
+        // byte-level re-encoding of the python writer for one item
+        let mut raw = Vec::new();
+        raw.extend_from_slice(&TASK_MAGIC.to_le_bytes());
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        let prompt = b"ta kivo ";
+        raw.extend_from_slice(&(prompt.len() as u16).to_le_bytes());
+        raw.extend_from_slice(prompt);
+        raw.push(2); // options
+        raw.push(1); // correct
+        for opt in [b"ba.".as_slice(), b"zo.".as_slice()] {
+            raw.extend_from_slice(&(opt.len() as u16).to_le_bytes());
+            raw.extend_from_slice(opt);
+        }
+        let dir = std::env::temp_dir().join("hbllm_task_test.bin");
+        std::fs::write(&dir, &raw).unwrap();
+        let tf = TaskFile::load(&dir).unwrap();
+        assert_eq!(tf.items.len(), 1);
+        assert_eq!(tf.items[0].correct, 1);
+        assert_eq!(tf.items[0].options[0], "ba.");
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn task_rejects_garbage() {
+        let dir = std::env::temp_dir().join("hbllm_task_bad.bin");
+        std::fs::write(&dir, b"nonsense").unwrap();
+        assert!(TaskFile::load(&dir).is_err());
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn real_artifact_tasks_load() {
+        let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tasks"));
+        if dir.exists() {
+            let mut n = 0;
+            for entry in std::fs::read_dir(dir).unwrap() {
+                let p = entry.unwrap().path();
+                if p.extension().map_or(false, |e| e == "bin") {
+                    let tf = TaskFile::load(&p).unwrap();
+                    assert!(!tf.items.is_empty());
+                    n += 1;
+                }
+            }
+            assert_eq!(n, 9, "expected 9 task families");
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! 1-level (optionally multi-level) 1D Haar transform, matching the paper's
+//! §3.6 convention and the L1 Pallas kernel bit-for-bit:
+//!
+//!   analysis : lo[k] = (x[2k] + x[2k+1]) / 2,  hi[k] = (x[2k] - x[2k+1]) / 2
+//!   synthesis: x[2k] = lo[k] + hi[k],          x[2k+1] = lo[k] - hi[k]
+//!
+//! Output layout is [low band ++ high band] along the transformed axis.
+//! The pair is biorthogonal and exactly invertible; cost is O(d) per row
+//! (the "local convolution" the paper contrasts with FrameQuant's O(d²)).
+
+use crate::tensor::Matrix;
+
+/// In-place-style analysis of one row slice into a fresh Vec.
+pub fn fwd_1d(x: &[f32]) -> Vec<f32> {
+    assert!(x.len() % 2 == 0, "haar needs even length, got {}", x.len());
+    let h = x.len() / 2;
+    let mut out = vec![0.0f32; x.len()];
+    for k in 0..h {
+        out[k] = (x[2 * k] + x[2 * k + 1]) * 0.5;
+        out[h + k] = (x[2 * k] - x[2 * k + 1]) * 0.5;
+    }
+    out
+}
+
+pub fn inv_1d(c: &[f32]) -> Vec<f32> {
+    assert!(c.len() % 2 == 0);
+    let h = c.len() / 2;
+    let mut out = vec![0.0f32; c.len()];
+    for k in 0..h {
+        out[2 * k] = c[k] + c[h + k];
+        out[2 * k + 1] = c[k] - c[h + k];
+    }
+    out
+}
+
+/// Row-wise analysis: every row of W transformed independently.
+pub fn fwd_rows(w: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(w.rows, w.cols);
+    for i in 0..w.rows {
+        out.row_mut(i).copy_from_slice(&fwd_1d(w.row(i)));
+    }
+    out
+}
+
+pub fn inv_rows(c: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(c.rows, c.cols);
+    for i in 0..c.rows {
+        out.row_mut(i).copy_from_slice(&inv_1d(c.row(i)));
+    }
+    out
+}
+
+/// Column-wise analysis: pairs of adjacent rows; output rows [0, n/2) are
+/// the low band, [n/2, n) the high band.
+pub fn fwd_cols(w: &Matrix) -> Matrix {
+    assert!(w.rows % 2 == 0, "column haar needs even row count");
+    let h = w.rows / 2;
+    let mut out = Matrix::zeros(w.rows, w.cols);
+    for k in 0..h {
+        for j in 0..w.cols {
+            let a = w.get(2 * k, j);
+            let b = w.get(2 * k + 1, j);
+            out.set(k, j, (a + b) * 0.5);
+            out.set(h + k, j, (a - b) * 0.5);
+        }
+    }
+    out
+}
+
+pub fn inv_cols(c: &Matrix) -> Matrix {
+    assert!(c.rows % 2 == 0);
+    let h = c.rows / 2;
+    let mut out = Matrix::zeros(c.rows, c.cols);
+    for k in 0..h {
+        for j in 0..c.cols {
+            let lo = c.get(k, j);
+            let hi = c.get(h + k, j);
+            out.set(2 * k, j, lo + hi);
+            out.set(2 * k + 1, j, lo - hi);
+        }
+    }
+    out
+}
+
+/// Multi-level row-wise analysis (extension beyond the paper's single level):
+/// level ℓ re-transforms the low band of level ℓ-1. Returns the coefficient
+/// matrix and the band boundaries [b0=0, b1, ..], where bands are
+/// [b_k, b_{k+1}) — deepest low band first, then highs from deep to shallow.
+pub fn fwd_rows_multi(w: &Matrix, levels: usize) -> (Matrix, Vec<usize>) {
+    assert!(levels >= 1);
+    let mut cur = fwd_rows(w);
+    let mut low_len = w.cols / 2;
+    for _ in 1..levels {
+        if low_len % 2 != 0 || low_len < 2 {
+            break;
+        }
+        // transform the low band in place
+        let mut next = cur.clone();
+        for i in 0..cur.rows {
+            let sub = fwd_1d(&cur.row(i)[..low_len]);
+            next.row_mut(i)[..low_len].copy_from_slice(&sub);
+        }
+        cur = next;
+        low_len /= 2;
+    }
+    // band boundaries: [0, low_len, 2*low_len, 4*low_len, ..., cols]
+    let mut bounds = vec![0, low_len];
+    let mut b = low_len;
+    while b < w.cols {
+        bounds.push(b * 2);
+        b *= 2;
+    }
+    (cur, bounds)
+}
+
+pub fn inv_rows_multi(c: &Matrix, bounds: &[usize]) -> Matrix {
+    // bounds = [0, l, 2l, 4l, ..., cols]
+    let mut cur = c.clone();
+    for w in 1..bounds.len() - 1 {
+        let span = bounds[w + 1];
+        let mut next = cur.clone();
+        for i in 0..cur.rows {
+            let sub = inv_1d(&cur.row(i)[..span]);
+            next.row_mut(i)[..span].copy_from_slice(&sub);
+        }
+        cur = next;
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+
+    fn rand_matrix(g: &mut Gen, max_n: usize, max_halfm: usize) -> Matrix {
+        let n = g.size(1, max_n);
+        let m = 2 * g.size(1, max_halfm);
+        let data = g.vec_f32(n * m, 1.5);
+        Matrix::from_vec(n, m, data)
+    }
+
+    #[test]
+    fn known_values() {
+        // paper kernels: [1/2,1/2] & [1/2,-1/2]
+        let c = fwd_1d(&[3.0, 1.0, -2.0, 4.0]);
+        assert_eq!(c, vec![2.0, 1.0, 1.0, -3.0]);
+        assert_eq!(inv_1d(&c), vec![3.0, 1.0, -2.0, 4.0]);
+    }
+
+    #[test]
+    fn prop_roundtrip_rows() {
+        check(
+            "haar-roundtrip-rows",
+            40,
+            |g| rand_matrix(g, 40, 33),
+            |w| {
+                let back = inv_rows(&fwd_rows(w));
+                if back.mse(w) < 1e-12 {
+                    Ok(())
+                } else {
+                    Err(format!("mse {}", back.mse(w)))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_roundtrip_cols() {
+        check(
+            "haar-roundtrip-cols",
+            40,
+            |g| {
+                let n = 2 * g.size(1, 20);
+                let m = g.size(1, 40);
+                Matrix::from_vec(n, m, g.vec_f32(n * m, 1.0))
+            },
+            |w| {
+                let back = inv_cols(&fwd_cols(w));
+                if back.mse(w) < 1e-12 {
+                    Ok(())
+                } else {
+                    Err("col roundtrip failed".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn cols_is_rows_of_transpose() {
+        let w = Matrix::from_fn(8, 6, |i, j| (i * 17 + j * 3) as f32 * 0.1 - 2.0);
+        let via_t = fwd_rows(&w.transpose()).transpose();
+        let direct = fwd_cols(&w);
+        assert!(direct.mse(&via_t) < 1e-12);
+    }
+
+    #[test]
+    fn constant_row_zero_high_band() {
+        let w = Matrix::from_vec(1, 8, vec![5.0; 8]);
+        let c = fwd_rows(&w);
+        assert_eq!(&c.row(0)[..4], &[5.0; 4]);
+        assert_eq!(&c.row(0)[4..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn energy_compaction_on_smooth_signal() {
+        // smooth signals put most energy in the low band — the property the
+        // quantizer exploits
+        let w = Matrix::from_fn(1, 64, |_, j| ((j as f32) * 0.1).sin());
+        let c = fwd_rows(&w);
+        let lo: f64 = c.row(0)[..32].iter().map(|&x| (x as f64).powi(2)).sum();
+        let hi: f64 = c.row(0)[32..].iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!(lo > 20.0 * hi, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn multi_level_roundtrip() {
+        let w = Matrix::from_fn(5, 32, |i, j| ((i * j) as f32 * 0.37).cos());
+        for levels in 1..=4 {
+            let (c, bounds) = fwd_rows_multi(&w, levels);
+            let back = inv_rows_multi(&c, &bounds);
+            assert!(back.mse(&w) < 1e-10, "levels={levels}");
+            assert_eq!(*bounds.last().unwrap(), 32);
+        }
+    }
+
+    #[test]
+    fn multi_level_bounds_shape() {
+        let w = Matrix::from_fn(2, 16, |_, j| j as f32);
+        let (_, b1) = fwd_rows_multi(&w, 1);
+        assert_eq!(b1, vec![0, 8, 16]);
+        let (_, b2) = fwd_rows_multi(&w, 2);
+        assert_eq!(b2, vec![0, 4, 8, 16]);
+    }
+}

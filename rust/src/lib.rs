@@ -1,0 +1,25 @@
+//! HBLLM — wavelet-enhanced high-fidelity 1-bit post-training quantization
+//! for LLMs (NeurIPS 2025) — full-system Rust + JAX + Pallas reproduction.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`quant`] — the paper's contribution: HaarQuant + structure-aware
+//!   grouping, and every baseline (BiLLM, ARB-LLM, PB-LLM, FrameQuant).
+//! * [`haar`], [`tensor`], [`pack`] — numeric substrates.
+//! * [`model`], [`calib`], [`data`], [`eval`] — the PTQ evaluation stack
+//!   (byte-level GPT, Hessian collection, perplexity + zero-shot QA).
+//! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts.
+//! * [`coordinator`] — quantization job scheduling and batched serving.
+
+pub mod calib;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod haar;
+pub mod model;
+pub mod pack;
+pub mod pipeline;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

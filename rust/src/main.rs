@@ -1,0 +1,7 @@
+fn main() {
+    let args = hbllm::util::cli::Args::parse();
+    if let Err(e) = hbllm::cli::run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,472 @@
+//! Model substrate: artifact metadata, weight storage, and a pure-Rust
+//! forward pass that replicates `python/compile/model.py` op-for-op in f32.
+//!
+//! The Rust forward exists for *calibration*: it exposes every linear
+//! layer's input activations (which the PJRT path cannot), from which
+//! `calib` accumulates the GPTQ Hessians. An integration test checks its
+//! logits against the AOT HLO module.
+
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub const RMS_EPS: f32 = 1e-5;
+const GELU_C: f32 = 0.797_884_56;
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub param_order: Vec<String>,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        let g = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing config field {k}"))
+        };
+        let param_order: Vec<String> = j
+            .get("param_order")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing param_order"))?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+        let mut param_shapes = BTreeMap::new();
+        let shapes = j
+            .get("param_shapes")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing param_shapes"))?;
+        for (k, v) in shapes {
+            let dims: Vec<usize> = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("bad shape for {k}"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            param_shapes.insert(k.clone(), dims);
+        }
+        Ok(ModelConfig {
+            name: j.get("name").and_then(Json::as_str).unwrap_or("model").to_string(),
+            d_model: g("d_model")?,
+            n_layers: g("n_layers")?,
+            n_heads: g("n_heads")?,
+            d_ff: g("d_ff")?,
+            seq_len: g("seq_len")?,
+            vocab: g("vocab")?,
+            param_order,
+            param_shapes,
+        })
+    }
+
+    /// Names of the quantized linear layers (paper: transformer-block
+    /// projections; embeddings, norms and the LM head stay fp16).
+    pub fn linear_names(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for i in 0..self.n_layers {
+            for k in ["wq", "wk", "wv", "wo", "w1", "w2"] {
+                out.push(format!("l{i}.{k}"));
+            }
+        }
+        out
+    }
+}
+
+/// A parameter tensor: 1-D (norm gains) or 2-D.
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    Vec1(Vec<f32>),
+    Mat(Matrix),
+}
+
+impl Tensor {
+    pub fn as_mat(&self) -> &Matrix {
+        match self {
+            Tensor::Mat(m) => m,
+            Tensor::Vec1(_) => panic!("expected matrix tensor"),
+        }
+    }
+
+    pub fn as_vec(&self) -> &[f32] {
+        match self {
+            Tensor::Vec1(v) => v,
+            Tensor::Mat(_) => panic!("expected vector tensor"),
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        match self {
+            Tensor::Vec1(v) => v.len(),
+            Tensor::Mat(m) => m.data.len(),
+        }
+    }
+}
+
+/// All model weights, keyed by canonical parameter name. Matrices are in
+/// MODEL orientation `[in, out]` (the forward computes x @ W).
+pub struct Weights {
+    pub config: ModelConfig,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    /// Load from `model_<cfg>.json` + the raw f32-LE binary beside it.
+    pub fn load(meta_path: &Path) -> Result<Weights> {
+        let meta_src = std::fs::read_to_string(meta_path)
+            .with_context(|| format!("reading {meta_path:?}"))?;
+        let meta = Json::parse(&meta_src).map_err(|e| anyhow!("bad meta json: {e}"))?;
+        let config = ModelConfig::from_json(
+            meta.get("config").ok_or_else(|| anyhow!("missing config"))?,
+        )?;
+        let bin_path = meta_path.with_extension("bin");
+        let raw = std::fs::read(&bin_path).with_context(|| format!("reading {bin_path:?}"))?;
+        if raw.len() % 4 != 0 {
+            bail!("weight binary not a multiple of 4 bytes");
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let tensors_meta = meta
+            .get("tensors")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing tensors"))?;
+        let mut tensors = BTreeMap::new();
+        for (name, tm) in tensors_meta {
+            let off = tm.get("offset").and_then(Json::as_usize).ok_or_else(|| anyhow!("offset"))?;
+            let shape: Vec<usize> = tm
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let count: usize = shape.iter().product();
+            if off + count > floats.len() {
+                bail!("tensor {name} out of range");
+            }
+            let data = floats[off..off + count].to_vec();
+            let t = match shape.len() {
+                1 => Tensor::Vec1(data),
+                2 => Tensor::Mat(Matrix::from_vec(shape[0], shape[1], data)),
+                d => bail!("unsupported rank {d} for {name}"),
+            };
+            tensors.insert(name.clone(), t);
+        }
+        for name in &config.param_order {
+            if !tensors.contains_key(name) {
+                bail!("missing tensor {name}");
+            }
+        }
+        Ok(Weights { config, tensors })
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        &self.tensors[name]
+    }
+
+    pub fn set_matrix(&mut self, name: &str, m: Matrix) {
+        self.tensors.insert(name.to_string(), Tensor::Mat(m));
+    }
+
+    /// Flatten in canonical order (the HLO positional argument list).
+    pub fn flat_in_order(&self) -> Vec<&Tensor> {
+        self.config.param_order.iter().map(|n| &self.tensors[n]).collect()
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.tensors.values().map(Tensor::elements).sum()
+    }
+}
+
+pub fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
+    let d = x.len();
+    let ms: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+    let inv = 1.0 / ((ms as f32) + RMS_EPS).sqrt();
+    for j in 0..d {
+        out[j] = x[j] * inv * g[j];
+    }
+}
+
+pub fn gelu_tanh(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Captured per-linear inputs for one forward call (calibration hook).
+#[derive(Default)]
+pub struct Capture {
+    /// rows = tokens, keyed by linear name; wq/wk/wv share "l{i}.attn_in"
+    pub activations: BTreeMap<String, Matrix>,
+}
+
+/// Pure-Rust forward: tokens (one sequence) -> logits [seq, vocab].
+/// When `capture` is provided, every linear's input activations are stored.
+pub fn forward(
+    w: &Weights,
+    tokens: &[u8],
+    mut capture: Option<&mut Capture>,
+) -> Matrix {
+    let cfg = &w.config;
+    let (s, d) = (tokens.len(), cfg.d_model);
+    assert!(s <= cfg.seq_len, "sequence too long");
+    let tok_emb = w.get("tok_emb").as_mat();
+    let pos_emb = w.get("pos_emb").as_mat();
+    // x: [s, d]
+    let mut x = Matrix::zeros(s, d);
+    for (t, &b) in tokens.iter().enumerate() {
+        for j in 0..d {
+            x.set(t, j, tok_emb.get(b as usize, j) + pos_emb.get(t, j));
+        }
+    }
+    let heads = cfg.n_heads;
+    let dh = cfg.d_head();
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    for layer in 0..cfg.n_layers {
+        let p = |k: &str| format!("l{layer}.{k}");
+        // --- attention ---
+        let ln1 = w.get(&p("ln1")).as_vec();
+        let mut h = Matrix::zeros(s, d);
+        for t in 0..s {
+            let (src, dst) = (x.row(t).to_vec(), h.row_mut(t));
+            rmsnorm(&src, ln1, dst);
+        }
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.activations.insert(p("attn_in"), h.clone());
+        }
+        let q = h.matmul(w.get(&p("wq")).as_mat());
+        let k = h.matmul(w.get(&p("wk")).as_mat());
+        let v = h.matmul(w.get(&p("wv")).as_mat());
+        // causal attention per head
+        let mut attn_out = Matrix::zeros(s, d);
+        let mut probs = vec![0f32; s];
+        for hd in 0..heads {
+            let c0 = hd * dh;
+            for t in 0..s {
+                // logits over 0..=t
+                let mut maxv = f32::NEG_INFINITY;
+                for u in 0..=t {
+                    let mut dot = 0f32;
+                    for j in 0..dh {
+                        dot += q.get(t, c0 + j) * k.get(u, c0 + j);
+                    }
+                    let l = dot * scale;
+                    probs[u] = l;
+                    maxv = maxv.max(l);
+                }
+                let mut z = 0f32;
+                for u in 0..=t {
+                    probs[u] = (probs[u] - maxv).exp();
+                    z += probs[u];
+                }
+                let inv_z = 1.0 / z;
+                for j in 0..dh {
+                    let mut acc = 0f32;
+                    for u in 0..=t {
+                        acc += probs[u] * inv_z * v.get(u, c0 + j);
+                    }
+                    attn_out.set(t, c0 + j, acc);
+                }
+            }
+        }
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.activations.insert(p("wo_in"), attn_out.clone());
+        }
+        let proj = attn_out.matmul(w.get(&p("wo")).as_mat());
+        x.add_scaled(&proj, 1.0);
+
+        // --- MLP ---
+        let ln2 = w.get(&p("ln2")).as_vec();
+        let mut h2 = Matrix::zeros(s, d);
+        for t in 0..s {
+            let (src, dst) = (x.row(t).to_vec(), h2.row_mut(t));
+            rmsnorm(&src, ln2, dst);
+        }
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.activations.insert(p("w1_in"), h2.clone());
+        }
+        let mut ff = h2.matmul(w.get(&p("w1")).as_mat());
+        for vv in ff.data.iter_mut() {
+            *vv = gelu_tanh(*vv);
+        }
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.activations.insert(p("w2_in"), ff.clone());
+        }
+        let down = ff.matmul(w.get(&p("w2")).as_mat());
+        x.add_scaled(&down, 1.0);
+    }
+
+    // final norm + unembed
+    let lnf = w.get("ln_f").as_vec();
+    let mut xf = Matrix::zeros(s, d);
+    for t in 0..s {
+        let (src, dst) = (x.row(t).to_vec(), xf.row_mut(t));
+        rmsnorm(&src, lnf, dst);
+    }
+    xf.matmul(w.get("unemb").as_mat())
+}
+
+/// Per-position next-token NLL from logits (matches model.py `nll`).
+pub fn nll_from_logits(logits: &Matrix, tokens: &[u8]) -> Vec<f32> {
+    let s = tokens.len();
+    let mut out = Vec::with_capacity(s - 1);
+    for t in 0..s - 1 {
+        let row = logits.row(t);
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let logz: f32 = maxv + row.iter().map(|&v| (v - maxv).exp()).sum::<f32>().ln();
+        out.push(logz - row[tokens[t + 1] as usize]);
+    }
+    out
+}
+
+/// Which shared-input group a linear layer belongs to (wq/wk/wv share the
+/// rmsnorm output, so they share one Hessian).
+pub fn activation_key(linear_name: &str) -> String {
+    let (layer, kind) = linear_name.split_once('.').expect("l{i}.{kind}");
+    match kind {
+        "wq" | "wk" | "wv" => format!("{layer}.attn_in"),
+        "wo" => format!("{layer}.wo_in"),
+        "w1" => format!("{layer}.w1_in"),
+        "w2" => format!("{layer}.w2_in"),
+        other => panic!("unknown linear {other}"),
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Hand-build a micro model for tests (no artifact dependency).
+    pub fn micro_weights(seed: u64) -> Weights {
+        let (d, layers, heads, dff, seq, vocab) = (16usize, 2usize, 2usize, 32usize, 12usize, 256usize);
+        let mut order = vec!["tok_emb".to_string(), "pos_emb".to_string()];
+        for i in 0..layers {
+            for k in ["ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2"] {
+                order.push(format!("l{i}.{k}"));
+            }
+        }
+        order.push("ln_f".into());
+        order.push("unemb".into());
+        let mut shapes = BTreeMap::new();
+        let mut rng = Pcg32::seeded(seed);
+        let mut tensors = BTreeMap::new();
+        for name in &order {
+            let base = name.split('.').last().unwrap();
+            let shape: Vec<usize> = match base {
+                "tok_emb" => vec![vocab, d],
+                "pos_emb" => vec![seq, d],
+                "unemb" => vec![d, vocab],
+                "ln1" | "ln2" | "ln_f" => vec![d],
+                "wq" | "wk" | "wv" | "wo" => vec![d, d],
+                "w1" => vec![d, dff],
+                "w2" => vec![dff, d],
+                _ => unreachable!(),
+            };
+            shapes.insert(name.clone(), shape.clone());
+            let count: usize = shape.iter().product();
+            let t = if shape.len() == 1 {
+                Tensor::Vec1(vec![1.0; count])
+            } else {
+                let std = 1.0 / (shape[0] as f32).sqrt();
+                Tensor::Mat(Matrix::from_vec(
+                    shape[0],
+                    shape[1],
+                    (0..count).map(|_| rng.normal_f32() * std).collect(),
+                ))
+            };
+            tensors.insert(name.clone(), t);
+        }
+        Weights {
+            config: ModelConfig {
+                name: "micro".into(),
+                d_model: d,
+                n_layers: layers,
+                n_heads: heads,
+                d_ff: dff,
+                seq_len: seq,
+                vocab,
+                param_order: order,
+                param_shapes: shapes,
+            },
+            tensors,
+        }
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let w = micro_weights(1);
+        let tokens: Vec<u8> = (0..12).map(|i| (i * 17) as u8).collect();
+        let logits = forward(&w, &tokens, None);
+        assert_eq!((logits.rows, logits.cols), (12, 256));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_is_causal() {
+        let w = micro_weights(2);
+        let mut tokens: Vec<u8> = (0..12).map(|i| (i * 31) as u8).collect();
+        let a = forward(&w, &tokens, None);
+        tokens[8] = tokens[8].wrapping_add(1);
+        let b = forward(&w, &tokens, None);
+        for t in 0..8 {
+            for j in 0..256 {
+                assert!((a.get(t, j) - b.get(t, j)).abs() < 1e-6, "leak at t={t}");
+            }
+        }
+        assert!((0..256).any(|j| (a.get(8, j) - b.get(8, j)).abs() > 1e-6));
+    }
+
+    #[test]
+    fn nll_matches_manual_softmax() {
+        let w = micro_weights(3);
+        let tokens: Vec<u8> = vec![10, 20, 30, 40];
+        let logits = forward(&w, &tokens, None);
+        let nll = nll_from_logits(&logits, &tokens);
+        assert_eq!(nll.len(), 3);
+        // manual check at position 0
+        let row = logits.row(0);
+        let z: f64 = row.iter().map(|&v| (v as f64).exp()).sum();
+        let want = z.ln() - row[20] as f64;
+        assert!((nll[0] as f64 - want).abs() < 1e-4);
+        assert!(nll.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn capture_collects_all_linear_inputs() {
+        let w = micro_weights(4);
+        let tokens: Vec<u8> = (0..12u8).collect();
+        let mut cap = Capture::default();
+        forward(&w, &tokens, Some(&mut cap));
+        for name in w.config.linear_names() {
+            let key = activation_key(&name);
+            let act = cap.activations.get(&key).expect(&key);
+            assert_eq!(act.rows, 12);
+            let want_cols = match name.split('.').last().unwrap() {
+                "w2" => w.config.d_ff,
+                _ => w.config.d_model,
+            };
+            assert_eq!(act.cols, want_cols, "{name}");
+        }
+    }
+
+    #[test]
+    fn activation_key_mapping() {
+        assert_eq!(activation_key("l0.wq"), "l0.attn_in");
+        assert_eq!(activation_key("l3.w2"), "l3.w2_in");
+    }
+}

@@ -1,0 +1,342 @@
+//! On-disk format for HBLLM-quantized models (the deployment artifact):
+//! packed Haar-domain sign bits + per-row per-band (α, μ) in fp16, plus the
+//! untouched fp32 side tensors (embeddings, norms, head).
+//!
+//! Layout ("HBQ1", all little-endian):
+//!   u32 magic, u32 version
+//!   u32 n_records
+//!   per record:
+//!     u16 name_len, name bytes
+//!     u8  kind (0 = fp32 dense, 1 = haar-packed 1-bit)
+//!     u32 rows, u32 cols
+//!     kind 0: rows*cols f32
+//!     kind 1: rows*2 f16 alpha, rows*2 f16 mu, ceil(cols/64)*rows u64 signs
+//!
+//! Scale/mean parameters are genuinely stored at fp16, so a saved+loaded
+//! model measures the true cost of the paper's storage budget (tests check
+//! the roundtrip error against the fp16 quantization step).
+
+use super::{BitMatrix, HaarPackedLinear};
+use crate::model::{Tensor, Weights};
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+pub const MAGIC: u32 = 0x48425131; // "HBQ1"
+pub const VERSION: u32 = 1;
+
+/// Minimal f32 -> IEEE 754 half conversion (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xff) as i32 - 127 + 15;
+    let mut mant = bits & 0x7fffff;
+    if exp <= 0 {
+        // subnormal / underflow
+        if exp < -10 {
+            return sign;
+        }
+        mant |= 0x800000;
+        let shift = (14 - exp) as u32;
+        let half = 1u32 << (shift - 1);
+        let rounded = (mant + half) >> shift;
+        return sign | rounded as u16;
+    }
+    if exp >= 0x1f {
+        return sign | 0x7c00; // inf
+    }
+    // round mantissa to 10 bits
+    let mant10 = mant >> 13;
+    let rem = mant & 0x1fff;
+    let mut out = sign | ((exp as u16) << 10) | mant10 as u16;
+    if rem > 0x1000 || (rem == 0x1000 && (mant10 & 1) == 1) {
+        out = out.wrapping_add(1);
+        if out & 0x7c00 == 0x7c00 {
+            out = sign | 0x7c00;
+        }
+        let _ = &mut exp;
+    }
+    out
+}
+
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: value = mant × 2⁻²⁴
+            let v = mant as f32 * (1.0 / 16777216.0);
+            let vb = v.to_bits() | sign;
+            return f32::from_bits(vb);
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f800000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// A record: either a raw fp32 tensor or a packed 1-bit layer.
+pub enum Record {
+    Dense { rows: usize, cols: usize, data: Vec<f32> },
+    Packed(HaarPackedLinear),
+}
+
+pub struct PackedModel {
+    pub records: Vec<(String, Record)>,
+}
+
+impl PackedModel {
+    /// Pack a quantized `Weights`: linear layers become Haar-packed 1-bit
+    /// records (refit from their dequantized values), everything else dense.
+    pub fn from_weights(w: &Weights) -> PackedModel {
+        let linear: std::collections::BTreeSet<String> =
+            w.config.linear_names().into_iter().collect();
+        let mut records = Vec::new();
+        for name in &w.config.param_order {
+            let rec = match w.get(name) {
+                Tensor::Vec1(v) => Record::Dense { rows: 1, cols: v.len(), data: v.clone() },
+                Tensor::Mat(m) => {
+                    if linear.contains(name) {
+                        // paper orientation for packing
+                        Record::Packed(HaarPackedLinear::from_dense(&m.transpose()))
+                    } else {
+                        Record::Dense { rows: m.rows, cols: m.cols, data: m.data.clone() }
+                    }
+                }
+            };
+            records.push((name.clone(), rec));
+        }
+        PackedModel { records }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(&MAGIC.to_le_bytes());
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&(self.records.len() as u32).to_le_bytes());
+        for (name, rec) in &self.records {
+            buf.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            match rec {
+                Record::Dense { rows, cols, data } => {
+                    buf.push(0);
+                    buf.extend_from_slice(&(*rows as u32).to_le_bytes());
+                    buf.extend_from_slice(&(*cols as u32).to_le_bytes());
+                    for v in data {
+                        buf.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                Record::Packed(p) => {
+                    buf.push(1);
+                    let (rows, cols) = (p.bits.rows, p.bits.cols);
+                    buf.extend_from_slice(&(rows as u32).to_le_bytes());
+                    buf.extend_from_slice(&(cols as u32).to_le_bytes());
+                    for i in 0..rows {
+                        for b in 0..2 {
+                            buf.extend_from_slice(&f32_to_f16_bits(p.alpha[i][b]).to_le_bytes());
+                        }
+                    }
+                    for i in 0..rows {
+                        for b in 0..2 {
+                            buf.extend_from_slice(&f32_to_f16_bits(p.mu[i][b]).to_le_bytes());
+                        }
+                    }
+                    for i in 0..rows {
+                        for w64 in p.bits.row_words(i) {
+                            buf.extend_from_slice(&w64.to_le_bytes());
+                        }
+                    }
+                }
+            }
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<PackedModel> {
+        let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        let mut i = 0usize;
+        let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
+            if *i + n > raw.len() {
+                bail!("truncated packed model at byte {i:?}");
+            }
+            let s = &raw[*i..*i + n];
+            *i += n;
+            Ok(s)
+        };
+        let u32_at = |i: &mut usize| -> Result<u32> {
+            let s = take(i, 4)?;
+            Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+        };
+        if u32_at(&mut i)? != MAGIC {
+            bail!("bad magic");
+        }
+        if u32_at(&mut i)? != VERSION {
+            bail!("unsupported version");
+        }
+        let n = u32_at(&mut i)? as usize;
+        let mut records = Vec::with_capacity(n);
+        for _ in 0..n {
+            let nl = {
+                let s = take(&mut i, 2)?;
+                u16::from_le_bytes([s[0], s[1]]) as usize
+            };
+            let name = String::from_utf8_lossy(take(&mut i, nl)?).into_owned();
+            let kind = take(&mut i, 1)?[0];
+            let rows = u32_at(&mut i)? as usize;
+            let cols = u32_at(&mut i)? as usize;
+            let rec = match kind {
+                0 => {
+                    let mut data = Vec::with_capacity(rows * cols);
+                    for _ in 0..rows * cols {
+                        let s = take(&mut i, 4)?;
+                        data.push(f32::from_le_bytes([s[0], s[1], s[2], s[3]]));
+                    }
+                    Record::Dense { rows, cols, data }
+                }
+                1 => {
+                    let mut alpha = Vec::with_capacity(rows);
+                    for _ in 0..rows {
+                        let mut ab = [0f32; 2];
+                        for b in ab.iter_mut() {
+                            let s = take(&mut i, 2)?;
+                            *b = f16_bits_to_f32(u16::from_le_bytes([s[0], s[1]]));
+                        }
+                        alpha.push(ab);
+                    }
+                    let mut mu = Vec::with_capacity(rows);
+                    for _ in 0..rows {
+                        let mut ub = [0f32; 2];
+                        for b in ub.iter_mut() {
+                            let s = take(&mut i, 2)?;
+                            *b = f16_bits_to_f32(u16::from_le_bytes([s[0], s[1]]));
+                        }
+                        mu.push(ub);
+                    }
+                    let wpr = (cols + 63) / 64;
+                    let mut bits = BitMatrix::zeros(rows, cols);
+                    for r in 0..rows {
+                        for wi in 0..wpr {
+                            let s = take(&mut i, 8)?;
+                            let word = u64::from_le_bytes([
+                                s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+                            ]);
+                            for bit in 0..64 {
+                                let j = wi * 64 + bit;
+                                if j < cols && (word >> bit) & 1 == 1 {
+                                    bits.set(r, j, true);
+                                }
+                            }
+                        }
+                    }
+                    Record::Packed(HaarPackedLinear { bits, alpha, mu })
+                }
+                k => bail!("unknown record kind {k}"),
+            };
+            records.push((name, rec));
+        }
+        Ok(PackedModel { records })
+    }
+
+    pub fn file_bits_per_linear_weight(&self) -> f64 {
+        let mut bits = 0f64;
+        let mut elems = 0f64;
+        for (_, rec) in &self.records {
+            if let Record::Packed(p) = rec {
+                bits += (p.bits.storage_bytes() * 8) as f64 + (p.bits.rows * 2 * 2 * 16) as f64;
+                elems += (p.bits.rows * p.bits.cols) as f64;
+            }
+        }
+        if elems == 0.0 {
+            0.0
+        } else {
+            bits / elems
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn f16_roundtrip_values() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 65504.0, 1e-4, -3.1415926, 0.099975586] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            let tol = (v.abs() * 1e-3).max(1e-7);
+            assert!((back - v).abs() <= tol, "{v} -> {back}");
+        }
+        assert!(f16_bits_to_f32(f32_to_f16_bits(1e9)).is_infinite());
+        // subnormals survive approximately
+        let tiny = 3e-6f32;
+        let back = f16_bits_to_f32(f32_to_f16_bits(tiny));
+        assert!((back - tiny).abs() < 1e-6);
+    }
+
+    #[test]
+    fn packed_roundtrip_preserves_gemv() {
+        let mut rng = Pcg32::seeded(4);
+        let w = Matrix::from_fn(32, 128, |_, _| rng.normal_f32() * 0.05);
+        let p = HaarPackedLinear::from_dense(&w);
+        let model = PackedModel {
+            records: vec![("l0.wq".into(), Record::Packed(p.clone()))],
+        };
+        let path = std::env::temp_dir().join("hbllm_packed_test.hbq");
+        model.save(&path).unwrap();
+        let back = PackedModel::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let Record::Packed(q) = &back.records[0].1 else { panic!("kind") };
+        let x: Vec<f32> = (0..128).map(|_| rng.normal_f32()).collect();
+        let mut y1 = vec![0f32; 32];
+        let mut y2 = vec![0f32; 32];
+        p.gemv(&x, &mut y1);
+        q.gemv(&x, &mut y2);
+        for (a, b) in y1.iter().zip(&y2) {
+            // only fp16 rounding of alpha/mu may differ
+            assert!((a - b).abs() < 2e-3 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dense_roundtrip_exact() {
+        let model = PackedModel {
+            records: vec![(
+                "ln_f".into(),
+                Record::Dense { rows: 1, cols: 4, data: vec![1.0, -2.5, 3e-9, 42.0] },
+            )],
+        };
+        let path = std::env::temp_dir().join("hbllm_dense_test.hbq");
+        model.save(&path).unwrap();
+        let back = PackedModel::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let Record::Dense { data, .. } = &back.records[0].1 else { panic!("kind") };
+        assert_eq!(data, &vec![1.0, -2.5, 3e-9, 42.0]);
+    }
+
+    #[test]
+    fn rejects_corrupt_files() {
+        let path = std::env::temp_dir().join("hbllm_corrupt_test.hbq");
+        std::fs::write(&path, b"garbage").unwrap();
+        assert!(PackedModel::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_bits_near_one() {
+        let mut rng = Pcg32::seeded(5);
+        let w = Matrix::from_fn(64, 512, |_, _| rng.normal_f32());
+        let model = PackedModel {
+            records: vec![("l".into(), Record::Packed(HaarPackedLinear::from_dense(&w)))],
+        };
+        let b = model.file_bits_per_linear_weight();
+        assert!(b > 1.0 && b < 1.2, "{b}");
+    }
+}

@@ -1,0 +1,404 @@
+//! Bit-packed binary weight storage + the deployment GEMV hot path (§4.5).
+//!
+//! Signs are packed 64/word. The binary dot product uses the identity
+//!   Σ_j s_ij x_j = 2·Σ_{j: s_ij=+1} x_j − Σ_j x_j
+//! so each row costs one masked accumulation; with per-band (α, μ) the full
+//! HBLLM reconstruction folds into the same pass (the Haar synthesis is a
+//! 2-tap butterfly applied to the *activation* side instead — see
+//! `HaarPackedLinear::gemv`).
+
+pub mod format;
+
+use crate::haar;
+use crate::tensor::Matrix;
+use std::sync::OnceLock;
+
+/// 256-entry byte -> eight ±1.0 multipliers table. Lets the binary dot
+/// product run as plain vectorizable FMAs over 8-lane chunks instead of a
+/// serial trailing_zeros bit loop (§Perf L3: 53.7% -> ~30% of f32 GEMV).
+fn sign_table() -> &'static [[f32; 8]; 256] {
+    static TABLE: OnceLock<Box<[[f32; 8]; 256]>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = Box::new([[0f32; 8]; 256]);
+        for b in 0..256usize {
+            for k in 0..8 {
+                t[b][k] = if (b >> k) & 1 == 1 { 1.0 } else { -1.0 };
+            }
+        }
+        t
+    })
+}
+
+/// Signed dot product of a packed sign row against `x` over [j0, j1):
+/// Σ_j s_j·x_j with s_j = ±1 from the bit pattern. `j0`/`j1` need not be
+/// word-aligned; full bytes take the vectorized path.
+fn signed_dot_range(words: &[u64], x: &[f32], j0: usize, j1: usize) -> f32 {
+    let table = sign_table();
+    let mut acc = 0f32;
+    let mut j = j0;
+    // head: unaligned bits up to the next byte boundary
+    while j < j1 && j % 8 != 0 {
+        let bit = (words[j / 64] >> (j % 64)) & 1;
+        acc += if bit == 1 { x[j] } else { -x[j] };
+        j += 1;
+    }
+    // body: whole bytes via the table; an 8-lane accumulator keeps the loop
+    // a straight-line vector FMA chain (§Perf iteration 2)
+    let mut lanes = [0f32; 8];
+    while j + 8 <= j1 {
+        let byte = ((words[j / 64] >> (j % 64)) & 0xff) as usize;
+        let signs = &table[byte];
+        let xs = &x[j..j + 8];
+        for k in 0..8 {
+            lanes[k] += signs[k] * xs[k];
+        }
+        j += 8;
+    }
+    acc += lanes.iter().sum::<f32>();
+    // tail
+    while j < j1 {
+        let bit = (words[j / 64] >> (j % 64)) & 1;
+        acc += if bit == 1 { x[j] } else { -x[j] };
+        j += 1;
+    }
+    acc
+}
+
+/// Row-major bit matrix; bit = 1 encodes sign +1.
+#[derive(Clone, Debug)]
+pub struct BitMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    words_per_row: usize,
+    words: Vec<u64>,
+}
+
+impl BitMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> BitMatrix {
+        let wpr = (cols + 63) / 64;
+        BitMatrix { rows, cols, words_per_row: wpr, words: vec![0; rows * wpr] }
+    }
+
+    /// Pack the sign pattern of a dense matrix (>= 0 -> +1).
+    pub fn from_signs(m: &Matrix) -> BitMatrix {
+        let mut b = BitMatrix::zeros(m.rows, m.cols);
+        for i in 0..m.rows {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v >= 0.0 {
+                    b.set(i, j, true);
+                }
+            }
+        }
+        b
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        let w = self.words[i * self.words_per_row + j / 64];
+        (w >> (j % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: bool) {
+        let idx = i * self.words_per_row + j / 64;
+        let mask = 1u64 << (j % 64);
+        if v {
+            self.words[idx] |= mask;
+        } else {
+            self.words[idx] &= !mask;
+        }
+    }
+
+    #[inline]
+    pub fn row_words(&self, i: usize) -> &[u64] {
+        &self.words[i * self.words_per_row..(i + 1) * self.words_per_row]
+    }
+
+    pub fn sign_f32(&self, i: usize, j: usize) -> f32 {
+        if self.get(i, j) {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    pub fn to_dense_signs(&self) -> Matrix {
+        Matrix::from_fn(self.rows, self.cols, |i, j| self.sign_f32(i, j))
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Masked sum: Σ_{j: bit set} x[j] for one row.
+    #[inline]
+    pub fn masked_sum(&self, i: usize, x: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), self.cols);
+        let words = self.row_words(i);
+        let mut acc = 0.0f32;
+        for (wi, &w) in words.iter().enumerate() {
+            if w == 0 {
+                continue;
+            }
+            let base = wi * 64;
+            if w == u64::MAX && base + 64 <= x.len() {
+                // full word fast path
+                let mut s = 0.0f32;
+                for &v in &x[base..base + 64] {
+                    s += v;
+                }
+                acc += s;
+                continue;
+            }
+            let mut bits = w;
+            while bits != 0 {
+                let t = bits.trailing_zeros() as usize;
+                let j = base + t;
+                if j < x.len() {
+                    acc += x[j];
+                }
+                bits &= bits - 1;
+            }
+        }
+        acc
+    }
+}
+
+/// A plain packed binary linear layer: W ≈ diag-free α_i · s_ij (per-row α),
+/// used for the §4.5 latency comparison.
+#[derive(Clone)]
+pub struct PackedLinear {
+    pub bits: BitMatrix,
+    pub alpha: Vec<f32>, // per row
+}
+
+impl PackedLinear {
+    pub fn from_dense(w: &Matrix) -> PackedLinear {
+        // α_i = mean |w_i|: the L2-optimal per-row scale for sign binarization
+        let alpha = (0..w.rows)
+            .map(|i| w.row(i).iter().map(|v| v.abs()).sum::<f32>() / w.cols as f32)
+            .collect();
+        PackedLinear { bits: BitMatrix::from_signs(w), alpha }
+    }
+
+    /// y = Ŵ x with Ŵ_ij = α_i s_ij.
+    pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        for i in 0..self.bits.rows {
+            let dot = signed_dot_range(self.bits.row_words(i), x, 0, self.bits.cols);
+            y[i] = self.alpha[i] * dot;
+        }
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        Matrix::from_fn(self.bits.rows, self.bits.cols, |i, j| {
+            self.alpha[i] * self.bits.sign_f32(i, j)
+        })
+    }
+}
+
+/// HBLLM deployment layer: Haar-domain signs + per-row per-band (α, μ).
+///
+/// y = HaarInv_row(α⊙s + μ) · x. Rather than reconstructing W, we use
+/// <HaarInv(c)_i, x> = <c_i, A x> where A is the synthesis adjoint — i.e.
+/// transform the activation once per call (O(m)), then every row is a plain
+/// binary dot in the Haar domain. This is the paper's "local convolution,
+/// fuses into the linear layer" argument, executable form.
+#[derive(Clone)]
+pub struct HaarPackedLinear {
+    pub bits: BitMatrix, // Haar-domain signs
+    pub alpha: Vec<[f32; 2]>,
+    pub mu: Vec<[f32; 2]>,
+}
+
+impl HaarPackedLinear {
+    /// Quantize a dense W (row-Haar, one group per band, shared-mean style).
+    pub fn from_dense(w: &Matrix) -> HaarPackedLinear {
+        let c = haar::fwd_rows(w);
+        let h = c.cols / 2;
+        let mut alpha = Vec::with_capacity(c.rows);
+        let mut mu = Vec::with_capacity(c.rows);
+        let mut signs = Matrix::zeros(c.rows, c.cols);
+        for i in 0..c.rows {
+            let row = c.row(i);
+            let mut ab = [0f32; 2];
+            let mut ub = [0f32; 2];
+            for (b, range) in [(0usize, 0..h), (1usize, h..c.cols)] {
+                let vals = &row[range];
+                let m = vals.iter().sum::<f32>() / vals.len() as f32;
+                let a = vals.iter().map(|v| (v - m).abs()).sum::<f32>() / vals.len() as f32;
+                ab[b] = a;
+                ub[b] = m;
+            }
+            alpha.push(ab);
+            mu.push(ub);
+            for (j, &v) in row.iter().enumerate() {
+                let b = if j < h { 0 } else { 1 };
+                signs.set(i, j, if v - ub[b] >= 0.0 { 1.0 } else { -1.0 });
+            }
+        }
+        HaarPackedLinear { bits: BitMatrix::from_signs(&signs), alpha, mu }
+    }
+
+    /// Adjoint-transformed activation: z with <c_i, z> = <HaarInv(c_i), x>.
+    /// From the synthesis map: z_lo[k] = x[2k] + x[2k+1], z_hi[k] = x[2k] - x[2k+1].
+    pub fn adjoint_activation(x: &[f32]) -> Vec<f32> {
+        let h = x.len() / 2;
+        let mut z = vec![0.0f32; x.len()];
+        for k in 0..h {
+            z[k] = x[2 * k] + x[2 * k + 1];
+            z[h + k] = x[2 * k] - x[2 * k + 1];
+        }
+        z
+    }
+
+    pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        let m = self.bits.cols;
+        let h = m / 2;
+        let z = Self::adjoint_activation(x);
+        let (zlo, zhi) = z.split_at(h);
+        let sum_lo: f32 = zlo.iter().sum();
+        let sum_hi: f32 = zhi.iter().sum();
+        for i in 0..self.bits.rows {
+            let words = self.bits.row_words(i);
+            let dot_s_lo = signed_dot_range(words, &z, 0, h);
+            let dot_s_hi = signed_dot_range(words, &z, h, m);
+            let dot_lo = self.alpha[i][0] * dot_s_lo + self.mu[i][0] * sum_lo;
+            let dot_hi = self.alpha[i][1] * dot_s_hi + self.mu[i][1] * sum_hi;
+            y[i] = dot_lo + dot_hi;
+        }
+    }
+
+
+    /// Dense reconstruction (for correctness tests).
+    pub fn to_dense(&self) -> Matrix {
+        let n = self.bits.rows;
+        let m = self.bits.cols;
+        let h = m / 2;
+        let mut c = Matrix::zeros(n, m);
+        for i in 0..n {
+            for j in 0..m {
+                let b = if j < h { 0 } else { 1 };
+                c.set(i, j, self.alpha[i][b] * self.bits.sign_f32(i, j) + self.mu[i][b]);
+            }
+        }
+        haar::inv_rows(&c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+    use crate::util::rng::Pcg32;
+
+    fn rand_mat(rng: &mut Pcg32, n: usize, m: usize) -> Matrix {
+        Matrix::from_fn(n, m, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn bitmatrix_roundtrip() {
+        check(
+            "bitmatrix-roundtrip",
+            30,
+            |g: &mut Gen| {
+                let n = g.size(1, 20);
+                let m = g.size(1, 200);
+                let mut mat = Matrix::from_vec(n, m, g.vec_f32(n * m, 1.0));
+                // avoid exact zeros (sign ambiguity)
+                for v in mat.data.iter_mut() {
+                    if *v == 0.0 {
+                        *v = 1.0;
+                    }
+                }
+                mat
+            },
+            |m| {
+                let b = BitMatrix::from_signs(m);
+                for i in 0..m.rows {
+                    for j in 0..m.cols {
+                        let want = m.get(i, j) >= 0.0;
+                        if b.get(i, j) != want {
+                            return Err(format!("bit mismatch at ({i},{j})"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn masked_sum_matches_naive() {
+        let mut rng = Pcg32::seeded(1);
+        for &m in &[1usize, 63, 64, 65, 130, 256] {
+            let mat = rand_mat(&mut rng, 4, m);
+            let bits = BitMatrix::from_signs(&mat);
+            let x: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+            for i in 0..4 {
+                let naive: f32 = (0..m).filter(|&j| bits.get(i, j)).map(|j| x[j]).sum();
+                let got = bits.masked_sum(i, &x);
+                assert!((naive - got).abs() < 1e-4, "m={m} i={i}: {naive} vs {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemv_matches_dense() {
+        let mut rng = Pcg32::seeded(2);
+        let w = rand_mat(&mut rng, 32, 128);
+        let p = PackedLinear::from_dense(&w);
+        let dense = p.to_dense();
+        let x: Vec<f32> = (0..128).map(|_| rng.normal_f32()).collect();
+        let mut y = vec![0.0; 32];
+        p.gemv(&x, &mut y);
+        let want = dense.matvec(&x);
+        for i in 0..32 {
+            assert!((y[i] - want[i]).abs() < 1e-3, "{} vs {}", y[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn haar_packed_gemv_matches_dense_reconstruction() {
+        let mut rng = Pcg32::seeded(3);
+        for &(n, m) in &[(16usize, 128usize), (8, 256), (5, 128)] {
+            let w = rand_mat(&mut rng, n, m);
+            let p = HaarPackedLinear::from_dense(&w);
+            let dense = p.to_dense();
+            let x: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+            let mut y = vec![0.0; n];
+            p.gemv(&x, &mut y);
+            let want = dense.matvec(&x);
+            for i in 0..n {
+                assert!(
+                    (y[i] - want[i]).abs() < 2e-3 * (1.0 + want[i].abs()),
+                    "(n={n},m={m}) row {i}: {} vs {}",
+                    y[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adjoint_identity() {
+        // <HaarInv(c), x> == <c, adjoint(x)>
+        let mut rng = Pcg32::seeded(4);
+        let m = 64;
+        let c: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+        let x: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+        let w = crate::haar::inv_1d(&c);
+        let z = HaarPackedLinear::adjoint_activation(&x);
+        let lhs: f32 = w.iter().zip(&x).map(|(a, b)| a * b).sum();
+        let rhs: f32 = c.iter().zip(&z).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-3);
+    }
+
+    #[test]
+    fn packed_quantization_reduces_storage() {
+        let mut rng = Pcg32::seeded(5);
+        let w = rand_mat(&mut rng, 64, 256);
+        let p = PackedLinear::from_dense(&w);
+        let dense_bytes = 64 * 256 * 4;
+        assert!(p.bits.storage_bytes() * 8 < dense_bytes);
+    }
+}

@@ -1,0 +1,204 @@
+//! High-level session API — what examples, the CLI and downstream users
+//! call. Owns the artifacts, the FP weights, the (lazily factored)
+//! calibration contexts and the PJRT runtime.
+
+use crate::calib::{self, CtxMap};
+use crate::coordinator::{quantize_model, LayerResult, QuantJobConfig};
+use crate::data::{Corpus, TaskFile};
+use crate::eval;
+use crate::model::Weights;
+use crate::quant::Quantizer;
+use crate::runtime::{NllRunner, Runtime};
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+pub struct Session {
+    pub runtime: Runtime,
+    pub manifest: Json,
+    pub root: PathBuf,
+    pub config_name: String,
+    pub eval_batch: usize,
+    fp_weights: Weights,
+    ctxs: Option<CtxMap>,
+}
+
+/// Evaluation scope knobs (table harnesses pass smaller values for --quick).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalScope {
+    pub ppl_windows: usize,
+    pub qa_items: usize,
+    pub calib_windows: usize,
+}
+
+impl Default for EvalScope {
+    fn default() -> Self {
+        EvalScope { ppl_windows: 64, qa_items: 25, calib_windows: 16 }
+    }
+}
+
+impl Session {
+    /// Open the artifacts directory (default `artifacts/`, or $HBLLM_ARTIFACTS).
+    pub fn open(root: &Path) -> Result<Session> {
+        let manifest_src = std::fs::read_to_string(root.join("manifest.json"))
+            .with_context(|| format!("manifest.json missing under {root:?} — run `make artifacts`"))?;
+        let manifest = Json::parse(&manifest_src).map_err(|e| anyhow!("manifest: {e}"))?;
+        let config_name = manifest
+            .get("config")
+            .and_then(Json::as_str)
+            .unwrap_or("tiny")
+            .to_string();
+        let eval_batch = manifest.get("eval_batch").and_then(Json::as_usize).unwrap_or(8);
+        let weights_rel = manifest
+            .at(&["weights", &config_name])
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing weights entry"))?;
+        let fp_weights = Weights::load(&root.join(weights_rel))?;
+        let runtime = Runtime::new(root)?;
+        Ok(Session {
+            runtime,
+            manifest,
+            root: root.to_path_buf(),
+            config_name,
+            eval_batch,
+            fp_weights,
+            ctxs: None,
+        })
+    }
+
+    pub fn default_root() -> PathBuf {
+        std::env::var("HBLLM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn fp_weights(&self) -> &Weights {
+        &self.fp_weights
+    }
+
+    /// Fresh copy of the FP weights (quantization input).
+    pub fn clone_weights(&self) -> Weights {
+        Weights {
+            config: self.fp_weights.config.clone(),
+            tensors: self.fp_weights.tensors.clone(),
+        }
+    }
+
+    /// Calibration contexts (computed once; paper: 128 C4 samples — we use
+    /// `calib_windows` windows from the tail of c4s, disjoint from the eval
+    /// head).
+    pub fn contexts(&mut self, calib_windows: usize) -> Result<&CtxMap> {
+        if self.ctxs.is_none() {
+            let corpus = self.corpus("c4s")?;
+            let seq = self.fp_weights.config.seq_len;
+            let n_total = corpus.data.len() / seq;
+            anyhow::ensure!(n_total > calib_windows, "c4s too small for calibration");
+            let start = n_total - calib_windows;
+            let windows: Vec<&[u8]> = (start..n_total)
+                .map(|k| &corpus.data[k * seq..(k + 1) * seq])
+                .collect();
+            let calib = calib::collect(&self.fp_weights, &windows);
+            self.ctxs = Some(calib.contexts().map_err(|e| anyhow!("{e}"))?);
+        }
+        Ok(self.ctxs.as_ref().unwrap())
+    }
+
+    pub fn corpus(&self, name: &str) -> Result<Corpus> {
+        Corpus::load(&self.root.join("data").join(format!("{name}.bin")))
+    }
+
+    pub fn corpora(&self) -> Result<Vec<Corpus>> {
+        ["c4s", "wiki2s", "ptbs"].iter().map(|n| self.corpus(n)).collect()
+    }
+
+    pub fn tasks(&self) -> Result<Vec<TaskFile>> {
+        let fams = self
+            .manifest
+            .get("task_families")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing task_families"))?;
+        fams.iter()
+            .filter_map(|f| f.as_str())
+            .map(|f| TaskFile::load(&self.root.join("tasks").join(format!("{f}.bin"))))
+            .collect()
+    }
+
+    /// Quantize a fresh weight copy with `method`.
+    pub fn quantize(
+        &mut self,
+        method: &dyn Quantizer,
+        scope: &EvalScope,
+        job: &QuantJobConfig,
+    ) -> Result<(Weights, Vec<LayerResult>)> {
+        self.contexts(scope.calib_windows)?;
+        let ctxs = self.ctxs.as_ref().unwrap().clone();
+        let mut w = self.clone_weights();
+        let results = quantize_model(&mut w, &ctxs, method, job)?;
+        Ok((w, results))
+    }
+
+    /// NLL runner over the given weights, using the manifest entry point.
+    /// `pallas` selects the Pallas-attention HLO (vs the jnp reference one).
+    pub fn runner(&self, weights: &Weights, pallas: bool) -> Result<NllRunner> {
+        let key = if pallas { "nll" } else { "nll_ref" };
+        let entry = self
+            .manifest
+            .at(&["entry_points", key])
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing entry {key}"))?;
+        NllRunner::new(&self.runtime, entry, weights, self.eval_batch)
+    }
+
+    /// Full-logits runner (generation).
+    pub fn logits_runner(&self, weights: &Weights) -> Result<crate::runtime::LogitsRunner> {
+        let entry = self
+            .manifest
+            .at(&["entry_points", "logits"])
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing logits entry"))?;
+        crate::runtime::LogitsRunner::new(&self.runtime, entry, weights, self.eval_batch)
+    }
+
+    /// Full quality evaluation: perplexity on the 3 corpora + AvgQA.
+    pub fn evaluate(&self, runner: &NllRunner, scope: &EvalScope) -> Result<EvalReport> {
+        let mut ppl = Vec::new();
+        for corpus in self.corpora()? {
+            let p = eval::perplexity(runner, &corpus, scope.ppl_windows)?;
+            ppl.push((corpus.name.clone(), p));
+        }
+        let tasks = self.tasks()?;
+        let mut qa = Vec::new();
+        for t in &tasks {
+            qa.push((t.family.clone(), eval::task_accuracy(runner, t, scope.qa_items)?));
+        }
+        let avg_qa = qa.iter().map(|(_, a)| a).sum::<f64>() / qa.len().max(1) as f64;
+        Ok(EvalReport { ppl, qa, avg_qa })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    /// (corpus, perplexity) — c4s, wiki2s, ptbs
+    pub ppl: Vec<(String, f64)>,
+    pub qa: Vec<(String, f64)>,
+    pub avg_qa: f64,
+}
+
+impl EvalReport {
+    pub fn ppl_of(&self, corpus: &str) -> f64 {
+        self.ppl
+            .iter()
+            .find(|(n, _)| n == corpus)
+            .map(|(_, p)| *p)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Mean relative PPL against a baseline report (Fig. 1's y-axis).
+    pub fn mean_rel_ppl(&self, fp: &EvalReport) -> f64 {
+        let mut acc = 0.0;
+        for (name, p) in &self.ppl {
+            acc += p / fp.ppl_of(name);
+        }
+        acc / self.ppl.len() as f64
+    }
+}

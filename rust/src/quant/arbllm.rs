@@ -1,0 +1,247 @@
+//! ARB-LLM baseline (Li et al., 2024): alternating refined binarization.
+//!
+//! * `X`  — per-row (α, μ) refined by coordinate-descent alternation with
+//!   sign recomputation, plus column grouping (CGB) and residual salient
+//!   columns, on the OBQ substrate.
+//! * `RC` — row AND column scaling: w_ij ≈ μ_i + α_i·c_j·s_ij, fit by
+//!   alternating least squares. CIQ grows to O(block) — the paper's
+//!   "up to 128 at block size 128".
+
+use super::binarize;
+use super::gptq::obq_blockwise;
+use super::salient;
+use super::{storage, BitsBreakdown, HessianCtx, QuantOut, Quantizer, DEFAULT_BETA};
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub enum ArbVariant {
+    X,
+    Rc,
+}
+
+pub struct ArbLlm {
+    pub variant: ArbVariant,
+    pub beta: usize,
+    pub iters: usize,
+    pub salient_div: usize,
+}
+
+impl ArbLlm {
+    pub fn x() -> ArbLlm {
+        ArbLlm { variant: ArbVariant::X, beta: DEFAULT_BETA, iters: 4, salient_div: 16 }
+    }
+
+    pub fn rc() -> ArbLlm {
+        ArbLlm { variant: ArbVariant::Rc, beta: DEFAULT_BETA, iters: 6, salient_div: 16 }
+    }
+
+    /// X variant block: salient residual + per-row ARB-refined binarization
+    /// over column sub-groups of 16 (column-group bitmap granularity).
+    fn block_x(&self, blk: &Matrix, off: usize, ctx: &HessianCtx) -> Matrix {
+        let scores: Vec<f64> = blk
+            .col_l2()
+            .iter()
+            .enumerate()
+            .map(|(j, n)| (n * n) / ctx.hinv_diag[off + j].max(1e-30).powi(2))
+            .collect();
+        let k = (blk.cols / self.salient_div).max(1).min(blk.cols / 2);
+        let sal = salient::top_k(&scores, k);
+        let is_sal = {
+            let mut v = vec![false; blk.cols];
+            for &j in &sal {
+                v[j] = true;
+            }
+            v
+        };
+        let mut out = Matrix::zeros(blk.rows, blk.cols);
+        // salient: residual binarization (as BiLLM) but ARB-refined stage 1
+        for i in 0..blk.rows {
+            let vals: Vec<f32> = sal.iter().map(|&j| blk.get(i, j)).collect();
+            if vals.is_empty() {
+                continue;
+            }
+            let p1 = binarize::fit_arb(&vals, self.iters);
+            let resid: Vec<f32> = vals.iter().map(|&v| v - binarize::dequant(v, p1)).collect();
+            let a2 = if resid.is_empty() {
+                0.0
+            } else {
+                resid.iter().map(|r| r.abs()).sum::<f32>() / resid.len() as f32
+            };
+            for (si, &j) in sal.iter().enumerate() {
+                let s1 = binarize::dequant(vals[si], p1);
+                let r = vals[si] - s1;
+                out.set(i, j, s1 + if r >= 0.0 { a2 } else { -a2 });
+            }
+        }
+        // non-salient: CGB column grouping — two column groups per block by
+        // column ℓ2 rank (the per-block group bitmap), ARB-refined (α, μ)
+        // per (row, group)
+        let nonsal: Vec<usize> = (0..blk.cols).filter(|&j| !is_sal[j]).collect();
+        if !nonsal.is_empty() {
+            let col_l2: Vec<f64> = nonsal
+                .iter()
+                .map(|&j| {
+                    (0..blk.rows)
+                        .map(|i| (blk.get(i, j) as f64).powi(2))
+                        .sum::<f64>()
+                        .sqrt()
+                })
+                .collect();
+            let mut rank: Vec<usize> = (0..nonsal.len()).collect();
+            rank.sort_by(|&a, &b| col_l2[b].partial_cmp(&col_l2[a]).unwrap());
+            let t = (nonsal.len() / 4).max(1); // dense/sparse column split
+            let (g1, g2) = rank.split_at(t);
+            for i in 0..blk.rows {
+                for g in [g1, g2] {
+                    let vals: Vec<f32> = g.iter().map(|&oi| blk.get(i, nonsal[oi])).collect();
+                    let p = binarize::fit_arb(&vals, self.iters);
+                    for (vi, &oi) in g.iter().enumerate() {
+                        out.set(i, nonsal[oi], binarize::dequant(vals[vi], p));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// RC variant block: salient residual columns + alternating row/column
+    /// scaling fit on the rest (row×column scales are RC's signature).
+    fn block_rc(&self, blk: &Matrix, off: usize, ctx: &HessianCtx) -> Matrix {
+        // salient columns as in X
+        let scores: Vec<f64> = blk
+            .col_l2()
+            .iter()
+            .enumerate()
+            .map(|(j, n)| (n * n) / ctx.hinv_diag[off + j].max(1e-30).powi(2))
+            .collect();
+        let k = (blk.cols / self.salient_div).max(1).min(blk.cols / 2);
+        let sal = salient::top_k(&scores, k);
+        let mut out = self.block_rc_core(blk);
+        // residual binarization per salient column
+        for &j in &sal {
+            let resid: Vec<f32> = (0..blk.rows).map(|i| blk.get(i, j) - out.get(i, j)).collect();
+            let p = binarize::fit(resid.iter().copied());
+            for i in 0..blk.rows {
+                let v = out.get(i, j) + binarize::dequant(resid[i], p);
+                out.set(i, j, v);
+            }
+        }
+        out
+    }
+
+    fn block_rc_core(&self, blk: &Matrix) -> Matrix {
+        let (n, m) = (blk.rows, blk.cols);
+        // μ_i = row mean; r_ij = w_ij − μ_i
+        let mu: Vec<f32> = (0..n)
+            .map(|i| blk.row(i).iter().sum::<f32>() / m as f32)
+            .collect();
+        let mut alpha: Vec<f64> = (0..n)
+            .map(|i| {
+                blk.row(i).iter().map(|&v| ((v - mu[i]).abs()) as f64).sum::<f64>() / m as f64
+            })
+            .collect();
+        let mut cscale: Vec<f64> = vec![1.0; m];
+        // signs track sign(r)
+        let sign = |i: usize, j: usize| -> f64 {
+            if blk.get(i, j) - mu[i] >= 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        };
+        for _ in 0..self.iters {
+            // c_j = Σ_i r_ij s_ij α_i / Σ_i α_i²
+            let denom_a: f64 = alpha.iter().map(|a| a * a).sum::<f64>() * 1.0;
+            if denom_a > 0.0 {
+                for j in 0..m {
+                    let mut num = 0.0;
+                    for i in 0..n {
+                        num += (blk.get(i, j) - mu[i]) as f64 * sign(i, j) * alpha[i];
+                    }
+                    cscale[j] = (num / denom_a).max(0.0);
+                }
+            }
+            // α_i = Σ_j r_ij s_ij c_j / Σ_j c_j²
+            let denom_c: f64 = cscale.iter().map(|c| c * c).sum();
+            if denom_c > 0.0 {
+                for i in 0..n {
+                    let mut num = 0.0;
+                    for j in 0..m {
+                        num += (blk.get(i, j) - mu[i]) as f64 * sign(i, j) * cscale[j];
+                    }
+                    alpha[i] = (num / denom_c).max(0.0);
+                }
+            }
+        }
+        Matrix::from_fn(n, m, |i, j| {
+            mu[i] + (alpha[i] * cscale[j]) as f32 * sign(i, j) as f32
+        })
+    }
+}
+
+impl Quantizer for ArbLlm {
+    fn name(&self) -> String {
+        match self.variant {
+            ArbVariant::X => "arb-x".into(),
+            ArbVariant::Rc => "arb-rc".into(),
+        }
+    }
+
+    fn quantize(&self, w: &Matrix, ctx: &HessianCtx) -> QuantOut {
+        let beta = self.beta.min(w.cols);
+        let b = obq_blockwise(w, ctx, beta, |blk, off| match self.variant {
+            ArbVariant::X => self.block_x(blk, off, ctx),
+            ArbVariant::Rc => self.block_rc(blk, off, ctx),
+        });
+        let mse = w.mse(&b);
+        QuantOut { bits: self.storage_bits(w.rows, w.cols), w_hat: b, mse }
+    }
+
+    fn storage_bits(&self, n: usize, m: usize) -> BitsBreakdown {
+        match self.variant {
+            ArbVariant::X => storage::arb_x_bits(n, m, self.beta),
+            ArbVariant::Rc => storage::arb_rc_bits(n, m, self.beta),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ciq::row_ciq_max;
+    use crate::quant::rtn::Rtn;
+    use crate::quant::synth;
+
+    #[test]
+    fn x_beats_rtn() {
+        let (w, ctx) = synth::llm_like_layer(32, 64, 20);
+        let mut q = ArbLlm::x();
+        q.beta = 32;
+        let a = q.quantize(&w, &ctx);
+        let r = Rtn.quantize(&w, &ctx);
+        assert!(a.mse < r.mse, "arb-x {} !< rtn {}", a.mse, r.mse);
+    }
+
+    #[test]
+    fn rc_has_high_ciq() {
+        // RC's per-column scale expands the inverse-quantization set toward
+        // the block size (§3.1: "up to 128 when block = 128")
+        let (w, ctx) = synth::llm_like_layer(16, 64, 21);
+        let mut q = ArbLlm::rc();
+        q.beta = 64;
+        let out = q.quantize(&w, &ctx);
+        let ciq = row_ciq_max(&out.w_hat);
+        assert!(ciq > 16, "RC CIQ should be large, got {ciq}");
+    }
+
+    #[test]
+    fn rc_finite_and_better_than_plain_sign() {
+        let (w, ctx) = synth::llm_like_layer(24, 48, 22);
+        let mut q = ArbLlm::rc();
+        q.beta = 48;
+        let out = q.quantize(&w, &ctx);
+        assert!(out.w_hat.data.iter().all(|v| v.is_finite()));
+        let r = Rtn.quantize(&w, &ctx);
+        assert!(out.mse < r.mse * 1.05, "rc {} vs rtn {}", out.mse, r.mse);
+    }
+}

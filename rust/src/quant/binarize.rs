@@ -1,0 +1,217 @@
+//! Binarization primitives: α·sign(w − μ) + μ fits, residual binarization,
+//! and the alternating refinement used by ARB-LLM.
+
+/// Parameters of a 1-bit group: value ∈ {μ − α, μ + α}.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BinParams {
+    pub alpha: f32,
+    pub mu: f32,
+}
+
+/// L2-optimal fit for sign binarization of `vals`:
+/// μ = mean, α = mean |v − μ| (minimizes Σ (v − μ − α·sign(v−μ))²).
+pub fn fit(vals: impl Iterator<Item = f32> + Clone) -> BinParams {
+    let mut n = 0usize;
+    let mut sum = 0.0f64;
+    for v in vals.clone() {
+        sum += v as f64;
+        n += 1;
+    }
+    if n == 0 {
+        return BinParams::default();
+    }
+    let mu = (sum / n as f64) as f32;
+    let mut dev = 0.0f64;
+    for v in vals {
+        dev += (v - mu).abs() as f64;
+    }
+    BinParams { alpha: (dev / n as f64) as f32, mu }
+}
+
+/// Reconstruction of one value under `p`.
+#[inline]
+pub fn dequant(v: f32, p: BinParams) -> f32 {
+    if v >= p.mu {
+        p.mu + p.alpha
+    } else {
+        p.mu - p.alpha
+    }
+}
+
+/// Squared reconstruction error of a group under `p`.
+pub fn error(vals: impl Iterator<Item = f32>, p: BinParams) -> f64 {
+    vals.map(|v| {
+        let d = (v - dequant(v, p)) as f64;
+        d * d
+    })
+    .sum()
+}
+
+/// Fit + error in one pass pair (the candidate-search inner loop).
+pub fn fit_and_error(vals: impl Iterator<Item = f32> + Clone) -> (BinParams, f64) {
+    let p = fit(vals.clone());
+    (p, error(vals, p))
+}
+
+/// Residual (two-stage) binarization used for salient weights (BiLLM-style):
+/// w ≈ μ + α₁·s₁ + α₂·s₂ where s₂ binarizes the residual. Returns the
+/// reconstruction of each value.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResidualParams {
+    pub mu: f32,
+    pub alpha1: f32,
+    pub alpha2: f32,
+}
+
+pub fn fit_residual(vals: &[f32]) -> ResidualParams {
+    let p1 = fit(vals.iter().copied());
+    // residual r = v - dequant1(v); second stage is zero-mean by symmetry,
+    // fit α₂ = mean |r|
+    let mut dev = 0.0f64;
+    for &v in vals {
+        dev += (v - dequant(v, p1)).abs() as f64;
+    }
+    let alpha2 = if vals.is_empty() { 0.0 } else { (dev / vals.len() as f64) as f32 };
+    ResidualParams { mu: p1.mu, alpha1: p1.alpha, alpha2 }
+}
+
+pub fn dequant_residual(v: f32, p: ResidualParams) -> f32 {
+    let stage1 = if v >= p.mu { p.mu + p.alpha1 } else { p.mu - p.alpha1 };
+    let r = v - stage1;
+    stage1 + if r >= 0.0 { p.alpha2 } else { -p.alpha2 }
+}
+
+/// ARB-style alternating refinement: re-estimate (α, μ) against the *current
+/// signs*, then recompute signs, for `iters` rounds. Returns the refined
+/// params (signs are implied by v ≥ μ after convergence).
+pub fn fit_arb(vals: &[f32], iters: usize) -> BinParams {
+    let mut p = fit(vals.iter().copied());
+    for _ in 0..iters {
+        // signs under current μ
+        // closed-form refit: μ' = mean(v − α·s), α' = mean(s·(v − μ'))
+        let n = vals.len() as f64;
+        if n == 0.0 {
+            return p;
+        }
+        let mut sum_vs = 0.0f64; // Σ v·s
+        let mut sum_s = 0.0f64;
+        let mut sum_v = 0.0f64;
+        for &v in vals {
+            let s = if v >= p.mu { 1.0f64 } else { -1.0 };
+            sum_vs += v as f64 * s;
+            sum_s += s;
+            sum_v += v as f64;
+        }
+        // jointly optimal (α, μ) for fixed signs:
+        //   μ = (Σv − α Σs)/n,  α = (Σ v s − μ Σ s)/n
+        // solve the 2x2 system
+        let det = n * n - sum_s * sum_s;
+        if det.abs() < 1e-12 {
+            break;
+        }
+        let alpha = (n * sum_vs - sum_s * sum_v) / det;
+        let mu = (sum_v - alpha * sum_s) / n;
+        let new_p = BinParams { alpha: alpha.max(0.0) as f32, mu: mu as f32 };
+        if (new_p.alpha - p.alpha).abs() < 1e-7 && (new_p.mu - p.mu).abs() < 1e-7 {
+            p = new_p;
+            break;
+        }
+        p = new_p;
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+
+    #[test]
+    fn fit_known() {
+        let p = fit([1.0f32, 3.0].into_iter());
+        assert_eq!(p.mu, 2.0);
+        assert_eq!(p.alpha, 1.0);
+        assert_eq!(dequant(3.0, p), 3.0);
+        assert_eq!(dequant(1.0, p), 1.0);
+        assert_eq!(error([1.0f32, 3.0].into_iter(), p), 0.0);
+    }
+
+    #[test]
+    fn fit_is_l2_optimal_alpha() {
+        // given μ = mean, perturbing α must not reduce error
+        check(
+            "binarize-alpha-optimal",
+            40,
+            |g: &mut Gen| { let n = g.size(2, 60); g.vec_f32(n, 2.0) },
+            |vals| {
+                let (p, e) = fit_and_error(vals.iter().copied());
+                for da in [-0.05f32, 0.05] {
+                    let p2 = BinParams { alpha: p.alpha + da, mu: p.mu };
+                    let e2 = error(vals.iter().copied(), p2);
+                    if e2 < e - 1e-6 {
+                        return Err(format!("α not optimal: {e2} < {e}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn residual_beats_single() {
+        check(
+            "residual-beats-single",
+            30,
+            |g: &mut Gen| { let n = g.size(4, 80); g.vec_f32(n, 1.0) },
+            |vals| {
+                let (p, e1) = fit_and_error(vals.iter().copied());
+                let rp = fit_residual(vals);
+                let e2: f64 = vals
+                    .iter()
+                    .map(|&v| ((v - dequant_residual(v, rp)) as f64).powi(2))
+                    .sum();
+                let _ = p;
+                if e2 <= e1 + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("residual worse: {e2} > {e1}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn arb_refinement_never_hurts() {
+        check(
+            "arb-never-hurts",
+            30,
+            |g: &mut Gen| {
+                // skewed data where initial mean-split is suboptimal
+                let n = g.size(4, 60);
+                let mut v = g.vec_f32(n, 1.0);
+                for x in v.iter_mut().take(n / 4) {
+                    *x = x.abs() * 5.0;
+                }
+                v
+            },
+            |vals| {
+                let (_, e0) = fit_and_error(vals.iter().copied());
+                let p = fit_arb(vals, 8);
+                let e1 = error(vals.iter().copied(), p);
+                if e1 <= e0 + 1e-4 {
+                    Ok(())
+                } else {
+                    Err(format!("ARB hurt: {e1} > {e0}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn empty_group_is_safe() {
+        let p = fit(std::iter::empty());
+        assert_eq!(p, BinParams::default());
+        let rp = fit_residual(&[]);
+        assert_eq!(rp.alpha1, 0.0);
+    }
+}

@@ -1,0 +1,184 @@
+//! FrameQuant baseline (Adepu et al., ICML 2024): 2-bit quantization in a
+//! redundant tight-frame basis. We realize the frame as a randomized
+//! butterfly orthogonal transform (O(d log d), exactly orthogonal) on the
+//! row space, optionally expanded by redundancy r ≥ 1; quantization is
+//! 2-bit with per-group scales. Dequantization costs a full O(d²)-equivalent
+//! inverse mix — the inference-latency contrast HBLLM draws in §3.6.
+
+use super::{storage, BitsBreakdown, HessianCtx, QuantOut, Quantizer};
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
+
+pub struct FrameQuant {
+    pub redundancy: f64,
+    pub group: usize,
+    pub seed: u64,
+}
+
+impl FrameQuant {
+    pub fn new(redundancy: f64) -> FrameQuant {
+        FrameQuant { redundancy, group: 128, seed: 0x46524d51 }
+    }
+}
+
+/// Randomized butterfly orthogonal transform on vectors of length 2^k ≥ len:
+/// pad to the next power of two, apply `rounds` of (random diagonal ±1,
+/// Hadamard-style butterfly), giving an exactly orthogonal mixing matrix.
+pub struct Butterfly {
+    pub n_pad: usize,
+    signs: Vec<Vec<f32>>, // per round random ±1 diagonal
+}
+
+impl Butterfly {
+    pub fn new(len: usize, seed: u64, rounds: usize) -> Butterfly {
+        let n_pad = len.next_power_of_two();
+        let mut rng = Pcg32::seeded(seed);
+        let signs = (0..rounds)
+            .map(|_| (0..n_pad).map(|_| if rng.f32() < 0.5 { -1.0 } else { 1.0 }).collect())
+            .collect();
+        Butterfly { n_pad, signs }
+    }
+
+    fn hadamard_inplace(x: &mut [f32]) {
+        let n = x.len();
+        let mut h = 1;
+        while h < n {
+            for i in (0..n).step_by(2 * h) {
+                for j in i..i + h {
+                    let a = x[j];
+                    let b = x[j + h];
+                    x[j] = a + b;
+                    x[j + h] = a - b;
+                }
+            }
+            h *= 2;
+        }
+        let scale = 1.0 / (n as f32).sqrt();
+        for v in x.iter_mut() {
+            *v *= scale;
+        }
+    }
+
+    pub fn fwd(&self, x: &[f32]) -> Vec<f32> {
+        let mut v = vec![0.0f32; self.n_pad];
+        v[..x.len()].copy_from_slice(x);
+        for s in &self.signs {
+            for (a, b) in v.iter_mut().zip(s.iter()) {
+                *a *= b;
+            }
+            Self::hadamard_inplace(&mut v);
+        }
+        v
+    }
+
+    pub fn inv(&self, y: &[f32]) -> Vec<f32> {
+        let mut v = y.to_vec();
+        for s in self.signs.iter().rev() {
+            // hadamard is its own inverse (orthonormal), then undo diagonal
+            Self::hadamard_inplace(&mut v);
+            for (a, b) in v.iter_mut().zip(s.iter()) {
+                *a *= b;
+            }
+        }
+        v
+    }
+}
+
+/// 2-bit symmetric quantization with per-group absmax scales.
+fn quant_2bit(vals: &mut [f32], group: usize) {
+    for chunk in vals.chunks_mut(group) {
+        let amax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if amax == 0.0 {
+            continue;
+        }
+        // levels {-3,-1,1,3} / 3 * amax  (uniform symmetric 2-bit)
+        let step = amax / 3.0;
+        for v in chunk.iter_mut() {
+            let q = (*v / step).round().clamp(-3.0, 3.0);
+            // force odd levels (sign-magnitude 2-bit): {-3,-1,1,3}
+            let q = if q == 0.0 {
+                1.0f32.copysign(*v)
+            } else if q == 2.0 || q == -2.0 {
+                (q + q.signum()) .clamp(-3.0, 3.0)
+            } else {
+                q
+            };
+            *v = q * step;
+        }
+    }
+}
+
+impl Quantizer for FrameQuant {
+    fn name(&self) -> String {
+        format!("framequant-{:.1}", self.redundancy)
+    }
+
+    fn quantize(&self, w: &Matrix, _ctx: &HessianCtx) -> QuantOut {
+        // Frame analysis on the column (input) axis per row: y = B(x_pad),
+        // with redundancy realized by keeping the padded length ≥ r·m.
+        let target = ((w.cols as f64) * self.redundancy).ceil() as usize;
+        let bf = Butterfly::new(target, self.seed, 3);
+        let mut out = Matrix::zeros(w.rows, w.cols);
+        for i in 0..w.rows {
+            let mut y = bf.fwd(w.row(i));
+            quant_2bit(&mut y, self.group);
+            let back = bf.inv(&y);
+            out.row_mut(i).copy_from_slice(&back[..w.cols]);
+        }
+        let mse = w.mse(&out);
+        QuantOut { bits: self.storage_bits(w.rows, w.cols), w_hat: out, mse }
+    }
+
+    fn storage_bits(&self, n: usize, m: usize) -> BitsBreakdown {
+        storage::framequant_bits(n, m, self.redundancy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::Rtn;
+    use crate::quant::synth;
+    use crate::quant::Quantizer;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn butterfly_is_orthogonal() {
+        let bf = Butterfly::new(64, 7, 3);
+        let mut rng = Pcg32::seeded(1);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+        let y = bf.fwd(&x);
+        // norm preserved
+        let nx: f32 = x.iter().map(|v| v * v).sum();
+        let ny: f32 = y.iter().map(|v| v * v).sum();
+        assert!((nx - ny).abs() / nx < 1e-4, "{nx} vs {ny}");
+        // exact inverse
+        let back = bf.inv(&y);
+        for (a, b) in x.iter().zip(back.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn two_bits_beat_one_bit() {
+        let (w, ctx) = synth::llm_like_layer(16, 64, 40);
+        let f = FrameQuant::new(1.0).quantize(&w, &ctx);
+        let r = Rtn.quantize(&w, &ctx);
+        assert!(f.mse < r.mse, "framequant {} !< rtn {}", f.mse, r.mse);
+    }
+
+    #[test]
+    fn redundancy_helps() {
+        let (w, ctx) = synth::llm_like_layer(16, 96, 41);
+        let f10 = FrameQuant::new(1.0).quantize(&w, &ctx);
+        let f11 = FrameQuant::new(1.5).quantize(&w, &ctx);
+        // more redundancy, (weakly) better reconstruction
+        assert!(f11.mse < f10.mse * 1.2, "r=1.5 {} vs r=1.0 {}", f11.mse, f10.mse);
+    }
+
+    #[test]
+    fn wbits_2_2_at_r11() {
+        let b = FrameQuant::new(1.1).avg_wbits(4096, 4096);
+        assert!((b - 2.2).abs() < 0.2, "{b}");
+    }
+}

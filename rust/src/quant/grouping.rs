@@ -1,0 +1,307 @@
+//! Frequency-aware multi-parameter intra-row grouping (§3.4) and the
+//! intra-band shared-mean strategy (§3.5).
+//!
+//! Deployable encoding (DESIGN.md §Group-membership): for each block+band,
+//! one *shared* column order ranks columns by band column-ℓ2; every row then
+//! stores only a split index `t` chosen among `n_candidates` percentile
+//! positions — group 1 = the t highest-magnitude-ranked columns, group 2 =
+//! the rest. Membership is exactly decodable from (order, t).
+
+use super::binarize::{self, BinParams};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Granularity {
+    /// one split index per row (paper default)
+    RowWise,
+    /// one split index shared by all rows (Table 2b baseline)
+    Global,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct GroupOpts {
+    pub n_candidates: usize,
+    pub shared_mean: bool,
+    pub granularity: Granularity,
+}
+
+impl Default for GroupOpts {
+    fn default() -> Self {
+        GroupOpts { n_candidates: 40, shared_mean: true, granularity: Granularity::RowWise }
+    }
+}
+
+/// Rank column indices of a band by descending column ℓ2 norm.
+/// `band_cols(j)` yields the values of column j across rows.
+pub fn shared_order(col_l2: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..col_l2.len()).collect();
+    idx.sort_by(|&a, &b| col_l2[b].partial_cmp(&col_l2[a]).unwrap().then(a.cmp(&b)));
+    idx
+}
+
+/// Split-candidate positions: `n_candidates` points spread over (0, m)
+/// percentile-style, always including the no-split candidate t = m.
+pub fn candidates(m: usize, n_candidates: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(n_candidates + 1);
+    for c in 1..=n_candidates {
+        let t = (c * m) / (n_candidates + 1);
+        if t >= 1 && t < m && out.last() != Some(&t) {
+            out.push(t);
+        }
+    }
+    out.push(m); // single-group fallback
+    out
+}
+
+/// Result of quantizing one row's band.
+#[derive(Clone, Debug)]
+pub struct RowGroupFit {
+    pub t: usize, // split position in the shared order
+    pub p1: BinParams,
+    pub p2: BinParams,
+    pub err: f64,
+}
+
+/// Search the best split for one row's band values (`vals[j]` is the value
+/// at band-column j, `order` the shared magnitude order).
+pub fn fit_row(
+    vals: &[f32],
+    order: &[usize],
+    cand: &[usize],
+    shared_mean: bool,
+) -> RowGroupFit {
+    debug_assert_eq!(vals.len(), order.len());
+    let mut best: Option<RowGroupFit> = None;
+    for &t in cand {
+        let g1 = order[..t].iter().map(|&j| vals[j]);
+        let g2 = order[t..].iter().map(|&j| vals[j]);
+        let (p1, p2, err) = if shared_mean {
+            // one μ over both groups (§3.5), per-group α
+            let all_mu = binarize::fit(vals.iter().copied()).mu;
+            let fit_alpha = |idxs: &[usize]| -> f32 {
+                if idxs.is_empty() {
+                    return 0.0;
+                }
+                let dev: f64 = idxs.iter().map(|&j| (vals[j] - all_mu).abs() as f64).sum();
+                (dev / idxs.len() as f64) as f32
+            };
+            let p1 = BinParams { alpha: fit_alpha(&order[..t]), mu: all_mu };
+            let p2 = BinParams { alpha: fit_alpha(&order[t..]), mu: all_mu };
+            let err = binarize::error(g1.clone(), p1) + binarize::error(g2.clone(), p2);
+            (p1, p2, err)
+        } else {
+            let (p1, e1) = binarize::fit_and_error(g1);
+            let (p2, e2) = binarize::fit_and_error(g2);
+            (p1, p2, e1 + e2)
+        };
+        if best.as_ref().map_or(true, |b| err < b.err) {
+            best = Some(RowGroupFit { t, p1, p2, err });
+        }
+    }
+    best.expect("candidates non-empty")
+}
+
+/// Dequantize a row's band in place given its fit.
+pub fn dequant_row(vals: &mut [f32], order: &[usize], fit: &RowGroupFit) {
+    for (rank, &j) in order.iter().enumerate() {
+        let p = if rank < fit.t { fit.p1 } else { fit.p2 };
+        vals[j] = binarize::dequant(vals[j], p);
+    }
+}
+
+/// Quantize a whole band of a block: rows × band-columns, with either
+/// row-wise or global split granularity. Returns per-row fits; `band[i]`
+/// is mutated to the reconstruction.
+pub fn quantize_band(
+    rows: &mut [Vec<f32>],
+    col_l2: &[f64],
+    opts: &GroupOpts,
+) -> Vec<RowGroupFit> {
+    let m = col_l2.len();
+    let order = shared_order(col_l2);
+    let cand = candidates(m, opts.n_candidates);
+    match opts.granularity {
+        Granularity::RowWise => {
+            let mut fits = Vec::with_capacity(rows.len());
+            for row in rows.iter_mut() {
+                let f = fit_row(row, &order, &cand, opts.shared_mean);
+                dequant_row(row, &order, &f);
+                fits.push(f);
+            }
+            fits
+        }
+        Granularity::Global => {
+            // pick the single t minimizing total error across rows
+            let mut best_t = m;
+            let mut best_err = f64::INFINITY;
+            for &t in &cand {
+                let mut total = 0.0;
+                for row in rows.iter() {
+                    let f = fit_row(row, &order, &[t], opts.shared_mean);
+                    total += f.err;
+                }
+                if total < best_err {
+                    best_err = total;
+                    best_t = t;
+                }
+            }
+            let mut fits = Vec::with_capacity(rows.len());
+            for row in rows.iter_mut() {
+                let f = fit_row(row, &order, &[best_t], opts.shared_mean);
+                dequant_row(row, &order, &f);
+                fits.push(f);
+            }
+            fits
+        }
+    }
+}
+
+/// Oracle (non-deployable) grouping: per-row magnitude threshold with a
+/// per-element bitmap. Used only by the group-encoding ablation to measure
+/// the fidelity cost of the deployable encoding.
+pub fn fit_row_oracle(vals: &[f32], cand_fracs: usize, shared_mean: bool) -> (Vec<f32>, f64) {
+    let m = vals.len();
+    let mut mags: Vec<usize> = (0..m).collect();
+    mags.sort_by(|&a, &b| vals[b].abs().partial_cmp(&vals[a].abs()).unwrap());
+    let cand = candidates(m, cand_fracs);
+    let f = fit_row(vals, &mags, &cand, shared_mean);
+    let mut out = vals.to_vec();
+    dequant_row(&mut out, &mags, &f);
+    (out, f.err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+
+    fn band_err(vals: &[f32], recon: &[f32]) -> f64 {
+        vals.iter().zip(recon).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+    }
+
+    #[test]
+    fn candidates_cover_range() {
+        let c = candidates(128, 40);
+        assert!(c.len() >= 30);
+        assert!(c.iter().all(|&t| t >= 1 && t <= 128));
+        assert_eq!(*c.last().unwrap(), 128);
+        let c1 = candidates(4, 40);
+        assert!(c1.windows(2).all(|w| w[0] < w[1]), "{c1:?}");
+    }
+
+    #[test]
+    fn two_groups_never_worse_than_one() {
+        check(
+            "grouping-beats-single",
+            40,
+            |g: &mut Gen| {
+                let m = 2 * g.size(2, 40);
+                // mixture: half small, half large magnitude
+                let mut v = g.vec_f32(m, 0.3);
+                for x in v.iter_mut().take(m / 3) {
+                    *x *= 8.0;
+                }
+                v
+            },
+            |vals| {
+                let l2: Vec<f64> = vals.iter().map(|v| v.abs() as f64).collect();
+                let order = shared_order(&l2);
+                let cand = candidates(vals.len(), 40);
+                let split = fit_row(vals, &order, &cand, false);
+                let single = fit_row(vals, &order, &[vals.len()], false);
+                if split.err <= single.err + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("{} > {}", split.err, single.err))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn dequant_reduces_to_four_values_per_band() {
+        let vals: Vec<f32> = (0..32).map(|i| (i as f32 - 16.0) * 0.13).collect();
+        let l2: Vec<f64> = vals.iter().map(|v| v.abs() as f64).collect();
+        let order = shared_order(&l2);
+        let cand = candidates(32, 10);
+        let f = fit_row(&vals, &order, &cand, false);
+        let mut recon = vals.clone();
+        dequant_row(&mut recon, &order, &f);
+        let mut distinct: Vec<i64> = recon.iter().map(|&v| (v * 1e5) as i64).collect();
+        distinct.sort();
+        distinct.dedup();
+        assert!(distinct.len() <= 4, "CIQ per band must be ≤ 4, got {}", distinct.len());
+    }
+
+    #[test]
+    fn shared_mean_costs_little() {
+        check(
+            "shared-mean-close",
+            25,
+            |g: &mut Gen| { let n = 2 * g.size(8, 40); g.vec_f32(n, 1.0) },
+            |vals| {
+                let l2: Vec<f64> = vals.iter().map(|v| v.abs() as f64).collect();
+                let order = shared_order(&l2);
+                let cand = candidates(vals.len(), 20);
+                let sep = fit_row(vals, &order, &cand, false);
+                let sha = fit_row(vals, &order, &cand, true);
+                // shared mean may lose a bit but not catastrophically
+                if sha.err <= sep.err * 3.0 + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("shared mean err {} vs {}", sha.err, sep.err))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn rowwise_beats_global() {
+        // heterogeneous rows: row-wise split must win (Table 2b)
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for i in 0..8 {
+            let scale = 1.0 + i as f32;
+            rows.push((0..32).map(|j| ((i * 37 + j * 11) % 17) as f32 * 0.1 * scale - 0.8).collect());
+        }
+        let orig = rows.clone();
+        let l2: Vec<f64> = (0..32)
+            .map(|j| orig.iter().map(|r| (r[j] as f64).powi(2)).sum::<f64>().sqrt())
+            .collect();
+        let mut rows_g = orig.clone();
+        let e_row: f64 = {
+            let opts = GroupOpts { granularity: Granularity::RowWise, ..Default::default() };
+            quantize_band(&mut rows, &l2, &opts);
+            orig.iter().zip(&rows).map(|(a, b)| band_err(a, b)).sum()
+        };
+        let e_glob: f64 = {
+            let opts = GroupOpts { granularity: Granularity::Global, ..Default::default() };
+            quantize_band(&mut rows_g, &l2, &opts);
+            orig.iter().zip(&rows_g).map(|(a, b)| band_err(a, b)).sum()
+        };
+        assert!(e_row <= e_glob + 1e-9, "row {e_row} vs global {e_glob}");
+    }
+
+    #[test]
+    fn oracle_at_least_as_good_as_deployable() {
+        check(
+            "oracle-vs-deployable",
+            20,
+            |g: &mut Gen| {
+                let m = 2 * g.size(8, 40);
+                g.vec_f32(m, 1.0)
+            },
+            |vals| {
+                let (_, oracle_err) = fit_row_oracle(vals, 40, false);
+                let l2: Vec<f64> = vals.iter().map(|v| v.abs() as f64).collect();
+                let order = shared_order(&l2);
+                let cand = candidates(vals.len(), 40);
+                let dep = fit_row(vals, &order, &cand, false);
+                // single row: the shared order IS the magnitude order, so equal
+                if (oracle_err - dep.err).abs() < 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("oracle {oracle_err} vs dep {}", dep.err))
+                }
+            },
+        );
+    }
+}

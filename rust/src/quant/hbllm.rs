@@ -1,0 +1,752 @@
+//! HBLLM (§3): HaarQuant with frequency-aware intra-row grouping, ℓ2
+//! saliency-driven column selection, FillAvg, intra-band mean sharing —
+//! riding the blockwise OBQ substrate (Algorithm 1).
+//!
+//! Two variants, as in Fig. 2:
+//!  * `Row` — non-salient part row-Haar'd (per row, within the block),
+//!    per-band grouped quantization; salient columns carry a column-Haar
+//!    residual correction (extra sign bits on K columns).
+//!  * `Col` — whole block column-Haar'd; one grouped quantization per
+//!    coefficient row; salient columns only steer the fit (no extra bits),
+//!    which is why its W-bits ≈ 1.00.
+//!
+//! Scale scope (appendix-D storage): with `ScaleScope::RowGlobal` (default,
+//! paper-faithful W-bits ≈ 1.1/1.0) the per-block (α, μ) fits used during
+//! OBQ are *repacked* after quantization: signs and group assignments are
+//! kept, and one (α₁, α₂, shared μ) triple per (row, band) is refit in
+//! closed form across the full width. `ScaleScope::Block` keeps the
+//! per-block fp16 fits (higher fidelity, ~0.75 extra bits/weight at
+//! β = 128) — the trade-off is an ablation in `examples/ablations.rs`.
+
+use super::binarize;
+use super::gptq::obq_blockwise;
+use super::grouping::{self, Granularity, GroupOpts};
+use super::salient::{self, Criterion};
+use super::storage;
+use super::{BitsBreakdown, HessianCtx, QuantOut, Quantizer, DEFAULT_BETA};
+use crate::haar;
+use crate::tensor::Matrix;
+use std::cell::RefCell;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Row,
+    Col,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleScope {
+    /// fp16 (α, μ) per row per band per OBQ block (max fidelity)
+    Block,
+    /// one (α₁, α₂, μ) per row per band, refit over the full width (paper)
+    RowGlobal,
+}
+
+#[derive(Clone, Debug)]
+pub struct HbllmOpts {
+    pub beta: usize,
+    pub n_candidates: usize,
+    pub shared_mean: bool,
+    pub criterion: Criterion,
+    pub granularity: Granularity,
+    /// search K over `salient::k_options` (paper default) vs a fixed K
+    pub search_salient_k: bool,
+    pub fixed_k: usize,
+    /// Haar decomposition levels (1 = paper; >1 is our extension)
+    pub levels: usize,
+    pub scale_scope: ScaleScope,
+    /// Oracle grouping: per-row magnitude order with an (undeployable)
+    /// per-element membership bitmap — quantifies the fidelity cost of the
+    /// deployable shared-order encoding (DESIGN.md §Group-membership).
+    pub oracle_grouping: bool,
+}
+
+impl Default for HbllmOpts {
+    fn default() -> Self {
+        HbllmOpts {
+            beta: DEFAULT_BETA,
+            n_candidates: 40,
+            shared_mean: true,
+            criterion: Criterion::L2,
+            granularity: Granularity::RowWise,
+            search_salient_k: true,
+            fixed_k: 8,
+            levels: 1,
+            scale_scope: ScaleScope::RowGlobal,
+            oracle_grouping: false,
+        }
+    }
+}
+
+pub struct Hbllm {
+    pub variant: Variant,
+    pub opts: HbllmOpts,
+}
+
+/// Per-block quantization record used by the RowGlobal repack: Haar-domain
+/// coefficients, their sign/band/group assignment, and the (already dense)
+/// salient residual correction added after synthesis.
+struct BlockAux {
+    off: usize,
+    width: usize,
+    /// pre-quantization coefficients (row-Haar of the filled block for Row,
+    /// col-Haar of the block for Col)
+    c_orig: Matrix,
+    /// +1/-1 per coefficient
+    sign: Vec<i8>,
+    /// band id per coefficient (0 = deepest low band)
+    band: Vec<u8>,
+    /// group id within band (0 or 1)
+    group: Vec<u8>,
+    /// band boundaries for Row synthesis (from fwd_rows_multi)
+    bounds: Vec<usize>,
+    /// dense correction added after inverse transform (salient residual)
+    salient_add: Option<Matrix>,
+    /// quantized coefficients as produced at block time; elements marked
+    /// `fixed` keep this value through the RowGlobal repack (per-column
+    /// salient fits in the Col variant)
+    c_hat: Matrix,
+    fixed: Vec<bool>,
+    variant: Variant,
+}
+
+impl Hbllm {
+    pub fn row() -> Hbllm {
+        Hbllm { variant: Variant::Row, opts: HbllmOpts::default() }
+    }
+
+    pub fn col() -> Hbllm {
+        Hbllm { variant: Variant::Col, opts: HbllmOpts::default() }
+    }
+
+    pub fn with_opts(variant: Variant, opts: HbllmOpts) -> Hbllm {
+        Hbllm { variant, opts }
+    }
+
+    // ----- row variant -------------------------------------------------
+
+    /// Quantize the non-salient (filled) part: row-Haar + per-band grouped
+    /// binarization. Returns (reconstruction, aux fields).
+    fn row_quant_filled(
+        &self,
+        filled: &Matrix,
+        n_candidates: usize,
+    ) -> (Matrix, Matrix, Matrix, Vec<i8>, Vec<u8>, Vec<u8>, Vec<usize>) {
+        let (c, bounds) = haar::fwd_rows_multi(filled, self.opts.levels);
+        let (n, m) = (c.rows, c.cols);
+        let mut c_hat = c.clone();
+        let mut sign = vec![1i8; n * m];
+        let mut band_id = vec![0u8; n * m];
+        let mut group_id = vec![0u8; n * m];
+        for (bi, band) in bounds.windows(2).enumerate() {
+            let (j0, j1) = (band[0], band[1]);
+            if j1 == j0 {
+                continue;
+            }
+            let mut col_l2 = vec![0f64; j1 - j0];
+            for i in 0..n {
+                for (jj, v) in c.row(i)[j0..j1].iter().enumerate() {
+                    col_l2[jj] += (*v as f64) * (*v as f64);
+                }
+            }
+            for v in col_l2.iter_mut() {
+                *v = v.sqrt();
+            }
+            let order = grouping::shared_order(&col_l2);
+            let cand = grouping::candidates(j1 - j0, n_candidates);
+            let rank_of = {
+                let mut r = vec![0usize; j1 - j0];
+                for (rank, &j) in order.iter().enumerate() {
+                    r[j] = rank;
+                }
+                r
+            };
+            match self.opts.granularity {
+                Granularity::RowWise => {
+                    for i in 0..n {
+                        let vals = c.row(i)[j0..j1].to_vec();
+                        // oracle mode ranks by this row's own |values|
+                        // (needs a per-element bitmap at deployment)
+                        let row_order: Vec<usize>;
+                        let row_rank: Vec<usize>;
+                        let (ord, rank) = if self.opts.oracle_grouping {
+                            let mut o: Vec<usize> = (0..vals.len()).collect();
+                            o.sort_by(|&a, &b| {
+                                vals[b].abs().partial_cmp(&vals[a].abs()).unwrap()
+                            });
+                            let mut r = vec![0usize; vals.len()];
+                            for (rk, &j) in o.iter().enumerate() {
+                                r[j] = rk;
+                            }
+                            row_order = o;
+                            row_rank = r;
+                            (&row_order[..], &row_rank[..])
+                        } else {
+                            (&order[..], &rank_of[..])
+                        };
+                        let f = grouping::fit_row(&vals, ord, &cand, self.opts.shared_mean);
+                        let mut recon = vals.clone();
+                        grouping::dequant_row(&mut recon, ord, &f);
+                        c_hat.row_mut(i)[j0..j1].copy_from_slice(&recon);
+                        for jj in 0..j1 - j0 {
+                            let idx = i * m + j0 + jj;
+                            let g = (rank[jj] >= f.t) as u8;
+                            let p = if g == 0 { f.p1 } else { f.p2 };
+                            sign[idx] = if vals[jj] >= p.mu { 1 } else { -1 };
+                            band_id[idx] = bi as u8;
+                            group_id[idx] = g;
+                        }
+                    }
+                }
+                Granularity::Global => {
+                    let mut rows: Vec<Vec<f32>> =
+                        (0..n).map(|i| c.row(i)[j0..j1].to_vec()).collect();
+                    let opts = GroupOpts {
+                        n_candidates,
+                        shared_mean: self.opts.shared_mean,
+                        granularity: Granularity::Global,
+                    };
+                    let orig_rows: Vec<Vec<f32>> = rows.clone();
+                    let fits = grouping::quantize_band(&mut rows, &col_l2, &opts);
+                    for i in 0..n {
+                        c_hat.row_mut(i)[j0..j1].copy_from_slice(&rows[i]);
+                        let f = &fits[i];
+                        for jj in 0..j1 - j0 {
+                            let idx = i * m + j0 + jj;
+                            let g = (rank_of[jj] >= f.t) as u8;
+                            let p = if g == 0 { f.p1 } else { f.p2 };
+                            sign[idx] = if orig_rows[i][jj] >= p.mu { 1 } else { -1 };
+                            band_id[idx] = bi as u8;
+                            group_id[idx] = g;
+                        }
+                    }
+                }
+            }
+        }
+        let recon = haar::inv_rows_multi(&c_hat, &bounds);
+        (recon, c, c_hat, sign, band_id, group_id, bounds)
+    }
+
+    /// Column-Haar residual binarization of the salient columns: per
+    /// column, per frequency half, a two-stage residual binarization
+    /// (outlier columns carry most of the block energy, so they get 2
+    /// extra sign bits per element — charged in `storage::hbllm_row_bits`).
+    fn col_quant_salient(resid: &Matrix, salient: &[usize]) -> Matrix {
+        let n = resid.rows;
+        let mut out = Matrix::zeros(n, resid.cols);
+        if salient.is_empty() {
+            return out;
+        }
+        if n % 2 != 0 || n < 2 {
+            for &j in salient {
+                let col = resid.col(j);
+                let p = binarize::fit_residual(&col);
+                for i in 0..n {
+                    out.set(i, j, binarize::dequant_residual(col[i], p));
+                }
+            }
+            return out;
+        }
+        let h = n / 2;
+        for &j in salient {
+            let col = resid.col(j);
+            let mut lo = vec![0f32; h];
+            let mut hi = vec![0f32; h];
+            for k in 0..h {
+                lo[k] = (col[2 * k] + col[2 * k + 1]) * 0.5;
+                hi[k] = (col[2 * k] - col[2 * k + 1]) * 0.5;
+            }
+            let plo = binarize::fit_residual(&lo);
+            let phi = binarize::fit_residual(&hi);
+            for k in 0..h {
+                let dl = binarize::dequant_residual(lo[k], plo);
+                let dh = binarize::dequant_residual(hi[k], phi);
+                out.set(2 * k, j, dl + dh);
+                out.set(2 * k + 1, j, dl - dh);
+            }
+        }
+        out
+    }
+
+    fn row_block(&self, blk: &Matrix, off: usize, ctx: &HessianCtx) -> (Matrix, BlockAux) {
+        // 1. salient selection: score, then pick the K minimizing block error
+        let scores = salient::column_scores(blk, &ctx.hinv_diag, off, self.opts.criterion);
+        let ks: Vec<usize> = if self.opts.search_salient_k {
+            salient::k_options(blk.cols)
+        } else {
+            vec![self.opts.fixed_k.min(blk.cols / 2)]
+        };
+        let mut best: Option<(Vec<usize>, f64)> = None;
+        // K is chosen by the Hessian-weighted block error — the objective
+        // the OBQ pipeline actually minimizes (Eq. 1), diag approximation.
+        let hdiag: Vec<f64> = (0..blk.cols).map(|j| ctx.h.get(off + j, off + j)).collect();
+        for &k in &ks {
+            let sal = salient::top_k(&scores, k);
+            let (recon, ..) = self.row_reconstruct(blk, &sal, 8.min(self.opts.n_candidates));
+            let mut err = 0f64;
+            for i in 0..blk.rows {
+                for (j, (&a, &b)) in blk.row(i).iter().zip(recon.row(i)).enumerate() {
+                    let d = (a - b) as f64;
+                    err += hdiag[j] * d * d;
+                }
+            }
+            if best.as_ref().map_or(true, |(_, e)| err < *e) {
+                best = Some((sal, err));
+            }
+        }
+        let (sal, _) = best.unwrap();
+        let (recon, c, c_hat, sign, band, group, bounds, sal_add) =
+            self.row_reconstruct(blk, &sal, self.opts.n_candidates);
+        let fixed = vec![false; c.rows * c.cols];
+        let aux = BlockAux {
+            off,
+            width: blk.cols,
+            c_orig: c,
+            sign,
+            band,
+            group,
+            bounds,
+            salient_add: sal_add,
+            c_hat,
+            fixed,
+            variant: Variant::Row,
+        };
+        (recon, aux)
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn row_reconstruct(
+        &self,
+        blk: &Matrix,
+        sal: &[usize],
+        n_candidates: usize,
+    ) -> (Matrix, Matrix, Matrix, Vec<i8>, Vec<u8>, Vec<u8>, Vec<usize>, Option<Matrix>) {
+        let filled = salient::fill_avg(blk, sal);
+        let (mut b, c, c_hat, sign, band, group, bounds) = self.row_quant_filled(&filled, n_candidates);
+        let mut sal_add = None;
+        if !sal.is_empty() {
+            let resid = blk.sub(&b);
+            let b_sal = Self::col_quant_salient(&resid, sal);
+            for &j in sal {
+                for i in 0..blk.rows {
+                    let v = b.get(i, j) + b_sal.get(i, j);
+                    b.set(i, j, v);
+                }
+            }
+            sal_add = Some(b_sal);
+        }
+        (b, c, c_hat, sign, band, group, bounds, sal_add)
+    }
+
+    // ----- col variant -------------------------------------------------
+
+    fn col_block(&self, blk: &Matrix, off: usize, ctx: &HessianCtx) -> (Matrix, BlockAux) {
+        let n = blk.rows;
+        if n % 2 != 0 || n < 2 {
+            return self.row_block(blk, off, ctx);
+        }
+        let scores = salient::column_scores(blk, &ctx.hinv_diag, off, self.opts.criterion);
+        let k = self.opts.fixed_k.min(blk.cols / 2);
+        let sal = salient::top_k(&scores, k);
+        let is_sal = {
+            let mut v = vec![false; blk.cols];
+            for &j in &sal {
+                v[j] = true;
+            }
+            v
+        };
+
+        let c = haar::fwd_cols(blk);
+        let m = blk.cols;
+        let h = n / 2;
+        let mut c_hat = c.clone();
+        let mut sign = vec![1i8; n * m];
+        let mut band_id = vec![0u8; n * m];
+        let mut group_id = vec![0u8; n * m];
+        for (bi, (r0, r1)) in [(0usize, h), (h, n)].into_iter().enumerate() {
+            let mut col_l2 = vec![0f64; m];
+            for i in r0..r1 {
+                for (j, v) in c.row(i).iter().enumerate() {
+                    if !is_sal[j] {
+                        col_l2[j] += (*v as f64) * (*v as f64);
+                    }
+                }
+            }
+            for v in col_l2.iter_mut() {
+                *v = v.sqrt();
+            }
+            let order = grouping::shared_order(&col_l2);
+            let rank_of = {
+                let mut r = vec![0usize; m];
+                for (rank, &j) in order.iter().enumerate() {
+                    r[j] = rank;
+                }
+                r
+            };
+            let mut cand = grouping::candidates(m, self.opts.n_candidates);
+            if self.opts.granularity == Granularity::Global {
+                // one split shared by all rows of the band (Table 2b arm):
+                // pick the t minimizing the summed per-row error
+                let mut best_t = m;
+                let mut best_err = f64::INFINITY;
+                for &t in &cand.clone() {
+                    let mut total = 0.0;
+                    for i in r0..r1 {
+                        let vals = c.row(i).to_vec();
+                        let f = fit_row_excluding(&vals, &order, &[t], self.opts.shared_mean, &is_sal);
+                        total += f.err;
+                    }
+                    if total < best_err {
+                        best_err = total;
+                        best_t = t;
+                    }
+                }
+                cand = vec![best_t];
+            }
+            // salient (outlier) columns get their own per-column (α, μ) per
+            // band — a handful of fp16 pairs per block, no extra sign bits
+            let mut sal_params: Vec<binarize::BinParams> = Vec::with_capacity(sal.len());
+            for &j in &sal {
+                let vals: Vec<f32> = (r0..r1).map(|i| c.get(i, j)).collect();
+                sal_params.push(binarize::fit(vals.iter().copied()));
+            }
+            for i in r0..r1 {
+                let vals = c.row(i).to_vec();
+                let fit = fit_row_excluding(&vals, &order, &cand, self.opts.shared_mean, &is_sal);
+                let mut recon = vals.clone();
+                grouping::dequant_row(&mut recon, &order, &fit);
+                for (si, &j) in sal.iter().enumerate() {
+                    recon[j] = binarize::dequant(vals[j], sal_params[si]);
+                }
+                c_hat.row_mut(i).copy_from_slice(&recon);
+                for j in 0..m {
+                    let idx = i * m + j;
+                    let g = (rank_of[j] >= fit.t) as u8;
+                    let p = if g == 0 { fit.p1 } else { fit.p2 };
+                    sign[idx] = if vals[j] >= p.mu { 1 } else { -1 };
+                    band_id[idx] = bi as u8;
+                    group_id[idx] = g;
+                }
+            }
+        }
+        let recon = haar::inv_cols(&c_hat);
+        let mut fixed = vec![false; n * m];
+        for &j in &sal {
+            for i in 0..n {
+                fixed[i * m + j] = true;
+            }
+        }
+        let aux = BlockAux {
+            off,
+            width: m,
+            c_orig: c.clone(),
+            sign,
+            band: band_id,
+            group: group_id,
+            bounds: vec![],
+            salient_add: None,
+            c_hat,
+            fixed,
+            variant: Variant::Col,
+        };
+        (recon, aux)
+    }
+
+    // ----- RowGlobal repack --------------------------------------------
+
+    /// Refit one (α₁, α₂, shared μ) triple per (row, band) across all
+    /// blocks, keeping signs and group assignments; rebuild Ŵ from the
+    /// refit scales. Closed-form 3×3 normal equations per (row, band).
+    fn repack_row_global(&self, n: usize, m: usize, auxes: &[BlockAux]) -> Matrix {
+        let n_bands = auxes
+            .iter()
+            .flat_map(|a| a.band.iter().copied())
+            .max()
+            .unwrap_or(0) as usize
+            + 1;
+        // stats[(row, band)]: per group g: n_g, Σc, Σs, Σs·c
+        #[derive(Clone, Copy, Default)]
+        struct G {
+            n: f64,
+            sc: f64,   // Σ c
+            ss: f64,   // Σ s
+            ssc: f64,  // Σ s·c
+        }
+        let mut stats = vec![[G::default(); 2]; n * n_bands];
+        for a in auxes {
+            let w = a.width;
+            let rows = a.c_orig.rows;
+            for i in 0..rows {
+                for j in 0..w {
+                    let idx = i * w + j;
+                    if a.fixed[idx] {
+                        continue;
+                    }
+                    let key = i * n_bands + a.band[idx] as usize;
+                    let g = &mut stats[key][a.group[idx] as usize];
+                    let c = a.c_orig.get(i, j) as f64;
+                    let s = a.sign[idx] as f64;
+                    g.n += 1.0;
+                    g.sc += c;
+                    g.ss += s;
+                    g.ssc += s * c;
+                }
+            }
+        }
+        // solve per (row, band): unknowns x = (α₁, α₂, μ)
+        //   α_g·n_g + μ·ss_g = ssc_g                (g = 1, 2)
+        //   α₁·ss₁ + α₂·ss₂ + μ·(n₁+n₂) = sc₁+sc₂
+        let mut alphas = vec![[0f32; 2]; n * n_bands];
+        let mut mus = vec![0f32; n * n_bands];
+        for key in 0..n * n_bands {
+            let [g1, g2] = stats[key];
+            let a = [
+                [g1.n, 0.0, g1.ss],
+                [0.0, g2.n, g2.ss],
+                [g1.ss, g2.ss, g1.n + g2.n],
+            ];
+            let b = [g1.ssc, g2.ssc, g1.sc + g2.sc];
+            if let Some(x) = solve3(a, b) {
+                alphas[key] = [x[0].max(0.0) as f32, x[1].max(0.0) as f32];
+                mus[key] = x[2] as f32;
+            } else if g1.n + g2.n > 0.0 {
+                // degenerate (e.g. empty group): single-group fallback
+                let nall = g1.n + g2.n;
+                let mu = (g1.sc + g2.sc) / nall;
+                let al = ((g1.ssc + g2.ssc) - mu * (g1.ss + g2.ss)) / nall;
+                alphas[key] = [al.max(0.0) as f32; 2];
+                mus[key] = mu as f32;
+            }
+        }
+        // rebuild
+        let mut out = Matrix::zeros(n, m);
+        for a in auxes {
+            let w = a.width;
+            let mut c_hat = Matrix::zeros(a.c_orig.rows, w);
+            for i in 0..a.c_orig.rows {
+                for j in 0..w {
+                    let idx = i * w + j;
+                    let v = if a.fixed[idx] {
+                        a.c_hat.get(i, j)
+                    } else {
+                        let key = i * n_bands + a.band[idx] as usize;
+                        let al = alphas[key][a.group[idx] as usize];
+                        al * a.sign[idx] as f32 + mus[key]
+                    };
+                    c_hat.set(i, j, v);
+                }
+            }
+            let mut dense = match a.variant {
+                Variant::Row => haar::inv_rows_multi(&c_hat, &a.bounds),
+                Variant::Col => haar::inv_cols(&c_hat),
+            };
+            if let Some(add) = &a.salient_add {
+                dense.add_scaled(add, 1.0);
+            }
+            out.set_cols(a.off, &dense);
+        }
+        out
+    }
+}
+
+/// Solve a 3×3 linear system (Cramer); None if near-singular.
+fn solve3(a: [[f64; 3]; 3], b: [f64; 3]) -> Option<[f64; 3]> {
+    let det = |m: [[f64; 3]; 3]| -> f64 {
+        m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+            - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+            + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+    };
+    let d = det(a);
+    if d.abs() < 1e-9 {
+        return None;
+    }
+    let mut out = [0.0; 3];
+    for k in 0..3 {
+        let mut ak = a;
+        for r in 0..3 {
+            ak[r][k] = b[r];
+        }
+        out[k] = det(ak) / d;
+    }
+    Some(out)
+}
+
+/// fit_row variant that fits params on non-excluded indices only.
+fn fit_row_excluding(
+    vals: &[f32],
+    order: &[usize],
+    cand: &[usize],
+    shared_mean: bool,
+    excluded: &[bool],
+) -> grouping::RowGroupFit {
+    if excluded.iter().all(|&e| !e) {
+        return grouping::fit_row(vals, order, cand, shared_mean);
+    }
+    let kept: Vec<usize> = (0..vals.len()).filter(|&j| !excluded[j]).collect();
+    if kept.is_empty() {
+        return grouping::fit_row(vals, order, cand, shared_mean);
+    }
+    let filt_vals: Vec<f32> = kept.iter().map(|&j| vals[j]).collect();
+    let rank_of: Vec<usize> = {
+        let mut r = vec![0usize; vals.len()];
+        for (rank, &j) in order.iter().enumerate() {
+            r[j] = rank;
+        }
+        r
+    };
+    let mut filt_order: Vec<usize> = (0..kept.len()).collect();
+    filt_order.sort_by_key(|&fi| rank_of[kept[fi]]);
+    let mut filt_cand: Vec<usize> = cand
+        .iter()
+        .map(|&t| {
+            let c = kept.iter().filter(|&&j| rank_of[j] < t).count();
+            c.max(1).min(kept.len())
+        })
+        .collect();
+    filt_cand.dedup();
+    let f = grouping::fit_row(&filt_vals, &filt_order, &filt_cand, shared_mean);
+    let t_full = if f.t >= filt_order.len() {
+        vals.len()
+    } else {
+        rank_of[kept[filt_order[f.t]]]
+    };
+    grouping::RowGroupFit { t: t_full, ..f }
+}
+
+impl Quantizer for Hbllm {
+    fn name(&self) -> String {
+        match self.variant {
+            Variant::Row => "hbllm-row".into(),
+            Variant::Col => "hbllm-col".into(),
+        }
+    }
+
+    fn quantize(&self, w: &Matrix, ctx: &HessianCtx) -> QuantOut {
+        let beta = self.opts.beta.min(w.cols);
+        let auxes: RefCell<Vec<BlockAux>> = RefCell::new(Vec::new());
+        let b = obq_blockwise(w, ctx, beta, |blk, off| {
+            let (recon, aux) = match self.variant {
+                Variant::Row => self.row_block(blk, off, ctx),
+                Variant::Col => self.col_block(blk, off, ctx),
+            };
+            auxes.borrow_mut().push(aux);
+            recon
+        });
+        let b = match self.opts.scale_scope {
+            ScaleScope::Block => b,
+            ScaleScope::RowGlobal => self.repack_row_global(w.rows, w.cols, &auxes.borrow()),
+        };
+        let mse = w.mse(&b);
+        QuantOut { bits: self.storage_bits(w.rows, w.cols), w_hat: b, mse }
+    }
+
+    fn storage_bits(&self, n: usize, m: usize) -> BitsBreakdown {
+        match self.variant {
+            Variant::Row => storage::hbllm_row_bits(n, m, &self.opts),
+            Variant::Col => storage::hbllm_col_bits(n, m, &self.opts),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::synth;
+
+    fn run_opts(variant: Variant, n: usize, m: usize, seed: u64, f: impl Fn(&mut HbllmOpts)) -> (Matrix, QuantOut) {
+        let (w, ctx) = synth::llm_like_layer(n, m, seed);
+        let mut opts = HbllmOpts { beta: 32, n_candidates: 10, ..Default::default() };
+        f(&mut opts);
+        let q = Hbllm::with_opts(variant, opts);
+        let out = q.quantize(&w, &ctx);
+        (w, out)
+    }
+
+    fn run(variant: Variant, n: usize, m: usize, seed: u64) -> (Matrix, QuantOut) {
+        run_opts(variant, n, m, seed, |_| {})
+    }
+
+    #[test]
+    fn row_variant_reconstructs_better_than_sign_rtn() {
+        let (w, out) = run(Variant::Row, 32, 64, 1);
+        let mut rtn_err = 0.0f64;
+        for i in 0..w.rows {
+            let p = binarize::fit(w.row(i).iter().copied());
+            rtn_err += binarize::error(w.row(i).iter().copied(), p);
+        }
+        let rtn_mse = rtn_err / (w.rows * w.cols) as f64;
+        assert!(out.mse < rtn_mse, "hbllm-row mse {} !< rtn {}", out.mse, rtn_mse);
+    }
+
+    #[test]
+    fn col_variant_valid_and_finite() {
+        let (w, out) = run(Variant::Col, 32, 64, 2);
+        assert_eq!((out.w_hat.rows, out.w_hat.cols), (w.rows, w.cols));
+        assert!(out.w_hat.data.iter().all(|v| v.is_finite()));
+        assert!(out.mse.is_finite() && out.mse > 0.0);
+    }
+
+    #[test]
+    fn block_scope_beats_rowglobal_fidelity() {
+        // the storage/fidelity trade: per-block scales fit tighter
+        let (_, blk) = run_opts(Variant::Row, 32, 96, 3, |o| o.scale_scope = ScaleScope::Block);
+        let (_, glob) = run_opts(Variant::Row, 32, 96, 3, |o| o.scale_scope = ScaleScope::RowGlobal);
+        assert!(
+            blk.mse <= glob.mse * 1.05,
+            "block {} vs rowglobal {}",
+            blk.mse,
+            glob.mse
+        );
+        // but rowglobal must not be catastrophically worse
+        assert!(glob.mse <= blk.mse * 3.0, "repack degraded too much: {} vs {}", glob.mse, blk.mse);
+    }
+
+    #[test]
+    fn row_beats_col_on_fidelity() {
+        let (_, row_out) = run(Variant::Row, 32, 64, 3);
+        let (_, col_out) = run(Variant::Col, 32, 64, 3);
+        assert!(
+            row_out.mse <= col_out.mse * 1.35,
+            "row {} vs col {}",
+            row_out.mse,
+            col_out.mse
+        );
+        let row_bits = Hbllm::row().avg_wbits(4096, 4096);
+        let col_bits = Hbllm::col().avg_wbits(4096, 4096);
+        assert!(col_bits < row_bits, "col {col_bits} !< row {row_bits}");
+    }
+
+    #[test]
+    fn odd_rows_fall_back_safely() {
+        let (w, ctx) = synth::llm_like_layer(15, 32, 4);
+        let q = Hbllm::col();
+        let out = q.quantize(&w, &ctx);
+        assert_eq!((out.w_hat.rows, out.w_hat.cols), (w.rows, w.cols));
+        assert!(out.w_hat.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic() {
+        let (_, a) = run(Variant::Row, 16, 32, 5);
+        let (_, b) = run(Variant::Row, 16, 32, 5);
+        assert_eq!(a.w_hat.data, b.w_hat.data);
+    }
+
+    #[test]
+    fn multi_level_roundtrip_sane() {
+        let (_, out) = run_opts(Variant::Row, 16, 64, 6, |o| {
+            o.levels = 2;
+            o.beta = 64;
+            o.n_candidates = 8;
+        });
+        assert!(out.mse.is_finite());
+    }
+
+    #[test]
+    fn wbits_in_paper_range() {
+        let row = Hbllm::row().avg_wbits(4096, 4096);
+        let col = Hbllm::col().avg_wbits(4096, 4096);
+        assert!(row > 1.0 && row < 1.3, "row wbits {row}");
+        assert!(col >= 1.0 && col < 1.1, "col wbits {col}");
+    }
+}

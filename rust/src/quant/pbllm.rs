@@ -1,0 +1,110 @@
+//! PB-LLM baseline (Shang et al., ICLR 2024): partial binarization — the
+//! top ~10% most salient weights (element-wise, Hessian-scaled magnitude)
+//! stay in 8-bit, the rest are binarized per row. ~1.7 avg W-bits.
+
+use super::binarize;
+use super::gptq::obq_blockwise;
+use super::{storage, BitsBreakdown, HessianCtx, QuantOut, Quantizer, DEFAULT_BETA};
+use crate::tensor::Matrix;
+
+pub struct PbLlm {
+    pub beta: usize,
+    pub salient_frac: f64,
+}
+
+impl Default for PbLlm {
+    fn default() -> Self {
+        PbLlm { beta: DEFAULT_BETA, salient_frac: 0.10 }
+    }
+}
+
+impl PbLlm {
+    fn block(&self, blk: &Matrix, off: usize, ctx: &HessianCtx) -> Matrix {
+        let (n, m) = (blk.rows, blk.cols);
+        let mut out = Matrix::zeros(n, m);
+        for i in 0..n {
+            let row = blk.row(i);
+            // element scores: w² / Hinv_jj²
+            let mut idx: Vec<usize> = (0..m).collect();
+            idx.sort_by(|&a, &b| {
+                let sa = (row[a] as f64).powi(2) / ctx.hinv_diag[off + a].powi(2);
+                let sb = (row[b] as f64).powi(2) / ctx.hinv_diag[off + b].powi(2);
+                sb.partial_cmp(&sa).unwrap()
+            });
+            let k = ((m as f64 * self.salient_frac).round() as usize).min(m);
+            let (sal, rest) = idx.split_at(k);
+            // salient: symmetric int8 with a per-row scale
+            let max_abs = sal.iter().map(|&j| row[j].abs()).fold(0.0f32, f32::max);
+            let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+            for &j in sal {
+                let q = (row[j] / scale).round().clamp(-127.0, 127.0);
+                out.set(i, j, q * scale);
+            }
+            // rest: 1-bit binarization
+            let vals: Vec<f32> = rest.iter().map(|&j| row[j]).collect();
+            let p = binarize::fit(vals.iter().copied());
+            for &j in rest {
+                out.set(i, j, binarize::dequant(row[j], p));
+            }
+        }
+        out
+    }
+}
+
+impl Quantizer for PbLlm {
+    fn name(&self) -> String {
+        "pb-llm".into()
+    }
+
+    fn quantize(&self, w: &Matrix, ctx: &HessianCtx) -> QuantOut {
+        let beta = self.beta.min(w.cols);
+        let b = obq_blockwise(w, ctx, beta, |blk, off| self.block(blk, off, ctx));
+        let mse = w.mse(&b);
+        QuantOut { bits: self.storage_bits(w.rows, w.cols), w_hat: b, mse }
+    }
+
+    fn storage_bits(&self, n: usize, m: usize) -> BitsBreakdown {
+        storage::pbllm_bits(n, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::Rtn;
+    use crate::quant::synth;
+
+    #[test]
+    fn beats_rtn_with_more_bits() {
+        let (w, ctx) = synth::llm_like_layer(32, 64, 30);
+        let p = PbLlm { beta: 32, ..Default::default() }.quantize(&w, &ctx);
+        let r = Rtn.quantize(&w, &ctx);
+        assert!(p.mse < r.mse, "pb {} !< rtn {}", p.mse, r.mse);
+    }
+
+    #[test]
+    fn salient_elements_nearly_exact() {
+        let (w, ctx) = synth::llm_like_layer(16, 64, 31);
+        let out = PbLlm { beta: 64, ..Default::default() }.quantize(&w, &ctx);
+        // the largest |w| element per row should be reconstructed closely
+        // (identity-ish hessian spikes aside, int8 error ≤ scale/2)
+        let mut close = 0;
+        for i in 0..16 {
+            let row = w.row(i);
+            let jmax = (0..64)
+                .max_by(|&a, &b| row[a].abs().partial_cmp(&row[b].abs()).unwrap())
+                .unwrap();
+            let rel = (w.get(i, jmax) - out.w_hat.get(i, jmax)).abs() / w.get(i, jmax).abs().max(1e-6);
+            if rel < 0.05 {
+                close += 1;
+            }
+        }
+        assert!(close >= 12, "only {close}/16 max elements preserved");
+    }
+
+    #[test]
+    fn wbits_about_1_7() {
+        let b = PbLlm::default().avg_wbits(4096, 4096);
+        assert!((b - 1.7).abs() < 0.1, "{b}");
+    }
+}

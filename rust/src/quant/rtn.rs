@@ -1,0 +1,55 @@
+//! Naive 1-bit round-to-nearest baseline: per-row α·sign(w−μ)+μ, no
+//! calibration, no grouping. The floor every structured method must beat.
+
+use super::binarize;
+use super::{storage, BitsBreakdown, HessianCtx, QuantOut, Quantizer};
+use crate::tensor::Matrix;
+
+#[derive(Default)]
+pub struct Rtn;
+
+impl Quantizer for Rtn {
+    fn name(&self) -> String {
+        "rtn".into()
+    }
+
+    fn quantize(&self, w: &Matrix, _ctx: &HessianCtx) -> QuantOut {
+        let mut out = Matrix::zeros(w.rows, w.cols);
+        for i in 0..w.rows {
+            let p = binarize::fit(w.row(i).iter().copied());
+            for (j, &v) in w.row(i).iter().enumerate() {
+                out.set(i, j, binarize::dequant(v, p));
+            }
+        }
+        let mse = w.mse(&out);
+        QuantOut { bits: self.storage_bits(w.rows, w.cols), w_hat: out, mse }
+    }
+
+    fn storage_bits(&self, n: usize, m: usize) -> BitsBreakdown {
+        storage::rtn_bits(n, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::synth;
+
+    #[test]
+    fn two_values_per_row() {
+        let (w, ctx) = synth::llm_like_layer(8, 32, 1);
+        let out = Rtn.quantize(&w, &ctx);
+        for i in 0..8 {
+            let mut vals: Vec<i64> = out.w_hat.row(i).iter().map(|&v| (v * 1e6) as i64).collect();
+            vals.sort();
+            vals.dedup();
+            assert!(vals.len() <= 2, "row {i}: {} distinct", vals.len());
+        }
+    }
+
+    #[test]
+    fn wbits_near_one() {
+        let b = Rtn.avg_wbits(4096, 4096);
+        assert!(b > 1.0 && b < 1.01);
+    }
+}

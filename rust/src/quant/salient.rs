@@ -1,0 +1,189 @@
+//! ℓ2-norm saliency-driven column selection (§3.4) + FillAvg (Fig. 2).
+//!
+//! Column scores combine the BiLLM parameter-importance metric
+//! s_i = w_i² / [H⁻¹]_ii² aggregated per column: under the ℓ2 criterion a
+//! column's score is ‖w_:j‖₂ / [H⁻¹]_jj (ℓ1: ‖w_:j‖₁ / [H⁻¹]_jj).
+
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Criterion {
+    L1,
+    L2,
+}
+
+/// Column saliency scores for a block whose global column range starts at
+/// `col_offset`. `hinv_diag` is indexed globally.
+pub fn column_scores(
+    block: &Matrix,
+    hinv_diag: &[f64],
+    col_offset: usize,
+    criterion: Criterion,
+) -> Vec<f64> {
+    let norms = match criterion {
+        Criterion::L2 => block.col_l2(),
+        Criterion::L1 => block.col_l1(),
+    };
+    norms
+        .into_iter()
+        .enumerate()
+        .map(|(j, n)| {
+            let d = hinv_diag[col_offset + j].max(1e-30);
+            n / d
+        })
+        .collect()
+}
+
+/// Indices of the top-k scored columns (within the block), in ascending
+/// index order.
+pub fn top_k(scores: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    let mut out: Vec<usize> = idx.into_iter().take(k.min(scores.len())).collect();
+    out.sort();
+    out
+}
+
+/// FillAvg: replace each salient column with the average of its nearest
+/// non-salient neighbours (left + right; one-sided at the edges). Keeps the
+/// row-wise Haar transform of the non-salient part smooth (Fig. 2).
+pub fn fill_avg(block: &Matrix, salient: &[usize]) -> Matrix {
+    let mut filled = block.clone();
+    if salient.is_empty() {
+        return filled;
+    }
+    let is_sal = {
+        let mut v = vec![false; block.cols];
+        for &j in salient {
+            v[j] = true;
+        }
+        v
+    };
+    if is_sal.iter().all(|&s| s) {
+        // degenerate: everything salient — nothing to average from
+        return filled;
+    }
+    for &j in salient {
+        // nearest non-salient to the left / right
+        let left = (0..j).rev().find(|&p| !is_sal[p]);
+        let right = (j + 1..block.cols).find(|&p| !is_sal[p]);
+        for i in 0..block.rows {
+            let v = match (left, right) {
+                (Some(l), Some(r)) => 0.5 * (block.get(i, l) + block.get(i, r)),
+                (Some(l), None) => block.get(i, l),
+                (None, Some(r)) => block.get(i, r),
+                (None, None) => unreachable!("guarded above"),
+            };
+            filled.set(i, j, v);
+        }
+    }
+    filled
+}
+
+/// Candidate salient-count options searched per block (the paper selects
+/// "the subset with the lowest quantization error").
+pub fn k_options(block_cols: usize) -> Vec<usize> {
+    let mut ks: Vec<usize> = [0usize, 2, 4, 8, 16]
+        .iter()
+        .copied()
+        .filter(|&k| k < block_cols / 2)
+        .collect();
+    // keep row pairing possible for the column-wise Haar of salient columns
+    ks.dedup();
+    ks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn block_with_outlier_cols(n: usize, m: usize, outliers: &[usize]) -> Matrix {
+        let mut rng = Pcg32::seeded(9);
+        let mut b = Matrix::from_fn(n, m, |_, _| rng.normal_f32() * 0.1);
+        for &j in outliers {
+            for i in 0..n {
+                let v = b.get(i, j);
+                b.set(i, j, v + 3.0 * if i % 2 == 0 { 1.0 } else { -1.0 });
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn l2_finds_outlier_columns() {
+        let b = block_with_outlier_cols(16, 32, &[5, 17]);
+        let hd = vec![1.0f64; 32];
+        let scores = column_scores(&b, &hd, 0, Criterion::L2);
+        let top = top_k(&scores, 2);
+        assert_eq!(top, vec![5, 17]);
+    }
+
+    #[test]
+    fn hessian_diag_reweights() {
+        let b = block_with_outlier_cols(16, 8, &[1, 6]);
+        let mut hd = vec![1.0f64; 8];
+        hd[1] = 1e6; // column 1's importance is crushed by a huge Hinv diag
+        let scores = column_scores(&b, &hd, 0, Criterion::L2);
+        let top = top_k(&scores, 1);
+        assert_eq!(top, vec![6]);
+    }
+
+    #[test]
+    fn l1_l2_differ_on_sparse_columns() {
+        // a column with one huge element has high l2 but moderate l1
+        let mut b = Matrix::zeros(16, 4);
+        for i in 0..16 {
+            b.set(i, 0, 1.0); // dense moderate column
+        }
+        b.set(0, 1, 4.0); // sparse spike
+        let hd = vec![1.0f64; 4];
+        let l1 = column_scores(&b, &hd, 0, Criterion::L1);
+        let l2 = column_scores(&b, &hd, 0, Criterion::L2);
+        assert!(l1[0] > l1[1], "l1 prefers dense: {l1:?}");
+        assert!(l2[1] == 4.0 && l2[0] == 4.0, "l2 ties: {l2:?}");
+    }
+
+    #[test]
+    fn top_k_sorted_and_bounded() {
+        let scores = vec![0.5, 3.0, 1.0, 2.0];
+        assert_eq!(top_k(&scores, 2), vec![1, 3]);
+        assert_eq!(top_k(&scores, 10), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn fill_avg_interpolates() {
+        let b = Matrix::from_vec(1, 5, vec![1.0, 99.0, 3.0, 99.0, 5.0]);
+        let f = fill_avg(&b, &[1, 3]);
+        assert_eq!(f.row(0), &[1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn fill_avg_edges() {
+        let b = Matrix::from_vec(1, 4, vec![99.0, 2.0, 4.0, 99.0]);
+        let f = fill_avg(&b, &[0, 3]);
+        assert_eq!(f.row(0), &[2.0, 2.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn fill_avg_no_salient_is_identity() {
+        let b = Matrix::from_fn(3, 6, |i, j| (i + j) as f32);
+        assert_eq!(fill_avg(&b, &[]), b);
+    }
+
+    #[test]
+    fn fill_avg_skips_adjacent_salient() {
+        let b = Matrix::from_vec(1, 5, vec![1.0, 99.0, 98.0, 97.0, 5.0]);
+        let f = fill_avg(&b, &[1, 2, 3]);
+        // all three salient columns interpolate between 1 and 5
+        assert_eq!(f.row(0), &[1.0, 3.0, 3.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn k_options_reasonable() {
+        let ks = k_options(128);
+        assert!(ks.contains(&0) && ks.contains(&8));
+        assert!(ks.iter().all(|&k| k < 64));
+        assert_eq!(k_options(4), vec![0]);
+    }
+}

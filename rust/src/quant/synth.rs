@@ -1,0 +1,113 @@
+//! Synthetic LLM-like layer generator (DESIGN.md §Substitutions):
+//! heavy-tailed (student-t) weights with row-scale anisotropy and planted
+//! outlier columns, plus calibration activations whose second moment spikes
+//! on the same columns — reproducing the structure salient-column selection
+//! exists for (cf. published OPT/LLaMA weight statistics).
+
+use super::{HessianCtx, DEFAULT_LAMBDA};
+use crate::tensor::linalg::Sq;
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
+
+pub struct SynthOpts {
+    pub outlier_cols: usize,
+    pub outlier_scale: f32,
+    pub tail_nu: f64,
+    pub calib_samples: usize,
+}
+
+impl Default for SynthOpts {
+    fn default() -> Self {
+        SynthOpts { outlier_cols: 0, outlier_scale: 6.0, tail_nu: 4.0, calib_samples: 0 }
+    }
+}
+
+/// Generate (W [n×m, paper orientation], HessianCtx) for unit tests/benches.
+pub fn llm_like_layer(n: usize, m: usize, seed: u64) -> (Matrix, HessianCtx) {
+    let opts = SynthOpts {
+        outlier_cols: (m / 32).max(1),
+        calib_samples: (2 * m).max(64),
+        ..Default::default()
+    };
+    llm_like_layer_with(n, m, seed, &opts)
+}
+
+pub fn llm_like_layer_with(n: usize, m: usize, seed: u64, opts: &SynthOpts) -> (Matrix, HessianCtx) {
+    let mut rng = Pcg32::seeded(seed);
+    // per-row scale anisotropy (log-normal-ish)
+    let row_scale: Vec<f32> = (0..n).map(|_| (0.5 * rng.normal()).exp() as f32 * 0.05).collect();
+    let mut w = Matrix::from_fn(n, m, |i, _| {
+        row_scale[i] * rng.student_t(opts.tail_nu) as f32
+    });
+    // planted outlier columns
+    let mut outliers: Vec<usize> = (0..m).collect();
+    rng.shuffle(&mut outliers);
+    outliers.truncate(opts.outlier_cols);
+    for &j in &outliers {
+        let amp = opts.outlier_scale * (1.0 + rng.f32());
+        for i in 0..n {
+            let v = w.get(i, j);
+            w.set(i, j, v * amp);
+        }
+    }
+    // calibration activations: correlated features + spikes on outlier cols
+    let samples = opts.calib_samples.max(m / 2).max(16);
+    let mut h = Sq::zeros(m);
+    let mut x = vec![0f32; m];
+    for _ in 0..samples {
+        // AR(1)-correlated base signal
+        let mut prev = 0f32;
+        for j in 0..m {
+            let z = rng.normal_f32();
+            prev = 0.6 * prev + z;
+            x[j] = prev;
+        }
+        for &j in &outliers {
+            x[j] *= 3.0;
+        }
+        for a in 0..m {
+            if x[a] == 0.0 {
+                continue;
+            }
+            let xa = 2.0 * x[a] as f64; // H = 2 X Xᵀ
+            for b in 0..m {
+                h.data[a * m + b] += xa * x[b] as f64;
+            }
+        }
+    }
+    let ctx = HessianCtx::new(h, DEFAULT_LAMBDA).expect("synthetic hessian factors");
+    (w, ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let (w1, ctx1) = llm_like_layer(8, 32, 42);
+        let (w2, _) = llm_like_layer(8, 32, 42);
+        assert_eq!(w1.data, w2.data);
+        assert_eq!(ctx1.h.n, 32);
+    }
+
+    #[test]
+    fn has_heavy_tails_and_outliers() {
+        let (w, _) = llm_like_layer(64, 128, 1);
+        let l2 = w.col_l2();
+        let mut sorted = l2.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[64];
+        let max = sorted[127];
+        assert!(max > 3.0 * median, "no outlier columns: max {max} median {median}");
+    }
+
+    #[test]
+    fn hessian_diag_positive() {
+        let (_, ctx) = llm_like_layer(8, 48, 2);
+        for j in 0..48 {
+            assert!(ctx.h.get(j, j) > 0.0);
+            assert!(ctx.hinv_diag[j] > 0.0);
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Python never runs here — `make artifacts` produced HLO *text* (the
+//! xla_extension-0.5.1-safe interchange; see DESIGN.md) and this module
+//! feeds it to the PJRT CPU client via the `xla` crate.
+//!
+//! Weight tensors are uploaded once as device buffers (`execute_b`), so the
+//! per-batch hot path only moves the token array — the §Perf L3 fix.
+
+use crate::model::{Tensor, Weights};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    root: PathBuf,
+}
+
+impl Runtime {
+    /// `root` is the artifacts directory (contains manifest.json, hlo/).
+    pub fn new(root: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, root: root.to_path_buf() })
+    }
+
+    pub fn artifacts_root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact (path relative to the artifacts root).
+    pub fn load(&self, rel: &str) -> Result<Executable> {
+        let path = self.root.join(rel);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {rel}"))?;
+        Ok(Executable { exe, name: rel.to_string() })
+    }
+}
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the elements of the result tuple.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Upload literals to device buffers once (for weight residency).
+    pub fn buffers(&self, args: &[xla::Literal]) -> Result<Vec<xla::PjRtBuffer>> {
+        let client = self.exe.client();
+        args.iter()
+            .map(|l| {
+                client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow!("buffer upload: {e}"))
+            })
+            .collect()
+    }
+
+    /// Execute with pre-uploaded device buffers.
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute_b(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Convert a model tensor to an XLA literal with its natural shape.
+pub fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
+    match t {
+        Tensor::Vec1(v) => Ok(xla::Literal::vec1(v)),
+        Tensor::Mat(m) => xla::Literal::vec1(&m.data)
+            .reshape(&[m.rows as i64, m.cols as i64])
+            .map_err(|e| anyhow!("reshape: {e}")),
+    }
+}
+
+/// Token batch literal: i32 [batch, seq].
+pub fn tokens_literal(tokens: &[i32], batch: usize, seq: usize) -> Result<xla::Literal> {
+    assert_eq!(tokens.len(), batch * seq);
+    xla::Literal::vec1(tokens)
+        .reshape(&[batch as i64, seq as i64])
+        .map_err(|e| anyhow!("reshape tokens: {e}"))
+}
+
+/// The NLL evaluation entry point with device-resident weights.
+pub struct NllRunner {
+    exe: Executable,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    /// The CPU PJRT client's buffer_from_host_literal may alias host
+    /// memory, so the literals must outlive the buffers.
+    _weight_lits: Vec<xla::Literal>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl NllRunner {
+    /// `entry` is e.g. "hlo/nll_tiny.hlo.txt"; weights are uploaded once.
+    pub fn new(rt: &Runtime, entry: &str, weights: &Weights, batch: usize) -> Result<NllRunner> {
+        let exe = rt.load(entry)?;
+        let lits: Vec<xla::Literal> = weights
+            .flat_in_order()
+            .iter()
+            .map(|t| tensor_literal(t))
+            .collect::<Result<_>>()?;
+        let weight_bufs = exe.buffers(&lits)?;
+        Ok(NllRunner {
+            exe,
+            weight_bufs,
+            _weight_lits: lits,
+            batch,
+            seq: weights.config.seq_len,
+        })
+    }
+
+    /// Per-position NLL for a [batch, seq] token batch: returns
+    /// batch × (seq−1) values, row-major.
+    pub fn nll(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let tok_lit = tokens_literal(tokens, self.batch, self.seq)?;
+        let tok_buf = self.exe.buffers(std::slice::from_ref(&tok_lit))?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_bufs.len());
+        args.push(&tok_buf[0]);
+        args.extend(self.weight_bufs.iter());
+        let out = self.exe.run_b(&args)?;
+        let nll = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("empty result tuple"))?;
+        Ok(nll.to_vec::<f32>()?)
+    }
+
+    /// Run the underlying entry point but interpret the tuple's first
+    /// element with an arbitrary shape (used by `LogitsRunner`).
+    fn run_raw(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let tok_lit = tokens_literal(tokens, self.batch, self.seq)?;
+        let tok_buf = self.exe.buffers(std::slice::from_ref(&tok_lit))?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_bufs.len());
+        args.push(&tok_buf[0]);
+        args.extend(self.weight_bufs.iter());
+        let out = self.exe.run_b(&args)?;
+        let first = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("empty result tuple"))?;
+        Ok(first.to_vec::<f32>()?)
+    }
+
+    /// Swap the device-resident weights (after quantization).
+    pub fn set_weights(&mut self, weights: &Weights) -> Result<()> {
+        let lits: Vec<xla::Literal> = weights
+            .flat_in_order()
+            .iter()
+            .map(|t| tensor_literal(t))
+            .collect::<Result<_>>()?;
+        self.weight_bufs = self.exe.buffers(&lits)?;
+        self._weight_lits = lits;
+        Ok(())
+    }
+}
+
+/// Full-logits entry point (generation): logits f32[B, S, V].
+pub struct LogitsRunner {
+    inner: NllRunner,
+    pub vocab: usize,
+}
+
+impl LogitsRunner {
+    pub fn new(rt: &Runtime, entry: &str, weights: &Weights, batch: usize) -> Result<LogitsRunner> {
+        let inner = NllRunner::new(rt, entry, weights, batch)?;
+        Ok(LogitsRunner { vocab: weights.config.vocab, inner })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.inner.batch
+    }
+
+    pub fn seq(&self) -> usize {
+        self.inner.seq
+    }
+
+    /// logits for a [batch, seq] token array: batch × seq × vocab floats.
+    pub fn logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.inner.run_raw(tokens)
+    }
+
+    /// Greedy/temperature generation by iterative re-forward (no KV cache —
+    /// the AOT module has a fixed shape; fine for demo-scale lengths).
+    pub fn generate(
+        &self,
+        prompt: &[u8],
+        n_new: usize,
+        temperature: f32,
+        rng: &mut crate::util::rng::Pcg32,
+    ) -> Result<Vec<u8>> {
+        let (b, s, v) = (self.inner.batch, self.inner.seq, self.vocab);
+        let mut text: Vec<u8> = prompt.to_vec();
+        for _ in 0..n_new {
+            let start = text.len().saturating_sub(s - 1);
+            let window = &text[start..];
+            let pos = window.len() - 1;
+            let mut tokens = vec![b'\n' as i32; b * s];
+            for (c, &byte) in window.iter().enumerate() {
+                tokens[c] = byte as i32;
+            }
+            let logits = self.logits(&tokens)?;
+            let row = &logits[pos * v..(pos + 1) * v];
+            let next = if temperature <= 0.0 {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            } else {
+                // softmax sample at the given temperature
+                let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+                let probs: Vec<f64> = row
+                    .iter()
+                    .map(|&x| (((x - maxv) / temperature) as f64).exp())
+                    .collect();
+                let z: f64 = probs.iter().sum();
+                let mut u = rng.f64() * z;
+                let mut pick = v - 1;
+                for (i, p) in probs.iter().enumerate() {
+                    if u < *p {
+                        pick = i;
+                        break;
+                    }
+                    u -= p;
+                }
+                pick
+            };
+            text.push(next as u8);
+        }
+        Ok(text)
+    }
+}

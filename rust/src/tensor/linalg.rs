@@ -1,0 +1,301 @@
+//! Linear algebra for the OBQ/GPTQ substrate: Cholesky factorization,
+//! triangular solves, and symmetric-positive-definite inversion.
+//!
+//! Everything runs in f64 internally — the Hessian chain
+//! H -> (H + λI)^{-1} -> Cholesky is numerically delicate at f32 and the
+//! matrices are small (d ≤ a few thousand).
+
+use super::Matrix;
+
+/// Dense f64 square matrix (internal to linalg).
+#[derive(Clone, Debug)]
+pub struct Sq {
+    pub n: usize,
+    pub data: Vec<f64>,
+}
+
+impl Sq {
+    pub fn zeros(n: usize) -> Sq {
+        Sq { n, data: vec![0.0; n * n] }
+    }
+
+    pub fn from_matrix(m: &Matrix) -> Sq {
+        assert_eq!(m.rows, m.cols);
+        Sq { n: m.rows, data: m.data.iter().map(|&x| x as f64).collect() }
+    }
+
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix::from_vec(self.n, self.n, self.data.iter().map(|&x| x as f32).collect())
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.n + j] = v;
+    }
+
+    pub fn add_diag(&mut self, lambda: f64) {
+        for i in 0..self.n {
+            self.data[i * self.n + i] += lambda;
+        }
+    }
+}
+
+/// Lower Cholesky factor L with A = L Lᵀ. Fails if A is not SPD (after
+/// which callers typically bump the damping and retry).
+pub fn cholesky_lower(a: &Sq) -> Result<Sq, String> {
+    let n = a.n;
+    let mut l = Sq::zeros(n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j);
+            for k in 0..j {
+                sum -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(format!("not SPD at pivot {i} (value {sum:.3e})"));
+                }
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.get(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Sq, b: &[f64]) -> Vec<f64> {
+    let n = l.n;
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l.get(i, k) * y[k];
+        }
+        y[i] = sum / l.get(i, i);
+    }
+    y
+}
+
+/// Solve Lᵀ x = y (back substitution), L lower-triangular.
+pub fn solve_lower_t(l: &Sq, y: &[f64]) -> Vec<f64> {
+    let n = l.n;
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l.get(k, i) * x[k];
+        }
+        x[i] = sum / l.get(i, i);
+    }
+    x
+}
+
+/// SPD inverse via Cholesky: A^{-1} = L^{-T} L^{-1}.
+pub fn spd_inverse(a: &Sq) -> Result<Sq, String> {
+    let l = cholesky_lower(a)?;
+    let n = a.n;
+    let mut inv = Sq::zeros(n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e.iter_mut().for_each(|v| *v = 0.0);
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_t(&l, &y);
+        for i in 0..n {
+            inv.set(i, j, x[i]);
+        }
+    }
+    Ok(inv)
+}
+
+/// The GPTQ factor: upper-triangular U with (H + λI)^{-1} = Uᵀ U.
+/// (U = Lᵀ where L is the lower Cholesky factor of the damped inverse.)
+/// Retries with escalating damping if the Hessian is near-singular.
+pub fn gptq_factor(h: &Sq, lambda_frac: f64) -> Result<Sq, String> {
+    let n = h.n;
+    let mean_diag = (0..n).map(|i| h.get(i, i)).sum::<f64>() / n as f64;
+    let mut lam = (lambda_frac * mean_diag).max(1e-10);
+    for _attempt in 0..8 {
+        let mut damped = h.clone();
+        damped.add_diag(lam);
+        match spd_inverse(&damped).and_then(|inv| cholesky_lower(&inv)) {
+            Ok(l) => {
+                // U = Lᵀ
+                let mut u = Sq::zeros(n);
+                for i in 0..n {
+                    for j in 0..=i {
+                        u.set(j, i, l.get(i, j));
+                    }
+                }
+                return Ok(u);
+            }
+            Err(_) => lam *= 10.0,
+        }
+    }
+    Err("hessian unfactorizable even with heavy damping".into())
+}
+
+/// Solve X · U = R for X, with U upper-triangular (kxk), R (n x k).
+/// Used for the blockwise OBQ error term E = (W - B) · U_bb^{-1}.
+pub fn solve_right_upper(u: &Sq, r: &Matrix) -> Matrix {
+    let k = u.n;
+    assert_eq!(r.cols, k);
+    let mut x = Matrix::zeros(r.rows, k);
+    for i in 0..r.rows {
+        // forward substitution over columns: X[i,j] = (R[i,j] - Σ_{p<j} X[i,p] U[p,j]) / U[j,j]
+        for j in 0..k {
+            let mut sum = r.get(i, j) as f64;
+            for p in 0..j {
+                sum -= x.get(i, p) as f64 * u.get(p, j);
+            }
+            x.set(i, j, (sum / u.get(j, j)) as f32);
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_spd(n: usize, seed: u64) -> Sq {
+        let mut rng = Pcg32::seeded(seed);
+        let mut a = Sq::zeros(n);
+        // A = G Gᵀ + n·I
+        let g: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += g[i * n + k] * g[j * n + k];
+                }
+                a.set(i, j, s + if i == j { n as f64 } else { 0.0 });
+            }
+        }
+        a
+    }
+
+    fn matmul_sq(a: &Sq, b: &Sq) -> Sq {
+        let n = a.n;
+        let mut c = Sq::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let av = a.get(i, k);
+                for j in 0..n {
+                    c.data[i * n + j] += av * b.get(k, j);
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(12, 1);
+        let l = cholesky_lower(&a).unwrap();
+        let mut lt = Sq::zeros(12);
+        for i in 0..12 {
+            for j in 0..12 {
+                lt.set(i, j, l.get(j, i));
+            }
+        }
+        let back = matmul_sq(&l, &lt);
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((back.get(i, j) - a.get(i, j)).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let mut a = Sq::zeros(3);
+        a.set(0, 0, -1.0);
+        assert!(cholesky_lower(&a).is_err());
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = random_spd(10, 2);
+        let inv = spd_inverse(&a).unwrap();
+        let prod = matmul_sq(&a, &inv);
+        for i in 0..10 {
+            for j in 0..10 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.get(i, j) - want).abs() < 1e-8, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn gptq_factor_property() {
+        // (H+λI)^{-1} == Uᵀ U
+        let h = random_spd(9, 3);
+        let u = gptq_factor(&h, 0.01).unwrap();
+        let mut damped = h.clone();
+        let mean_diag = (0..9).map(|i| h.get(i, i)).sum::<f64>() / 9.0;
+        damped.add_diag(0.01 * mean_diag);
+        let inv = spd_inverse(&damped).unwrap();
+        let mut ut = Sq::zeros(9);
+        for i in 0..9 {
+            for j in 0..9 {
+                ut.set(i, j, u.get(j, i));
+            }
+        }
+        let utu = matmul_sq(&ut, &u);
+        for i in 0..9 {
+            for j in 0..9 {
+                assert!((utu.get(i, j) - inv.get(i, j)).abs() < 1e-8, "({i},{j})");
+            }
+        }
+        // U is upper triangular
+        for i in 0..9 {
+            for j in 0..i {
+                assert_eq!(u.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_right_upper_property() {
+        let a = random_spd(6, 4);
+        let u = gptq_factor(&a, 0.01).unwrap();
+        let r = Matrix::from_fn(3, 6, |i, j| (i as f32 + 1.0) * (j as f32 - 2.0));
+        let x = solve_right_upper(&u, &r);
+        // X @ U == R
+        for i in 0..3 {
+            for j in 0..6 {
+                let mut s = 0.0f64;
+                for p in 0..=j {
+                    s += x.get(i, p) as f64 * u.get(p, j);
+                }
+                assert!((s - r.get(i, j) as f64).abs() < 1e-4, "({i},{j}): {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let a = random_spd(8, 5);
+        let l = cholesky_lower(&a).unwrap();
+        let b: Vec<f64> = (0..8).map(|i| i as f64 - 3.0).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_t(&l, &y);
+        // L Lᵀ x == b
+        for i in 0..8 {
+            let mut s = 0.0;
+            for j in 0..8 {
+                s += a.get(i, j) * x[j];
+            }
+            assert!((s - b[i]).abs() < 1e-8);
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Dense f32 matrix substrate (row-major) — the numeric workhorse for the
+//! quantizers, calibration Hessians and the pure-Rust forward pass.
+
+pub mod linalg;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn eye(n: usize) -> Matrix {
+        Matrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, vals: &[f32]) {
+        assert_eq!(vals.len(), self.rows);
+        for (i, &v) in vals.iter().enumerate() {
+            self.set(i, j, v);
+        }
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// C = A @ B (ikj loop order, inner axpy over contiguous rows).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (n, k, m) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(n, m);
+        for i in 0..n {
+            let a_row = self.row(i);
+            let o_row = &mut out.data[i * m..(i + 1) * m];
+            for (p, &a) in a_row.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[p * m..(p + 1) * m];
+                for (o, &b) in o_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// y = self @ x  (matrix-vector).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .zip(x.iter())
+                    .map(|(&a, &b)| a * b)
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// self += other * scale
+    pub fn add_scaled(&mut self, other: &Matrix, scale: f32) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b * scale;
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(other.data.iter()).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Mean squared difference against another matrix.
+    pub fn mse(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let n = self.data.len().max(1) as f64;
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / n
+    }
+
+    /// Copy of columns [c0, c1).
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Matrix {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let mut out = Matrix::zeros(self.rows, c1 - c0);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    pub fn set_cols(&mut self, c0: usize, block: &Matrix) {
+        assert_eq!(block.rows, self.rows);
+        assert!(c0 + block.cols <= self.cols);
+        for i in 0..self.rows {
+            self.row_mut(i)[c0..c0 + block.cols].copy_from_slice(block.row(i));
+        }
+    }
+
+    /// ℓ2 norm of each column.
+    pub fn col_l2(&self) -> Vec<f64> {
+        let mut acc = vec![0f64; self.cols];
+        for i in 0..self.rows {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                acc[j] += (v as f64) * (v as f64);
+            }
+        }
+        acc.into_iter().map(|s| s.sqrt()).collect()
+    }
+
+    /// ℓ1 norm of each column.
+    pub fn col_l1(&self) -> Vec<f64> {
+        let mut acc = vec![0f64; self.cols];
+        for i in 0..self.rows {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                acc[j] += v.abs() as f64;
+            }
+        }
+        acc
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_fn(3, 3, |i, j| (i * 3 + j) as f32);
+        let i3 = Matrix::eye(3);
+        assert_eq!(a.matmul(&i3), a);
+        assert_eq!(i3.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = Matrix::from_fn(4, 5, |i, j| (i + 2 * j) as f32 * 0.5);
+        let x: Vec<f32> = (0..5).map(|v| v as f32).collect();
+        let xm = Matrix::from_vec(5, 1, x.clone());
+        let want = a.matmul(&xm).data;
+        assert_eq!(a.matvec(&x), want);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::from_fn(7, 3, |i, j| (i * 31 + j * 7) as f32);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn slice_set_roundtrip() {
+        let a = Matrix::from_fn(4, 10, |i, j| (i * 10 + j) as f32);
+        let blk = a.slice_cols(3, 7);
+        assert_eq!(blk.cols, 4);
+        let mut b = Matrix::zeros(4, 10);
+        b.set_cols(3, &blk);
+        assert_eq!(b.get(2, 5), a.get(2, 5));
+        assert_eq!(b.get(2, 0), 0.0);
+    }
+
+    #[test]
+    fn col_norms() {
+        let a = Matrix::from_vec(2, 2, vec![3.0, 1.0, 4.0, -1.0]);
+        let l2 = a.col_l2();
+        assert!((l2[0] - 5.0).abs() < 1e-9);
+        let l1 = a.col_l1();
+        assert!((l1[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mse_and_frob() {
+        let a = Matrix::zeros(2, 2);
+        let b = Matrix::from_vec(2, 2, vec![1.0; 4]);
+        assert!((a.mse(&b) - 1.0).abs() < 1e-12);
+        assert!((b.frob_norm() - 2.0).abs() < 1e-12);
+    }
+}

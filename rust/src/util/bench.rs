@@ -1,0 +1,140 @@
+//! Tiny benchmark harness (criterion is unavailable offline).
+//!
+//! Measures wall-clock over warmup + timed iterations, reports
+//! median / p10 / p90 and derived throughput. Used by every `benches/`
+//! target; results are printed as aligned tables so bench output can be
+//! pasted straight into EXPERIMENTS.md.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl Measurement {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+
+    pub fn median_s(&self) -> f64 {
+        self.median_ns / 1e9
+    }
+}
+
+/// Time `f` with automatic iteration-count calibration toward
+/// `target_time_s` total measurement time.
+pub fn bench<F: FnMut()>(name: &str, target_time_s: f64, mut f: F) -> Measurement {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_time_s / once).ceil() as usize).clamp(3, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    Measurement {
+        name: name.to_string(),
+        iters,
+        median_ns: q(0.5),
+        p10_ns: q(0.1),
+        p90_ns: q(0.9),
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Aligned table printer for bench results / experiment tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<width$}", c, width = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("noop-ish", 0.01, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(m.median_ns > 0.0);
+        assert!(m.p10_ns <= m.median_ns && m.median_ns <= m.p90_ns);
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["method", "ppl"]);
+        t.row(&["hbllm-row".into(), "6.71".into()]);
+        t.row(&["billm".into(), "19.57".into()]);
+        let s = t.to_string();
+        assert!(s.contains("hbllm-row"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,89 @@
+//! Small CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map_or(false, |n| !n.starts_with("--")) {
+                    args.options.insert(rest.to_string(), iter.next().unwrap());
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("quantize file.bin --method hbllm-row --block=128 --quick");
+        assert_eq!(a.positional, vec!["quantize", "file.bin"]);
+        assert_eq!(a.get("method"), Some("hbllm-row"));
+        assert_eq!(a.get_usize("block", 0), 128);
+        assert!(a.has_flag("quick"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("lam", 0.01), 0.01);
+        assert!(!a.has_flag("nope"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--verbose");
+        assert!(a.has_flag("verbose"));
+    }
+}

@@ -1,0 +1,35 @@
+//! In-tree substrates replacing unavailable crates (offline build):
+//! PRNG (rand), JSON (serde_json), property testing (proptest),
+//! benchmarking (criterion), CLI parsing (clap).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+/// Format a f64 with engineering-friendly precision for tables.
+pub fn fmt_sig(x: f64, sig: usize) -> String {
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let mag = x.abs().log10().floor() as i32;
+    let decimals = (sig as i32 - 1 - mag).max(0) as usize;
+    format!("{:.*}", decimals.min(6), x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::fmt_sig;
+
+    #[test]
+    fn fmt_sig_works() {
+        assert_eq!(fmt_sig(6.714, 3), "6.71");
+        assert_eq!(fmt_sig(123.4, 3), "123");
+        assert_eq!(fmt_sig(0.01234, 3), "0.0123");
+        assert_eq!(fmt_sig(0.0, 3), "0");
+    }
+}

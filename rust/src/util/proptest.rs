@@ -1,0 +1,116 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, gen, prop)` runs `cases` random inputs from a
+//! deterministic seed; on failure it retries with a linear shrink pass (the
+//! generator receives a shrink level that should produce "smaller" cases)
+//! and panics with the seed so the failure is reproducible.
+
+use super::rng::Pcg32;
+
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg32,
+    /// 0 = full-size cases; higher values ask the generator to shrink.
+    pub shrink: u32,
+}
+
+impl<'a> Gen<'a> {
+    /// Size helper honoring the shrink level: uniform in [lo, hi] at level 0,
+    /// biased toward `lo` as shrink grows.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let hi_eff = if self.shrink == 0 {
+            hi
+        } else {
+            let span = (hi - lo) >> self.shrink.min(8);
+            lo + span
+        };
+        lo + self.rng.below(hi_eff - lo + 1)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal_f32() * scale).collect()
+    }
+}
+
+/// Run a property over `cases` generated inputs. Panics on first failure
+/// after attempting shrunk reproductions.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: u32,
+    mut generate: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base_seed = hb_seed(name);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Pcg32::seeded(seed);
+        let mut g = Gen { rng: &mut rng, shrink: 0 };
+        let input = generate(&mut g);
+        if let Err(msg) = prop(&input) {
+            // try shrunk variants of the same seed for a smaller repro
+            for level in 1..=4u32 {
+                let mut srng = Pcg32::seeded(seed);
+                let mut sg = Gen { rng: &mut srng, shrink: level };
+                let sinput = generate(&mut sg);
+                if let Err(smsg) = prop(&sinput) {
+                    panic!(
+                        "property '{name}' failed (seed={seed}, shrink={level}): {smsg}\ninput: {sinput:?}"
+                    );
+                }
+            }
+            panic!("property '{name}' failed (seed={seed}): {msg}\ninput: {input:?}");
+        }
+    }
+}
+
+/// FNV-1a hash of the property name -> base seed.
+fn hb_seed(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "sum-commutes",
+            50,
+            |g| (g.size(0, 100), g.size(0, 100)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |g| g.size(1, 10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let mut first: Vec<usize> = Vec::new();
+        check("det", 10, |g| g.size(0, 1000), |&v| {
+            first.push(v);
+            Ok(())
+        });
+        let mut second: Vec<usize> = Vec::new();
+        check("det", 10, |g| g.size(0, 1000), |&v| {
+            second.push(v);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,168 @@
+//! Cross-layer integration tests: Rust substrate vs the AOT HLO artifacts
+//! through PJRT. These require `make artifacts` to have run; they skip
+//! gracefully (with a loud marker) if artifacts are missing.
+
+use hbllm::coordinator::{serve, BatcherConfig, QuantJobConfig};
+use hbllm::data::Corpus;
+use hbllm::model::{forward, nll_from_logits};
+use hbllm::pipeline::{EvalScope, Session};
+use hbllm::quant;
+use hbllm::runtime::Runtime;
+use hbllm::tensor::Matrix;
+use hbllm::util::rng::Pcg32;
+use std::path::PathBuf;
+
+fn artifacts_root() -> Option<PathBuf> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if root.join("manifest.json").exists() {
+        Some(root)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn haar_hlo_matches_rust() {
+    let Some(root) = artifacts_root() else { return };
+    let rt = Runtime::new(&root).unwrap();
+    let exe = rt.load("hlo/haar_fwd.hlo.txt").unwrap();
+    let mut rng = Pcg32::seeded(1);
+    let w = Matrix::from_fn(256, 512, |_, _| rng.normal_f32());
+    let lit = xla::Literal::vec1(&w.data).reshape(&[256, 512]).unwrap();
+    let out = exe.run(&[lit]).unwrap();
+    let got = out[0].to_vec::<f32>().unwrap();
+    let want = hbllm::haar::fwd_rows(&w);
+    let max_diff = got
+        .iter()
+        .zip(want.data.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-5, "haar kernel disagrees with rust: {max_diff}");
+}
+
+#[test]
+fn binary_gemm_hlo_matches_rust_dequant() {
+    let Some(root) = artifacts_root() else { return };
+    let rt = Runtime::new(&root).unwrap();
+    let exe = rt.load("hlo/binary_gemm.hlo.txt").unwrap();
+    let (n, m, b) = (512usize, 512usize, 8usize);
+    let mut rng = Pcg32::seeded(2);
+    let signs = Matrix::from_fn(n, m, |_, _| if rng.f32() < 0.5 { -1.0 } else { 1.0 });
+    let alpha = Matrix::from_fn(n, 2, |_, _| rng.f32() + 0.1);
+    let mu = Matrix::from_fn(n, 2, |_, _| 0.1 * rng.normal_f32());
+    let x = Matrix::from_fn(m, b, |_, _| rng.normal_f32());
+    let args = [
+        xla::Literal::vec1(&signs.data).reshape(&[n as i64, m as i64]).unwrap(),
+        xla::Literal::vec1(&alpha.data).reshape(&[n as i64, 2]).unwrap(),
+        xla::Literal::vec1(&mu.data).reshape(&[n as i64, 2]).unwrap(),
+        xla::Literal::vec1(&x.data).reshape(&[m as i64, b as i64]).unwrap(),
+    ];
+    let out = exe.run(&args).unwrap();
+    let got = out[0].to_vec::<f32>().unwrap();
+    // rust reference: reconstruct coeffs, inverse haar, matmul
+    let h = m / 2;
+    let coeff = Matrix::from_fn(n, m, |i, j| {
+        let band = if j < h { 0 } else { 1 };
+        alpha.get(i, band) * signs.get(i, j) + mu.get(i, band)
+    });
+    let w = hbllm::haar::inv_rows(&coeff);
+    let want = w.matmul(&x);
+    let mut max_rel = 0f64;
+    for (g, w) in got.iter().zip(want.data.iter()) {
+        let rel = ((g - w).abs() / (1.0 + w.abs())) as f64;
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 1e-4, "binary_gemm kernel mismatch: {max_rel}");
+}
+
+#[test]
+fn rust_forward_matches_hlo_nll() {
+    let Some(root) = artifacts_root() else { return };
+    let session = Session::open(&root).unwrap();
+    let weights = session.fp_weights();
+    let seq = weights.config.seq_len;
+    let corpus = Corpus::load(&root.join("data/c4s.bin")).unwrap();
+    let window = &corpus.data[..seq];
+
+    // PJRT path
+    let runner = session.runner(weights, false).unwrap();
+    let mut tokens = vec![0i32; runner.batch * seq];
+    for (c, &b) in window.iter().enumerate() {
+        tokens[c] = b as i32;
+    }
+    for r in 1..runner.batch {
+        for c in 0..seq {
+            tokens[r * seq + c] = tokens[c];
+        }
+    }
+    let nll_hlo = runner.nll(&tokens).unwrap();
+
+    // pure-Rust path
+    let logits = forward(weights, window, None);
+    let nll_rust = nll_from_logits(&logits, window);
+
+    let per_row = seq - 1;
+    let mut max_diff = 0f32;
+    for t in 0..per_row {
+        max_diff = max_diff.max((nll_hlo[t] - nll_rust[t]).abs());
+    }
+    assert!(
+        max_diff < 2e-2,
+        "rust forward and HLO disagree: max |Δnll| = {max_diff}"
+    );
+    // and the pallas-attention entry must agree with the jnp entry
+    let runner_pallas = session.runner(weights, true).unwrap();
+    let nll_pallas = runner_pallas.nll(&tokens).unwrap();
+    let mut max_diff2 = 0f32;
+    for t in 0..per_row {
+        max_diff2 = max_diff2.max((nll_hlo[t] - nll_pallas[t]).abs());
+    }
+    assert!(max_diff2 < 1e-3, "pallas vs jnp entry mismatch: {max_diff2}");
+}
+
+#[test]
+fn quantized_model_still_models_language() {
+    let Some(root) = artifacts_root() else { return };
+    let mut session = Session::open(&root).unwrap();
+    let scope = EvalScope { ppl_windows: 8, qa_items: 4, calib_windows: 4 };
+    let fp_runner = session.runner(session.fp_weights(), false).unwrap();
+    let corpus = session.corpus("wiki2s").unwrap();
+    let fp_ppl = hbllm::eval::perplexity(&fp_runner, &corpus, scope.ppl_windows).unwrap();
+
+    let q = quant::by_name("hbllm-row").unwrap();
+    let (qw, results) = session
+        .quantize(q.as_ref(), &scope, &QuantJobConfig { workers: 4, quiet: true })
+        .unwrap();
+    assert_eq!(results.len(), qw.config.linear_names().len());
+    let q_runner = session.runner(&qw, false).unwrap();
+    let q_ppl = hbllm::eval::perplexity(&q_runner, &corpus, scope.ppl_windows).unwrap();
+
+    assert!(fp_ppl > 1.0 && fp_ppl < 15.0, "fp ppl insane: {fp_ppl}");
+    assert!(q_ppl >= fp_ppl * 0.99, "quantized better than fp?! {q_ppl} vs {fp_ppl}");
+    assert!(
+        q_ppl < fp_ppl * 10.0,
+        "hbllm-row collapsed: {q_ppl} vs fp {fp_ppl}"
+    );
+}
+
+#[test]
+fn serve_roundtrip() {
+    let Some(root) = artifacts_root() else { return };
+    let session = Session::open(&root).unwrap();
+    let runner = session.runner(session.fp_weights(), false).unwrap();
+    let (listener, addr) = serve::bind("127.0.0.1:0").unwrap();
+    let client = std::thread::spawn(move || {
+        use std::io::{BufRead, BufReader, Write};
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(b"ta kivo remo so ta lute pamo.\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+        line
+    });
+    serve::serve_on(listener, &runner, BatcherConfig::default(), Some(1)).unwrap();
+    let line = client.join().unwrap();
+    assert!(line.starts_with("ppl "), "bad response: {line}");
+    let v: f64 = line[4..].trim().parse().unwrap();
+    assert!(v > 1.0 && v < 1000.0, "ppl out of range: {v}");
+}
