@@ -9,6 +9,7 @@
 //!     cargo run --release --example ablations [-- --which 2a] [-- --quick]
 
 use hbllm::calib::CtxMap;
+use hbllm::engine::BackendKind;
 use hbllm::coordinator::{quantize_model, QuantJobConfig};
 use hbllm::model::Weights;
 use hbllm::pipeline::{EvalScope, Session};
@@ -18,6 +19,10 @@ use hbllm::quant::salient::Criterion;
 use hbllm::util::bench::Table;
 use hbllm::util::cli::Args;
 use hbllm::util::fmt_sig;
+
+/// All ablation rows score through the XLA backend (the native engine is
+/// exercised by the decode bench and parity tests).
+const XLA: BackendKind = BackendKind::Xla { pallas: false };
 
 struct Ctx {
     session: Session,
@@ -32,9 +37,9 @@ impl Ctx {
         f(&mut opts);
         let q = Hbllm::with_opts(variant, opts);
         let (qw, _) = self.session.quantize(&q, &self.scope, &self.job)?;
-        let runner = self.session.runner(&qw, false)?;
-        let wiki = hbllm::eval::perplexity(&runner, &self.session.corpus("wiki2s")?, self.scope.ppl_windows)?;
-        let ptb = hbllm::eval::perplexity(&runner, &self.session.corpus("ptbs")?, self.scope.ppl_windows)?;
+        let mut be = self.session.backend(&qw, XLA)?;
+        let wiki = hbllm::eval::perplexity(be.as_mut(), &self.session.corpus("wiki2s")?, self.scope.ppl_windows)?;
+        let ptb = hbllm::eval::perplexity(be.as_mut(), &self.session.corpus("ptbs")?, self.scope.ppl_windows)?;
         eprintln!("[ablate] {label}: wiki2s {wiki:.3} ptbs {ptb:.3}");
         Ok([label.to_string(), fmt_sig(wiki, 4), fmt_sig(ptb, 4)])
     }
@@ -142,9 +147,9 @@ fn main() -> anyhow::Result<()> {
             sc.calib_windows = n;
             let q = Hbllm::row();
             let (qw, _) = fresh.quantize(&q, &sc, &ctx.job)?;
-            let runner = fresh.runner(&qw, false)?;
-            let wiki = hbllm::eval::perplexity(&runner, &fresh.corpus("wiki2s")?, sc.ppl_windows)?;
-            let ptb = hbllm::eval::perplexity(&runner, &fresh.corpus("ptbs")?, sc.ppl_windows)?;
+            let mut be = fresh.backend(&qw, XLA)?;
+            let wiki = hbllm::eval::perplexity(be.as_mut(), &fresh.corpus("wiki2s")?, sc.ppl_windows)?;
+            let ptb = hbllm::eval::perplexity(be.as_mut(), &fresh.corpus("ptbs")?, sc.ppl_windows)?;
             t.row(&[format!("{n}"), fmt_sig(wiki, 4), fmt_sig(ptb, 4)]);
             eprintln!("[ablate] calib {n}: {wiki:.3}/{ptb:.3}");
         }
@@ -162,9 +167,9 @@ fn main() -> anyhow::Result<()> {
             let identity = CtxMap::identity_for(ctx.session.fp_weights());
             let mut w: Weights = ctx.session.clone_weights();
             quantize_model(&mut w, &identity, &q, &ctx.job)?;
-            let runner = ctx.session.runner(&w, false)?;
-            let wiki = hbllm::eval::perplexity(&runner, &ctx.session.corpus("wiki2s")?, ctx.scope.ppl_windows)?;
-            let ptb = hbllm::eval::perplexity(&runner, &ctx.session.corpus("ptbs")?, ctx.scope.ppl_windows)?;
+            let mut be = ctx.session.backend(&w, XLA)?;
+            let wiki = hbllm::eval::perplexity(be.as_mut(), &ctx.session.corpus("wiki2s")?, ctx.scope.ppl_windows)?;
+            let ptb = hbllm::eval::perplexity(be.as_mut(), &ctx.session.corpus("ptbs")?, ctx.scope.ppl_windows)?;
             t.row(&["identity (no calib)".into(), fmt_sig(wiki, 4), fmt_sig(ptb, 4)]);
         }
         println!("\n== Extra: calibration / OBQ contribution ==");

@@ -7,9 +7,11 @@
 //!     make artifacts && cargo run --release --example e2e_quant_eval
 //!
 //! Flags: --quick (smaller eval), --methods a,b,c, --pallas (use the
-//! Pallas-attention HLO entry).
+//! Pallas-attention HLO entry), --backend xla|native (serving backend for
+//! the quantized rows; fp32 always scores through XLA here).
 
 use hbllm::coordinator::scheduler::aggregate_wbits;
+use hbllm::engine::BackendKind;
 use hbllm::coordinator::QuantJobConfig;
 use hbllm::pipeline::{EvalScope, Session};
 use hbllm::quant;
@@ -29,6 +31,7 @@ fn main() -> anyhow::Result<()> {
         EvalScope::default()
     };
     let pallas = args.has_flag("pallas");
+    let backend_name = args.get_or("backend", "xla").to_string();
     let methods: Vec<String> = args
         .get("methods")
         .map(|s| s.split(',').map(String::from).collect())
@@ -48,8 +51,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     let t0 = Instant::now();
-    let fp_runner = session.runner(session.fp_weights(), pallas)?;
-    let fp = session.evaluate(&fp_runner, &scope)?;
+    let mut fp_be = session.backend(session.fp_weights(), BackendKind::Xla { pallas })?;
+    let fp = session.evaluate(fp_be.as_mut(), &scope)?;
     println!("fp32 eval done in {:.1}s", t0.elapsed().as_secs_f64());
 
     let mut t = Table::new(&[
@@ -72,8 +75,11 @@ fn main() -> anyhow::Result<()> {
         let tq = Instant::now();
         let (qw, results) = session.quantize(method.as_ref(), &scope, &job)?;
         let quant_s = tq.elapsed().as_secs_f64();
-        let runner = session.runner(&qw, pallas)?;
-        let rep = session.evaluate(&runner, &scope)?;
+        // only hbllm weights have the packed deployment form; other
+        // baselines serve dense through the native engine
+        let q_kind = BackendKind::parse(&backend_name, pallas, name.starts_with("hbllm"))?;
+        let mut be = session.backend(&qw, q_kind)?;
+        let rep = session.evaluate(be.as_mut(), &scope)?;
         t.row(&[
             name.clone(),
             fmt_sig(aggregate_wbits(&results), 4),

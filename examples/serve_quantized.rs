@@ -1,10 +1,12 @@
 //! Serving demo: quantize the tiny GPT with HBLLM-row, start the batched
 //! TCP scoring server, fire concurrent clients at it, and report
-//! latency/throughput percentiles.
+//! latency/throughput percentiles. `--backend native` serves straight from
+//! the packed 1-bit engine instead of the PJRT/XLA runner.
 //!
-//!     cargo run --release --example serve_quantized [-- --requests 64] [-- --clients 8]
+//!     cargo run --release --example serve_quantized [-- --requests 64] [-- --clients 8] [-- --backend native]
 
 use hbllm::coordinator::{serve, BatcherConfig, QuantJobConfig};
+use hbllm::engine::{Backend, BackendKind};
 use hbllm::pipeline::{EvalScope, Session};
 use hbllm::quant;
 use hbllm::util::cli::Args;
@@ -16,13 +18,14 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     let n_requests = args.get_usize("requests", 64);
     let n_clients = args.get_usize("clients", 8);
+    let kind = BackendKind::parse(args.get_or("backend", "xla"), false, true)?;
 
     let mut session = Session::open(&Session::default_root())?;
     let scope = EvalScope { ppl_windows: 4, qa_items: 4, calib_windows: 8 };
     let method = quant::by_name("hbllm-row").unwrap();
     eprintln!("quantizing with hbllm-row...");
     let (qw, _) = session.quantize(method.as_ref(), &scope, &QuantJobConfig { quiet: true, ..Default::default() })?;
-    let runner = session.runner(&qw, false)?;
+    let mut backend = session.backend(&qw, kind)?;
 
     // request corpus: lines from wiki2s
     let corpus = session.corpus("wiki2s")?;
@@ -34,7 +37,11 @@ fn main() -> anyhow::Result<()> {
         .collect();
 
     let (listener, addr) = serve::bind("127.0.0.1:0")?;
-    eprintln!("serving on {addr}; {n_clients} clients x {} requests", lines.len());
+    eprintln!(
+        "serving on {addr} [backend {}]; {n_clients} clients x {} requests",
+        backend.name(),
+        lines.len()
+    );
 
     let t0 = Instant::now();
     let clients: Vec<std::thread::JoinHandle<Vec<Duration>>> = (0..n_clients)
@@ -62,7 +69,7 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
-    serve::serve_on(listener, &runner, BatcherConfig::default(), Some(n_clients))?;
+    serve::serve_on(listener, backend.as_mut(), BatcherConfig::default(), Some(n_clients))?;
     let mut lats: Vec<Duration> = Vec::new();
     for c in clients {
         lats.extend(c.join().unwrap());

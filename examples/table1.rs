@@ -26,8 +26,9 @@ fn main() -> anyhow::Result<()> {
     };
     let job = QuantJobConfig { quiet: true, ..Default::default() };
 
-    let fp_runner = session.runner(session.fp_weights(), false)?;
-    let fp = session.evaluate(&fp_runner, &scope)?;
+    let kind = hbllm::engine::BackendKind::Xla { pallas: false };
+    let mut fp_be = session.backend(session.fp_weights(), kind)?;
+    let fp = session.evaluate(fp_be.as_mut(), &scope)?;
 
     let mut t1 = Table::new(&["method", "W-bits", "W-bits@7B", "c4s", "wiki2s", "ptbs", "AvgQA"]);
     t1.row(&[
@@ -44,8 +45,8 @@ fn main() -> anyhow::Result<()> {
     for name in quant::table_methods() {
         let method = quant::by_name(name).unwrap();
         let (qw, results) = session.quantize(method.as_ref(), &scope, &job)?;
-        let runner = session.runner(&qw, false)?;
-        let rep = session.evaluate(&runner, &scope)?;
+        let mut be = session.backend(&qw, kind)?;
+        let rep = session.evaluate(be.as_mut(), &scope)?;
         t1.row(&[
             name.into(),
             fmt_sig(aggregate_wbits(&results), 4),

@@ -1,0 +1,109 @@
+//! Per-token decode latency: the native packed engine's KV-cached
+//! incremental path vs full-window re-forward baselines.
+//!
+//! Three rows (greedy decoding, identical outputs per backend):
+//!   native-kv    — engine decode_step, one packed GEMV sweep per token
+//!   native-full  — same engine, cache dropped before every token (the
+//!                  cost of not having a KV cache, hardware held fixed)
+//!   xla-window   — the fixed-shape PJRT logits entry re-forwarding the
+//!                  whole window per token (skipped when artifacts/ are
+//!                  missing, e.g. in CI)
+//!
+//! Results land in BENCH_engine.json via util::bench::write_json so the
+//! trajectory is comparable across commits.
+//!
+//!     cargo run --release --bench decode_latency   (or cargo bench)
+
+use hbllm::engine::{self, Backend, BackendKind, NativeBackend, PackedModel};
+use hbllm::model::testing::micro_weights;
+use hbllm::pipeline::Session;
+use hbllm::util::bench::{bench, write_json, Measurement, Table};
+use hbllm::util::json::Json;
+use hbllm::util::rng::Pcg32;
+use std::path::Path;
+
+const PROMPT: &[u8] = b"ta ki";
+const N_NEW: usize = 6;
+
+/// Greedy-decode N_NEW tokens; returns the decoded text (kept out of the
+/// timed closure's dead-code path via black_box at the call sites).
+fn decode(be: &mut dyn Backend, full_reforward: bool) -> Vec<u8> {
+    let mut rng = Pcg32::seeded(0);
+    if !full_reforward {
+        be.reset();
+        return engine::generate(be, PROMPT, N_NEW, 0.0, &mut rng).unwrap();
+    }
+    let mut text = PROMPT.to_vec();
+    for _ in 0..N_NEW {
+        be.reset(); // drop the cache: every token pays a full prefill
+        let row = be.decode_step(&text).unwrap();
+        let next = engine::sample_logits(&row, 0.0, &mut rng);
+        text.push(next as u8);
+    }
+    text
+}
+
+fn per_token_us(m: &Measurement) -> f64 {
+    m.median_ns / 1e3 / N_NEW as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let w = micro_weights(42);
+    let cfg = w.config.clone();
+    let mut measurements: Vec<Measurement> = Vec::new();
+    let mut t = Table::new(&["backend", "per-token (us)", "vs native-kv"]);
+
+    let mut native = NativeBackend::new(PackedModel::from_weights(&w, true)?, 1);
+    let sample = decode(&mut native, false);
+    eprintln!("[decode] native sample: {:?}", String::from_utf8_lossy(&sample));
+    let m_kv = bench("native-kv", 1.0, || {
+        std::hint::black_box(decode(&mut native, false));
+    });
+    let m_full = bench("native-full", 1.0, || {
+        std::hint::black_box(decode(&mut native, true));
+    });
+
+    // XLA baseline needs compiled artifacts; skip gracefully without them
+    let m_xla = match Session::open(&Session::default_root()) {
+        Ok(session) => {
+            let mut be =
+                session.gen_backend(session.fp_weights(), BackendKind::Xla { pallas: false })?;
+            decode(be.as_mut(), true); // warmup (compile + first run)
+            Some(bench("xla-window", 2.0, || {
+                std::hint::black_box(decode(be.as_mut(), true));
+            }))
+        }
+        Err(_) => {
+            eprintln!("SKIP xla-window: artifacts missing — run `make artifacts`");
+            None
+        }
+    };
+
+    let base = per_token_us(&m_kv);
+    for m in [Some(&m_kv), Some(&m_full), m_xla.as_ref()].into_iter().flatten() {
+        t.row(&[
+            m.name.clone(),
+            format!("{:.1}", per_token_us(m)),
+            format!("{:.2}x", per_token_us(m) / base),
+        ]);
+        measurements.push(m.clone());
+    }
+
+    println!("\n== per-token decode latency (greedy, {} new tokens) ==", N_NEW);
+    t.print();
+    println!("\nnative-kv pays one packed GEMV sweep + O(t*d) attention per");
+    println!("token; the full-window baselines re-forward every position.");
+
+    let context = [
+        ("model", Json::Str(cfg.name.clone())),
+        ("d_model", Json::Num(cfg.d_model as f64)),
+        ("n_layers", Json::Num(cfg.n_layers as f64)),
+        ("seq_len", Json::Num(cfg.seq_len as f64)),
+        ("prompt_bytes", Json::Num(PROMPT.len() as f64)),
+        ("new_tokens", Json::Num(N_NEW as f64)),
+    ];
+    let out = Path::new("BENCH_engine.json");
+    write_json(out, &context, &measurements)?;
+    println!("\nwrote {}", out.display());
+    Ok(())
+}

@@ -101,7 +101,7 @@ impl CtxMap {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::tests::micro_weights;
+    use crate::model::testing::micro_weights;
 
     #[test]
     fn collects_one_hessian_per_group() {

@@ -8,6 +8,7 @@
 //!   ciq                          CIQ expressiveness table (§3.1)
 
 use crate::coordinator::{serve, BatcherConfig, QuantJobConfig};
+use crate::engine::{self, Backend, BackendKind};
 use crate::pipeline::{EvalScope, Session};
 use crate::quant::{self, ciq, synth, Quantizer};
 use crate::util::bench::Table;
@@ -47,12 +48,14 @@ COMMANDS:
 OPTIONS:
   --artifacts DIR          artifacts root (default: artifacts/ or $HBLLM_ARTIFACTS)
   --method M               rtn|billm|arb-x|arb-rc|pb-llm|framequant-1.1|hbllm-row|hbllm-col
+  --backend B              xla (PJRT over dequantized fp32, default) or
+                           native (pure-Rust packed engine with KV cache)
   --workers N              quantization worker threads
   --ppl-windows N          eval windows per corpus (default 64)
   --qa-items N             QA items per family (default 25)
   --calib-windows N        calibration windows (default 16)
   --addr HOST:PORT         serve address (default 127.0.0.1:7431)
-  --pallas                 use the Pallas-attention HLO entry for eval
+  --pallas                 use the Pallas-attention HLO entry (xla backend)
 ";
 
 fn session(args: &Args) -> Result<Session> {
@@ -83,6 +86,20 @@ fn job(args: &Args) -> QuantJobConfig {
 fn method(args: &Args) -> Result<Box<dyn Quantizer>> {
     let name = args.get("method").ok_or_else(|| anyhow!("--method required"))?;
     quant::by_name(name).ok_or_else(|| anyhow!("unknown method {name}"))
+}
+
+/// Backend kind from `--backend` / `--pallas`. For the native engine,
+/// `pack` selects the 1-bit Haar-packed form (quantized serving) vs dense
+/// fp32 (reference serving).
+fn backend_kind(args: &Args, pack: bool) -> Result<BackendKind> {
+    BackendKind::parse(args.get_or("backend", "xla"), args.has_flag("pallas"), pack)
+}
+
+/// Only HBLLM weights have the packed 1-bit deployment form; packing the
+/// other baselines' dequantized weights would re-quantize them into HBLLM's
+/// 2-band shape and misreport the named method. They serve dense natively.
+fn native_pack(method_name: &str) -> bool {
+    method_name.starts_with("hbllm")
 }
 
 fn info(args: &Args) -> Result<()> {
@@ -131,13 +148,17 @@ fn eval(args: &Args) -> Result<()> {
     let m = method(args)?;
     let sc = scope(args);
     let jb = job(args);
-    let pallas = args.has_flag("pallas");
+    // fp32 reference serves dense (pack = false); the quantized model is
+    // served packed when the native backend is selected
+    let fp_kind = backend_kind(args, false)?;
+    let q_kind = backend_kind(args, native_pack(&m.name()))?;
 
-    let fp_runner = s.runner(s.fp_weights(), pallas)?;
-    let fp = s.evaluate(&fp_runner, &sc)?;
+    let mut fp_be = s.backend(s.fp_weights(), fp_kind)?;
+    let fp = s.evaluate(fp_be.as_mut(), &sc)?;
     let (qw, results) = s.quantize(m.as_ref(), &sc, &jb)?;
-    let runner = s.runner(&qw, pallas)?;
-    let report = s.evaluate(&runner, &sc)?;
+    let mut q_be = s.backend(&qw, q_kind)?;
+    let report = s.evaluate(q_be.as_mut(), &sc)?;
+    println!("backend: {}", q_be.name());
 
     let mut t = Table::new(&["method", "W-bits", "c4s", "wiki2s", "ptbs", "AvgQA", "relPPL"]);
     t.row(&[
@@ -168,30 +189,32 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let m = method(args)?;
     let sc = scope(args);
     let (qw, _) = s.quantize(m.as_ref(), &sc, &job(args))?;
-    let runner = s.runner(&qw, args.has_flag("pallas"))?;
+    let mut be = s.backend(&qw, backend_kind(args, native_pack(&m.name()))?)?;
     let addr = args.get_or("addr", "127.0.0.1:7431");
     let (listener, local) = serve::bind(addr)?;
-    println!("serving quantized ({}) model on {local}", m.name());
+    println!("serving quantized ({}) model on {local} [backend {}]", m.name(), be.name());
     println!("protocol: one text per line -> `ppl <value>`");
-    serve::serve_on(listener, &runner, BatcherConfig::default(), None)
+    serve::serve_on(listener, be.as_mut(), BatcherConfig::default(), None)
 }
 
 fn generate_cmd(args: &Args) -> Result<()> {
     let mut s = session(args)?;
-    let weights = match args.get("method") {
+    let (weights, pack) = match args.get("method") {
         Some(_) => {
             let m = method(args)?;
             eprintln!("quantizing with {}...", m.name());
-            s.quantize(m.as_ref(), &scope(args), &job(args))?.0
+            let w = s.quantize(m.as_ref(), &scope(args), &job(args))?.0;
+            let pack = native_pack(&m.name());
+            (w, pack)
         }
-        None => s.clone_weights(),
+        None => (s.clone_weights(), false),
     };
-    let runner = s.logits_runner(&weights)?;
+    let mut be = s.gen_backend(&weights, backend_kind(args, pack)?)?;
     let prompt = args.get_or("prompt", "ta kivo ").as_bytes().to_vec();
     let n_new = args.get_usize("tokens", 120);
     let temp = args.get_f64("temperature", 0.8) as f32;
     let mut rng = crate::util::rng::Pcg32::seeded(args.get_usize("seed", 0) as u64);
-    let out = runner.generate(&prompt, n_new, temp, &mut rng)?;
+    let out = engine::generate(be.as_mut(), &prompt, n_new, temp, &mut rng)?;
     println!("{}", String::from_utf8_lossy(&out));
     Ok(())
 }
@@ -246,5 +269,15 @@ mod tests {
     #[test]
     fn ciq_command_runs() {
         run(parse("ciq")).unwrap();
+    }
+
+    #[test]
+    fn backend_flag_parses() {
+        use crate::engine::BackendKind;
+        let a = parse("eval --method hbllm-row --backend native");
+        assert_eq!(backend_kind(&a, true).unwrap(), BackendKind::Native { pack: true });
+        let a = parse("eval --method hbllm-row --pallas");
+        assert_eq!(backend_kind(&a, false).unwrap(), BackendKind::Xla { pallas: true });
+        assert!(backend_kind(&parse("eval --backend gpu"), false).is_err());
     }
 }

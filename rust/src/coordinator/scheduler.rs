@@ -125,7 +125,7 @@ pub fn aggregate_wbits(results: &[LayerResult]) -> f64 {
 mod tests {
     use super::*;
     use crate::calib;
-    use crate::model::tests::micro_weights;
+    use crate::model::testing::micro_weights;
     use crate::quant::by_name;
 
     fn calibrated() -> (crate::model::Weights, CtxMap) {

@@ -2,21 +2,24 @@
 //!
 //! Protocol: one UTF-8 text per line in; `ppl <value>\n` out (byte-level
 //! perplexity of the text under the served model), `err <msg>\n` on error.
-//! The PJRT runtime stays on the batcher thread (xla handles are not Sync);
-//! connection handlers only exchange messages through the batcher.
+//! Backend-generic: any [`engine::Backend`] can be served — the PJRT
+//! runners or the native packed engine. The backend stays on the batcher
+//! thread (xla handles are not Sync, and the native engine's KV scratch is
+//! mutable state); connection handlers only exchange messages through the
+//! batcher.
 
 use super::batcher::{Batcher, BatcherConfig, BatcherHandle};
-use crate::runtime::NllRunner;
+use crate::engine::Backend;
 use anyhow::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 
 /// Score a batch of texts: mean NLL/byte -> perplexity per text.
-pub fn score_texts(runner: &NllRunner, texts: &[Vec<u8>]) -> Vec<Result<f64, String>> {
-    let seq = runner.seq;
+pub fn score_texts(be: &mut dyn Backend, texts: &[Vec<u8>]) -> Vec<Result<f64, String>> {
+    let (batch, seq) = (be.batch(), be.seq());
     let mut out = Vec::with_capacity(texts.len());
-    for chunk in texts.chunks(runner.batch) {
-        let mut tokens = vec![b'\n' as i32; runner.batch * seq];
+    for chunk in texts.chunks(batch) {
+        let mut tokens = vec![b'\n' as i32; batch * seq];
         let mut lens = Vec::with_capacity(chunk.len());
         for (r, text) in chunk.iter().enumerate() {
             let take = text.len().min(seq);
@@ -25,7 +28,7 @@ pub fn score_texts(runner: &NllRunner, texts: &[Vec<u8>]) -> Vec<Result<f64, Str
             }
             lens.push(take);
         }
-        match runner.nll(&tokens) {
+        match be.nll(&tokens) {
             Ok(nll) => {
                 let per_row = seq - 1;
                 for (r, &len) in lens.iter().enumerate() {
@@ -84,12 +87,13 @@ pub fn bind(addr: &str) -> Result<(TcpListener, std::net::SocketAddr)> {
 
 /// Serve until `max_conns` connections have been handled (forever if None).
 ///
-/// PJRT handles are not `Send`, so the batcher loop (which owns `runner`)
-/// runs on the *calling* thread; the accept loop and per-connection readers
-/// run on spawned threads and communicate through the batcher channel.
+/// PJRT handles are not `Send`, so the batcher loop (which drives the
+/// backend) runs on the *calling* thread; the accept loop and
+/// per-connection readers run on spawned threads and communicate through
+/// the batcher channel.
 pub fn serve_on(
     listener: TcpListener,
-    runner: &NllRunner,
+    be: &mut dyn Backend,
     cfg: BatcherConfig,
     max_conns: Option<usize>,
 ) -> Result<()> {
@@ -114,7 +118,7 @@ pub fn serve_on(
         // `handle` drops here; the batcher loop below exits once every
         // per-connection clone is gone too
     });
-    batcher.run(|texts| score_texts(runner, texts));
+    batcher.run(|texts| score_texts(&mut *be, texts));
     accept.join().ok();
     Ok(())
 }

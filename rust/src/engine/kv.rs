@@ -1,0 +1,156 @@
+//! KV cache and scratch arena for the incremental decode path.
+//!
+//! `KvCache` holds the per-layer attention keys/values as one flat
+//! `[n_layers, seq, d_model]` f32 buffer each, allocated once at backend
+//! construction. A decode step writes row `len` for every layer, attends
+//! over rows `0..=len`, and bumps `len` — no per-token allocation.
+//!
+//! `Arena` is the matching scratch space: every intermediate of the
+//! per-position forward (norm outputs, q/k/v, attention mix, FFN hidden,
+//! the GEMV adjoint scratch, logits) lives in a preallocated buffer, so
+//! after startup the decode hot loop's only allocation is the logits row
+//! each `decode_step` hands back to the caller.
+
+use crate::model::ModelConfig;
+
+/// Per-layer attention K/V rows for positions `0..len`.
+pub struct KvCache {
+    pub n_layers: usize,
+    pub seq: usize,
+    pub d: usize,
+    /// Positions filled so far (uniform across layers).
+    pub len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, seq: usize, d: usize) -> KvCache {
+        KvCache {
+            n_layers,
+            seq,
+            d,
+            len: 0,
+            k: vec![0.0; n_layers * seq * d],
+            v: vec![0.0; n_layers * seq * d],
+        }
+    }
+
+    /// Logical reset; the buffers are reused, not zeroed.
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len >= self.seq
+    }
+
+    #[inline]
+    fn idx(&self, layer: usize, pos: usize) -> usize {
+        debug_assert!(layer < self.n_layers && pos < self.seq);
+        (layer * self.seq + pos) * self.d
+    }
+
+    /// Store the K/V rows for `pos` in `layer` (callers bump `len` once per
+    /// position via [`KvCache::advance`] after all layers stored).
+    pub fn store(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), self.d);
+        debug_assert_eq!(v_row.len(), self.d);
+        let o = self.idx(layer, pos);
+        self.k[o..o + self.d].copy_from_slice(k_row);
+        self.v[o..o + self.d].copy_from_slice(v_row);
+    }
+
+    pub fn advance(&mut self) {
+        debug_assert!(self.len < self.seq, "kv cache overflow");
+        self.len += 1;
+    }
+
+    #[inline]
+    pub fn key(&self, layer: usize, pos: usize) -> &[f32] {
+        let o = self.idx(layer, pos);
+        &self.k[o..o + self.d]
+    }
+
+    #[inline]
+    pub fn val(&self, layer: usize, pos: usize) -> &[f32] {
+        let o = self.idx(layer, pos);
+        &self.v[o..o + self.d]
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+}
+
+/// Preallocated scratch buffers for one decode position.
+pub struct Arena {
+    /// residual stream [d]
+    pub x: Vec<f32>,
+    /// rmsnorm output [d]
+    pub h: Vec<f32>,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// attention mix [d]
+    pub attn: Vec<f32>,
+    /// wo / w2 output, added back into the residual [d]
+    pub proj: Vec<f32>,
+    /// FFN hidden [d_ff]
+    pub ff: Vec<f32>,
+    /// attention probabilities [seq]
+    pub probs: Vec<f32>,
+    /// packed-GEMV adjoint-activation scratch [max(d, d_ff)]
+    pub zbuf: Vec<f32>,
+    /// next-token logits [vocab]
+    pub logits: Vec<f32>,
+}
+
+impl Arena {
+    pub fn new(cfg: &ModelConfig) -> Arena {
+        let d = cfg.d_model;
+        Arena {
+            x: vec![0.0; d],
+            h: vec![0.0; d],
+            q: vec![0.0; d],
+            k: vec![0.0; d],
+            v: vec![0.0; d],
+            attn: vec![0.0; d],
+            proj: vec![0.0; d],
+            ff: vec![0.0; cfg.d_ff],
+            probs: vec![0.0; cfg.seq_len],
+            zbuf: vec![0.0; d.max(cfg.d_ff)],
+            logits: vec![0.0; cfg.vocab],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_store_and_read_back() {
+        let mut c = KvCache::new(2, 4, 3);
+        let k0 = [1.0, 2.0, 3.0];
+        let v0 = [4.0, 5.0, 6.0];
+        c.store(1, 0, &k0, &v0);
+        c.advance();
+        assert_eq!(c.key(1, 0), &k0);
+        assert_eq!(c.val(1, 0), &v0);
+        assert_eq!(c.len, 1);
+        c.clear();
+        assert_eq!(c.len, 0);
+        assert!(!c.is_full());
+    }
+
+    #[test]
+    fn kv_full_detection() {
+        let mut c = KvCache::new(1, 2, 1);
+        c.store(0, 0, &[0.0], &[0.0]);
+        c.advance();
+        c.store(0, 1, &[0.0], &[0.0]);
+        c.advance();
+        assert!(c.is_full());
+    }
+}

@@ -1,0 +1,284 @@
+//! Engine weight storage: every transformer linear as a GEMV-ready layer in
+//! paper orientation `[out, in]` (y = W x), plus the small fp32 residue
+//! (embeddings and norm gains) kept dense.
+//!
+//! A [`Linear`] is either `Packed` — the HBLLM deployment form, Haar-domain
+//! sign bits + per-row per-band (α, μ) — or `Dense` fp32, so the same
+//! engine serves both the quantized model and the full-precision reference.
+//! Row-parallel GEMV lives here: above a work threshold the rows are split
+//! across scoped std threads (rayon is unavailable offline).
+
+use crate::model::{ModelConfig, Tensor, Weights};
+use crate::pack::HaarPackedLinear;
+use crate::tensor::Matrix;
+use anyhow::{ensure, Result};
+
+/// Minimum rows × cols before a GEMV fans out across threads; below this the
+/// spawn cost dominates the dot products.
+const PAR_MIN_WORK: usize = 1 << 20;
+
+/// One GEMV-executable linear layer, `[out, in]` orientation.
+pub enum Linear {
+    /// fp32 rows (reference / non-quantized serving).
+    Dense(Matrix),
+    /// 1-bit Haar-packed rows (HBLLM deployment form).
+    Packed(HaarPackedLinear),
+}
+
+impl Linear {
+    pub fn rows(&self) -> usize {
+        match self {
+            Linear::Dense(m) => m.rows,
+            Linear::Packed(p) => p.bits.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Linear::Dense(m) => m.cols,
+            Linear::Packed(p) => p.bits.cols,
+        }
+    }
+
+    /// Weight-payload bytes (signs + scales for packed, f32 for dense).
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            Linear::Dense(m) => m.data.len() * 4,
+            // fp16 (α, μ) per row per band + sign words
+            Linear::Packed(p) => p.bits.storage_bytes() + p.bits.rows * 2 * 2 * 2,
+        }
+    }
+
+    /// Dense reconstruction `[out, in]` (the dequantized reference).
+    pub fn to_dense(&self) -> Matrix {
+        match self {
+            Linear::Dense(m) => m.clone(),
+            Linear::Packed(p) => p.to_dense(),
+        }
+    }
+
+    /// y = W x. Allocates the packed path's adjoint scratch; the engine hot
+    /// loop uses [`Linear::gemv_scratch`] with an arena buffer instead.
+    pub fn gemv(&self, x: &[f32], y: &mut [f32], threads: usize) {
+        let mut z = Vec::new();
+        self.gemv_scratch(x, y, &mut z, threads);
+    }
+
+    /// y = W x with a caller-provided adjoint-activation scratch (`z`, only
+    /// touched by the packed path; resized to the layer's input width).
+    /// Rows fan out across scoped threads when the layer is big enough and
+    /// `threads > 1` — the spawn cost is bounded by PAR_MIN_WORK to stay a
+    /// small fraction of the dot-product work.
+    pub fn gemv_scratch(&self, x: &[f32], y: &mut [f32], z: &mut Vec<f32>, threads: usize) {
+        debug_assert_eq!(x.len(), self.cols());
+        debug_assert_eq!(y.len(), self.rows());
+        let n = self.rows();
+        let par = threads.min(n).max(1);
+        if par <= 1 || n * self.cols() < PAR_MIN_WORK {
+            match self {
+                Linear::Dense(m) => dense_gemv_rows(m, x, 0, y),
+                Linear::Packed(p) => {
+                    let (sum_lo, sum_hi) = p.prepare_activation_into(x, z);
+                    p.gemv_rows(z, sum_lo, sum_hi, 0, y);
+                }
+            }
+            return;
+        }
+        let chunk = (n + par - 1) / par;
+        match self {
+            Linear::Dense(m) => {
+                std::thread::scope(|s| {
+                    for (ci, yc) in y.chunks_mut(chunk).enumerate() {
+                        s.spawn(move || dense_gemv_rows(m, x, ci * chunk, yc));
+                    }
+                });
+            }
+            Linear::Packed(p) => {
+                let (sum_lo, sum_hi) = p.prepare_activation_into(x, z);
+                let z: &[f32] = z;
+                std::thread::scope(|s| {
+                    for (ci, yc) in y.chunks_mut(chunk).enumerate() {
+                        s.spawn(move || p.gemv_rows(z, sum_lo, sum_hi, ci * chunk, yc));
+                    }
+                });
+            }
+        }
+    }
+}
+
+fn dense_gemv_rows(m: &Matrix, x: &[f32], i0: usize, y: &mut [f32]) {
+    for (k, out) in y.iter_mut().enumerate() {
+        *out = m
+            .row(i0 + k)
+            .iter()
+            .zip(x.iter())
+            .map(|(&a, &b)| a * b)
+            .sum();
+    }
+}
+
+/// One transformer block's engine weights.
+pub struct LayerWeights {
+    pub ln1: Vec<f32>,
+    pub wq: Linear,
+    pub wk: Linear,
+    pub wv: Linear,
+    pub wo: Linear,
+    pub ln2: Vec<f32>,
+    pub w1: Linear,
+    pub w2: Linear,
+}
+
+/// The whole model in serving form: packed (or dense) linears + fp32 residue.
+pub struct PackedModel {
+    pub config: ModelConfig,
+    /// [vocab, d]
+    pub tok_emb: Matrix,
+    /// [seq, d]
+    pub pos_emb: Matrix,
+    pub layers: Vec<LayerWeights>,
+    pub ln_f: Vec<f32>,
+    /// [vocab, d] — transposed from the model's `[d, vocab]` unembed.
+    pub unemb: Linear,
+}
+
+impl PackedModel {
+    /// Build from model weights. With `pack = true` every linear (attention
+    /// projections, FFN, unembed) is refit into the Haar-packed 1-bit form;
+    /// with `pack = false` the linears stay dense fp32 (reference engine).
+    ///
+    /// Note packing is itself a (re-)quantization: pass already-quantized
+    /// weights to serve a PTQ model, and compare against [`Self::to_weights`]
+    /// — the engine's own dequantized reference — for parity checks.
+    pub fn from_weights(w: &Weights, pack: bool) -> Result<PackedModel> {
+        let cfg = w.config.clone();
+        ensure!(cfg.d_model % 2 == 0, "engine needs even d_model (row Haar)");
+        ensure!(cfg.d_ff % 2 == 0, "engine needs even d_ff (row Haar)");
+        let linear = |name: &str| -> Linear {
+            // model stores [in, out] (x @ W); the engine wants [out, in]
+            let t = w.get(name).as_mat().transpose();
+            if pack {
+                Linear::Packed(HaarPackedLinear::from_dense(&t))
+            } else {
+                Linear::Dense(t)
+            }
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = |k: &str| format!("l{i}.{k}");
+            layers.push(LayerWeights {
+                ln1: w.get(&p("ln1")).as_vec().to_vec(),
+                wq: linear(&p("wq")),
+                wk: linear(&p("wk")),
+                wv: linear(&p("wv")),
+                wo: linear(&p("wo")),
+                ln2: w.get(&p("ln2")).as_vec().to_vec(),
+                w1: linear(&p("w1")),
+                w2: linear(&p("w2")),
+            });
+        }
+        Ok(PackedModel {
+            tok_emb: w.get("tok_emb").as_mat().clone(),
+            pos_emb: w.get("pos_emb").as_mat().clone(),
+            layers,
+            ln_f: w.get("ln_f").as_vec().to_vec(),
+            unemb: linear("unemb"),
+            config: cfg,
+        })
+    }
+
+    /// Dequantized reference: a `Weights` whose linears are the dense
+    /// reconstruction of this model's layers. `model::forward` over the
+    /// result is the ground truth the engine's packed forward must match.
+    pub fn to_weights(&self) -> Weights {
+        let mut tensors = std::collections::BTreeMap::new();
+        tensors.insert("tok_emb".to_string(), Tensor::Mat(self.tok_emb.clone()));
+        tensors.insert("pos_emb".to_string(), Tensor::Mat(self.pos_emb.clone()));
+        for (i, l) in self.layers.iter().enumerate() {
+            let p = |k: &str| format!("l{i}.{k}");
+            tensors.insert(p("ln1"), Tensor::Vec1(l.ln1.clone()));
+            tensors.insert(p("wq"), Tensor::Mat(l.wq.to_dense().transpose()));
+            tensors.insert(p("wk"), Tensor::Mat(l.wk.to_dense().transpose()));
+            tensors.insert(p("wv"), Tensor::Mat(l.wv.to_dense().transpose()));
+            tensors.insert(p("wo"), Tensor::Mat(l.wo.to_dense().transpose()));
+            tensors.insert(p("ln2"), Tensor::Vec1(l.ln2.clone()));
+            tensors.insert(p("w1"), Tensor::Mat(l.w1.to_dense().transpose()));
+            tensors.insert(p("w2"), Tensor::Mat(l.w2.to_dense().transpose()));
+        }
+        tensors.insert("ln_f".to_string(), Tensor::Vec1(self.ln_f.clone()));
+        tensors.insert("unemb".to_string(), Tensor::Mat(self.unemb.to_dense().transpose()));
+        Weights { config: self.config.clone(), tensors }
+    }
+
+    /// Total linear-layer weight payload (the memory-traffic argument).
+    pub fn linear_bytes(&self) -> usize {
+        let mut total = self.unemb.storage_bytes();
+        for l in &self.layers {
+            for lin in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w1, &l.w2] {
+                total += lin.storage_bytes();
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testing::micro_weights;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn dense_linear_gemv_matches_matvec() {
+        let mut rng = Pcg32::seeded(1);
+        let m = Matrix::from_fn(13, 16, |_, _| rng.normal_f32());
+        let x: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+        let lin = Linear::Dense(m.clone());
+        let mut y = vec![0.0; 13];
+        lin.gemv(&x, &mut y, 4);
+        assert_eq!(y, m.matvec(&x));
+    }
+
+    #[test]
+    fn packed_linear_gemv_matches_pack_gemv() {
+        let mut rng = Pcg32::seeded(2);
+        let m = Matrix::from_fn(9, 64, |_, _| rng.normal_f32());
+        let p = HaarPackedLinear::from_dense(&m);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+        let mut want = vec![0.0; 9];
+        p.gemv(&x, &mut want);
+        let lin = Linear::Packed(p);
+        let mut y = vec![0.0; 9];
+        lin.gemv(&x, &mut y, 3);
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn from_weights_shapes() {
+        let w = micro_weights(3);
+        let pm = PackedModel::from_weights(&w, true).unwrap();
+        assert_eq!(pm.layers.len(), w.config.n_layers);
+        let l0 = &pm.layers[0];
+        assert_eq!((l0.wq.rows(), l0.wq.cols()), (16, 16));
+        assert_eq!((l0.w1.rows(), l0.w1.cols()), (32, 16));
+        assert_eq!((l0.w2.rows(), l0.w2.cols()), (16, 32));
+        assert_eq!((pm.unemb.rows(), pm.unemb.cols()), (256, 16));
+        // 1-bit packing shrinks the linear payload (at micro dims the
+        // per-row scale + word padding overhead keeps it far from 1/32)
+        let dense = PackedModel::from_weights(&w, false).unwrap();
+        assert!(pm.linear_bytes() < dense.linear_bytes());
+    }
+
+    #[test]
+    fn to_weights_roundtrips_dense_exactly() {
+        let w = micro_weights(4);
+        let pm = PackedModel::from_weights(&w, false).unwrap();
+        let back = pm.to_weights();
+        for name in w.config.linear_names() {
+            let a = w.get(&name).as_mat();
+            let b = back.get(&name).as_mat();
+            assert!(a.mse(b) < 1e-12, "{name}");
+        }
+        assert_eq!(back.get("ln_f").as_vec(), w.get("ln_f").as_vec());
+    }
+}

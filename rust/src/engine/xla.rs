@@ -1,0 +1,79 @@
+//! XLA backend: the existing PJRT runners behind the [`Backend`] trait.
+//!
+//! `nll`/`logits` delegate to the AOT HLO entry points with device-resident
+//! weights. `decode_step` has no KV cache — the AOT module is fixed-shape —
+//! so each step re-forwards the whole window; it exists as the baseline the
+//! native engine's incremental path is benchmarked against.
+
+use super::Backend;
+use crate::data::ByteTokenizer;
+use crate::runtime::{LogitsRunner, NllRunner};
+use anyhow::{anyhow, ensure, Result};
+
+pub struct XlaBackend {
+    nll: NllRunner,
+    /// Present only when built via `Session::gen_backend` (the logits HLO
+    /// entry is a separate compile; scoring-only callers skip it).
+    generator: Option<LogitsRunner>,
+}
+
+impl XlaBackend {
+    pub fn new(nll: NllRunner, generator: Option<LogitsRunner>) -> XlaBackend {
+        XlaBackend { nll, generator }
+    }
+
+    fn generator(&self) -> Result<&LogitsRunner> {
+        self.generator
+            .as_ref()
+            .ok_or_else(|| anyhow!("xla backend built without the logits entry (scoring-only)"))
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> String {
+        "xla".to_string()
+    }
+
+    fn batch(&self) -> usize {
+        self.nll.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.nll.seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.generator.as_ref().map(|g| g.vocab).unwrap_or(ByteTokenizer::VOCAB)
+    }
+
+    fn nll(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.nll.nll(tokens)
+    }
+
+    fn logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.generator()?.logits(tokens)
+    }
+
+    fn decode_step(&mut self, text: &[u8]) -> Result<Vec<f32>> {
+        let gen = self.generator()?;
+        let (b, s, v) = (gen.batch(), gen.seq(), gen.vocab);
+        ensure!(s >= 2, "seq too short for decoding");
+        // same windowing as LogitsRunner::generate, with the empty text
+        // seeded by the pad byte
+        let window: &[u8] = if text.is_empty() {
+            const SEED: [u8; 1] = [ByteTokenizer::PAD];
+            &SEED
+        } else {
+            &text[text.len().saturating_sub(s - 1)..]
+        };
+        let pos = window.len() - 1;
+        let mut tokens = vec![ByteTokenizer::PAD as i32; b * s];
+        for (c, &byte) in window.iter().enumerate() {
+            tokens[c] = byte as i32;
+        }
+        let logits = gen.logits(&tokens)?;
+        Ok(logits[pos * v..(pos + 1) * v].to_vec())
+    }
+
+    fn reset(&mut self) {}
+}

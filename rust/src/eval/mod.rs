@@ -1,21 +1,24 @@
 //! Evaluation harness: perplexity over the synthetic corpora and zero-shot
-//! accuracy over the 9 QA task families, both scored through the AOT HLO
-//! NLL entry point (lm-eval-harness-style option scoring).
+//! accuracy over the 9 QA task families (lm-eval-harness-style option
+//! scoring). Backend-generic: everything scores through
+//! [`engine::Backend::nll`], so the XLA runners and the native packed
+//! engine are interchangeable here.
 
 use crate::data::{batches, Corpus, TaskFile, TaskItem};
-use crate::runtime::NllRunner;
+use crate::engine::Backend;
 use anyhow::Result;
 
 /// Perplexity = exp(mean per-token NLL) over non-overlapping windows.
-pub fn perplexity(runner: &NllRunner, corpus: &Corpus, max_windows: usize) -> Result<f64> {
-    let wins = corpus.windows(runner.seq, max_windows);
+pub fn perplexity(be: &mut dyn Backend, corpus: &Corpus, max_windows: usize) -> Result<f64> {
+    let (batch, seq) = (be.batch(), be.seq());
+    let wins = corpus.windows(seq, max_windows);
     anyhow::ensure!(!wins.is_empty(), "corpus {} too small", corpus.name);
     let mut total = 0f64;
     let mut count = 0usize;
-    for batch in batches(&wins, runner.batch, runner.seq) {
-        let nll = runner.nll(&batch.tokens)?;
-        let per_row = runner.seq - 1;
-        for r in 0..batch.valid {
+    for batch_item in batches(&wins, batch, seq) {
+        let nll = be.nll(&batch_item.tokens)?;
+        let per_row = seq - 1;
+        for r in 0..batch_item.valid {
             for v in &nll[r * per_row..(r + 1) * per_row] {
                 total += *v as f64;
             }
@@ -27,8 +30,8 @@ pub fn perplexity(runner: &NllRunner, corpus: &Corpus, max_windows: usize) -> Re
 
 /// Score one QA item: per option, the summed NLL of the option tokens given
 /// the prompt. Returns the argmin option index.
-fn option_scores(runner: &NllRunner, item: &TaskItem) -> Result<Vec<f64>> {
-    let seq = runner.seq;
+fn option_scores(be: &mut dyn Backend, item: &TaskItem) -> Result<Vec<f64>> {
+    let (batch, seq) = (be.batch(), be.seq());
     // Build one sequence per option: prompt + option, left-truncated to seq.
     let mut rows: Vec<(Vec<u8>, usize, usize)> = Vec::new(); // (tokens, opt_start, opt_end)
     for opt in &item.options {
@@ -48,19 +51,19 @@ fn option_scores(runner: &NllRunner, item: &TaskItem) -> Result<Vec<f64>> {
     }
     // batch the option sequences (pad to full batch)
     let mut scores = vec![0f64; rows.len()];
-    for chunk_start in (0..rows.len()).step_by(runner.batch) {
-        let chunk = &rows[chunk_start..(chunk_start + runner.batch).min(rows.len())];
-        let mut tokens = vec![b'\n' as i32; runner.batch * seq];
+    for chunk_start in (0..rows.len()).step_by(batch) {
+        let chunk = &rows[chunk_start..(chunk_start + batch).min(rows.len())];
+        let mut tokens = vec![b'\n' as i32; batch * seq];
         for (r, (row, _, _)) in chunk.iter().enumerate() {
             for (c, &b) in row.iter().enumerate() {
                 tokens[r * seq + c] = b as i32;
             }
         }
-        for r in chunk.len()..runner.batch {
+        for r in chunk.len()..batch {
             let (src, dst) = tokens.split_at_mut(r * seq);
             dst[..seq].copy_from_slice(&src[(chunk.len() - 1) * seq..chunk.len() * seq]);
         }
-        let nll = runner.nll(&tokens)?;
+        let nll = be.nll(&tokens)?;
         let per_row = seq - 1;
         for (r, (_, opt_start, opt_end)) in chunk.iter().enumerate() {
             // NLL at position t predicts token t+1; option tokens occupy
@@ -80,12 +83,12 @@ fn option_scores(runner: &NllRunner, item: &TaskItem) -> Result<Vec<f64>> {
 }
 
 /// Accuracy over one task family.
-pub fn task_accuracy(runner: &NllRunner, task: &TaskFile, max_items: usize) -> Result<f64> {
+pub fn task_accuracy(be: &mut dyn Backend, task: &TaskFile, max_items: usize) -> Result<f64> {
     let items = &task.items[..task.items.len().min(max_items)];
     anyhow::ensure!(!items.is_empty(), "empty task {}", task.family);
     let mut correct = 0usize;
     for item in items {
-        let scores = option_scores(runner, item)?;
+        let scores = option_scores(be, item)?;
         let pred = scores
             .iter()
             .enumerate()
@@ -100,10 +103,10 @@ pub fn task_accuracy(runner: &NllRunner, task: &TaskFile, max_items: usize) -> R
 }
 
 /// Mean accuracy across task families (the AvgQA column).
-pub fn avg_qa(runner: &NllRunner, tasks: &[TaskFile], max_items: usize) -> Result<f64> {
+pub fn avg_qa(be: &mut dyn Backend, tasks: &[TaskFile], max_items: usize) -> Result<f64> {
     let mut acc = 0f64;
     for t in tasks {
-        acc += task_accuracy(runner, t, max_items)?;
+        acc += task_accuracy(be, t, max_items)?;
     }
     Ok(acc / tasks.len() as f64)
 }
@@ -111,8 +114,10 @@ pub fn avg_qa(runner: &NllRunner, tasks: &[TaskFile], max_items: usize) -> Resul
 #[cfg(test)]
 mod tests {
     // PJRT-dependent paths are exercised by rust/tests/integration.rs (they
-    // need artifacts/); here we only test the pure helpers.
+    // need artifacts/); the native-backend path by rust/tests/engine_parity.rs.
     use crate::data::TaskItem;
+    use crate::engine::{Backend, NativeBackend, PackedModel};
+    use crate::model::testing::micro_weights;
 
     #[test]
     fn option_window_arithmetic() {
@@ -127,5 +132,20 @@ mod tests {
         let opt_start = prompt_len.saturating_sub(cut);
         assert_eq!(text.len() - cut, seq);
         assert_eq!(opt_start, 12); // 4 option bytes at the end of 16
+    }
+
+    #[test]
+    fn perplexity_over_native_backend() {
+        let w = micro_weights(41);
+        let seq = w.config.seq_len;
+        let corpus = crate::data::Corpus {
+            name: "synthetic".into(),
+            data: (0..seq * 6).map(|i| (i % 97) as u8 + 32).collect(),
+        };
+        let mut be =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, false).unwrap(), 2, 1);
+        let p = super::perplexity(&mut be, &corpus, 4).unwrap();
+        assert!(p.is_finite() && p > 1.0, "ppl {p}");
+        assert_eq!(be.batch(), 2);
     }
 }

@@ -8,12 +8,17 @@
 //! * [`model`], [`calib`], [`data`], [`eval`] — the PTQ evaluation stack
 //!   (byte-level GPT, Hessian collection, perplexity + zero-shot QA).
 //! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts.
+//! * [`engine`] — native packed-weight inference: the byte-level
+//!   transformer executed directly from Haar-packed 1-bit linears with a
+//!   KV cache, plus the [`engine::Backend`] trait that makes eval/serving
+//!   backend-generic (`--backend {xla,native}`).
 //! * [`coordinator`] — quantization job scheduling and batched serving.
 
 pub mod calib;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod eval;
 pub mod haar;
 pub mod model;

@@ -346,12 +346,14 @@ pub fn activation_key(linear_name: &str) -> String {
     }
 }
 
-#[cfg(test)]
-pub mod tests {
+/// Synthetic model builders shared by unit tests, integration tests and
+/// the decode benchmarks (compiled unconditionally — integration tests and
+/// `benches/` link the library without `cfg(test)`).
+pub mod testing {
     use super::*;
     use crate::util::rng::Pcg32;
 
-    /// Hand-build a micro model for tests (no artifact dependency).
+    /// Hand-build a micro model (no artifact dependency).
     pub fn micro_weights(seed: u64) -> Weights {
         let (d, layers, heads, dff, seq, vocab) = (16usize, 2usize, 2usize, 32usize, 12usize, 256usize);
         let mut order = vec!["tok_emb".to_string(), "pos_emb".to_string()];
@@ -406,6 +408,12 @@ pub mod tests {
             tensors,
         }
     }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testing::micro_weights;
+    use super::*;
 
     #[test]
     fn forward_shapes_and_finite() {

@@ -31,8 +31,9 @@ fn sign_table() -> &'static [[f32; 8]; 256] {
 
 /// Signed dot product of a packed sign row against `x` over [j0, j1):
 /// Σ_j s_j·x_j with s_j = ±1 from the bit pattern. `j0`/`j1` need not be
-/// word-aligned; full bytes take the vectorized path.
-fn signed_dot_range(words: &[u64], x: &[f32], j0: usize, j1: usize) -> f32 {
+/// word-aligned; full bytes take the vectorized path. Public because the
+/// native inference engine (`engine`) reuses it as its innermost kernel.
+pub fn signed_dot_range(words: &[u64], x: &[f32], j0: usize, j1: usize) -> f32 {
     let table = sign_table();
     let mut acc = 0f32;
     let mut j = j0;
@@ -252,19 +253,49 @@ impl HaarPackedLinear {
     }
 
     pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        let (z, sum_lo, sum_hi) = self.prepare_activation(x);
+        self.gemv_rows(&z, sum_lo, sum_hi, 0, y);
+    }
+
+    /// Adjoint-transform `x` once and precompute the per-band sums — the
+    /// O(m) prologue shared by every row of the GEMV. Split out so callers
+    /// (the engine's row-parallel GEMV) can run `gemv_rows` over disjoint
+    /// row ranges against one shared `z`.
+    pub fn prepare_activation(&self, x: &[f32]) -> (Vec<f32>, f32, f32) {
+        let mut z = Vec::new();
+        let (sum_lo, sum_hi) = self.prepare_activation_into(x, &mut z);
+        (z, sum_lo, sum_hi)
+    }
+
+    /// As [`Self::prepare_activation`], but reusing `z` (resized to fit) —
+    /// the engine hot loop's allocation-free path.
+    pub fn prepare_activation_into(&self, x: &[f32], z: &mut Vec<f32>) -> (f32, f32) {
+        let m = self.bits.cols;
+        debug_assert_eq!(x.len(), m);
+        let h = m / 2;
+        z.resize(m, 0.0);
+        for k in 0..h {
+            z[k] = x[2 * k] + x[2 * k + 1];
+            z[h + k] = x[2 * k] - x[2 * k + 1];
+        }
+        let sum_lo: f32 = z[..h].iter().sum();
+        let sum_hi: f32 = z[h..].iter().sum();
+        (sum_lo, sum_hi)
+    }
+
+    /// GEMV over rows [i0, i0 + y.len()) given a prepared activation.
+    /// `y[k]` receives row `i0 + k`.
+    pub fn gemv_rows(&self, z: &[f32], sum_lo: f32, sum_hi: f32, i0: usize, y: &mut [f32]) {
         let m = self.bits.cols;
         let h = m / 2;
-        let z = Self::adjoint_activation(x);
-        let (zlo, zhi) = z.split_at(h);
-        let sum_lo: f32 = zlo.iter().sum();
-        let sum_hi: f32 = zhi.iter().sum();
-        for i in 0..self.bits.rows {
+        for (k, out) in y.iter_mut().enumerate() {
+            let i = i0 + k;
             let words = self.bits.row_words(i);
-            let dot_s_lo = signed_dot_range(words, &z, 0, h);
-            let dot_s_hi = signed_dot_range(words, &z, h, m);
+            let dot_s_lo = signed_dot_range(words, z, 0, h);
+            let dot_s_hi = signed_dot_range(words, z, h, m);
             let dot_lo = self.alpha[i][0] * dot_s_lo + self.mu[i][0] * sum_lo;
             let dot_hi = self.alpha[i][1] * dot_s_hi + self.mu[i][1] * sum_hi;
-            y[i] = dot_lo + dot_hi;
+            *out = dot_lo + dot_hi;
         }
     }
 
@@ -325,6 +356,61 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn prop_signed_dot_range_matches_scalar() {
+        // head / byte-body / tail paths against a scalar ±1 reference on
+        // random unaligned [j0, j1) ranges
+        check(
+            "signed-dot-range",
+            60,
+            |g: &mut Gen| {
+                let m = g.size(1, 300);
+                let j0 = g.size(0, m - 1);
+                let j1 = g.size(j0, m);
+                let seed = g.rng.next_u64();
+                (m, j0, j1, seed)
+            },
+            |&(m, j0, j1, seed)| {
+                let mut rng = Pcg32::seeded(seed);
+                let mat = Matrix::from_fn(1, m, |_, _| {
+                    let v = rng.normal_f32();
+                    if v == 0.0 {
+                        1.0
+                    } else {
+                        v
+                    }
+                });
+                let bits = BitMatrix::from_signs(&mat);
+                let x: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+                let got = signed_dot_range(bits.row_words(0), &x, j0, j1);
+                let want: f32 = (j0..j1)
+                    .map(|j| if bits.get(0, j) { x[j] } else { -x[j] })
+                    .sum();
+                if (got - want).abs() < 1e-3 * (1.0 + want.abs()) {
+                    Ok(())
+                } else {
+                    Err(format!("[{j0},{j1}) of {m}: {got} vs {want}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn gemv_rows_partial_ranges_agree_with_full() {
+        let mut rng = Pcg32::seeded(9);
+        let w = rand_mat(&mut rng, 23, 128);
+        let p = HaarPackedLinear::from_dense(&w);
+        let x: Vec<f32> = (0..128).map(|_| rng.normal_f32()).collect();
+        let mut full = vec![0.0; 23];
+        p.gemv(&x, &mut full);
+        let (z, slo, shi) = p.prepare_activation(&x);
+        let mut part = vec![0.0; 23];
+        for (i0, i1) in [(0usize, 7usize), (7, 20), (20, 23)] {
+            p.gemv_rows(&z, slo, shi, i0, &mut part[i0..i1]);
+        }
+        assert_eq!(full, part);
     }
 
     #[test]

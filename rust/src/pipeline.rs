@@ -5,6 +5,7 @@
 use crate::calib::{self, CtxMap};
 use crate::coordinator::{quantize_model, LayerResult, QuantJobConfig};
 use crate::data::{Corpus, TaskFile};
+use crate::engine::{Backend, BackendKind, NativeBackend, PackedModel, XlaBackend};
 use crate::eval;
 use crate::model::Weights;
 use crate::quant::Quantizer;
@@ -159,17 +160,43 @@ impl Session {
         crate::runtime::LogitsRunner::new(&self.runtime, entry, weights, self.eval_batch)
     }
 
+    /// Scoring backend over the given weights (`nll` only for XLA — the
+    /// logits HLO entry is a separate compile; use [`Session::gen_backend`]
+    /// when `logits`/`decode_step` are needed).
+    pub fn backend(&self, weights: &Weights, kind: BackendKind) -> Result<Box<dyn Backend>> {
+        match kind {
+            BackendKind::Xla { pallas } => {
+                Ok(Box::new(XlaBackend::new(self.runner(weights, pallas)?, None)))
+            }
+            BackendKind::Native { pack } => Ok(Box::new(NativeBackend::new(
+                PackedModel::from_weights(weights, pack)?,
+                self.eval_batch,
+            ))),
+        }
+    }
+
+    /// Generation-capable backend (`nll` + `logits` + `decode_step`).
+    pub fn gen_backend(&self, weights: &Weights, kind: BackendKind) -> Result<Box<dyn Backend>> {
+        match kind {
+            BackendKind::Xla { pallas } => Ok(Box::new(XlaBackend::new(
+                self.runner(weights, pallas)?,
+                Some(self.logits_runner(weights)?),
+            ))),
+            BackendKind::Native { .. } => self.backend(weights, kind),
+        }
+    }
+
     /// Full quality evaluation: perplexity on the 3 corpora + AvgQA.
-    pub fn evaluate(&self, runner: &NllRunner, scope: &EvalScope) -> Result<EvalReport> {
+    pub fn evaluate(&self, be: &mut dyn Backend, scope: &EvalScope) -> Result<EvalReport> {
         let mut ppl = Vec::new();
         for corpus in self.corpora()? {
-            let p = eval::perplexity(runner, &corpus, scope.ppl_windows)?;
+            let p = eval::perplexity(be, &corpus, scope.ppl_windows)?;
             ppl.push((corpus.name.clone(), p));
         }
         let tasks = self.tasks()?;
         let mut qa = Vec::new();
         for t in &tasks {
-            qa.push((t.family.clone(), eval::task_accuracy(runner, t, scope.qa_items)?));
+            qa.push((t.family.clone(), eval::task_accuracy(be, t, scope.qa_items)?));
         }
         let avg_qa = qa.iter().map(|(_, a)| a).sum::<f64>() / qa.len().max(1) as f64;
         Ok(EvalReport { ppl, qa, avg_qa })

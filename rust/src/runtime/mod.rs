@@ -194,7 +194,9 @@ impl LogitsRunner {
     }
 
     /// Greedy/temperature generation by iterative re-forward (no KV cache —
-    /// the AOT module has a fixed shape; fine for demo-scale lengths).
+    /// the AOT module has a fixed shape; `engine::NativeBackend` is the
+    /// KV-cached path). An empty prompt is seeded with the pad byte so the
+    /// window always has a position to condition on.
     pub fn generate(
         &self,
         prompt: &[u8],
@@ -204,41 +206,20 @@ impl LogitsRunner {
     ) -> Result<Vec<u8>> {
         let (b, s, v) = (self.inner.batch, self.inner.seq, self.vocab);
         let mut text: Vec<u8> = prompt.to_vec();
+        if text.is_empty() {
+            text.push(crate::data::ByteTokenizer::PAD);
+        }
         for _ in 0..n_new {
             let start = text.len().saturating_sub(s - 1);
             let window = &text[start..];
             let pos = window.len() - 1;
-            let mut tokens = vec![b'\n' as i32; b * s];
+            let mut tokens = vec![crate::data::ByteTokenizer::PAD as i32; b * s];
             for (c, &byte) in window.iter().enumerate() {
                 tokens[c] = byte as i32;
             }
             let logits = self.logits(&tokens)?;
             let row = &logits[pos * v..(pos + 1) * v];
-            let next = if temperature <= 0.0 {
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap()
-            } else {
-                // softmax sample at the given temperature
-                let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
-                let probs: Vec<f64> = row
-                    .iter()
-                    .map(|&x| (((x - maxv) / temperature) as f64).exp())
-                    .collect();
-                let z: f64 = probs.iter().sum();
-                let mut u = rng.f64() * z;
-                let mut pick = v - 1;
-                for (i, p) in probs.iter().enumerate() {
-                    if u < *p {
-                        pick = i;
-                        break;
-                    }
-                    u -= p;
-                }
-                pick
-            };
+            let next = crate::engine::sample_logits(row, temperature, rng);
             text.push(next as u8);
         }
         Ok(text)

@@ -3,8 +3,12 @@
 //! Measures wall-clock over warmup + timed iterations, reports
 //! median / p10 / p90 and derived throughput. Used by every `benches/`
 //! target; results are printed as aligned tables so bench output can be
-//! pasted straight into EXPERIMENTS.md.
+//! pasted straight into EXPERIMENTS.md, and can be persisted as
+//! `BENCH_<name>.json` trajectory files via [`write_json`].
 
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -24,6 +28,38 @@ impl Measurement {
     pub fn median_s(&self) -> f64 {
         self.median_ns / 1e9
     }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("median_ns".to_string(), Json::Num(self.median_ns));
+        m.insert("p10_ns".to_string(), Json::Num(self.p10_ns));
+        m.insert("p90_ns".to_string(), Json::Num(self.p90_ns));
+        Json::Obj(m)
+    }
+}
+
+/// Persist a bench run as a JSON trajectory file (e.g. `BENCH_engine.json`):
+/// `{"context": {...}, "measurements": [...]}`. `context` carries run
+/// parameters (shape, token counts, backend) so successive runs are
+/// comparable.
+pub fn write_json(
+    path: &Path,
+    context: &[(&str, Json)],
+    measurements: &[Measurement],
+) -> std::io::Result<()> {
+    let mut ctx = BTreeMap::new();
+    for (k, v) in context {
+        ctx.insert(k.to_string(), v.clone());
+    }
+    let mut root = BTreeMap::new();
+    root.insert("context".to_string(), Json::Obj(ctx));
+    root.insert(
+        "measurements".to_string(),
+        Json::Arr(measurements.iter().map(Measurement::to_json).collect()),
+    );
+    std::fs::write(path, Json::Obj(root).to_string())
 }
 
 /// Time `f` with automatic iteration-count calibration toward
@@ -136,5 +172,29 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn write_json_roundtrips() {
+        let m = Measurement {
+            name: "decode".into(),
+            iters: 7,
+            median_ns: 1234.5,
+            p10_ns: 1000.0,
+            p90_ns: 2000.0,
+        };
+        let path = std::env::temp_dir().join("hbllm_bench_test.json");
+        write_json(&path, &[("shape", Json::Str("2x16".into()))], &[m]).unwrap();
+        let src = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let j = Json::parse(&src).unwrap();
+        assert_eq!(
+            j.at(&["context", "shape"]).and_then(Json::as_str),
+            Some("2x16")
+        );
+        let ms = j.get("measurements").and_then(Json::as_arr).unwrap();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].get("name").and_then(Json::as_str), Some("decode"));
+        assert_eq!(ms[0].get("iters").and_then(Json::as_usize), Some(7));
     }
 }

@@ -4,6 +4,7 @@
 
 use hbllm::coordinator::{serve, BatcherConfig, QuantJobConfig};
 use hbllm::data::Corpus;
+use hbllm::engine::BackendKind;
 use hbllm::model::{forward, nll_from_logits};
 use hbllm::pipeline::{EvalScope, Session};
 use hbllm::quant;
@@ -11,6 +12,8 @@ use hbllm::runtime::Runtime;
 use hbllm::tensor::Matrix;
 use hbllm::util::rng::Pcg32;
 use std::path::PathBuf;
+
+const XLA: BackendKind = BackendKind::Xla { pallas: false };
 
 fn artifacts_root() -> Option<PathBuf> {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -126,17 +129,17 @@ fn quantized_model_still_models_language() {
     let Some(root) = artifacts_root() else { return };
     let mut session = Session::open(&root).unwrap();
     let scope = EvalScope { ppl_windows: 8, qa_items: 4, calib_windows: 4 };
-    let fp_runner = session.runner(session.fp_weights(), false).unwrap();
+    let mut fp_be = session.backend(session.fp_weights(), XLA).unwrap();
     let corpus = session.corpus("wiki2s").unwrap();
-    let fp_ppl = hbllm::eval::perplexity(&fp_runner, &corpus, scope.ppl_windows).unwrap();
+    let fp_ppl = hbllm::eval::perplexity(fp_be.as_mut(), &corpus, scope.ppl_windows).unwrap();
 
     let q = quant::by_name("hbllm-row").unwrap();
     let (qw, results) = session
         .quantize(q.as_ref(), &scope, &QuantJobConfig { workers: 4, quiet: true })
         .unwrap();
     assert_eq!(results.len(), qw.config.linear_names().len());
-    let q_runner = session.runner(&qw, false).unwrap();
-    let q_ppl = hbllm::eval::perplexity(&q_runner, &corpus, scope.ppl_windows).unwrap();
+    let mut q_be = session.backend(&qw, XLA).unwrap();
+    let q_ppl = hbllm::eval::perplexity(q_be.as_mut(), &corpus, scope.ppl_windows).unwrap();
 
     assert!(fp_ppl > 1.0 && fp_ppl < 15.0, "fp ppl insane: {fp_ppl}");
     assert!(q_ppl >= fp_ppl * 0.99, "quantized better than fp?! {q_ppl} vs {fp_ppl}");
@@ -150,7 +153,7 @@ fn quantized_model_still_models_language() {
 fn serve_roundtrip() {
     let Some(root) = artifacts_root() else { return };
     let session = Session::open(&root).unwrap();
-    let runner = session.runner(session.fp_weights(), false).unwrap();
+    let mut backend = session.backend(session.fp_weights(), XLA).unwrap();
     let (listener, addr) = serve::bind("127.0.0.1:0").unwrap();
     let client = std::thread::spawn(move || {
         use std::io::{BufRead, BufReader, Write};
@@ -160,7 +163,7 @@ fn serve_roundtrip() {
         BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
         line
     });
-    serve::serve_on(listener, &runner, BatcherConfig::default(), Some(1)).unwrap();
+    serve::serve_on(listener, backend.as_mut(), BatcherConfig::default(), Some(1)).unwrap();
     let line = client.join().unwrap();
     assert!(line.starts_with("ppl "), "bad response: {line}");
     let v: f64 = line[4..].trim().parse().unwrap();
