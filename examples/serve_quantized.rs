@@ -1,9 +1,11 @@
-//! Serving demo: quantize the tiny GPT with HBLLM-row, start the batched
-//! TCP scoring server, fire concurrent clients at it, and report
-//! latency/throughput percentiles. `--backend native` serves straight from
-//! the packed 1-bit engine instead of the PJRT/XLA runner.
+//! Serving demo: quantize the tiny GPT with HBLLM-row, start the
+//! continuous-batching TCP server, fire concurrent clients mixing scoring
+//! (`ppl`) and streamed generation (`gen`) traffic at it, and report
+//! scoring latency percentiles plus generation throughput.
+//! `--backend native` serves straight from the packed 1-bit engine with
+//! multi-lane KV decoding; `--lanes` sets the lane count.
 //!
-//!     cargo run --release --example serve_quantized [-- --requests 64] [-- --clients 8] [-- --backend native]
+//!     cargo run --release --example serve_quantized [-- --requests 64] [-- --clients 8] [-- --backend native] [-- --lanes 4]
 
 use hbllm::coordinator::{serve, BatcherConfig, QuantJobConfig};
 use hbllm::engine::{Backend, BackendKind};
@@ -14,18 +16,25 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
+const GEN_TOKENS: usize = 24;
+
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     let n_requests = args.get_usize("requests", 64);
     let n_clients = args.get_usize("clients", 8);
+    let lanes = args.get_usize("lanes", 4);
     let kind = BackendKind::parse(args.get_or("backend", "xla"), false, true)?;
 
     let mut session = Session::open(&Session::default_root())?;
     let scope = EvalScope { ppl_windows: 4, qa_items: 4, calib_windows: 8 };
     let method = quant::by_name("hbllm-row").unwrap();
     eprintln!("quantizing with hbllm-row...");
-    let (qw, _) = session.quantize(method.as_ref(), &scope, &QuantJobConfig { quiet: true, ..Default::default() })?;
-    let mut backend = session.backend(&qw, kind)?;
+    let (qw, _) = session.quantize(
+        method.as_ref(),
+        &scope,
+        &QuantJobConfig { quiet: true, ..Default::default() },
+    )?;
+    let mut backend = session.serve_backend(&qw, kind, lanes)?;
 
     // request corpus: lines from wiki2s
     let corpus = session.corpus("wiki2s")?;
@@ -38,48 +47,72 @@ fn main() -> anyhow::Result<()> {
 
     let (listener, addr) = serve::bind("127.0.0.1:0")?;
     eprintln!(
-        "serving on {addr} [backend {}]; {n_clients} clients x {} requests",
+        "serving on {addr} [backend {}, {} lanes]; {n_clients} clients x {} score requests + 1 gen request each",
         backend.name(),
+        backend.lanes(),
         lines.len()
     );
 
     let t0 = Instant::now();
-    let clients: Vec<std::thread::JoinHandle<Vec<Duration>>> = (0..n_clients)
+    // each client scores its share of the corpus, then streams one
+    // generation — so scoring batches and generation lanes are exercised
+    // concurrently
+    let clients: Vec<std::thread::JoinHandle<(Vec<Duration>, usize)>> = (0..n_clients)
         .map(|c| {
             let lines = lines.clone();
             std::thread::spawn(move || {
-                let mut lat = Vec::new();
                 let stream = TcpStream::connect(addr).unwrap();
                 let mut reader = BufReader::new(stream.try_clone().unwrap());
                 let mut stream = stream;
+                let mut lat = Vec::new();
                 for (i, line) in lines.iter().enumerate() {
                     if i % n_clients != c {
                         continue;
                     }
                     let t = Instant::now();
-                    stream.write_all(line.as_bytes()).unwrap();
-                    stream.write_all(b"\n").unwrap();
+                    stream.write_all(format!("ppl {line}\n").as_bytes()).unwrap();
                     let mut resp = String::new();
                     reader.read_line(&mut resp).unwrap();
                     assert!(resp.starts_with("ppl "), "bad response {resp}");
                     lat.push(t.elapsed());
                 }
-                lat
+                stream
+                    .write_all(format!("gen {GEN_TOKENS} 0.8 {c} ta kivo remo \n").as_bytes())
+                    .unwrap();
+                let mut toks = 0usize;
+                loop {
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    let resp = resp.trim_end();
+                    if resp.starts_with("tok ") {
+                        toks += 1;
+                    } else {
+                        assert!(resp.starts_with("done "), "bad terminator {resp}");
+                        break;
+                    }
+                }
+                (lat, toks)
             })
         })
         .collect();
 
     serve::serve_on(listener, backend.as_mut(), BatcherConfig::default(), Some(n_clients))?;
     let mut lats: Vec<Duration> = Vec::new();
+    let mut gen_tokens = 0usize;
     for c in clients {
-        lats.extend(c.join().unwrap());
+        let (lat, toks) = c.join().unwrap();
+        lats.extend(lat);
+        gen_tokens += toks;
     }
     let wall = t0.elapsed().as_secs_f64();
     lats.sort();
-    let q = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize].as_secs_f64() * 1e3;
-    println!("\n== serving results (batched scoring of quantized model) ==");
-    println!("requests   : {}", lats.len());
-    println!("throughput : {:.1} req/s", lats.len() as f64 / wall);
-    println!("latency    : p50 {:.1}ms  p90 {:.1}ms  p99 {:.1}ms", q(0.5), q(0.9), q(0.99));
+    println!("\n== serving results (quantized model, scoring + generation) ==");
+    println!("score reqs : {}", lats.len());
+    println!("gen tokens : {gen_tokens} ({n_clients} streams x {GEN_TOKENS})");
+    println!("throughput : {:.1} req/s (scores+gens over {wall:.2}s wall)", (lats.len() + n_clients) as f64 / wall);
+    if !lats.is_empty() {
+        let q = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize].as_secs_f64() * 1e3;
+        println!("latency    : p50 {:.1}ms  p90 {:.1}ms  p99 {:.1}ms (scoring)", q(0.5), q(0.9), q(0.99));
+    }
     Ok(())
 }

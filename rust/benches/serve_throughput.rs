@@ -1,0 +1,114 @@
+//! Continuous-batching serve throughput: generated tokens/s vs KV-lane
+//! count on the native packed engine.
+//!
+//! A fixed pool of generation requests drains through the
+//! `GenScheduler` + `decode_batch` path at several lane counts. With one
+//! lane the requests run back to back; with N lanes each decode step
+//! sweeps every packed linear once across all active lanes, so the
+//! bit-unpack/weight-traffic cost is amortized and tokens/s should rise
+//! with the lane count. No TCP/artifacts involved — the model is
+//! synthetic, so this measures the engine + scheduler only.
+//!
+//! Results land in BENCH_serve.json via util::bench::write_json so the
+//! trajectory is comparable across commits.
+//!
+//!     cargo run --release --bench serve_throughput   (or cargo bench)
+
+use hbllm::coordinator::{GenEvent, GenRequest, GenScheduler};
+use hbllm::engine::{Backend, NativeBackend, PackedModel};
+use hbllm::model::testing::synth_weights;
+use hbllm::util::bench::{bench, write_json, Measurement, Table};
+use hbllm::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver};
+
+const MAX_NEW: usize = 16;
+const REQUESTS: usize = 8;
+const LANE_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Submit every request, drain the scheduler, return tokens produced.
+/// Receivers stay alive for the whole drain so no lane is evicted early.
+fn run_once(be: &mut dyn Backend, prompts: &[Vec<u8>]) -> usize {
+    let mut sched = GenScheduler::new(be.lanes(), MAX_NEW);
+    let rxs: Vec<Receiver<GenEvent>> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let (tx, rx) = channel();
+            sched.submit(GenRequest {
+                prompt: p.clone(),
+                max_new: MAX_NEW,
+                temperature: 0.0,
+                seed: i as u64,
+                reply: tx,
+            });
+            rx
+        })
+        .collect();
+    let mut tokens = 0usize;
+    while sched.has_work() {
+        tokens += sched.step(be);
+    }
+    drop(rxs);
+    tokens
+}
+
+fn main() -> anyhow::Result<()> {
+    // bigger than micro_weights so the per-token GEMV cost dominates the
+    // scheduler overhead, small enough to stay fast without artifacts
+    let w = synth_weights(7, 64, 2, 4, 128, 64);
+    let cfg = w.config.clone();
+    let prompts: Vec<Vec<u8>> = (0..REQUESTS)
+        .map(|i| format!("request {i}: ta kivo remo ").into_bytes())
+        .collect();
+    let expect = REQUESTS * MAX_NEW;
+
+    let mut measurements: Vec<Measurement> = Vec::new();
+    let mut tokens_per_s = BTreeMap::new();
+    let mut table = Table::new(&["lanes", "tokens/s", "vs 1 lane"]);
+    let mut base_tps = 0.0f64;
+    for lanes in LANE_COUNTS {
+        let mut be = NativeBackend::with_threads(PackedModel::from_weights(&w, true)?, 1, 1);
+        be.set_lanes(lanes);
+        // warmup + sanity: the full request pool must drain exactly
+        assert_eq!(run_once(&mut be, &prompts), expect, "scheduler failed to drain");
+        let m = bench(&format!("lanes-{lanes}"), 0.5, || {
+            std::hint::black_box(run_once(&mut be, &prompts));
+        });
+        let tps = expect as f64 / m.median_s();
+        if lanes == 1 {
+            base_tps = tps;
+        }
+        table.row(&[
+            format!("{lanes}"),
+            format!("{tps:.0}"),
+            format!("{:.2}x", tps / base_tps),
+        ]);
+        tokens_per_s.insert(format!("lanes-{lanes}"), Json::Num(tps));
+        measurements.push(m);
+    }
+
+    println!(
+        "\n== serve throughput ({REQUESTS} requests x {MAX_NEW} tokens, greedy, packed {} model) ==",
+        cfg.name
+    );
+    table.print();
+    println!("\neach decode step sweeps the packed linears once across all");
+    println!("active lanes; attention and sampling stay per-lane.");
+
+    let context = [
+        ("model", Json::Str(cfg.name.clone())),
+        ("d_model", Json::Num(cfg.d_model as f64)),
+        ("n_layers", Json::Num(cfg.n_layers as f64)),
+        ("seq_len", Json::Num(cfg.seq_len as f64)),
+        ("requests", Json::Num(REQUESTS as f64)),
+        ("max_new", Json::Num(MAX_NEW as f64)),
+        ("tokens_per_iter", Json::Num(expect as f64)),
+        ("tokens_per_s", Json::Obj(tokens_per_s)),
+    ];
+    let out = Path::new("BENCH_serve.json");
+    write_json(out, &context, &measurements)?;
+    println!("\nwrote {}", out.display());
+    Ok(())
+}

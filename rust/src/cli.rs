@@ -4,8 +4,12 @@
 //!   info                         artifact + platform summary
 //!   quantize  --method M         quantize, report per-layer metrics
 //!   eval      --method M         quantize + perplexity/QA row
-//!   serve     --method M --addr  batched TCP scoring server
+//!   serve     --method M --addr  continuous-batching generation + scoring
+//!                                server (`--lanes`, `--max-new`)
+//!   generate  [--method M]       sample text locally
 //!   ciq                          CIQ expressiveness table (§3.1)
+//!
+//! The serve wire protocol is documented in `README.md` §Serving.
 
 use crate::coordinator::{serve, BatcherConfig, QuantJobConfig};
 use crate::engine::{self, Backend, BackendKind};
@@ -41,7 +45,8 @@ COMMANDS:
   info                     show artifacts, model and PJRT platform
   quantize --method M      quantize the model, print per-layer metrics
   eval --method M          quantize + evaluate (perplexity on c4s/wiki2s/ptbs + AvgQA)
-  serve --method M         TCP scoring server (line in -> `ppl <v>` out)
+  serve --method M         TCP generation + scoring server
+                           (`ppl <text>` and `gen <max-new> <temp> <seed> <prompt>` verbs)
   generate [--method M]    sample text from the (optionally quantized) model
   ciq                      CIQ expressiveness table (paper §3.1)
 
@@ -55,6 +60,11 @@ OPTIONS:
   --qa-items N             QA items per family (default 25)
   --calib-windows N        calibration windows (default 16)
   --addr HOST:PORT         serve address (default 127.0.0.1:7431)
+  --lanes N                serve: concurrent KV decode lanes (default 4;
+                           continuous batching sweeps the packed weights
+                           once per token across all active lanes)
+  --max-new N              serve: per-request generated-token cap (default 256)
+                           generate: tokens to sample (default 120)
   --pallas                 use the Pallas-attention HLO entry (xla backend)
 ";
 
@@ -189,12 +199,23 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let m = method(args)?;
     let sc = scope(args);
     let (qw, _) = s.quantize(m.as_ref(), &sc, &job(args))?;
-    let mut be = s.backend(&qw, backend_kind(args, native_pack(&m.name()))?)?;
+    let lanes = args.get_usize("lanes", 4);
+    let mut be = s.serve_backend(&qw, backend_kind(args, native_pack(&m.name()))?, lanes)?;
+    let cfg = BatcherConfig {
+        max_new_cap: args.get_usize("max-new", BatcherConfig::default().max_new_cap),
+        ..Default::default()
+    };
     let addr = args.get_or("addr", "127.0.0.1:7431");
     let (listener, local) = serve::bind(addr)?;
-    println!("serving quantized ({}) model on {local} [backend {}]", m.name(), be.name());
-    println!("protocol: one text per line -> `ppl <value>`");
-    serve::serve_on(listener, be.as_mut(), BatcherConfig::default(), None)
+    println!(
+        "serving quantized ({}) model on {local} [backend {}, {} lanes, max-new {}]",
+        m.name(),
+        be.name(),
+        be.lanes(),
+        cfg.max_new_cap
+    );
+    println!("protocol: `ppl <text>` -> `ppl <v>` | `gen <max-new> <temp> <seed> <prompt>` -> `tok <byte>`* `done <n>`");
+    serve::serve_on(listener, be.as_mut(), cfg, None)
 }
 
 fn generate_cmd(args: &Args) -> Result<()> {
@@ -211,7 +232,7 @@ fn generate_cmd(args: &Args) -> Result<()> {
     };
     let mut be = s.gen_backend(&weights, backend_kind(args, pack)?)?;
     let prompt = args.get_or("prompt", "ta kivo ").as_bytes().to_vec();
-    let n_new = args.get_usize("tokens", 120);
+    let n_new = args.get_usize("max-new", args.get_usize("tokens", 120));
     let temp = args.get_f64("temperature", 0.8) as f32;
     let mut rng = crate::util::rng::Pcg32::seeded(args.get_usize("seed", 0) as u64);
     let out = engine::generate(be.as_mut(), &prompt, n_new, temp, &mut rng)?;
@@ -269,6 +290,16 @@ mod tests {
     #[test]
     fn ciq_command_runs() {
         run(parse("ciq")).unwrap();
+    }
+
+    #[test]
+    fn serve_flags_parse() {
+        let a = parse("serve --method hbllm-row --lanes 8 --max-new 64");
+        assert_eq!(a.get_usize("lanes", 4), 8);
+        assert_eq!(a.get_usize("max-new", 256), 64);
+        // defaults
+        let a = parse("serve --method hbllm-row");
+        assert_eq!(a.get_usize("lanes", 4), 4);
     }
 
     #[test]

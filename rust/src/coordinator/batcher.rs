@@ -1,47 +1,96 @@
-//! Dynamic request batcher: collect scoring requests up to `max_batch` or
-//! `max_wait`, then flush to the scorer in one PJRT call. Generic over the
-//! scoring function so it is testable without a PJRT runtime.
+//! Request plumbing between connection handlers and the thread that owns
+//! the model backend.
+//!
+//! Two request kinds flow through one channel: **scoring** (collect up to
+//! `max_batch` texts or wait `max_wait`, then flush in one backend call)
+//! and **generation** (handed to the continuous-batching
+//! `GenScheduler`, which streams `GenEvent`s back per request). The
+//! backend-owning side is generic: [`Batcher::run`] drives a scoring-only
+//! closure (testable without any model runtime), while
+//! `coordinator::serve::run_engine` interleaves scoring batches with
+//! generation steps on the real backend.
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use super::scheduler::{GenEvent, GenRequest};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
+    /// Scoring batch size cap (one backend `nll` call per flush).
     pub max_batch: usize,
+    /// How long a partial scoring batch waits for company before flushing.
     pub max_wait: Duration,
+    /// Admission-control cap on any single generation request's `max_new`.
+    pub max_new_cap: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) }
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+            max_new_cap: 256,
+        }
     }
 }
 
+/// A scoring request: mean NLL/byte → perplexity for one text.
 pub struct Request {
     pub text: Vec<u8>,
     pub reply: Sender<Result<f64, String>>,
 }
 
-/// The batcher owns the receive side; the scorer closure owns the model
-/// runtime (PJRT types are not Sync, so scoring stays on this thread).
+/// One unit of work for the backend-owning thread.
+pub enum Work {
+    Score(Request),
+    Generate(GenRequest),
+}
+
+/// The batcher owns the receive side; the scorer closure / engine loop
+/// owns the model runtime (PJRT types are not Sync, so backend execution
+/// stays on one thread).
 pub struct Batcher {
     pub cfg: BatcherConfig,
-    rx: Receiver<Request>,
+    rx: Receiver<Work>,
 }
 
 #[derive(Clone)]
 pub struct BatcherHandle {
-    tx: Sender<Request>,
+    tx: Sender<Work>,
 }
 
 impl BatcherHandle {
-    /// Blocking score call: mean NLL/byte for `text`.
+    /// Blocking score call: perplexity (exp mean NLL/byte) for `text`.
     pub fn score(&self, text: &[u8]) -> Result<f64, String> {
         let (tx, rx) = channel();
         self.tx
-            .send(Request { text: text.to_vec(), reply: tx })
+            .send(Work::Score(Request { text: text.to_vec(), reply: tx }))
             .map_err(|_| "batcher gone".to_string())?;
         rx.recv().map_err(|_| "batcher dropped request".to_string())?
+    }
+
+    /// Submit a generation request; events stream back on the returned
+    /// receiver ([`GenEvent::Token`]* then [`GenEvent::Done`], or
+    /// [`GenEvent::Error`]). Dropping the receiver mid-stream evicts the
+    /// sequence from its lane at the next step.
+    pub fn generate(
+        &self,
+        prompt: &[u8],
+        max_new: usize,
+        temperature: f32,
+        seed: u64,
+    ) -> Result<Receiver<GenEvent>, String> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Work::Generate(GenRequest {
+                prompt: prompt.to_vec(),
+                max_new,
+                temperature,
+                seed,
+                reply: tx,
+            }))
+            .map_err(|_| "batcher gone".to_string())?;
+        Ok(rx)
     }
 }
 
@@ -51,31 +100,89 @@ impl Batcher {
         (Batcher { cfg, rx }, BatcherHandle { tx })
     }
 
-    /// Run the batch loop until all senders hang up. `score_batch` maps a
-    /// slice of texts to one score per text.
+    /// Blocking receive; `None` once every handle has dropped.
+    pub fn recv(&self) -> Option<Work> {
+        self.rx.recv().ok()
+    }
+
+    /// Bounded-wait receive (scoring batch top-up).
+    pub fn recv_timeout(&self, d: Duration) -> Result<Work, RecvTimeoutError> {
+        self.rx.recv_timeout(d)
+    }
+
+    /// Non-blocking drain of everything queued; returns `false` once every
+    /// handle has dropped.
+    pub fn drain_into(&self, into: &mut Vec<Work>) -> bool {
+        loop {
+            match self.rx.try_recv() {
+                Ok(w) => into.push(w),
+                Err(TryRecvError::Empty) => return true,
+                Err(TryRecvError::Disconnected) => return false,
+            }
+        }
+    }
+
+    /// The one copy of the scoring batch policy: collect requests into
+    /// `pending` until it holds `max_batch` texts or the `max_wait`
+    /// deadline expires. Generation requests are handed to `on_gen`; if it
+    /// returns `false` the top-up stops early (the engine loop uses this
+    /// to start decoding as soon as generation traffic arrives). Returns
+    /// `false` once every handle has dropped.
+    pub fn top_up_scores(
+        &self,
+        pending: &mut Vec<Request>,
+        mut on_gen: impl FnMut(GenRequest) -> bool,
+    ) -> bool {
+        let deadline = Instant::now() + self.cfg.max_wait;
+        while pending.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.recv_timeout(deadline - now) {
+                Ok(Work::Score(r)) => pending.push(r),
+                Ok(Work::Generate(g)) => {
+                    if !on_gen(g) {
+                        break;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => return false,
+            }
+        }
+        true
+    }
+
+    /// Run a scoring-only batch loop until all senders hang up.
+    /// `score_batch` maps a slice of texts to one score per text;
+    /// generation requests are answered with an error (use
+    /// `serve::run_engine` for a generation-capable loop).
     pub fn run(self, mut score_batch: impl FnMut(&[Vec<u8>]) -> Vec<Result<f64, String>>) {
+        let reject = |g: GenRequest| {
+            let _ = g
+                .reply
+                .send(GenEvent::Error("generation not supported by this server".into()));
+        };
         let mut pending: Vec<Request> = Vec::new();
         loop {
             // wait for the first request of a batch
             if pending.is_empty() {
-                match self.rx.recv() {
-                    Ok(r) => pending.push(r),
-                    Err(_) => return, // all senders dropped
+                match self.recv() {
+                    Some(Work::Score(r)) => pending.push(r),
+                    Some(Work::Generate(g)) => {
+                        reject(g);
+                        continue;
+                    }
+                    None => return, // all senders dropped
                 }
             }
-            // top up until full or the wait budget expires
-            let deadline = Instant::now() + self.cfg.max_wait;
-            while pending.len() < self.cfg.max_batch {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match self.rx.recv_timeout(deadline - now) {
-                    Ok(r) => pending.push(r),
-                    Err(RecvTimeoutError::Timeout) => break,
-                    Err(RecvTimeoutError::Disconnected) => break,
-                }
-            }
+            // top up until full or the wait budget expires; on disconnect
+            // the flush below still answers what was collected, then the
+            // next recv() observes the hangup
+            self.top_up_scores(&mut pending, |g| {
+                reject(g);
+                true
+            });
             let texts: Vec<Vec<u8>> = pending.iter().map(|r| r.text.clone()).collect();
             let scores = score_batch(&texts);
             debug_assert_eq!(scores.len(), texts.len());
@@ -97,6 +204,7 @@ mod tests {
         let (batcher, handle) = Batcher::new(BatcherConfig {
             max_batch: 4,
             max_wait: Duration::from_millis(200),
+            ..Default::default()
         });
         let max_seen = Arc::new(AtomicUsize::new(0));
         let ms = max_seen.clone();
@@ -127,6 +235,7 @@ mod tests {
         let (batcher, handle) = Batcher::new(BatcherConfig {
             max_batch: 64,
             max_wait: Duration::from_millis(10),
+            ..Default::default()
         });
         let worker = std::thread::spawn(move || {
             batcher.run(|texts| texts.iter().map(|_| Ok(1.0)).collect());
@@ -145,6 +254,21 @@ mod tests {
             batcher.run(|texts| texts.iter().map(|_| Err("boom".to_string())).collect());
         });
         assert_eq!(handle.score(b"x"), Err("boom".to_string()));
+        drop(handle);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn scoring_only_loop_rejects_generation() {
+        let (batcher, handle) = Batcher::new(BatcherConfig::default());
+        let worker = std::thread::spawn(move || {
+            batcher.run(|texts| texts.iter().map(|_| Ok(1.0)).collect());
+        });
+        let rx = handle.generate(b"hi", 4, 0.0, 0).unwrap();
+        match rx.recv().unwrap() {
+            GenEvent::Error(msg) => assert!(msg.contains("not supported"), "{msg}"),
+            other => panic!("expected Error, got {other:?}"),
+        }
         drop(handle);
         worker.join().unwrap();
     }

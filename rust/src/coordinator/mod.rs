@@ -1,16 +1,21 @@
 //! L3 coordination: quantization job scheduling across worker threads,
-//! request batching, and the scoring server.
+//! request batching, and the generation + scoring server.
 //!
 //! The paper's contribution is the quantization algorithm itself, so the
 //! coordinator's job is (a) driving per-layer PTQ with deterministic
 //! parallelism (Table 3's wall-clock), and (b) serving the quantized model
-//! for batched scoring/eval (the deployment story in §3.6/§4.5).
+//! — batched perplexity scoring *and* admission-controlled
+//! continuous-batching generation over the engine's KV lanes (the
+//! deployment story in §3.6/§4.5). See `README.md` §Serving for the wire
+//! protocol.
 
 pub mod batcher;
 pub mod progress;
 pub mod scheduler;
 pub mod serve;
 
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{Batcher, BatcherConfig, BatcherHandle, Work};
 pub use progress::Progress;
-pub use scheduler::{quantize_model, LayerResult, QuantJobConfig};
+pub use scheduler::{
+    quantize_model, GenEvent, GenRequest, GenScheduler, LayerResult, QuantJobConfig,
+};

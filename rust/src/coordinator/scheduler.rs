@@ -1,16 +1,33 @@
-//! Per-layer quantization job scheduler: a deterministic work-stealing pool
-//! over the model's linear layers.
+//! The coordinator's two schedulers.
 //!
-//! Invariants (property-tested): every layer quantized exactly once, output
-//! independent of worker count, original weights untouched on failure.
+//! **Quantization** ([`quantize_model`]): a deterministic work-stealing
+//! pool over the model's linear layers. Invariants (property-tested):
+//! every layer quantized exactly once, output independent of worker count,
+//! original weights untouched on failure.
+//!
+//! **Generation** ([`GenScheduler`]): the admission-control state machine
+//! behind the continuous-batching serve loop. Requests (prompt +
+//! max-tokens + temperature + seed) queue until a KV lane frees up; every
+//! [`GenScheduler::step`] admits waiting requests into free lanes, runs
+//! one [`Backend::decode_batch`] sweep over all active lanes, samples and
+//! streams one token per sequence, and evicts sequences that exhausted
+//! their token budget or lost their client — so lanes turn over without
+//! ever draining the whole batch (continuous batching, not static
+//! batches). A freshly admitted lane prefills its prompt inside the same
+//! sweep established lanes decode in.
 
 use super::progress::Progress;
 use crate::calib::CtxMap;
+use crate::data::ByteTokenizer;
+use crate::engine::{sample_logits, Backend};
 use crate::model::Weights;
 use crate::quant::{BitsBreakdown, Quantizer};
 use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
 use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -110,6 +127,182 @@ pub fn quantize_model(
     Ok(metrics)
 }
 
+/// Streamed generation events, one receiver per request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GenEvent {
+    /// One sampled byte (streamed as soon as it is decoded).
+    Token(u8),
+    /// Sequence finished: the full text (prompt + generated bytes) and the
+    /// number of generated bytes.
+    Done { text: Vec<u8>, generated: usize },
+    /// Decoding failed or the server is shutting down.
+    Error(String),
+}
+
+/// A generation request as admitted by the scheduler.
+pub struct GenRequest {
+    pub prompt: Vec<u8>,
+    /// Token budget; capped at the scheduler's `max_new_cap` on admission.
+    pub max_new: usize,
+    /// `<= 0` is greedy argmax; otherwise softmax sampling.
+    pub temperature: f32,
+    /// Sampling RNG seed (ignored for greedy decoding).
+    pub seed: u64,
+    pub reply: Sender<GenEvent>,
+}
+
+/// One sequence resident in a KV lane.
+struct ActiveSeq {
+    text: Vec<u8>,
+    generated: usize,
+    remaining: usize,
+    temperature: f32,
+    rng: Pcg32,
+    reply: Sender<GenEvent>,
+}
+
+/// Admission-controlled continuous batching over a backend's KV lanes.
+///
+/// The scheduler owns no model state — lanes live in the backend
+/// ([`Backend::lanes`]); it owns the queue, the per-sequence sampling
+/// state, and the admit/step/evict policy. Drive it with repeated
+/// [`GenScheduler::step`] calls while [`GenScheduler::has_work`].
+pub struct GenScheduler {
+    /// `slots[i]` is the sequence resident in backend lane `i`.
+    slots: Vec<Option<ActiveSeq>>,
+    queue: VecDeque<GenRequest>,
+    max_new_cap: usize,
+}
+
+impl GenScheduler {
+    /// `lanes` should be [`Backend::lanes`] of the backend that will be
+    /// stepped; `max_new_cap` bounds any single request's token budget
+    /// (admission control — one request cannot monopolize a lane forever).
+    pub fn new(lanes: usize, max_new_cap: usize) -> GenScheduler {
+        GenScheduler {
+            slots: (0..lanes.max(1)).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            max_new_cap: max_new_cap.max(1),
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Sequences currently resident in lanes.
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Requests waiting for a free lane.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.active() > 0 || !self.queue.is_empty()
+    }
+
+    /// Enqueue a request. A zero-token request completes immediately.
+    pub fn submit(&mut self, req: GenRequest) {
+        if req.max_new == 0 {
+            let _ = req.reply.send(GenEvent::Done { text: req.prompt, generated: 0 });
+            return;
+        }
+        self.queue.push_back(req);
+    }
+
+    /// Move queued requests into free lanes, highest index first: scoring
+    /// (`Backend::nll`) runs through lane 0 and resets it, so keeping
+    /// generation out of lane 0 until no other lane is free avoids a
+    /// full-window re-prefill per token under mixed traffic (the engine's
+    /// prefix guard makes the clobber safe either way).
+    fn admit(&mut self, be: &mut dyn Backend) {
+        for lane in (0..self.slots.len()).rev() {
+            if self.slots[lane].is_some() {
+                continue;
+            }
+            let Some(req) = self.queue.pop_front() else { return };
+            be.reset_lane(lane);
+            let mut text = req.prompt;
+            if text.is_empty() {
+                // seed with the pad byte so the first step has a position
+                text.push(ByteTokenizer::PAD);
+            }
+            self.slots[lane] = Some(ActiveSeq {
+                text,
+                generated: 0,
+                remaining: req.max_new.min(self.max_new_cap),
+                temperature: req.temperature,
+                rng: Pcg32::seeded(req.seed),
+                reply: req.reply,
+            });
+        }
+    }
+
+    /// One continuous-batching step: admit, decode every active lane in a
+    /// single [`Backend::decode_batch`] sweep, sample + stream one token
+    /// per sequence, evict exhausted or abandoned sequences (freeing their
+    /// lanes for the next step's admissions). Returns tokens produced.
+    pub fn step(&mut self, be: &mut dyn Backend) -> usize {
+        self.admit(be);
+        let idxs: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_some())
+            .map(|(i, _)| i)
+            .collect();
+        if idxs.is_empty() {
+            return 0;
+        }
+        let rows = {
+            let reqs: Vec<(usize, &[u8])> = idxs
+                .iter()
+                .map(|&i| (i, self.slots[i].as_ref().unwrap().text.as_slice()))
+                .collect();
+            match be.decode_batch(&reqs) {
+                Ok(rows) => rows,
+                Err(e) => {
+                    // a decode failure poisons every active lane: report and
+                    // drain so the serve loop does not spin on the error
+                    let msg = e.to_string();
+                    for &i in &idxs {
+                        if let Some(seq) = self.slots[i].take() {
+                            let _ = seq.reply.send(GenEvent::Error(msg.clone()));
+                        }
+                        be.reset_lane(i);
+                    }
+                    return 0;
+                }
+            }
+        };
+        let mut produced = 0;
+        for (&i, row) in idxs.iter().zip(rows) {
+            let slot = &mut self.slots[i];
+            let seq = slot.as_mut().unwrap();
+            let next = sample_logits(&row, seq.temperature, &mut seq.rng) as u8;
+            seq.text.push(next);
+            seq.generated += 1;
+            seq.remaining -= 1;
+            produced += 1;
+            let alive = seq.reply.send(GenEvent::Token(next)).is_ok();
+            let exhausted = seq.remaining == 0;
+            if exhausted || !alive {
+                let seq = slot.take().unwrap();
+                if exhausted {
+                    let _ = seq
+                        .reply
+                        .send(GenEvent::Done { text: seq.text, generated: seq.generated });
+                }
+                be.reset_lane(i); // free the KV lane for the next admission
+            }
+        }
+        produced
+    }
+}
+
 /// Aggregate W-bits across layers (weighted by element count).
 pub fn aggregate_wbits(results: &[LayerResult]) -> f64 {
     let total_elems: f64 = results.iter().map(|r| (r.rows * r.cols) as f64).sum();
@@ -181,5 +374,199 @@ mod tests {
         ];
         let agg = aggregate_wbits(&res);
         assert!((agg - 700.0 / 400.0).abs() < 1e-12);
+    }
+}
+
+#[cfg(test)]
+mod gen_tests {
+    use super::*;
+    use std::sync::mpsc::{channel, Receiver};
+
+    /// Deterministic stateless backend: the next token is always
+    /// `last_byte + 1`. Exercises the trait's default single-lane
+    /// `decode_batch` fallback alongside the scheduler.
+    struct MockBackend {
+        lanes: usize,
+        resets: usize,
+    }
+
+    impl Backend for MockBackend {
+        fn name(&self) -> String {
+            "mock".into()
+        }
+        fn batch(&self) -> usize {
+            1
+        }
+        fn seq(&self) -> usize {
+            32
+        }
+        fn vocab(&self) -> usize {
+            256
+        }
+        fn nll(&mut self, _tokens: &[i32]) -> Result<Vec<f32>> {
+            anyhow::bail!("mock backend scores nothing")
+        }
+        fn logits(&mut self, _tokens: &[i32]) -> Result<Vec<f32>> {
+            anyhow::bail!("mock backend scores nothing")
+        }
+        fn decode_step(&mut self, text: &[u8]) -> Result<Vec<f32>> {
+            let last = *text.last().unwrap_or(&0);
+            let mut row = vec![0.0f32; 256];
+            row[last.wrapping_add(1) as usize] = 1.0;
+            Ok(row)
+        }
+        fn reset(&mut self) {
+            self.resets += 1;
+        }
+        fn lanes(&self) -> usize {
+            self.lanes
+        }
+    }
+
+    fn submit(sched: &mut GenScheduler, prompt: &[u8], max_new: usize) -> Receiver<GenEvent> {
+        let (tx, rx) = channel();
+        sched.submit(GenRequest {
+            prompt: prompt.to_vec(),
+            max_new,
+            temperature: 0.0,
+            seed: 0,
+            reply: tx,
+        });
+        rx
+    }
+
+    #[test]
+    fn continuous_batching_admits_and_evicts() {
+        let mut be = MockBackend { lanes: 2, resets: 0 };
+        let mut sched = GenScheduler::new(2, 64);
+        let rxs: Vec<Receiver<GenEvent>> =
+            (0..3u8).map(|i| submit(&mut sched, &[b'a' + i], 3)).collect();
+        assert_eq!(sched.queued(), 3);
+        assert_eq!(sched.active(), 0);
+
+        // step 1: two requests admitted, the third waits for an eviction
+        assert_eq!(sched.step(&mut be), 2);
+        assert_eq!((sched.active(), sched.queued()), (2, 1));
+
+        let mut steps = 1;
+        while sched.has_work() {
+            assert!(sched.active() <= 2, "over-admitted past the lane count");
+            sched.step(&mut be);
+            steps += 1;
+            assert!(steps < 100, "scheduler failed to drain");
+        }
+        // 2 lanes × 3 tokens, then the queued request runs 3 more steps
+        assert_eq!(steps, 6);
+        // the backend saw one lane reset per admission and per eviction
+        assert_eq!(be.resets, 6);
+
+        for (i, rx) in rxs.iter().enumerate() {
+            let events: Vec<GenEvent> = rx.try_iter().collect();
+            assert_eq!(events.len(), 4, "3 tokens + done");
+            let b0 = b'a' + i as u8;
+            assert_eq!(events[0], GenEvent::Token(b0 + 1));
+            match &events[3] {
+                GenEvent::Done { text, generated } => {
+                    assert_eq!(*generated, 3);
+                    assert_eq!(text[..], [b0, b0 + 1, b0 + 2, b0 + 3]);
+                }
+                other => panic!("expected Done, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn abandoned_request_is_evicted() {
+        let mut be = MockBackend { lanes: 2, resets: 0 };
+        let mut sched = GenScheduler::new(2, 64);
+        let keep = submit(&mut sched, b"x", 4);
+        let gone = submit(&mut sched, b"y", 4);
+        drop(gone);
+        sched.step(&mut be);
+        assert_eq!(sched.active(), 1, "dead client's lane not reclaimed");
+        while sched.has_work() {
+            sched.step(&mut be);
+        }
+        let events: Vec<GenEvent> = keep.try_iter().collect();
+        assert_eq!(events.len(), 5, "surviving request unaffected");
+    }
+
+    #[test]
+    fn max_new_is_capped_on_admission() {
+        let mut be = MockBackend { lanes: 1, resets: 0 };
+        let mut sched = GenScheduler::new(1, 4);
+        let rx = submit(&mut sched, b"q", 1000);
+        while sched.has_work() {
+            sched.step(&mut be);
+        }
+        let done = rx.try_iter().last().unwrap();
+        match done {
+            GenEvent::Done { generated, .. } => assert_eq!(generated, 4),
+            other => panic!("expected Done, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_token_and_empty_prompt_requests() {
+        let mut be = MockBackend { lanes: 1, resets: 0 };
+        let mut sched = GenScheduler::new(1, 8);
+        // zero tokens: immediate Done, never queued
+        let rx0 = submit(&mut sched, b"abc", 0);
+        assert!(!sched.has_work());
+        assert_eq!(
+            rx0.try_iter().next(),
+            Some(GenEvent::Done { text: b"abc".to_vec(), generated: 0 })
+        );
+        // empty prompt: pad-seeded, still produces tokens
+        let rx = submit(&mut sched, b"", 2);
+        while sched.has_work() {
+            sched.step(&mut be);
+        }
+        let events: Vec<GenEvent> = rx.try_iter().collect();
+        match events.last().unwrap() {
+            GenEvent::Done { text, generated } => {
+                assert_eq!(*generated, 2);
+                assert_eq!(text.len(), 3, "pad seed + 2 tokens");
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_failure_reports_and_drains() {
+        struct FailBackend;
+        impl Backend for FailBackend {
+            fn name(&self) -> String {
+                "fail".into()
+            }
+            fn batch(&self) -> usize {
+                1
+            }
+            fn seq(&self) -> usize {
+                8
+            }
+            fn vocab(&self) -> usize {
+                256
+            }
+            fn nll(&mut self, _: &[i32]) -> Result<Vec<f32>> {
+                anyhow::bail!("no")
+            }
+            fn logits(&mut self, _: &[i32]) -> Result<Vec<f32>> {
+                anyhow::bail!("no")
+            }
+            fn decode_step(&mut self, _: &[u8]) -> Result<Vec<f32>> {
+                anyhow::bail!("device lost")
+            }
+            fn reset(&mut self) {}
+        }
+        let mut be = FailBackend;
+        let mut sched = GenScheduler::new(1, 8);
+        let rx = submit(&mut sched, b"x", 4);
+        sched.step(&mut be);
+        assert!(!sched.has_work(), "failed lanes must drain");
+        match rx.try_iter().next().unwrap() {
+            GenEvent::Error(msg) => assert!(msg.contains("device lost")),
+            other => panic!("expected Error, got {other:?}"),
+        }
     }
 }

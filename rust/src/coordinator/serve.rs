@@ -1,27 +1,56 @@
-//! Line-protocol TCP scoring server over the quantized model.
+//! Line-protocol TCP generation + scoring server over the quantized model.
 //!
-//! Protocol: one UTF-8 text per line in; `ppl <value>\n` out (byte-level
-//! perplexity of the text under the served model), `err <msg>\n` on error.
-//! Backend-generic: any [`engine::Backend`] can be served — the PJRT
-//! runners or the native packed engine. The backend stays on the batcher
-//! thread (xla handles are not Sync, and the native engine's KV scratch is
-//! mutable state); connection handlers only exchange messages through the
-//! batcher.
+//! Protocol (one UTF-8 line per request; full spec in `README.md`
+//! §Serving):
+//!
+//! * `ppl <text>` → `ppl <value>` (byte-level perplexity) or `err <msg>`.
+//!   Empty / whitespace-only text is `err empty input`, never a
+//!   perplexity over pad bytes.
+//!
+//! Verbs take precedence: a line is a verb iff it starts with `ppl ` or
+//! `gen`/`gen `; anything else is scored as legacy bare text (the pre-verb
+//! protocol). A legacy text that itself begins with a verb keyword must be
+//! sent as `ppl <text>` to be scored.
+//! * `gen <max-new> <temperature> <seed> <prompt…>` → a stream of
+//!   `tok <byte>` lines (one per sampled byte, written as it is decoded),
+//!   terminated by `done <n-generated>`, or `err <msg>`.
+//!
+//! Backend-generic: any [`engine::Backend`](crate::engine::Backend) can be
+//! served. The backend stays on the [`run_engine`] thread (xla handles are
+//! not Sync, and the native engine's KV lanes are mutable state);
+//! connection handlers only exchange messages through the batcher channel.
+//! Generation is continuously batched: a [`GenScheduler`] admits queued
+//! requests into free KV lanes between decode sweeps, so sequences join
+//! and leave the running batch without draining it.
 
-use super::batcher::{Batcher, BatcherConfig, BatcherHandle};
+use super::batcher::{Batcher, BatcherConfig, BatcherHandle, Request, Work};
+use super::scheduler::{GenEvent, GenScheduler};
 use crate::engine::Backend;
 use anyhow::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 
-/// Score a batch of texts: mean NLL/byte -> perplexity per text.
+/// Score a batch of texts: mean NLL/byte → perplexity per text.
+///
+/// Empty and whitespace-only texts short-circuit to `Err("empty input")`
+/// without occupying a batch row — their padded token rows would otherwise
+/// report a "perplexity" computed over pad bytes.
 pub fn score_texts(be: &mut dyn Backend, texts: &[Vec<u8>]) -> Vec<Result<f64, String>> {
     let (batch, seq) = (be.batch(), be.seq());
-    let mut out = Vec::with_capacity(texts.len());
-    for chunk in texts.chunks(batch) {
+    let mut out: Vec<Option<Result<f64, String>>> = texts
+        .iter()
+        .map(|t| {
+            t.iter()
+                .all(|b| b.is_ascii_whitespace())
+                .then(|| Err("empty input".to_string()))
+        })
+        .collect();
+    let scoreable: Vec<usize> = (0..texts.len()).filter(|&i| out[i].is_none()).collect();
+    for chunk in scoreable.chunks(batch) {
         let mut tokens = vec![b'\n' as i32; batch * seq];
         let mut lens = Vec::with_capacity(chunk.len());
-        for (r, text) in chunk.iter().enumerate() {
+        for (r, &ti) in chunk.iter().enumerate() {
+            let text = &texts[ti];
             let take = text.len().min(seq);
             for (c, &b) in text[..take].iter().enumerate() {
                 tokens[r * seq + c] = b as i32;
@@ -31,28 +60,68 @@ pub fn score_texts(be: &mut dyn Backend, texts: &[Vec<u8>]) -> Vec<Result<f64, S
         match be.nll(&tokens) {
             Ok(nll) => {
                 let per_row = seq - 1;
-                for (r, &len) in lens.iter().enumerate() {
+                for (r, (&ti, &len)) in chunk.iter().zip(&lens).enumerate() {
                     let hi = len.saturating_sub(1).max(1).min(per_row);
                     let mean: f64 = nll[r * per_row..r * per_row + hi]
                         .iter()
                         .map(|&v| v as f64)
                         .sum::<f64>()
                         / hi as f64;
-                    out.push(Ok(mean.exp()));
+                    out[ti] = Some(Ok(mean.exp()));
                 }
             }
             Err(e) => {
-                for _ in chunk {
-                    out.push(Err(e.to_string()));
+                for &ti in chunk {
+                    out[ti] = Some(Err(e.to_string()));
                 }
             }
         }
     }
-    out
+    out.into_iter().map(|o| o.expect("every text resolved")).collect()
+}
+
+/// Stream a generation request's events back over the socket. Returns
+/// `false` once the connection is unusable (the dropped receiver then
+/// evicts the sequence from its KV lane at the engine's next step).
+fn handle_gen(args: &str, handle: &BatcherHandle, writer: &mut TcpStream) -> bool {
+    let mut it = args.splitn(4, ' ');
+    let parsed = (
+        it.next().and_then(|s| s.parse::<usize>().ok()),
+        it.next().and_then(|s| s.parse::<f32>().ok()),
+        it.next().and_then(|s| s.parse::<u64>().ok()),
+    );
+    let (max_new, temperature, seed) = match parsed {
+        (Some(m), Some(t), Some(s)) => (m, t, s),
+        _ => {
+            return writer
+                .write_all(b"err usage: gen <max-new> <temperature> <seed> <prompt>\n")
+                .is_ok()
+        }
+    };
+    let prompt = it.next().unwrap_or("");
+    let rx = match handle.generate(prompt.as_bytes(), max_new, temperature, seed) {
+        Ok(rx) => rx,
+        Err(e) => return writer.write_all(format!("err {e}\n").as_bytes()).is_ok(),
+    };
+    for ev in rx {
+        let ok = match ev {
+            GenEvent::Token(b) => writer.write_all(format!("tok {b}\n").as_bytes()).is_ok(),
+            GenEvent::Done { generated, .. } => {
+                return writer.write_all(format!("done {generated}\n").as_bytes()).is_ok()
+            }
+            GenEvent::Error(e) => {
+                return writer.write_all(format!("err {e}\n").as_bytes()).is_ok()
+            }
+        };
+        if !ok {
+            return false;
+        }
+    }
+    // channel closed without a terminal event: server shutting down
+    writer.write_all(b"err aborted\n").is_ok()
 }
 
 fn handle_conn(stream: TcpStream, handle: BatcherHandle) {
-    let peer = stream.peer_addr().ok();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -66,15 +135,23 @@ fn handle_conn(stream: TcpStream, handle: BatcherHandle) {
         if line.is_empty() {
             continue;
         }
-        let resp = match handle.score(line.as_bytes()) {
-            Ok(ppl) => format!("ppl {ppl:.4}\n"),
-            Err(e) => format!("err {e}\n"),
+        let ok = if let Some(rest) = line.strip_prefix("gen ") {
+            handle_gen(rest, &handle, &mut writer)
+        } else if line == "gen" {
+            handle_gen("", &handle, &mut writer)
+        } else {
+            // `ppl <text>`, or a legacy bare line scored as-is
+            let text = line.strip_prefix("ppl ").unwrap_or(&line);
+            let resp = match handle.score(text.as_bytes()) {
+                Ok(ppl) => format!("ppl {ppl:.4}\n"),
+                Err(e) => format!("err {e}\n"),
+            };
+            writer.write_all(resp.as_bytes()).is_ok()
         };
-        if writer.write_all(resp.as_bytes()).is_err() {
+        if !ok {
             break;
         }
     }
-    let _ = peer;
 }
 
 /// Bind the listening socket (separately from serving, so callers can learn
@@ -85,9 +162,76 @@ pub fn bind(addr: &str) -> Result<(TcpListener, std::net::SocketAddr)> {
     Ok((listener, local))
 }
 
+/// The backend-owning loop: admission-controlled continuous-batching
+/// generation interleaved with dynamically batched scoring.
+///
+/// Policy per iteration: drain whatever requests are queued (admission
+/// happens *between* decode sweeps — that is the continuous batching),
+/// flush any pending scoring batch in one backend call, then advance every
+/// active generation lane by one token. When the service is idle it blocks
+/// on the channel; when only scoring traffic exists, a partial batch waits
+/// up to `max_wait` for company (the generation step itself provides the
+/// batching window otherwise). Returns when every handle has dropped and
+/// all admitted work has drained.
+///
+/// Scoring runs through the backend's lane 0 and resets it; the scheduler
+/// therefore admits generation into the highest free lane first, and a
+/// sequence that does land in lane 0 transparently re-prefills on its
+/// next step (the engine checks its cached prefix against the cache fill
+/// level) — mixed traffic costs some recompute but never correctness.
+pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
+    let cfg = batcher.cfg;
+    let mut sched = GenScheduler::new(be.lanes(), cfg.max_new_cap);
+    let mut scores: Vec<Request> = Vec::new();
+    let mut inbox: Vec<Work> = Vec::new();
+    let mut connected = true;
+    loop {
+        if connected {
+            if !sched.has_work() && scores.is_empty() {
+                // idle: block until traffic arrives or everyone hangs up
+                match batcher.recv() {
+                    Some(w) => inbox.push(w),
+                    None => connected = false,
+                }
+            }
+            if connected && !batcher.drain_into(&mut inbox) {
+                connected = false;
+            }
+            for w in inbox.drain(..) {
+                match w {
+                    Work::Score(r) => scores.push(r),
+                    Work::Generate(g) => sched.submit(g),
+                }
+            }
+            // scoring-only service: let a partial batch fill up briefly
+            // (generation traffic ends the wait — decoding is the batching
+            // window once lanes are busy)
+            if connected && !sched.has_work() && !scores.is_empty() {
+                connected = batcher.top_up_scores(&mut scores, |g| {
+                    sched.submit(g);
+                    false
+                });
+            }
+        }
+        if !connected && !sched.has_work() && scores.is_empty() {
+            return;
+        }
+        if !scores.is_empty() {
+            let texts: Vec<Vec<u8>> = scores.iter().map(|r| r.text.clone()).collect();
+            let results = score_texts(be, &texts);
+            for (req, res) in scores.drain(..).zip(results) {
+                let _ = req.reply.send(res);
+            }
+        }
+        if sched.has_work() {
+            sched.step(be);
+        }
+    }
+}
+
 /// Serve until `max_conns` connections have been handled (forever if None).
 ///
-/// PJRT handles are not `Send`, so the batcher loop (which drives the
+/// PJRT handles are not `Send`, so the engine loop (which drives the
 /// backend) runs on the *calling* thread; the accept loop and
 /// per-connection readers run on spawned threads and communicate through
 /// the batcher channel.
@@ -115,10 +259,51 @@ pub fn serve_on(
                 Err(_) => break,
             }
         }
-        // `handle` drops here; the batcher loop below exits once every
+        // `handle` drops here; the engine loop below exits once every
         // per-connection clone is gone too
     });
-    batcher.run(|texts| score_texts(&mut *be, texts));
+    run_engine(batcher, be);
     accept.join().ok();
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{NativeBackend, PackedModel};
+    use crate::model::testing::micro_weights;
+
+    fn micro_backend() -> NativeBackend {
+        let w = micro_weights(33);
+        NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 2, 1)
+    }
+
+    #[test]
+    fn score_texts_rejects_empty_and_whitespace_input() {
+        let mut be = micro_backend();
+        let texts: Vec<Vec<u8>> = vec![
+            b"ta kivo remo".to_vec(),
+            Vec::new(),
+            b"   \t ".to_vec(),
+            b"so lute".to_vec(),
+        ];
+        let out = score_texts(&mut be, &texts);
+        assert_eq!(out.len(), 4);
+        assert!(out[0].as_ref().unwrap().is_finite());
+        assert_eq!(out[1], Err("empty input".to_string()));
+        assert_eq!(out[2], Err("empty input".to_string()));
+        assert!(out[3].as_ref().unwrap().is_finite());
+    }
+
+    #[test]
+    fn score_texts_skipping_empties_preserves_order_and_values() {
+        // interleaved empties must not shift the scoreable texts' results
+        let mut be = micro_backend();
+        let a = b"ta kivo remo".to_vec();
+        let b_ = b"so lute pamo".to_vec();
+        let clean = score_texts(&mut be, &[a.clone(), b_.clone()]);
+        let mixed = score_texts(&mut be, &[Vec::new(), a, Vec::new(), b_]);
+        assert_eq!(mixed[1], clean[0]);
+        assert_eq!(mixed[3], clean[1]);
+    }
 }

@@ -1,4 +1,6 @@
-//! KV cache and scratch arena for the incremental decode path.
+//! KV state for the incremental decode path: single-sequence caches, the
+//! per-position scratch arena, and the multi-sequence lane pool that backs
+//! continuous-batching generation.
 //!
 //! `KvCache` holds the per-layer attention keys/values as one flat
 //! `[n_layers, seq, d_model]` f32 buffer each, allocated once at backend
@@ -7,9 +9,14 @@
 //!
 //! `Arena` is the matching scratch space: every intermediate of the
 //! per-position forward (norm outputs, q/k/v, attention mix, FFN hidden,
-//! the GEMV adjoint scratch, logits) lives in a preallocated buffer, so
-//! after startup the decode hot loop's only allocation is the logits row
-//! each `decode_step` hands back to the caller.
+//! logits) lives in a preallocated buffer, so after startup the decode hot
+//! loop's only allocation is the logits row each `decode_step` hands back
+//! to the caller.
+//!
+//! `KvPool` is N independent `Lane`s (cache + arena + consumed prefix)
+//! over one shared model: each concurrently-decoding sequence owns a lane,
+//! while the packed weights are swept once per token across all active
+//! lanes (see `NativeBackend::decode_batch`).
 
 use crate::model::ModelConfig;
 
@@ -85,24 +92,22 @@ impl KvCache {
 
 /// Preallocated scratch buffers for one decode position.
 pub struct Arena {
-    /// residual stream [d]
+    /// residual stream `[d]`
     pub x: Vec<f32>,
-    /// rmsnorm output [d]
+    /// rmsnorm output `[d]`
     pub h: Vec<f32>,
     pub q: Vec<f32>,
     pub k: Vec<f32>,
     pub v: Vec<f32>,
-    /// attention mix [d]
+    /// attention mix `[d]`
     pub attn: Vec<f32>,
-    /// wo / w2 output, added back into the residual [d]
+    /// wo / w2 output, added back into the residual `[d]`
     pub proj: Vec<f32>,
-    /// FFN hidden [d_ff]
+    /// FFN hidden `[d_ff]`
     pub ff: Vec<f32>,
-    /// attention probabilities [seq]
+    /// attention probabilities `[seq]`
     pub probs: Vec<f32>,
-    /// packed-GEMV adjoint-activation scratch [max(d, d_ff)]
-    pub zbuf: Vec<f32>,
-    /// next-token logits [vocab]
+    /// next-token logits `[vocab]`
     pub logits: Vec<f32>,
 }
 
@@ -119,15 +124,75 @@ impl Arena {
             proj: vec![0.0; d],
             ff: vec![0.0; cfg.d_ff],
             probs: vec![0.0; cfg.seq_len],
-            zbuf: vec![0.0; d.max(cfg.d_ff)],
             logits: vec![0.0; cfg.vocab],
         }
+    }
+}
+
+/// One decode lane: an independent KV sequence + per-position scratch +
+/// the bytes currently materialized in the cache.
+pub struct Lane {
+    pub cache: KvCache,
+    pub arena: Arena,
+    /// Bytes whose K/V rows fill `cache` positions `0..cache.len`.
+    pub prefix: Vec<u8>,
+}
+
+impl Lane {
+    pub fn new(cfg: &ModelConfig) -> Lane {
+        Lane {
+            cache: KvCache::new(cfg.n_layers, cfg.seq_len, cfg.d_model),
+            arena: Arena::new(cfg),
+            prefix: Vec::new(),
+        }
+    }
+
+    /// Logical reset (buffers reused, not reallocated).
+    pub fn clear(&mut self) {
+        self.cache.clear();
+        self.prefix.clear();
+    }
+}
+
+/// N independent KV lanes over one shared model — the state side of
+/// continuous batching. Lane `i` hosts one sequence; admission/eviction is
+/// the scheduler's job (`coordinator::scheduler::GenScheduler`), the pool
+/// just owns the memory.
+pub struct KvPool {
+    pub lanes: Vec<Lane>,
+}
+
+impl KvPool {
+    /// Allocate `n` lanes (at least one). Each lane owns its own KV buffer
+    /// (`2 × n_layers × seq × d_model` f32) and scratch arena.
+    pub fn new(cfg: &ModelConfig, n: usize) -> KvPool {
+        KvPool { lanes: (0..n.max(1)).map(|_| Lane::new(cfg)).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    pub fn clear_all(&mut self) {
+        for lane in &mut self.lanes {
+            lane.clear();
+        }
+    }
+
+    /// Total KV-cache bytes across lanes (capacity, not fill level).
+    pub fn bytes(&self) -> usize {
+        self.lanes.iter().map(|l| l.cache.bytes()).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::testing::micro_weights;
 
     #[test]
     fn kv_store_and_read_back() {
@@ -152,5 +217,27 @@ mod tests {
         c.store(0, 1, &[0.0], &[0.0]);
         c.advance();
         assert!(c.is_full());
+    }
+
+    #[test]
+    fn pool_allocates_independent_lanes() {
+        let cfg = micro_weights(1).config;
+        let mut pool = KvPool::new(&cfg, 3);
+        assert_eq!(pool.len(), 3);
+        assert_eq!(pool.bytes(), 3 * pool.lanes[0].cache.bytes());
+        let zeros = vec![0.0; cfg.d_model];
+        pool.lanes[1].cache.store(0, 0, &zeros, &zeros);
+        pool.lanes[1].cache.advance();
+        pool.lanes[1].prefix.push(7);
+        assert_eq!(pool.lanes[0].cache.len, 0, "lanes share state");
+        pool.clear_all();
+        assert_eq!(pool.lanes[1].cache.len, 0);
+        assert!(pool.lanes[1].prefix.is_empty());
+    }
+
+    #[test]
+    fn pool_never_empty() {
+        let cfg = micro_weights(2).config;
+        assert_eq!(KvPool::new(&cfg, 0).len(), 1);
     }
 }

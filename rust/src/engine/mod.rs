@@ -22,24 +22,33 @@
 //! row `t` in every layer and attends over rows `0..=t`, so per-token cost
 //! is one GEMV sweep + O(t·d) attention instead of the full-window
 //! re-forward the fixed-shape XLA path pays. All intermediates live in a
-//! preallocated [`Arena`](kv::Arena) — the decode loop's only per-token
-//! allocation is the logits row it returns.
+//! preallocated [`Arena`](kv::Arena). For multi-sequence serving a
+//! [`KvPool`](kv::KvPool) holds N independent lanes (cache + arena +
+//! consumed prefix) over the one shared [`PackedModel`]; a
+//! [`Backend::decode_batch`] step sweeps every packed linear once per
+//! token across all active lanes, amortizing the bit-unpack/GEMV cost that
+//! dominates 1-bit serving.
 //!
 //! # The Backend trait
 //!
 //! [`Backend`] is the serving contract: batched scoring (`nll`), full
-//! logits (`logits`), and incremental decoding (`decode_step`). Two
+//! logits (`logits`), incremental decoding (`decode_step`), and
+//! multi-lane decoding (`lanes`/`set_lanes`/`reset_lane`/`decode_batch` —
+//! stateless backends get a sequential single-lane fallback for free). Two
 //! implementations exist — [`XlaBackend`] (the PJRT/XLA runners over
 //! dequantized fp32 weights) and [`NativeBackend`] (this engine, executing
 //! the packed form directly). `coordinator::serve`, `eval`, the CLI
 //! (`--backend {xla,native}`) and the examples all run against the trait.
+//!
+//! The on-disk form of the packed layers this engine executes is specified
+//! in `docs/FORMAT.md` at the repository root.
 
 pub mod kv;
 pub mod model;
 pub mod native;
 pub mod xla;
 
-pub use kv::{Arena, KvCache};
+pub use kv::{Arena, KvCache, KvPool, Lane};
 pub use model::{LayerWeights, Linear, PackedModel};
 pub use native::NativeBackend;
 pub use xla::XlaBackend;
@@ -70,8 +79,42 @@ pub trait Backend {
     /// processes bytes beyond the prefix it has already cached.
     fn decode_step(&mut self, text: &[u8]) -> Result<Vec<f32>>;
 
-    /// Drop incremental decode state (KV cache / consumed prefix).
+    /// Drop incremental decode state (KV cache / consumed prefix) for
+    /// every lane.
     fn reset(&mut self);
+
+    /// Number of independent decode lanes (concurrently-cached sequences)
+    /// this backend hosts. Stateless backends report one.
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    /// Ask for `n` decode lanes; returns the number actually available.
+    /// The default (stateless / single-sequence backends) keeps one
+    /// logical lane — the continuous-batching scheduler adapts to
+    /// whatever this returns.
+    fn set_lanes(&mut self, n: usize) -> usize {
+        let _ = n;
+        self.lanes()
+    }
+
+    /// Drop one lane's decode state (used on admission/eviction). The
+    /// default resets everything — correct for backends with a single
+    /// lane or no decode state at all.
+    fn reset_lane(&mut self, lane: usize) {
+        let _ = lane;
+        self.reset();
+    }
+
+    /// Next-token logits for several `(lane, text)` pairs in one step
+    /// (pairs must be sorted by lane, without duplicates). The default is
+    /// the single-lane fallback: each pair runs through [`Self::decode_step`]
+    /// sequentially — correct for stateless backends like [`XlaBackend`]
+    /// that re-forward the window from the text alone. [`NativeBackend`]
+    /// overrides it to sweep each packed linear once across all lanes.
+    fn decode_batch(&mut self, reqs: &[(usize, &[u8])]) -> Result<Vec<Vec<f32>>> {
+        reqs.iter().map(|&(_, text)| self.decode_step(text)).collect()
+    }
 }
 
 /// Which backend to construct (CLI `--backend {xla,native}`).

@@ -104,6 +104,91 @@ impl Linear {
             }
         }
     }
+
+    /// Multi-lane GEMV: `io[l] = (x_l, y_l)` computes `y_l = W x_l` for
+    /// every lane in one sweep of the weight rows. The packed path
+    /// adjoint-transforms each lane's activation once into `z` (lane `l` at
+    /// `[l*cols, (l+1)*cols)`), then every row's sign words are fetched
+    /// once and dotted against all lanes — amortizing the bit-unpack and
+    /// weight-traffic cost that dominates 1-bit serving. Per-lane
+    /// arithmetic is identical to [`Linear::gemv_scratch`] (to which a
+    /// single-lane call delegates), so batched and sequential decoding
+    /// produce bit-identical results.
+    pub fn gemv_batch(
+        &self,
+        io: &mut [(&[f32], &mut [f32])],
+        z: &mut Vec<f32>,
+        threads: usize,
+    ) {
+        let lanes = io.len();
+        if lanes == 0 {
+            return;
+        }
+        if lanes == 1 {
+            let (x, y) = &mut io[0];
+            self.gemv_scratch(x, y, z, threads);
+            return;
+        }
+        let (n, m) = (self.rows(), self.cols());
+        for (x, y) in io.iter() {
+            debug_assert_eq!(x.len(), m);
+            debug_assert_eq!(y.len(), n);
+        }
+        // packed prologue: every lane's adjoint activation, side by side
+        let mut sums: Vec<(f32, f32)> = Vec::with_capacity(lanes);
+        if let Linear::Packed(p) = self {
+            z.resize(lanes * m, 0.0);
+            for (l, (x, _)) in io.iter().enumerate() {
+                sums.push(p.prepare_activation_slice(x, &mut z[l * m..(l + 1) * m]));
+            }
+        }
+        let par = threads.min(n).max(1);
+        if par <= 1 || n * m * lanes < PAR_MIN_WORK {
+            let mut xs: Vec<&[f32]> = Vec::with_capacity(lanes);
+            let mut ys: Vec<&mut [f32]> = Vec::with_capacity(lanes);
+            for (x, y) in io.iter_mut() {
+                xs.push(*x);
+                ys.push(&mut **y);
+            }
+            match self {
+                Linear::Dense(mat) => dense_gemv_rows_lanes(mat, &xs, 0, &mut ys),
+                Linear::Packed(p) => p.gemv_rows_lanes(z, &sums, 0, &mut ys),
+            }
+            return;
+        }
+        // row-parallel: split every lane's output at the same row
+        // boundaries, so each thread sweeps a row range across all lanes
+        let chunk = (n + par - 1) / par;
+        let n_chunks = (n + chunk - 1) / chunk;
+        let mut chunks: Vec<Vec<&mut [f32]>> =
+            (0..n_chunks).map(|_| Vec::with_capacity(lanes)).collect();
+        let mut xs: Vec<&[f32]> = Vec::with_capacity(lanes);
+        for (x, y) in io.iter_mut() {
+            xs.push(*x);
+            let mut rest: &mut [f32] = y;
+            for slot in chunks.iter_mut() {
+                let take = chunk.min(rest.len());
+                let (head, tail) = rest.split_at_mut(take);
+                slot.push(head);
+                rest = tail;
+            }
+        }
+        let xs = &xs;
+        let sums = &sums;
+        let z: &[f32] = z;
+        std::thread::scope(|s| {
+            for (ci, mut ys) in chunks.into_iter().enumerate() {
+                match self {
+                    Linear::Dense(mat) => {
+                        s.spawn(move || dense_gemv_rows_lanes(mat, xs, ci * chunk, &mut ys));
+                    }
+                    Linear::Packed(p) => {
+                        s.spawn(move || p.gemv_rows_lanes(z, sums, ci * chunk, &mut ys));
+                    }
+                }
+            }
+        });
+    }
 }
 
 fn dense_gemv_rows(m: &Matrix, x: &[f32], i0: usize, y: &mut [f32]) {
@@ -114,6 +199,20 @@ fn dense_gemv_rows(m: &Matrix, x: &[f32], i0: usize, y: &mut [f32]) {
             .zip(x.iter())
             .map(|(&a, &b)| a * b)
             .sum();
+    }
+}
+
+/// Multi-lane variant of [`dense_gemv_rows`]: each weight row is fetched
+/// once and dotted against every lane's activation. The per-lane dot uses
+/// the exact expression of the single-lane path, so results are
+/// bit-identical.
+fn dense_gemv_rows_lanes(m: &Matrix, xs: &[&[f32]], i0: usize, ys: &mut [&mut [f32]]) {
+    let rows = ys.first().map_or(0, |y| y.len());
+    for k in 0..rows {
+        let row = m.row(i0 + k);
+        for (x, y) in xs.iter().zip(ys.iter_mut()) {
+            y[k] = row.iter().zip(x.iter()).map(|(&a, &b)| a * b).sum();
+        }
     }
 }
 
@@ -251,6 +350,38 @@ mod tests {
         let mut y = vec![0.0; 9];
         lin.gemv(&x, &mut y, 3);
         assert_eq!(y, want);
+    }
+
+    #[test]
+    fn gemv_batch_matches_per_lane_gemv() {
+        let mut rng = Pcg32::seeded(7);
+        let dense = Linear::Dense(Matrix::from_fn(11, 32, |_, _| rng.normal_f32()));
+        let packed = Linear::Packed(HaarPackedLinear::from_dense(&Matrix::from_fn(
+            11,
+            32,
+            |_, _| rng.normal_f32(),
+        )));
+        for lin in [&dense, &packed] {
+            let xs: Vec<Vec<f32>> = (0..3)
+                .map(|_| (0..32).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let mut want: Vec<Vec<f32>> = Vec::new();
+            for x in &xs {
+                let mut y = vec![0.0; 11];
+                lin.gemv(x, &mut y, 1);
+                want.push(y);
+            }
+            let mut got: Vec<Vec<f32>> = (0..3).map(|_| vec![0.0; 11]).collect();
+            let mut io: Vec<(&[f32], &mut [f32])> = xs
+                .iter()
+                .zip(got.iter_mut())
+                .map(|(x, y)| (x.as_slice(), y.as_mut_slice()))
+                .collect();
+            let mut z = Vec::new();
+            lin.gemv_batch(&mut io, &mut z, 2);
+            drop(io);
+            assert_eq!(got, want, "multi-lane gemv diverged from per-lane");
+        }
     }
 
     #[test]

@@ -1,12 +1,16 @@
 //! The native packed-weight backend: a pure-Rust byte-level transformer
-//! forward that executes directly from `engine::PackedModel` layers.
+//! forward that executes directly from `engine::PackedModel` layers, with
+//! one KV lane per concurrently-decoding sequence.
 //!
-//! The hot path is [`NativeBackend::step`]: one decode position costs one
-//! GEMV sweep over the packed linears (6 per block + unembed) plus O(t·d)
-//! attention against the KV cache — no full-window re-forward, and no
-//! per-token allocation beyond the logits row handed back to the caller
-//! (every intermediate, including the GEMV adjoint scratch, lives in the
-//! preallocated [`Arena`]).
+//! The hot path is `step_lanes`: one decode step advances every active
+//! lane by one byte, sweeping each packed linear (6 per block + unembed)
+//! *once* across all lanes via `Linear::gemv_batch` — the
+//! weight words are fetched once per row and dotted against every lane's
+//! activation, so the bit-unpack/weight-traffic cost of 1-bit serving is
+//! amortized over the batch. Attention stays per-lane (each lane has its
+//! own KV history length). Per-lane arithmetic is identical to the
+//! single-lane path, so batched and sequential greedy decoding produce
+//! byte-identical outputs — the invariant `tests/serve_gen.rs` pins down.
 //!
 //! Op-for-op the math mirrors `model::forward` (same rmsnorm, same
 //! per-head softmax accumulation order), so a dense-mode engine reproduces
@@ -14,7 +18,7 @@
 //! `model::forward` over [`PackedModel::to_weights`] — the invariant the
 //! `engine_parity` integration test pins down.
 
-use super::kv::{Arena, KvCache};
+use super::kv::{Arena, KvCache, KvPool, Lane};
 use super::model::PackedModel;
 use super::Backend;
 use crate::data::ByteTokenizer;
@@ -23,12 +27,29 @@ use anyhow::{ensure, Result};
 
 pub struct NativeBackend {
     model: PackedModel,
-    cache: KvCache,
-    arena: Arena,
-    /// Bytes currently materialized in the cache (positions `0..cache.len`).
-    prefix: Vec<u8>,
+    pool: KvPool,
+    /// Multi-lane GEMV adjoint scratch, `[n_active * max(d, d_ff)]`.
+    zpool: Vec<f32>,
     batch: usize,
     threads: usize,
+}
+
+/// Per-lane view of one decode position: the lane's cache plus disjoint
+/// mutable borrows of every arena buffer, so the batched step can hand
+/// (input, output) pairs of *different* lanes to one `gemv_batch` sweep.
+struct LaneStep<'a> {
+    cache: &'a mut KvCache,
+    t: usize,
+    x: &'a mut [f32],
+    h: &'a mut [f32],
+    q: &'a mut [f32],
+    k: &'a mut [f32],
+    v: &'a mut [f32],
+    attn: &'a mut [f32],
+    proj: &'a mut [f32],
+    ff: &'a mut [f32],
+    probs: &'a mut [f32],
+    logits: &'a mut [f32],
 }
 
 impl NativeBackend {
@@ -41,14 +62,11 @@ impl NativeBackend {
     }
 
     pub fn with_threads(model: PackedModel, batch: usize, threads: usize) -> NativeBackend {
-        let cfg = &model.config;
-        let cache = KvCache::new(cfg.n_layers, cfg.seq_len, cfg.d_model);
-        let arena = Arena::new(cfg);
+        let pool = KvPool::new(&model.config, 1);
         NativeBackend {
-            cache,
-            arena,
+            pool,
+            zpool: Vec::new(),
             model,
-            prefix: Vec::new(),
             batch: batch.max(1),
             threads: threads.max(1),
         }
@@ -58,79 +76,165 @@ impl NativeBackend {
         &self.model
     }
 
-    /// Advance the cache by one position: embed `byte` at position
-    /// `cache.len`, run every block against the cached K/V, leave the
-    /// next-token logits in `arena.logits`.
-    fn step(&mut self, byte: u8) -> Result<()> {
-        ensure!(!self.cache.is_full(), "kv cache full (seq {})", self.cache.seq);
-        let NativeBackend { model, cache, arena, threads, .. } = self;
+    /// Advance the given lanes by one byte each: embed `byte` at each
+    /// lane's next position, run every block sweeping each linear once
+    /// across all lanes, leave each lane's next-token logits in its arena.
+    /// `active` must be sorted by lane index, without duplicates.
+    fn step_lanes(&mut self, active: &[(usize, u8)]) -> Result<()> {
+        if active.is_empty() {
+            return Ok(());
+        }
+        let n_lanes = self.pool.len();
+        let NativeBackend { model, pool, zpool, threads, .. } = self;
         let threads = *threads;
         let cfg = &model.config;
         let (d, heads, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
         let scale = 1.0 / (dh as f32).sqrt();
-        let t = cache.len;
-        let Arena { x, h, q, k, v, attn, proj, ff, probs, zbuf, logits } = arena;
 
-        let te = model.tok_emb.row(byte as usize);
-        let pe = model.pos_emb.row(t);
-        for j in 0..d {
-            x[j] = te[j] + pe[j];
+        // disjoint &mut Lane for the active set (ascending, unique)
+        let mut lanes: Vec<&mut Lane> = Vec::with_capacity(active.len());
+        {
+            let mut rest: &mut [Lane] = &mut pool.lanes;
+            let mut consumed = 0usize;
+            for &(idx, _) in active {
+                ensure!(
+                    idx >= consumed,
+                    "decode lanes must be sorted and unique (lane {idx})"
+                );
+                ensure!(idx < n_lanes, "lane {idx} out of range ({n_lanes} lanes)");
+                let (head, tail) = rest.split_at_mut(idx - consumed + 1);
+                lanes.push(head.last_mut().unwrap());
+                consumed = idx + 1;
+                rest = tail;
+            }
+        }
+
+        // embed + per-lane step contexts
+        let mut ctxs: Vec<LaneStep> = Vec::with_capacity(lanes.len());
+        for (lane, &(_, byte)) in lanes.into_iter().zip(active) {
+            ensure!(!lane.cache.is_full(), "kv cache full (seq {})", lane.cache.seq);
+            let t = lane.cache.len;
+            let Lane { cache, arena, .. } = lane;
+            let Arena { x, h, q, k, v, attn, proj, ff, probs, logits } = arena;
+            let te = model.tok_emb.row(byte as usize);
+            let pe = model.pos_emb.row(t);
+            for j in 0..d {
+                x[j] = te[j] + pe[j];
+            }
+            ctxs.push(LaneStep {
+                cache,
+                t,
+                x: &mut x[..],
+                h: &mut h[..],
+                q: &mut q[..],
+                k: &mut k[..],
+                v: &mut v[..],
+                attn: &mut attn[..],
+                proj: &mut proj[..],
+                ff: &mut ff[..],
+                probs: &mut probs[..],
+                logits: &mut logits[..],
+            });
         }
 
         for (li, layer) in model.layers.iter().enumerate() {
             // --- attention ---
-            rmsnorm(x, &layer.ln1, h);
-            layer.wq.gemv_scratch(h, q, zbuf, threads);
-            layer.wk.gemv_scratch(h, k, zbuf, threads);
-            layer.wv.gemv_scratch(h, v, zbuf, threads);
-            cache.store(li, t, k, v);
-            for hd in 0..heads {
-                let c0 = hd * dh;
-                let mut maxv = f32::NEG_INFINITY;
-                for u in 0..=t {
-                    let krow = cache.key(li, u);
-                    let mut dot = 0f32;
+            for c in ctxs.iter_mut() {
+                rmsnorm(c.x, &layer.ln1, c.h);
+            }
+            {
+                let mut io: Vec<(&[f32], &mut [f32])> =
+                    ctxs.iter_mut().map(|c| (&*c.h, &mut *c.q)).collect();
+                layer.wq.gemv_batch(&mut io, zpool, threads);
+            }
+            {
+                let mut io: Vec<(&[f32], &mut [f32])> =
+                    ctxs.iter_mut().map(|c| (&*c.h, &mut *c.k)).collect();
+                layer.wk.gemv_batch(&mut io, zpool, threads);
+            }
+            {
+                let mut io: Vec<(&[f32], &mut [f32])> =
+                    ctxs.iter_mut().map(|c| (&*c.h, &mut *c.v)).collect();
+                layer.wv.gemv_batch(&mut io, zpool, threads);
+            }
+            for c in ctxs.iter_mut() {
+                c.cache.store(li, c.t, c.k, c.v);
+                for hd in 0..heads {
+                    let c0 = hd * dh;
+                    let mut maxv = f32::NEG_INFINITY;
+                    for u in 0..=c.t {
+                        let krow = c.cache.key(li, u);
+                        let mut dot = 0f32;
+                        for j in 0..dh {
+                            dot += c.q[c0 + j] * krow[c0 + j];
+                        }
+                        let l = dot * scale;
+                        c.probs[u] = l;
+                        maxv = maxv.max(l);
+                    }
+                    let mut z = 0f32;
+                    for u in 0..=c.t {
+                        c.probs[u] = (c.probs[u] - maxv).exp();
+                        z += c.probs[u];
+                    }
+                    let inv_z = 1.0 / z;
                     for j in 0..dh {
-                        dot += q[c0 + j] * krow[c0 + j];
+                        let mut acc = 0f32;
+                        for u in 0..=c.t {
+                            acc += c.probs[u] * inv_z * c.cache.val(li, u)[c0 + j];
+                        }
+                        c.attn[c0 + j] = acc;
                     }
-                    let l = dot * scale;
-                    probs[u] = l;
-                    maxv = maxv.max(l);
-                }
-                let mut z = 0f32;
-                for u in 0..=t {
-                    probs[u] = (probs[u] - maxv).exp();
-                    z += probs[u];
-                }
-                let inv_z = 1.0 / z;
-                for j in 0..dh {
-                    let mut acc = 0f32;
-                    for u in 0..=t {
-                        acc += probs[u] * inv_z * cache.val(li, u)[c0 + j];
-                    }
-                    attn[c0 + j] = acc;
                 }
             }
-            layer.wo.gemv_scratch(attn, proj, zbuf, threads);
-            for j in 0..d {
-                x[j] += proj[j];
+            {
+                let mut io: Vec<(&[f32], &mut [f32])> =
+                    ctxs.iter_mut().map(|c| (&*c.attn, &mut *c.proj)).collect();
+                layer.wo.gemv_batch(&mut io, zpool, threads);
+            }
+            for c in ctxs.iter_mut() {
+                for j in 0..d {
+                    c.x[j] += c.proj[j];
+                }
             }
 
             // --- MLP ---
-            rmsnorm(x, &layer.ln2, h);
-            layer.w1.gemv_scratch(h, ff, zbuf, threads);
-            for vv in ff.iter_mut() {
-                *vv = gelu_tanh(*vv);
+            for c in ctxs.iter_mut() {
+                rmsnorm(c.x, &layer.ln2, c.h);
             }
-            layer.w2.gemv_scratch(ff, proj, zbuf, threads);
-            for j in 0..d {
-                x[j] += proj[j];
+            {
+                let mut io: Vec<(&[f32], &mut [f32])> =
+                    ctxs.iter_mut().map(|c| (&*c.h, &mut *c.ff)).collect();
+                layer.w1.gemv_batch(&mut io, zpool, threads);
+            }
+            for c in ctxs.iter_mut() {
+                for vv in c.ff.iter_mut() {
+                    *vv = gelu_tanh(*vv);
+                }
+            }
+            {
+                let mut io: Vec<(&[f32], &mut [f32])> =
+                    ctxs.iter_mut().map(|c| (&*c.ff, &mut *c.proj)).collect();
+                layer.w2.gemv_batch(&mut io, zpool, threads);
+            }
+            for c in ctxs.iter_mut() {
+                for j in 0..d {
+                    c.x[j] += c.proj[j];
+                }
             }
         }
 
-        rmsnorm(x, &model.ln_f, h);
-        model.unemb.gemv_scratch(h, logits, zbuf, threads);
-        cache.advance();
+        for c in ctxs.iter_mut() {
+            rmsnorm(c.x, &model.ln_f, c.h);
+        }
+        {
+            let mut io: Vec<(&[f32], &mut [f32])> =
+                ctxs.iter_mut().map(|c| (&*c.h, &mut *c.logits)).collect();
+            model.unemb.gemv_batch(&mut io, zpool, threads);
+        }
+        for c in ctxs.iter_mut() {
+            c.cache.advance();
+        }
         Ok(())
     }
 
@@ -142,10 +246,10 @@ impl NativeBackend {
         Ok(tok as u8)
     }
 
-    /// NLL of `row[t+1]` under the logits currently in the arena (same
-    /// formula as `model::nll_from_logits`).
+    /// NLL of the next token under lane 0's current logits (same formula as
+    /// `model::nll_from_logits`).
     fn nll_of_next(&self, next: u8) -> f32 {
-        let row = &self.arena.logits;
+        let row = &self.pool.lanes[0].arena.logits;
         let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
         let logz: f32 = maxv + row.iter().map(|&v| (v - maxv).exp()).sum::<f32>().ln();
         logz - row[next as usize]
@@ -169,6 +273,17 @@ impl Backend for NativeBackend {
         self.model.config.vocab
     }
 
+    fn lanes(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Reallocate the lane pool. Drops all decode state (every lane's KV
+    /// cache and prefix); the scheduler resets lanes on admission anyway.
+    fn set_lanes(&mut self, n: usize) -> usize {
+        self.pool = KvPool::new(&self.model.config, n);
+        self.pool.len()
+    }
+
     fn nll(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
         let (b, s) = (self.batch, self.model.config.seq_len);
         ensure!(tokens.len() == b * s, "expected {}x{} tokens, got {}", b, s, tokens.len());
@@ -182,17 +297,17 @@ impl Backend for NativeBackend {
                 out.extend_from_within(prev..);
                 continue;
             }
-            self.reset();
+            self.reset_lane(0);
             for t in 0..s {
                 let byte = self.check_token(tokens[r * s + t])?;
-                self.step(byte)?;
+                self.step_lanes(&[(0, byte)])?;
                 if t + 1 < s {
                     let next = self.check_token(tokens[r * s + t + 1])?;
                     out.push(self.nll_of_next(next));
                 }
             }
         }
-        self.reset();
+        self.reset_lane(0);
         Ok(out)
     }
 
@@ -206,48 +321,103 @@ impl Backend for NativeBackend {
                 out.extend_from_within(prev..);
                 continue;
             }
-            self.reset();
+            self.reset_lane(0);
             for t in 0..s {
                 let byte = self.check_token(tokens[r * s + t])?;
-                self.step(byte)?;
-                out.extend_from_slice(&self.arena.logits);
+                self.step_lanes(&[(0, byte)])?;
+                out.extend_from_slice(&self.pool.lanes[0].arena.logits);
             }
         }
-        self.reset();
+        self.reset_lane(0);
         Ok(out)
     }
 
     fn decode_step(&mut self, text: &[u8]) -> Result<Vec<f32>> {
+        Ok(self.decode_batch(&[(0, text)])?.pop().unwrap())
+    }
+
+    /// Multi-sequence decode: each `(lane, text)` pair is advanced to the
+    /// end of its text, incrementally where the lane's cached prefix still
+    /// matches. Lanes march in lock step — per sub-step, the next byte of
+    /// every lane that still has pending bytes is processed in one
+    /// `step_lanes` sweep — so a freshly admitted lane prefills its
+    /// prompt while established lanes decode, and the packed-weight sweep
+    /// is always shared across whatever is active (continuous batching).
+    fn decode_batch(&mut self, reqs: &[(usize, &[u8])]) -> Result<Vec<Vec<f32>>> {
         let s = self.model.config.seq_len;
-        // last `seq` bytes are the visible window; an empty text is seeded
-        // with the pad byte so position 0 always exists
-        let window: &[u8] = if text.is_empty() {
-            const SEED: [u8; 1] = [ByteTokenizer::PAD];
-            &SEED
-        } else {
-            &text[text.len().saturating_sub(s)..]
-        };
-        let keep = self.prefix.len();
-        if window.len() >= keep && window[..keep] == self.prefix[..] {
-            // pure incremental: only the unseen suffix runs through the model
-            for i in keep..window.len() {
-                self.step(window[i])?;
+        const SEED: [u8; 1] = [ByteTokenizer::PAD];
+        let mut windows: Vec<&[u8]> = Vec::with_capacity(reqs.len());
+        let mut done: Vec<usize> = Vec::with_capacity(reqs.len());
+        for (ri, &(lane, text)) in reqs.iter().enumerate() {
+            ensure!(lane < self.pool.len(), "lane {lane} out of range ({} lanes)", self.pool.len());
+            ensure!(
+                ri == 0 || reqs[ri - 1].0 < lane,
+                "decode_batch lanes must be sorted and unique"
+            );
+            // last `seq` bytes are the visible window; an empty text is
+            // seeded with the pad byte so position 0 always exists
+            let window: &[u8] = if text.is_empty() {
+                &SEED
+            } else {
+                &text[text.len().saturating_sub(s)..]
+            };
+            let lane_ref = &mut self.pool.lanes[lane];
+            let keep = lane_ref.prefix.len();
+            // incremental only when the cache really holds the recorded
+            // prefix (scoring calls share lane 0 and reset it, and a failed
+            // nll can leave a partial fill) — otherwise re-prefill
+            if lane_ref.cache.len == keep
+                && window.len() >= keep
+                && window[..keep] == lane_ref.prefix[..]
+            {
+                // pure incremental: only the unseen suffix runs through
+                done.push(keep);
+            } else {
+                // window slid (or context switched): re-prefill from scratch
+                lane_ref.cache.clear();
+                done.push(0);
             }
-        } else {
-            // window slid (or context switched): re-prefill from scratch
-            self.cache.clear();
-            for &b in window {
-                self.step(b)?;
+            windows.push(window);
+        }
+        // lock-step advance over the pending suffixes
+        let mut active: Vec<(usize, u8)> = Vec::with_capacity(reqs.len());
+        let mut stepped: Vec<usize> = Vec::with_capacity(reqs.len());
+        loop {
+            active.clear();
+            stepped.clear();
+            for (ri, &(lane, _)) in reqs.iter().enumerate() {
+                if done[ri] < windows[ri].len() {
+                    active.push((lane, windows[ri][done[ri]]));
+                    stepped.push(ri);
+                }
+            }
+            if active.is_empty() {
+                break;
+            }
+            self.step_lanes(&active)?;
+            for &ri in &stepped {
+                done[ri] += 1;
             }
         }
-        self.prefix.clear();
-        self.prefix.extend_from_slice(window);
-        Ok(self.arena.logits.clone())
+        // commit prefixes + hand back each lane's logits
+        let mut out = Vec::with_capacity(reqs.len());
+        for (ri, &(lane, _)) in reqs.iter().enumerate() {
+            let lane_ref = &mut self.pool.lanes[lane];
+            lane_ref.prefix.clear();
+            lane_ref.prefix.extend_from_slice(windows[ri]);
+            out.push(lane_ref.arena.logits.clone());
+        }
+        Ok(out)
     }
 
     fn reset(&mut self) {
-        self.cache.clear();
-        self.prefix.clear();
+        self.pool.clear_all();
+    }
+
+    fn reset_lane(&mut self, lane: usize) {
+        if let Some(l) = self.pool.lanes.get_mut(lane) {
+            l.clear();
+        }
     }
 }
 
@@ -309,9 +479,11 @@ mod tests {
         // same values the recompute would
         let w = micro_weights(26);
         let window: Vec<u8> = (0..12u8).map(|i| i.wrapping_mul(19)).collect();
-        let mut single = NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        let mut single =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
         let one = single.nll(&tokens_for(&window, 1)).unwrap();
-        let mut batched = NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 2, 1);
+        let mut batched =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 2, 1);
         let two = batched.nll(&tokens_for(&window, 2)).unwrap();
         let per = window.len() - 1;
         assert_eq!(two.len(), 2 * per);
@@ -355,5 +527,69 @@ mod tests {
         let mut toks = vec![0i32; seq];
         toks[2] = 999; // out of byte range
         assert!(be.nll(&toks).is_err());
+    }
+
+    #[test]
+    fn set_lanes_reallocates_pool() {
+        let w = micro_weights(27);
+        let mut be =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        assert_eq!(be.lanes(), 1);
+        assert_eq!(be.set_lanes(3), 3);
+        assert_eq!(be.lanes(), 3);
+        assert_eq!(be.set_lanes(0), 1, "pool never drops below one lane");
+    }
+
+    #[test]
+    fn decode_batch_rejects_bad_lane_sets() {
+        let w = micro_weights(28);
+        let mut be =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        be.set_lanes(2);
+        let t: &[u8] = b"ab";
+        assert!(be.decode_batch(&[(2, t)]).is_err(), "out of range");
+        assert!(be.decode_batch(&[(1, t), (0, t)]).is_err(), "unsorted");
+        assert!(be.decode_batch(&[(0, t), (0, t)]).is_err(), "duplicate");
+        // and a valid call still works afterwards
+        assert_eq!(be.decode_batch(&[(0, t), (1, t)]).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn scoring_between_decode_steps_self_heals_lane0() {
+        // serve interleaves nll scoring (which clobbers lane 0) with
+        // generation; the next decode must re-prefill and match an
+        // uninterrupted run exactly
+        let w = micro_weights(30);
+        let mk = || NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        let mut clean = mk();
+        let a = clean.decode_step(b"ta ki").unwrap();
+        let b = clean.decode_step(b"ta kiv").unwrap();
+
+        let mut mixed = mk();
+        let a2 = mixed.decode_step(b"ta ki").unwrap();
+        let window: Vec<i32> = (0..mixed.seq() as i32).collect();
+        mixed.nll(&window).unwrap(); // scoring call resets lane 0
+        let b2 = mixed.decode_step(b"ta kiv").unwrap();
+        assert_eq!(a, a2);
+        assert_eq!(b, b2, "lane 0 did not recover from interleaved scoring");
+    }
+
+    #[test]
+    fn decode_batch_matches_decode_step_per_lane() {
+        // same prompts through (a) two independent single-lane backends and
+        // (b) one two-lane backend — logits must be bit-identical
+        let w = micro_weights(29);
+        let texts: [&[u8]; 2] = [b"ta ki", b"vo"];
+        let mut want = Vec::new();
+        for t in texts {
+            let mut be =
+                NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+            want.push(be.decode_step(t).unwrap());
+        }
+        let mut be =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        be.set_lanes(2);
+        let got = be.decode_batch(&[(0, texts[0]), (1, texts[1])]).unwrap();
+        assert_eq!(got, want);
     }
 }

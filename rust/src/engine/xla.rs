@@ -4,6 +4,13 @@
 //! weights. `decode_step` has no KV cache — the AOT module is fixed-shape —
 //! so each step re-forwards the whole window; it exists as the baseline the
 //! native engine's incremental path is benchmarked against.
+//!
+//! Multi-lane decoding uses the trait's default single-lane fallback:
+//! `decode_step` is stateless (the window is rebuilt from the text every
+//! call), so `decode_batch` simply re-forwards each `(lane, text)` pair
+//! sequentially and `reset`/`reset_lane` are no-ops. The generation
+//! scheduler still works against this backend — it just gets no
+//! weight-sweep amortization.
 
 use super::Backend;
 use crate::data::ByteTokenizer;

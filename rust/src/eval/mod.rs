@@ -1,7 +1,7 @@
 //! Evaluation harness: perplexity over the synthetic corpora and zero-shot
 //! accuracy over the 9 QA task families (lm-eval-harness-style option
 //! scoring). Backend-generic: everything scores through
-//! [`engine::Backend::nll`], so the XLA runners and the native packed
+//! [`engine::Backend::nll`](crate::engine::Backend::nll), so the XLA runners and the native packed
 //! engine are interchangeable here.
 
 use crate::data::{batches, Corpus, TaskFile, TaskItem};

@@ -1,10 +1,10 @@
 //! 1-level (optionally multi-level) 1D Haar transform, matching the paper's
 //! §3.6 convention and the L1 Pallas kernel bit-for-bit:
 //!
-//!   analysis : lo[k] = (x[2k] + x[2k+1]) / 2,  hi[k] = (x[2k] - x[2k+1]) / 2
-//!   synthesis: x[2k] = lo[k] + hi[k],          x[2k+1] = lo[k] - hi[k]
+//!   `analysis : lo[k] = (x[2k] + x[2k+1]) / 2,  hi[k] = (x[2k] - x[2k+1]) / 2`
+//!   `synthesis: x[2k] = lo[k] + hi[k],          x[2k+1] = lo[k] - hi[k]`
 //!
-//! Output layout is [low band ++ high band] along the transformed axis.
+//! Output layout is `[low band ++ high band]` along the transformed axis.
 //! The pair is biorthogonal and exactly invertible; cost is O(d) per row
 //! (the "local convolution" the paper contrasts with FrameQuant's O(d²)).
 

@@ -1,7 +1,11 @@
 //! HBLLM — wavelet-enhanced high-fidelity 1-bit post-training quantization
 //! for LLMs (NeurIPS 2025) — full-system Rust + JAX + Pallas reproduction.
 //!
-//! Layer map (see DESIGN.md):
+//! Start with `README.md` at the repository root (quickstart, architecture
+//! map, backend matrix, serving protocol) and `docs/FORMAT.md` (the packed
+//! `.hbq` wire format).
+//!
+//! Layer map:
 //! * [`quant`] — the paper's contribution: HaarQuant + structure-aware
 //!   grouping, and every baseline (BiLLM, ARB-LLM, PB-LLM, FrameQuant).
 //! * [`haar`], [`tensor`], [`pack`] — numeric substrates.
@@ -9,10 +13,12 @@
 //!   (byte-level GPT, Hessian collection, perplexity + zero-shot QA).
 //! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts.
 //! * [`engine`] — native packed-weight inference: the byte-level
-//!   transformer executed directly from Haar-packed 1-bit linears with a
-//!   KV cache, plus the [`engine::Backend`] trait that makes eval/serving
-//!   backend-generic (`--backend {xla,native}`).
-//! * [`coordinator`] — quantization job scheduling and batched serving.
+//!   transformer executed directly from Haar-packed 1-bit linears, with a
+//!   KV-lane pool for multi-sequence decoding and the [`engine::Backend`]
+//!   trait that makes eval/serving backend-generic
+//!   (`--backend {xla,native}`).
+//! * [`coordinator`] — quantization job scheduling, scoring batches, and
+//!   the continuous-batching generation server.
 
 pub mod calib;
 pub mod cli;

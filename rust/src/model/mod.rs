@@ -355,7 +355,24 @@ pub mod testing {
 
     /// Hand-build a micro model (no artifact dependency).
     pub fn micro_weights(seed: u64) -> Weights {
-        let (d, layers, heads, dff, seq, vocab) = (16usize, 2usize, 2usize, 32usize, 12usize, 256usize);
+        let mut w = synth_weights(seed, 16, 2, 2, 32, 12);
+        w.config.name = "micro".into();
+        w
+    }
+
+    /// Hand-build a synthetic model of the given shape (no artifact
+    /// dependency): unit norm gains, N(0, 1/√fan-in) linears, byte vocab.
+    /// The serve-throughput bench uses a larger shape than `micro_weights`
+    /// so the per-token GEMV cost is measurable.
+    pub fn synth_weights(
+        seed: u64,
+        d: usize,
+        layers: usize,
+        heads: usize,
+        dff: usize,
+        seq: usize,
+    ) -> Weights {
+        let vocab = 256usize;
         let mut order = vec!["tok_emb".to_string(), "pos_emb".to_string()];
         for i in 0..layers {
             for k in ["ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2"] {
@@ -395,7 +412,7 @@ pub mod testing {
         }
         Weights {
             config: ModelConfig {
-                name: "micro".into(),
+                name: format!("synth-d{d}-l{layers}"),
                 d_model: d,
                 n_layers: layers,
                 n_heads: heads,

@@ -15,6 +15,10 @@
 //! Scale/mean parameters are genuinely stored at fp16, so a saved+loaded
 //! model measures the true cost of the paper's storage budget (tests check
 //! the roundtrip error against the fp16 quantization step).
+//!
+//! The byte-level specification (field semantics, invariants, storage
+//! accounting) lives in `docs/FORMAT.md` at the repository root — keep the
+//! two in sync when bumping `VERSION`.
 
 use super::{BitMatrix, HaarPackedLinear};
 use crate::model::{Tensor, Weights};

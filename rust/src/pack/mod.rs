@@ -6,6 +6,10 @@
 //! HBLLM reconstruction folds into the same pass (the Haar synthesis is a
 //! 2-tap butterfly applied to the *activation* side instead — see
 //! `HaarPackedLinear::gemv`).
+//!
+//! The serialized form of these layers (the `.hbq` deployment artifact,
+//! written by [`format`]) is specified byte-by-byte in `docs/FORMAT.md` at
+//! the repository root.
 
 pub mod format;
 
@@ -131,7 +135,7 @@ impl BitMatrix {
         self.words.len() * 8
     }
 
-    /// Masked sum: Σ_{j: bit set} x[j] for one row.
+    /// Masked sum: `Σ_{j: bit set} x[j]` for one row.
     #[inline]
     pub fn masked_sum(&self, i: usize, x: &[f32]) -> f32 {
         debug_assert_eq!(x.len(), self.cols);
@@ -200,7 +204,7 @@ impl PackedLinear {
 /// HBLLM deployment layer: Haar-domain signs + per-row per-band (α, μ).
 ///
 /// y = HaarInv_row(α⊙s + μ) · x. Rather than reconstructing W, we use
-/// <HaarInv(c)_i, x> = <c_i, A x> where A is the synthesis adjoint — i.e.
+/// `<HaarInv(c)_i, x> = <c_i, A x>` where A is the synthesis adjoint — i.e.
 /// transform the activation once per call (O(m)), then every row is a plain
 /// binary dot in the Haar domain. This is the paper's "local convolution,
 /// fuses into the linear layer" argument, executable form.
@@ -240,8 +244,8 @@ impl HaarPackedLinear {
         HaarPackedLinear { bits: BitMatrix::from_signs(&signs), alpha, mu }
     }
 
-    /// Adjoint-transformed activation: z with <c_i, z> = <HaarInv(c_i), x>.
-    /// From the synthesis map: z_lo[k] = x[2k] + x[2k+1], z_hi[k] = x[2k] - x[2k+1].
+    /// Adjoint-transformed activation: z with `<c_i, z> = <HaarInv(c_i), x>`.
+    /// From the synthesis map: `z_lo[k] = x[2k] + x[2k+1]`, `z_hi[k] = x[2k] - x[2k+1]`.
     pub fn adjoint_activation(x: &[f32]) -> Vec<f32> {
         let h = x.len() / 2;
         let mut z = vec![0.0f32; x.len()];
@@ -271,9 +275,18 @@ impl HaarPackedLinear {
     /// the engine hot loop's allocation-free path.
     pub fn prepare_activation_into(&self, x: &[f32], z: &mut Vec<f32>) -> (f32, f32) {
         let m = self.bits.cols;
-        debug_assert_eq!(x.len(), m);
-        let h = m / 2;
         z.resize(m, 0.0);
+        self.prepare_activation_slice(x, &mut z[..m])
+    }
+
+    /// As [`Self::prepare_activation`], but writing into an exactly-sized
+    /// slice — used by the multi-lane GEMV to lay several lanes' adjoint
+    /// activations side by side in one scratch buffer.
+    pub fn prepare_activation_slice(&self, x: &[f32], z: &mut [f32]) -> (f32, f32) {
+        let m = self.bits.cols;
+        debug_assert_eq!(x.len(), m);
+        debug_assert_eq!(z.len(), m);
+        let h = m / 2;
         for k in 0..h {
             z[k] = x[2 * k] + x[2 * k + 1];
             z[h + k] = x[2 * k] - x[2 * k + 1];
@@ -296,6 +309,41 @@ impl HaarPackedLinear {
             let dot_lo = self.alpha[i][0] * dot_s_lo + self.mu[i][0] * sum_lo;
             let dot_hi = self.alpha[i][1] * dot_s_hi + self.mu[i][1] * sum_hi;
             *out = dot_lo + dot_hi;
+        }
+    }
+
+    /// Multi-lane GEMV over rows `[i0, i0 + ys[l].len())`: one sweep of the
+    /// packed sign words serves every lane. `z_all` holds the lanes'
+    /// prepared activations back to back (`lane l` at `[l*m, (l+1)*m)`, see
+    /// [`Self::prepare_activation_slice`]) and `sums[l]` the matching
+    /// per-band sums. Each row's bit words are fetched once and dotted
+    /// against all lanes while hot — the amortization that makes batched
+    /// decoding cheaper than `lanes × gemv_rows`. Per-row-per-lane
+    /// arithmetic is identical to [`Self::gemv_rows`], so single-lane and
+    /// batched decoding produce bit-identical results.
+    pub fn gemv_rows_lanes(
+        &self,
+        z_all: &[f32],
+        sums: &[(f32, f32)],
+        i0: usize,
+        ys: &mut [&mut [f32]],
+    ) {
+        let m = self.bits.cols;
+        let h = m / 2;
+        debug_assert_eq!(ys.len(), sums.len());
+        debug_assert_eq!(z_all.len(), ys.len() * m);
+        let rows = ys.first().map_or(0, |y| y.len());
+        for k in 0..rows {
+            let i = i0 + k;
+            let words = self.bits.row_words(i);
+            for (l, y) in ys.iter_mut().enumerate() {
+                let z = &z_all[l * m..(l + 1) * m];
+                let dot_s_lo = signed_dot_range(words, z, 0, h);
+                let dot_s_hi = signed_dot_range(words, z, h, m);
+                let dot_lo = self.alpha[i][0] * dot_s_lo + self.mu[i][0] * sums[l].0;
+                let dot_hi = self.alpha[i][1] * dot_s_hi + self.mu[i][1] * sums[l].1;
+                y[k] = dot_lo + dot_hi;
+            }
         }
     }
 
@@ -411,6 +459,37 @@ mod tests {
             p.gemv_rows(&z, slo, shi, i0, &mut part[i0..i1]);
         }
         assert_eq!(full, part);
+    }
+
+    #[test]
+    fn gemv_rows_lanes_is_bit_identical_to_per_lane_gemv() {
+        let mut rng = Pcg32::seeded(11);
+        let w = rand_mat(&mut rng, 17, 64);
+        let p = HaarPackedLinear::from_dense(&w);
+        let m = 64;
+        let lanes = 3;
+        let xs: Vec<Vec<f32>> = (0..lanes)
+            .map(|_| (0..m).map(|_| rng.normal_f32()).collect())
+            .collect();
+        // single-lane reference
+        let mut want: Vec<Vec<f32>> = Vec::new();
+        for x in &xs {
+            let mut y = vec![0.0; 17];
+            p.gemv(x, &mut y);
+            want.push(y);
+        }
+        // batched: adjoint activations side by side, rows swept once
+        let mut z_all = vec![0.0f32; lanes * m];
+        let mut sums = Vec::new();
+        for (l, x) in xs.iter().enumerate() {
+            sums.push(p.prepare_activation_slice(x, &mut z_all[l * m..(l + 1) * m]));
+        }
+        let mut got: Vec<Vec<f32>> = (0..lanes).map(|_| vec![0.0; 17]).collect();
+        {
+            let mut ys: Vec<&mut [f32]> = got.iter_mut().map(|y| y.as_mut_slice()).collect();
+            p.gemv_rows_lanes(&z_all, &sums, 0, &mut ys);
+        }
+        assert_eq!(got, want, "multi-lane sweep diverged from per-lane gemv");
     }
 
     #[test]

@@ -186,6 +186,21 @@ impl Session {
         }
     }
 
+    /// Serving backend: generation-capable, with `lanes` KV decode lanes
+    /// requested for continuous batching. Backends without multi-lane
+    /// state (the stateless XLA path) keep a single logical lane; the
+    /// generation scheduler adapts to whatever [`Backend::lanes`] reports.
+    pub fn serve_backend(
+        &self,
+        weights: &Weights,
+        kind: BackendKind,
+        lanes: usize,
+    ) -> Result<Box<dyn Backend>> {
+        let mut be = self.gen_backend(weights, kind)?;
+        be.set_lanes(lanes);
+        Ok(be)
+    }
+
     /// Full quality evaluation: perplexity on the 3 corpora + AvgQA.
     pub fn evaluate(&self, be: &mut dyn Backend, scope: &EvalScope) -> Result<EvalReport> {
         let mut ppl = Vec::new();
