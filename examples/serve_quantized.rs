@@ -3,9 +3,11 @@
 //! (`ppl`) and streamed generation (`gen`) traffic at it, and report
 //! scoring latency percentiles plus generation throughput.
 //! `--backend native` serves straight from the packed 1-bit engine with
-//! multi-lane KV decoding; `--lanes` sets the lane count.
+//! multi-lane KV decoding; `--lanes` sets the lane count and
+//! `--kv-blocks`/`--block-len` size the paged KV arena (default: worst
+//! case — shrink it to watch admission backpressure under load).
 //!
-//!     cargo run --release --example serve_quantized [-- --requests 64] [-- --clients 8] [-- --backend native] [-- --lanes 4]
+//!     cargo run --release --example serve_quantized [-- --requests 64] [-- --clients 8] [-- --backend native] [-- --lanes 4] [-- --kv-blocks 16]
 
 use hbllm::coordinator::{serve, BatcherConfig, QuantJobConfig};
 use hbllm::engine::{Backend, BackendKind};
@@ -34,7 +36,9 @@ fn main() -> anyhow::Result<()> {
         &scope,
         &QuantJobConfig { quiet: true, ..Default::default() },
     )?;
-    let mut backend = session.serve_backend(&qw, kind, lanes)?;
+    let kv_blocks = args.get("kv-blocks").and_then(|v| v.parse().ok());
+    let block_len = args.get("block-len").and_then(|v| v.parse().ok());
+    let mut backend = session.serve_backend(&qw, kind, lanes, kv_blocks, block_len)?;
 
     // request corpus: lines from wiki2s
     let corpus = session.corpus("wiki2s")?;

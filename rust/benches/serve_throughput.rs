@@ -9,6 +9,11 @@
 //! with the lane count. No TCP/artifacts involved — the model is
 //! synthetic, so this measures the engine + scheduler only.
 //!
+//! Each lane count also reports its paged-KV arena footprint (the
+//! `kv KiB` column / `kv_bytes` in the JSON): with the worst-case default
+//! the arena grows linearly with lanes, which is exactly the memory the
+//! `--kv-blocks` flag lets serving trade against admission backpressure.
+//!
 //! Results land in BENCH_serve.json via util::bench::write_json so the
 //! trajectory is comparable across commits.
 //!
@@ -66,11 +71,13 @@ fn main() -> anyhow::Result<()> {
 
     let mut measurements: Vec<Measurement> = Vec::new();
     let mut tokens_per_s = BTreeMap::new();
-    let mut table = Table::new(&["lanes", "tokens/s", "vs 1 lane"]);
+    let mut kv_bytes = BTreeMap::new();
+    let mut table = Table::new(&["lanes", "tokens/s", "vs 1 lane", "kv KiB"]);
     let mut base_tps = 0.0f64;
     for lanes in LANE_COUNTS {
         let mut be = NativeBackend::with_threads(PackedModel::from_weights(&w, true)?, 1, 1);
         be.set_lanes(lanes);
+        let arena_bytes = be.kv_stats().map(|s| s.arena_bytes).unwrap_or(0);
         // warmup + sanity: the full request pool must drain exactly
         assert_eq!(run_once(&mut be, &prompts), expect, "scheduler failed to drain");
         let m = bench(&format!("lanes-{lanes}"), 0.5, || {
@@ -84,8 +91,10 @@ fn main() -> anyhow::Result<()> {
             format!("{lanes}"),
             format!("{tps:.0}"),
             format!("{:.2}x", tps / base_tps),
+            format!("{:.0}", arena_bytes as f64 / 1024.0),
         ]);
         tokens_per_s.insert(format!("lanes-{lanes}"), Json::Num(tps));
+        kv_bytes.insert(format!("lanes-{lanes}"), Json::Num(arena_bytes as f64));
         measurements.push(m);
     }
 
@@ -106,6 +115,7 @@ fn main() -> anyhow::Result<()> {
         ("max_new", Json::Num(MAX_NEW as f64)),
         ("tokens_per_iter", Json::Num(expect as f64)),
         ("tokens_per_s", Json::Obj(tokens_per_s)),
+        ("kv_bytes", Json::Obj(kv_bytes)),
     ];
     let out = Path::new("BENCH_serve.json");
     write_json(out, &context, &measurements)?;

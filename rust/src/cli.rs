@@ -5,7 +5,8 @@
 //!   quantize  --method M         quantize, report per-layer metrics
 //!   eval      --method M         quantize + perplexity/QA row
 //!   serve     --method M --addr  continuous-batching generation + scoring
-//!                                server (`--lanes`, `--max-new`)
+//!                                server (`--lanes`, `--max-new`,
+//!                                `--kv-blocks`, `--block-len`)
 //!   generate  [--method M]       sample text locally
 //!   ciq                          CIQ expressiveness table (§3.1)
 //!
@@ -63,6 +64,10 @@ OPTIONS:
   --lanes N                serve: concurrent KV decode lanes (default 4;
                            continuous batching sweeps the packed weights
                            once per token across all active lanes)
+  --kv-blocks N            serve: paged KV arena size in blocks (default:
+                           worst case, lanes x ceil(seq/block-len); smaller
+                           values trade memory for admission backpressure)
+  --block-len N            serve: tokens per KV block (default 16)
   --max-new N              serve: per-request generated-token cap (default 256)
                            generate: tokens to sample (default 120)
   --pallas                 use the Pallas-attention HLO entry (xla backend)
@@ -200,7 +205,15 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let sc = scope(args);
     let (qw, _) = s.quantize(m.as_ref(), &sc, &job(args))?;
     let lanes = args.get_usize("lanes", 4);
-    let mut be = s.serve_backend(&qw, backend_kind(args, native_pack(&m.name()))?, lanes)?;
+    let kv_blocks = args.get("kv-blocks").and_then(|v| v.parse().ok());
+    let block_len = args.get("block-len").and_then(|v| v.parse().ok());
+    let mut be = s.serve_backend(
+        &qw,
+        backend_kind(args, native_pack(&m.name()))?,
+        lanes,
+        kv_blocks,
+        block_len,
+    )?;
     let cfg = BatcherConfig {
         max_new_cap: args.get_usize("max-new", BatcherConfig::default().max_new_cap),
         ..Default::default()
@@ -214,6 +227,15 @@ fn serve_cmd(args: &Args) -> Result<()> {
         be.lanes(),
         cfg.max_new_cap
     );
+    if let Some(st) = be.kv_stats() {
+        println!(
+            "paged kv: {} blocks x {} tokens ({:.2} MiB arena); undersized arenas \
+             apply admission backpressure and evict with `err kv exhausted`",
+            st.total_blocks,
+            st.block_len,
+            st.arena_bytes as f64 / (1024.0 * 1024.0)
+        );
+    }
     println!("protocol: `ppl <text>` -> `ppl <v>` | `gen <max-new> <temp> <seed> <prompt>` -> `tok <byte>`* `done <n>`");
     serve::serve_on(listener, be.as_mut(), cfg, None)
 }
@@ -300,6 +322,17 @@ mod tests {
         // defaults
         let a = parse("serve --method hbllm-row");
         assert_eq!(a.get_usize("lanes", 4), 4);
+    }
+
+    #[test]
+    fn serve_kv_flags_parse() {
+        let a = parse("serve --method hbllm-row --kv-blocks 32 --block-len 8");
+        assert_eq!(a.get("kv-blocks").and_then(|v| v.parse::<usize>().ok()), Some(32));
+        assert_eq!(a.get("block-len").and_then(|v| v.parse::<usize>().ok()), Some(8));
+        // absent flags mean worst-case defaults (None reaches the backend)
+        let a = parse("serve --method hbllm-row");
+        assert_eq!(a.get("kv-blocks"), None);
+        assert_eq!(a.get("block-len"), None);
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! Two request kinds flow through one channel: **scoring** (collect up to
 //! `max_batch` texts or wait `max_wait`, then flush in one backend call)
 //! and **generation** (handed to the continuous-batching
-//! `GenScheduler`, which streams `GenEvent`s back per request). The
+//! `GenScheduler`, which streams `GenEvent`s back per request and, on
+//! KV-metered backends, holds requests in its queue until enough paged-KV
+//! blocks are free — the channel itself never applies backpressure). The
 //! backend-owning side is generic: [`Batcher::run`] drives a scoring-only
 //! closure (testable without any model runtime), while
 //! `coordinator::serve::run_engine` interleaves scoring batches with

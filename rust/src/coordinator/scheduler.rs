@@ -7,24 +7,30 @@
 //!
 //! **Generation** ([`GenScheduler`]): the admission-control state machine
 //! behind the continuous-batching serve loop. Requests (prompt +
-//! max-tokens + temperature + seed) queue until a KV lane frees up; every
-//! [`GenScheduler::step`] admits waiting requests into free lanes, runs
-//! one [`Backend::decode_batch`] sweep over all active lanes, samples and
-//! streams one token per sequence, and evicts sequences that exhausted
-//! their token budget or lost their client — so lanes turn over without
-//! ever draining the whole batch (continuous batching, not static
-//! batches). A freshly admitted lane prefills its prompt inside the same
-//! sweep established lanes decode in.
+//! max-tokens + temperature + seed) queue until a KV lane frees up — and,
+//! on KV-metered backends, until enough paged-KV blocks are free to cover
+//! the request's worst case; every [`GenScheduler::step`] admits waiting
+//! requests into free lanes, runs one [`Backend::decode_batch`] sweep
+//! over all active lanes, samples and streams one token per sequence, and
+//! evicts sequences that exhausted their token budget or lost their
+//! client — so lanes turn over without ever draining the whole batch
+//! (continuous batching, not static batches). A freshly admitted lane
+//! prefills its prompt inside the same sweep established lanes decode in.
+//! Block exhaustion mid-sweep evicts the lowest-progress sequence with
+//! `kv exhausted` instead of failing the batch, so an undersized arena
+//! degrades to backpressure, never an OOM or a wedged sweep.
 
 use super::progress::Progress;
 use crate::calib::CtxMap;
 use crate::data::ByteTokenizer;
-use crate::engine::{sample_logits, Backend};
+use crate::engine::paged::blocks_for;
+use crate::engine::{sample_logits, Backend, KvExhausted};
 use crate::model::Weights;
 use crate::quant::{BitsBreakdown, Quantizer};
 use crate::tensor::Matrix;
 use crate::util::rng::Pcg32;
 use anyhow::{anyhow, Result};
+use std::cmp::Reverse;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
@@ -159,6 +165,11 @@ struct ActiveSeq {
     temperature: f32,
     rng: Pcg32,
     reply: Sender<GenEvent>,
+    /// KV blocks promised to this sequence at admission (0 when the
+    /// backend's KV memory is unmetered). The lane allocates lazily, so
+    /// admission subtracts the *unallocated* remainder of every active
+    /// sequence's reservation from the free count.
+    reserved: usize,
 }
 
 /// Admission-controlled continuous batching over a backend's KV lanes.
@@ -218,12 +229,55 @@ impl GenScheduler {
     /// generation out of lane 0 until no other lane is free avoids a
     /// full-window re-prefill per token under mixed traffic (the engine's
     /// prefix guard makes the clobber safe either way).
+    ///
+    /// On KV-metered backends ([`Backend::kv_stats`]), admission is also
+    /// gated on block memory: a request reserves enough blocks for its
+    /// worst case (prompt + capped token budget, clipped to the window),
+    /// and the head of the queue stalls — strict FIFO, no starvation —
+    /// until evictions free that many unpromised blocks. A request too big
+    /// to ever fit reserves the whole arena and is admitted alone; if it
+    /// outgrows the arena mid-decode the exhaustion path below evicts it
+    /// with `kv exhausted` rather than wedging the sweep.
     fn admit(&mut self, be: &mut dyn Backend) {
+        let stats = be.kv_stats();
+        let mut avail = match &stats {
+            Some(st) => {
+                // blocks promised to resident sequences but not yet drawn
+                let outstanding: usize = self
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, s)| {
+                        s.as_ref().map(|seq| {
+                            let held = st.lane_blocks.get(i).copied().unwrap_or(0);
+                            seq.reserved.saturating_sub(held)
+                        })
+                    })
+                    .sum();
+                st.free_blocks.saturating_sub(outstanding)
+            }
+            None => usize::MAX,
+        };
+        let seq_cap = be.seq();
         for lane in (0..self.slots.len()).rev() {
             if self.slots[lane].is_some() {
                 continue;
             }
-            let Some(req) = self.queue.pop_front() else { return };
+            let Some(front) = self.queue.front() else { return };
+            let mut reserved = 0usize;
+            if let Some(st) = &stats {
+                let prompt_len = front.prompt.len().max(1); // pad-seeded
+                let worst = prompt_len
+                    .saturating_add(front.max_new.min(self.max_new_cap))
+                    .min(seq_cap);
+                let bl = st.block_len.max(1);
+                reserved = blocks_for(worst, bl).clamp(1, st.total_blocks.max(1));
+                if reserved > avail {
+                    return; // backpressure: wait for an eviction
+                }
+                avail -= reserved;
+            }
+            let req = self.queue.pop_front().expect("front() was Some");
             be.reset_lane(lane);
             let mut text = req.prompt;
             if text.is_empty() {
@@ -237,6 +291,7 @@ impl GenScheduler {
                 temperature: req.temperature,
                 rng: Pcg32::seeded(req.seed),
                 reply: req.reply,
+                reserved,
             });
         }
     }
@@ -245,9 +300,15 @@ impl GenScheduler {
     /// single [`Backend::decode_batch`] sweep, sample + stream one token
     /// per sequence, evict exhausted or abandoned sequences (freeing their
     /// lanes for the next step's admissions). Returns tokens produced.
+    ///
+    /// A sweep refused for KV memory (typed [`KvExhausted`]) evicts the
+    /// lowest-progress sequence — its client gets `Error("kv exhausted")`
+    /// — and retries with the survivors, so one over-long sequence cannot
+    /// wedge the whole batch. Any other decode failure still poisons every
+    /// active lane (the backend's state is not trustworthy after it).
     pub fn step(&mut self, be: &mut dyn Backend) -> usize {
         self.admit(be);
-        let idxs: Vec<usize> = self
+        let mut idxs: Vec<usize> = self
             .slots
             .iter()
             .enumerate()
@@ -257,13 +318,37 @@ impl GenScheduler {
         if idxs.is_empty() {
             return 0;
         }
-        let rows = {
-            let reqs: Vec<(usize, &[u8])> = idxs
-                .iter()
-                .map(|&i| (i, self.slots[i].as_ref().unwrap().text.as_slice()))
-                .collect();
-            match be.decode_batch(&reqs) {
-                Ok(rows) => rows,
+        let rows = loop {
+            let res = {
+                let reqs: Vec<(usize, &[u8])> = idxs
+                    .iter()
+                    .map(|&i| (i, self.slots[i].as_ref().unwrap().text.as_slice()))
+                    .collect();
+                be.decode_batch(&reqs)
+            };
+            match res {
+                Ok(rows) => break rows,
+                Err(e) if e.downcast_ref::<KvExhausted>().is_some() => {
+                    // memory backpressure, not a broken backend: free
+                    // blocks by evicting the lowest-progress sequence
+                    // (least work lost; ties evict the highest lane, the
+                    // most recent admission) and retry with the rest
+                    let victim = idxs
+                        .iter()
+                        .copied()
+                        .min_by_key(|&i| {
+                            (self.slots[i].as_ref().unwrap().generated, Reverse(i))
+                        })
+                        .expect("exhausted sweep with no active lanes");
+                    if let Some(seq) = self.slots[victim].take() {
+                        let _ = seq.reply.send(GenEvent::Error("kv exhausted".into()));
+                    }
+                    be.reset_lane(victim);
+                    idxs.retain(|&i| i != victim);
+                    if idxs.is_empty() {
+                        return 0;
+                    }
+                }
                 Err(e) => {
                     // a decode failure poisons every active lane: report and
                     // drain so the serve loop does not spin on the error
@@ -530,6 +615,75 @@ mod gen_tests {
             }
             other => panic!("expected Done, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn admission_stalls_on_block_exhaustion_and_resumes_after_done() {
+        use crate::engine::{NativeBackend, PackedModel};
+        use crate::model::testing::micro_weights;
+        // 2 lanes, but only 3 blocks of 4 tokens: each request below
+        // reserves 2 blocks (4-byte prompt + 4 new tokens), so just one
+        // fits at a time — the second must wait for the first's eviction
+        let w = micro_weights(40);
+        let mut be =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        be.set_lanes(2);
+        be.set_kv_blocks(Some(3), Some(4));
+        let mut sched = GenScheduler::new(2, 64);
+        let rx_a = submit(&mut sched, b"abcd", 4);
+        let rx_b = submit(&mut sched, b"wxyz", 4);
+
+        assert_eq!(sched.step(&mut be), 1, "only one lane admitted");
+        assert_eq!((sched.active(), sched.queued()), (1, 1), "admission did not stall");
+        for _ in 0..3 {
+            sched.step(&mut be);
+            assert!(sched.active() <= 1, "stalled request admitted early");
+        }
+        // first request done (4 tokens) -> its blocks freed -> b admits
+        let done_a = rx_a.try_iter().last().unwrap();
+        assert!(matches!(done_a, GenEvent::Done { generated: 4, .. }), "{done_a:?}");
+        let mut steps = 0;
+        while sched.has_work() {
+            sched.step(&mut be);
+            steps += 1;
+            assert!(steps < 50, "stalled request never resumed");
+        }
+        let done_b = rx_b.try_iter().last().unwrap();
+        assert!(matches!(done_b, GenEvent::Done { generated: 4, .. }), "{done_b:?}");
+    }
+
+    #[test]
+    fn memory_eviction_reports_kv_exhausted_without_wedging() {
+        use crate::engine::{NativeBackend, PackedModel};
+        use crate::model::testing::micro_weights;
+        // one 4-token block total: a request needing two blocks is
+        // admitted alone (reservation clamps to the arena) and must be
+        // evicted mid-decode with "kv exhausted", not wedge the loop
+        let w = micro_weights(41);
+        let mut be =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        be.set_lanes(2);
+        be.set_kv_blocks(Some(1), Some(4));
+        let mut sched = GenScheduler::new(2, 64);
+        let rx = submit(&mut sched, b"abcd", 6);
+        let mut steps = 0;
+        while sched.has_work() {
+            sched.step(&mut be);
+            steps += 1;
+            assert!(steps < 50, "exhausted sequence wedged the scheduler");
+        }
+        let events: Vec<GenEvent> = rx.try_iter().collect();
+        assert!(
+            matches!(events.last(), Some(GenEvent::Error(msg)) if msg.as_str() == "kv exhausted"),
+            "expected kv exhausted eviction, got {events:?}"
+        );
+        // the arena is fully released: a request that fits completes
+        let rx2 = submit(&mut sched, b"ab", 2);
+        while sched.has_work() {
+            sched.step(&mut be);
+        }
+        let done = rx2.try_iter().last().unwrap();
+        assert!(matches!(done, GenEvent::Done { generated: 2, .. }), "{done:?}");
     }
 
     #[test]

@@ -22,13 +22,25 @@
 //! Generation is continuously batched: a [`GenScheduler`] admits queued
 //! requests into free KV lanes between decode sweeps, so sequences join
 //! and leave the running batch without draining it.
+//!
+//! KV memory is paged (`serve --kv-blocks`/`--block-len`): on a metered
+//! backend admission additionally waits for enough free KV blocks, and a
+//! sequence evicted mid-decode because the arena ran dry gets a single
+//! `err kv exhausted` line — the sweep itself keeps running for everyone
+//! else.
 
 use super::batcher::{Batcher, BatcherConfig, BatcherHandle, Request, Work};
 use super::scheduler::{GenEvent, GenScheduler};
+use crate::engine::paged::blocks_for;
 use crate::engine::Backend;
 use anyhow::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+
+/// Decode steps a pending scoring batch waits for KV blocks before being
+/// flushed anyway (each step can evict and free blocks; after this many,
+/// the honest `kv exhausted` error beats further starvation).
+const SCORE_PATIENCE: usize = 128;
 
 /// Score a batch of texts: mean NLL/byte → perplexity per text.
 ///
@@ -179,12 +191,17 @@ pub fn bind(addr: &str) -> Result<(TcpListener, std::net::SocketAddr)> {
 /// sequence that does land in lane 0 transparently re-prefills on its
 /// next step (the engine checks its cached prefix against the cache fill
 /// level) — mixed traffic costs some recompute but never correctness.
+/// On a KV-metered backend a pending scoring batch additionally waits
+/// (bounded by `SCORE_PATIENCE` steps) until enough blocks are free for
+/// lane 0's full-window sweep, so an undersized arena backpressures
+/// scoring the same way it backpressures generation admission.
 pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
     let cfg = batcher.cfg;
     let mut sched = GenScheduler::new(be.lanes(), cfg.max_new_cap);
     let mut scores: Vec<Request> = Vec::new();
     let mut inbox: Vec<Work> = Vec::new();
     let mut connected = true;
+    let mut score_waited = 0usize;
     loop {
         if connected {
             if !sched.has_work() && scores.is_empty() {
@@ -216,12 +233,32 @@ pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
         if !connected && !sched.has_work() && scores.is_empty() {
             return;
         }
-        if !scores.is_empty() {
+        // Scoring sweeps lane 0 over a full window, which on a metered
+        // backend needs `ceil(seq / block_len)` KV blocks (lane 0's own
+        // holdings are reclaimable — `nll` resets the lane first). While
+        // generation holds the rest of the arena, defer the flush: every
+        // decode step below can finish sequences and free blocks, so the
+        // batch gets backpressure like admission does instead of a hard
+        // `kv exhausted` error. The patience bound keeps a permanently
+        // saturated arena from starving scoring forever.
+        let scorable = !scores.is_empty()
+            && (score_waited >= SCORE_PATIENCE
+                || match be.kv_stats() {
+                    Some(st) if sched.active() > 0 => {
+                        let lane0 = st.lane_blocks.first().copied().unwrap_or(0);
+                        st.free_blocks + lane0 >= blocks_for(be.seq(), st.block_len.max(1))
+                    }
+                    _ => true,
+                });
+        if scorable {
+            score_waited = 0;
             let texts: Vec<Vec<u8>> = scores.iter().map(|r| r.text.clone()).collect();
             let results = score_texts(be, &texts);
             for (req, res) in scores.drain(..).zip(results) {
                 let _ = req.reply.send(res);
             }
+        } else if !scores.is_empty() {
+            score_waited += 1;
         }
         if sched.has_work() {
             sched.step(be);

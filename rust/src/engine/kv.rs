@@ -1,94 +1,29 @@
-//! KV state for the incremental decode path: single-sequence caches, the
-//! per-position scratch arena, and the multi-sequence lane pool that backs
-//! continuous-batching generation.
+//! KV state for the incremental decode path: the per-position scratch
+//! arena and the multi-sequence lane pool that backs continuous-batching
+//! generation, built on the paged block memory in [`super::paged`].
 //!
-//! `KvCache` holds the per-layer attention keys/values as one flat
-//! `[n_layers, seq, d_model]` f32 buffer each, allocated once at backend
-//! construction. A decode step writes row `len` for every layer, attends
-//! over rows `0..=len`, and bumps `len` — no per-token allocation.
+//! A [`Lane`] no longer owns a flat worst-case `[n_layers, seq, d]`
+//! buffer; it holds a [`PagedKv`] *view* — a block table into the pool's
+//! shared [`KvBlockPool`] arena — so lane count is bounded by traffic, not
+//! by a hard per-lane allocation. A decode step writes row `len` for every
+//! layer through the view, attends over rows `0..=len`, and bumps `len`;
+//! blocks are allocated one at a time as the sequence grows and all
+//! released on eviction/reset.
 //!
 //! `Arena` is the matching scratch space: every intermediate of the
 //! per-position forward (norm outputs, q/k/v, attention mix, FFN hidden,
 //! logits) lives in a preallocated buffer, so after startup the decode hot
 //! loop's only allocation is the logits row each `decode_step` hands back
-//! to the caller.
+//! to the caller (plus at most one KV block grab per `block_len` tokens).
 //!
-//! `KvPool` is N independent `Lane`s (cache + arena + consumed prefix)
-//! over one shared model: each concurrently-decoding sequence owns a lane,
-//! while the packed weights are swept once per token across all active
-//! lanes (see `NativeBackend::decode_batch`).
+//! `KvPool` is N lanes (view + arena + consumed prefix) plus the one
+//! shared block arena, over one shared model: each concurrently-decoding
+//! sequence owns a lane, while the packed weights are swept once per token
+//! across all active lanes (see `NativeBackend::decode_batch`).
 
+use super::paged::{blocks_for, KvBlockPool, PagedKv, DEFAULT_BLOCK_LEN};
+use super::KvStats;
 use crate::model::ModelConfig;
-
-/// Per-layer attention K/V rows for positions `0..len`.
-pub struct KvCache {
-    pub n_layers: usize,
-    pub seq: usize,
-    pub d: usize,
-    /// Positions filled so far (uniform across layers).
-    pub len: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
-}
-
-impl KvCache {
-    pub fn new(n_layers: usize, seq: usize, d: usize) -> KvCache {
-        KvCache {
-            n_layers,
-            seq,
-            d,
-            len: 0,
-            k: vec![0.0; n_layers * seq * d],
-            v: vec![0.0; n_layers * seq * d],
-        }
-    }
-
-    /// Logical reset; the buffers are reused, not zeroed.
-    pub fn clear(&mut self) {
-        self.len = 0;
-    }
-
-    pub fn is_full(&self) -> bool {
-        self.len >= self.seq
-    }
-
-    #[inline]
-    fn idx(&self, layer: usize, pos: usize) -> usize {
-        debug_assert!(layer < self.n_layers && pos < self.seq);
-        (layer * self.seq + pos) * self.d
-    }
-
-    /// Store the K/V rows for `pos` in `layer` (callers bump `len` once per
-    /// position via [`KvCache::advance`] after all layers stored).
-    pub fn store(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
-        debug_assert_eq!(k_row.len(), self.d);
-        debug_assert_eq!(v_row.len(), self.d);
-        let o = self.idx(layer, pos);
-        self.k[o..o + self.d].copy_from_slice(k_row);
-        self.v[o..o + self.d].copy_from_slice(v_row);
-    }
-
-    pub fn advance(&mut self) {
-        debug_assert!(self.len < self.seq, "kv cache overflow");
-        self.len += 1;
-    }
-
-    #[inline]
-    pub fn key(&self, layer: usize, pos: usize) -> &[f32] {
-        let o = self.idx(layer, pos);
-        &self.k[o..o + self.d]
-    }
-
-    #[inline]
-    pub fn val(&self, layer: usize, pos: usize) -> &[f32] {
-        let o = self.idx(layer, pos);
-        &self.v[o..o + self.d]
-    }
-
-    pub fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * 4
-    }
-}
 
 /// Preallocated scratch buffers for one decode position.
 pub struct Arena {
@@ -129,44 +64,78 @@ impl Arena {
     }
 }
 
-/// One decode lane: an independent KV sequence + per-position scratch +
-/// the bytes currently materialized in the cache.
+/// One decode lane: a paged view of the shared KV arena + per-position
+/// scratch + the bytes currently materialized behind the view.
 pub struct Lane {
-    pub cache: KvCache,
+    pub kv: PagedKv,
     pub arena: Arena,
-    /// Bytes whose K/V rows fill `cache` positions `0..cache.len`.
+    /// Bytes whose K/V rows fill positions `0..kv.len()`.
     pub prefix: Vec<u8>,
 }
 
 impl Lane {
     pub fn new(cfg: &ModelConfig) -> Lane {
         Lane {
-            cache: KvCache::new(cfg.n_layers, cfg.seq_len, cfg.d_model),
+            kv: PagedKv::new(cfg.seq_len),
             arena: Arena::new(cfg),
             prefix: Vec::new(),
         }
     }
 
-    /// Logical reset (buffers reused, not reallocated).
-    pub fn clear(&mut self) {
-        self.cache.clear();
+    /// Logical reset: releases every KV block back to `blocks` (the
+    /// scratch arena is reused, not reallocated).
+    pub fn clear(&mut self, blocks: &mut KvBlockPool) {
+        self.kv.clear(blocks);
         self.prefix.clear();
     }
 }
 
-/// N independent KV lanes over one shared model — the state side of
-/// continuous batching. Lane `i` hosts one sequence; admission/eviction is
-/// the scheduler's job (`coordinator::scheduler::GenScheduler`), the pool
-/// just owns the memory.
+/// N KV lanes plus the shared block arena they page into — the state side
+/// of continuous batching. Lane `i` hosts one sequence; admission/eviction
+/// is the scheduler's job (`coordinator::scheduler::GenScheduler`), the
+/// pool just owns the memory.
 pub struct KvPool {
+    /// The shared paged block arena every lane's [`PagedKv`] maps into.
+    pub blocks: KvBlockPool,
     pub lanes: Vec<Lane>,
 }
 
 impl KvPool {
-    /// Allocate `n` lanes (at least one). Each lane owns its own KV buffer
-    /// (`2 × n_layers × seq × d_model` f32) and scratch arena.
+    /// Allocate `n` lanes (at least one) over a worst-case arena: enough
+    /// blocks of [`DEFAULT_BLOCK_LEN`] tokens for every lane to hold a
+    /// full `seq_len` window — the memory-equivalent of the old flat
+    /// layout, so unconfigured callers never see `KvExhausted`.
     pub fn new(cfg: &ModelConfig, n: usize) -> KvPool {
-        KvPool { lanes: (0..n.max(1)).map(|_| Lane::new(cfg)).collect() }
+        let (n_blocks, bl) = KvPool::worst_case_geometry(cfg, n, None);
+        KvPool::with_paging(cfg, n, n_blocks, bl)
+    }
+
+    /// The worst-case arena geometry `(n_blocks, block_len)` for `n`
+    /// lanes: `block_len` (defaulting to [`DEFAULT_BLOCK_LEN`] clamped to
+    /// the window) and enough blocks for every lane to hold a full
+    /// `seq_len` window. The single source of the default sizing —
+    /// [`KvPool::new`] and backend rebuilds both derive from it.
+    pub fn worst_case_geometry(
+        cfg: &ModelConfig,
+        n: usize,
+        block_len: Option<usize>,
+    ) -> (usize, usize) {
+        let bl = block_len
+            .unwrap_or(DEFAULT_BLOCK_LEN.min(cfg.seq_len.max(1)))
+            .max(1);
+        (n.max(1) * blocks_for(cfg.seq_len, bl), bl)
+    }
+
+    /// Allocate `n` lanes (at least one) over an explicit arena of
+    /// `n_blocks` blocks of `block_len` tokens (both clamped to >= 1).
+    /// Sizing below `n * ceil(seq_len / block_len)` is the point: lanes
+    /// then share a smaller arena and the serving scheduler turns block
+    /// exhaustion into admission backpressure.
+    pub fn with_paging(cfg: &ModelConfig, n: usize, n_blocks: usize, block_len: usize) -> KvPool {
+        KvPool {
+            blocks: KvBlockPool::new(cfg.n_layers, cfg.d_model, n_blocks, block_len),
+            lanes: (0..n.max(1)).map(|_| Lane::new(cfg)).collect(),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -178,14 +147,34 @@ impl KvPool {
     }
 
     pub fn clear_all(&mut self) {
-        for lane in &mut self.lanes {
-            lane.clear();
+        let KvPool { blocks, lanes } = self;
+        for lane in lanes.iter_mut() {
+            lane.clear(blocks);
         }
     }
 
-    /// Total KV-cache bytes across lanes (capacity, not fill level).
+    /// Drop one lane's decode state, releasing its KV blocks.
+    pub fn reset_lane(&mut self, lane: usize) {
+        let KvPool { blocks, lanes } = self;
+        if let Some(l) = lanes.get_mut(lane) {
+            l.clear(blocks);
+        }
+    }
+
+    /// Total KV arena bytes (capacity, not fill level).
     pub fn bytes(&self) -> usize {
-        self.lanes.iter().map(|l| l.cache.bytes()).sum()
+        self.blocks.bytes()
+    }
+
+    /// Occupancy snapshot for the `Backend::kv_stats` surface.
+    pub fn stats(&self) -> KvStats {
+        KvStats {
+            block_len: self.blocks.block_len(),
+            total_blocks: self.blocks.n_blocks(),
+            free_blocks: self.blocks.free_blocks(),
+            lane_blocks: self.lanes.iter().map(|l| l.kv.held_blocks()).collect(),
+            arena_bytes: self.blocks.bytes(),
+        }
     }
 }
 
@@ -195,44 +184,68 @@ mod tests {
     use crate::model::testing::micro_weights;
 
     #[test]
-    fn kv_store_and_read_back() {
-        let mut c = KvCache::new(2, 4, 3);
-        let k0 = [1.0, 2.0, 3.0];
-        let v0 = [4.0, 5.0, 6.0];
-        c.store(1, 0, &k0, &v0);
-        c.advance();
-        assert_eq!(c.key(1, 0), &k0);
-        assert_eq!(c.val(1, 0), &v0);
-        assert_eq!(c.len, 1);
-        c.clear();
-        assert_eq!(c.len, 0);
-        assert!(!c.is_full());
-    }
-
-    #[test]
-    fn kv_full_detection() {
-        let mut c = KvCache::new(1, 2, 1);
-        c.store(0, 0, &[0.0], &[0.0]);
-        c.advance();
-        c.store(0, 1, &[0.0], &[0.0]);
-        c.advance();
-        assert!(c.is_full());
-    }
-
-    #[test]
     fn pool_allocates_independent_lanes() {
         let cfg = micro_weights(1).config;
         let mut pool = KvPool::new(&cfg, 3);
         assert_eq!(pool.len(), 3);
-        assert_eq!(pool.bytes(), 3 * pool.lanes[0].cache.bytes());
         let zeros = vec![0.0; cfg.d_model];
-        pool.lanes[1].cache.store(0, 0, &zeros, &zeros);
-        pool.lanes[1].cache.advance();
-        pool.lanes[1].prefix.push(7);
-        assert_eq!(pool.lanes[0].cache.len, 0, "lanes share state");
+        let KvPool { blocks, lanes } = &mut pool;
+        lanes[1].kv.ensure_pos(blocks, 0).unwrap();
+        lanes[1].kv.store(blocks, 0, 0, &zeros, &zeros);
+        lanes[1].kv.advance();
+        lanes[1].prefix.push(7);
+        assert_eq!(pool.lanes[0].kv.len(), 0, "lanes share state");
+        assert_eq!(pool.blocks.used_blocks(), 1);
         pool.clear_all();
-        assert_eq!(pool.lanes[1].cache.len, 0);
+        assert_eq!(pool.lanes[1].kv.len(), 0);
         assert!(pool.lanes[1].prefix.is_empty());
+        assert_eq!(pool.blocks.used_blocks(), 0, "blocks leaked on clear");
+    }
+
+    #[test]
+    fn worst_case_default_never_exhausts() {
+        let cfg = micro_weights(2).config;
+        let mut pool = KvPool::new(&cfg, 2);
+        let row = vec![0.0; cfg.d_model];
+        let KvPool { blocks, lanes } = &mut pool;
+        for lane in lanes.iter_mut() {
+            for pos in 0..cfg.seq_len {
+                lane.kv.ensure_pos(blocks, pos).expect("worst-case sizing exhausted");
+                for layer in 0..cfg.n_layers {
+                    lane.kv.store(blocks, layer, pos, &row, &row);
+                }
+                lane.kv.advance();
+            }
+            assert!(lane.kv.is_full());
+        }
+    }
+
+    #[test]
+    fn undersized_pool_exhausts_and_recovers() {
+        let cfg = micro_weights(3).config;
+        // one block of 4 tokens total, two lanes contending
+        let mut pool = KvPool::with_paging(&cfg, 2, 1, 4);
+        let KvPool { blocks, lanes } = &mut pool;
+        lanes[0].kv.ensure_pos(blocks, 0).unwrap();
+        assert!(lanes[1].kv.ensure_pos(blocks, 0).is_err(), "no backpressure signal");
+        pool.reset_lane(0);
+        let KvPool { blocks, lanes } = &mut pool;
+        lanes[1].kv.ensure_pos(blocks, 0).unwrap();
+    }
+
+    #[test]
+    fn stats_track_occupancy() {
+        let cfg = micro_weights(4).config;
+        let mut pool = KvPool::with_paging(&cfg, 2, 4, 4);
+        let st = pool.stats();
+        assert_eq!((st.total_blocks, st.free_blocks, st.block_len), (4, 4, 4));
+        assert_eq!(st.lane_blocks, vec![0, 0]);
+        assert_eq!(st.arena_bytes, pool.bytes());
+        let KvPool { blocks, lanes } = &mut pool;
+        lanes[1].kv.ensure_pos(blocks, 5).unwrap(); // 2 blocks
+        let st = pool.stats();
+        assert_eq!(st.free_blocks, 2);
+        assert_eq!(st.lane_blocks, vec![0, 2]);
     }
 
     #[test]

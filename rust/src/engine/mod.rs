@@ -15,19 +15,27 @@
 //! binary dot product in the Haar domain; rows are fanned out across scoped
 //! threads when the layer is large enough.
 //!
-//! # KV-cache layout
+//! # KV memory layout
 //!
-//! [`KvCache`](kv::KvCache) is one flat `[n_layers, seq, d_model]` f32
-//! buffer per side (K and V), allocated once. Decode position `t` writes
-//! row `t` in every layer and attends over rows `0..=t`, so per-token cost
-//! is one GEMV sweep + O(t·d) attention instead of the full-window
-//! re-forward the fixed-shape XLA path pays. All intermediates live in a
-//! preallocated [`Arena`](kv::Arena). For multi-sequence serving a
-//! [`KvPool`](kv::KvPool) holds N independent lanes (cache + arena +
-//! consumed prefix) over the one shared [`PackedModel`]; a
-//! [`Backend::decode_batch`] step sweeps every packed linear once per
-//! token across all active lanes, amortizing the bit-unpack/GEMV cost that
-//! dominates 1-bit serving.
+//! KV state is **paged** ([`paged`]): one shared
+//! `[n_blocks, n_layers, block_len, d]` arena per side
+//! ([`KvBlockPool`](paged::KvBlockPool)) and a per-sequence block table
+//! ([`PagedKv`](paged::PagedKv)) mapping logical positions to blocks —
+//! grown one block at a time as the sequence lengthens, fully released on
+//! eviction. Decode position `t` writes row `t` in every layer through the
+//! view and attends over rows `0..=t`, so per-token cost is one GEMV
+//! sweep + O(t·d) attention instead of the full-window re-forward the
+//! fixed-shape XLA path pays. All intermediates live in a preallocated
+//! [`Arena`](kv::Arena). For multi-sequence serving a
+//! [`KvPool`](kv::KvPool) holds N lanes (view + arena + consumed prefix)
+//! over the one shared [`PackedModel`]; a [`Backend::decode_batch`] step
+//! sweeps every packed linear once per token across all active lanes,
+//! amortizing the bit-unpack/GEMV cost that dominates 1-bit serving.
+//! Sizing the arena below worst case (`serve --kv-blocks/--block-len`) is
+//! supported: allocation failure surfaces as the typed
+//! [`KvExhausted`](paged::KvExhausted) error and the scheduler converts it
+//! into admission backpressure / lowest-progress eviction instead of an
+//! OOM.
 //!
 //! # The Backend trait
 //!
@@ -46,16 +54,35 @@
 pub mod kv;
 pub mod model;
 pub mod native;
+pub mod paged;
 pub mod xla;
 
-pub use kv::{Arena, KvCache, KvPool, Lane};
+pub use kv::{Arena, KvPool, Lane};
 pub use model::{LayerWeights, Linear, PackedModel};
 pub use native::NativeBackend;
+pub use paged::{KvBlockPool, KvExhausted, PagedKv};
 pub use xla::XlaBackend;
 
 use crate::data::ByteTokenizer;
 use crate::util::rng::Pcg32;
 use anyhow::{bail, Result};
+
+/// Occupancy snapshot of a backend's paged KV memory — the capacity
+/// surface the serving scheduler meters admission against.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KvStats {
+    /// Tokens per KV block.
+    pub block_len: usize,
+    /// Blocks in the shared arena.
+    pub total_blocks: usize,
+    /// Blocks currently on the free list.
+    pub free_blocks: usize,
+    /// Blocks currently held by each decode lane (`lane_blocks[i]` is
+    /// lane `i`; sums to `total_blocks - free_blocks`).
+    pub lane_blocks: Vec<usize>,
+    /// Total bytes of the shared block arena (capacity, not fill level).
+    pub arena_bytes: usize,
+}
 
 /// A model execution backend: batched scoring + incremental decoding.
 ///
@@ -106,12 +133,41 @@ pub trait Backend {
         self.reset();
     }
 
+    /// Paged-KV occupancy, if this backend meters KV memory. `None` (the
+    /// default, for stateless backends like [`XlaBackend`]) means KV
+    /// memory is unmetered and the scheduler admits freely.
+    fn kv_stats(&self) -> Option<KvStats> {
+        None
+    }
+
+    /// Reconfigure the paged KV arena: total block count and block length
+    /// in tokens (`None` = the backend's worst-case default). Drops all
+    /// decode state on metered backends and returns the resulting stats;
+    /// unmetered backends ignore the request and return `None`.
+    ///
+    /// Sizing below worst case (`n_blocks < lanes × ceil(seq/block_len)`)
+    /// is the intended use — the serving scheduler turns block exhaustion
+    /// into admission backpressure and lowest-progress eviction.
+    fn set_kv_blocks(
+        &mut self,
+        n_blocks: Option<usize>,
+        block_len: Option<usize>,
+    ) -> Option<KvStats> {
+        let _ = (n_blocks, block_len);
+        None
+    }
+
     /// Next-token logits for several `(lane, text)` pairs in one step
     /// (pairs must be sorted by lane, without duplicates). The default is
     /// the single-lane fallback: each pair runs through [`Self::decode_step`]
     /// sequentially — correct for stateless backends like [`XlaBackend`]
     /// that re-forward the window from the text alone. [`NativeBackend`]
     /// overrides it to sweep each packed linear once across all lanes.
+    ///
+    /// On KV-metered backends, a sweep that would need more blocks than
+    /// the arena has free fails *before touching any lane* with an error
+    /// downcastable to [`KvExhausted`] — the scheduler's cue to evict the
+    /// lowest-progress sequence and retry rather than poison every lane.
     fn decode_batch(&mut self, reqs: &[(usize, &[u8])]) -> Result<Vec<Vec<f32>>> {
         reqs.iter().map(|&(_, text)| self.decode_step(text)).collect()
     }

@@ -18,9 +18,10 @@
 //! `model::forward` over [`PackedModel::to_weights`] — the invariant the
 //! `engine_parity` integration test pins down.
 
-use super::kv::{Arena, KvCache, KvPool, Lane};
+use super::kv::{Arena, KvPool, Lane};
 use super::model::PackedModel;
-use super::Backend;
+use super::paged::{blocks_for, KvExhausted, PagedKv};
+use super::{Backend, KvStats};
 use crate::data::ByteTokenizer;
 use crate::model::{gelu_tanh, rmsnorm};
 use anyhow::{ensure, Result};
@@ -32,13 +33,19 @@ pub struct NativeBackend {
     zpool: Vec<f32>,
     batch: usize,
     threads: usize,
+    /// Paged-KV override from `set_kv_blocks` (blocks, block_len); `None`
+    /// components fall back to the worst-case default on pool rebuilds.
+    kv_blocks: Option<usize>,
+    kv_block_len: Option<usize>,
 }
 
-/// Per-lane view of one decode position: the lane's cache plus disjoint
-/// mutable borrows of every arena buffer, so the batched step can hand
-/// (input, output) pairs of *different* lanes to one `gemv_batch` sweep.
+/// Per-lane view of one decode position: the lane's paged KV view plus
+/// disjoint mutable borrows of every arena buffer, so the batched step can
+/// hand (input, output) pairs of *different* lanes to one `gemv_batch`
+/// sweep. Reads/writes of the KV rows themselves go through the *shared*
+/// block arena, threaded through the step loop separately.
 struct LaneStep<'a> {
-    cache: &'a mut KvCache,
+    kv: &'a mut PagedKv,
     t: usize,
     x: &'a mut [f32],
     h: &'a mut [f32],
@@ -69,11 +76,22 @@ impl NativeBackend {
             model,
             batch: batch.max(1),
             threads: threads.max(1),
+            kv_blocks: None,
+            kv_block_len: None,
         }
     }
 
     pub fn model(&self) -> &PackedModel {
         &self.model
+    }
+
+    /// Rebuild the lane pool for `n` lanes, honoring any `set_kv_blocks`
+    /// override (worst-case arena otherwise). Drops all decode state.
+    fn rebuild_pool(&mut self, n: usize) {
+        let cfg = &self.model.config;
+        let (worst_blocks, bl) = KvPool::worst_case_geometry(cfg, n, self.kv_block_len);
+        let blocks = self.kv_blocks.unwrap_or(worst_blocks);
+        self.pool = KvPool::with_paging(cfg, n, blocks, bl);
     }
 
     /// Advance the given lanes by one byte each: embed `byte` at each
@@ -87,6 +105,7 @@ impl NativeBackend {
         let n_lanes = self.pool.len();
         let NativeBackend { model, pool, zpool, threads, .. } = self;
         let threads = *threads;
+        let KvPool { blocks, lanes: pool_lanes } = pool;
         let cfg = &model.config;
         let (d, heads, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
         let scale = 1.0 / (dh as f32).sqrt();
@@ -94,7 +113,7 @@ impl NativeBackend {
         // disjoint &mut Lane for the active set (ascending, unique)
         let mut lanes: Vec<&mut Lane> = Vec::with_capacity(active.len());
         {
-            let mut rest: &mut [Lane] = &mut pool.lanes;
+            let mut rest: &mut [Lane] = pool_lanes;
             let mut consumed = 0usize;
             for &(idx, _) in active {
                 ensure!(
@@ -109,12 +128,15 @@ impl NativeBackend {
             }
         }
 
-        // embed + per-lane step contexts
+        // embed + per-lane step contexts (growing each lane's block table
+        // so its next position is addressable — the one allocation a step
+        // may make, and only once per block_len tokens per lane)
         let mut ctxs: Vec<LaneStep> = Vec::with_capacity(lanes.len());
         for (lane, &(_, byte)) in lanes.into_iter().zip(active) {
-            ensure!(!lane.cache.is_full(), "kv cache full (seq {})", lane.cache.seq);
-            let t = lane.cache.len;
-            let Lane { cache, arena, .. } = lane;
+            ensure!(!lane.kv.is_full(), "kv cache full (seq {})", lane.kv.seq());
+            let t = lane.kv.len();
+            lane.kv.ensure_pos(blocks, t)?;
+            let Lane { kv, arena, .. } = lane;
             let Arena { x, h, q, k, v, attn, proj, ff, probs, logits } = arena;
             let te = model.tok_emb.row(byte as usize);
             let pe = model.pos_emb.row(t);
@@ -122,7 +144,7 @@ impl NativeBackend {
                 x[j] = te[j] + pe[j];
             }
             ctxs.push(LaneStep {
-                cache,
+                kv,
                 t,
                 x: &mut x[..],
                 h: &mut h[..],
@@ -158,12 +180,12 @@ impl NativeBackend {
                 layer.wv.gemv_batch(&mut io, zpool, threads);
             }
             for c in ctxs.iter_mut() {
-                c.cache.store(li, c.t, c.k, c.v);
+                c.kv.store(blocks, li, c.t, c.k, c.v);
                 for hd in 0..heads {
                     let c0 = hd * dh;
                     let mut maxv = f32::NEG_INFINITY;
                     for u in 0..=c.t {
-                        let krow = c.cache.key(li, u);
+                        let krow = c.kv.key(blocks, li, u);
                         let mut dot = 0f32;
                         for j in 0..dh {
                             dot += c.q[c0 + j] * krow[c0 + j];
@@ -181,7 +203,7 @@ impl NativeBackend {
                     for j in 0..dh {
                         let mut acc = 0f32;
                         for u in 0..=c.t {
-                            acc += c.probs[u] * inv_z * c.cache.val(li, u)[c0 + j];
+                            acc += c.probs[u] * inv_z * c.kv.val(blocks, li, u)[c0 + j];
                         }
                         c.attn[c0 + j] = acc;
                     }
@@ -233,7 +255,7 @@ impl NativeBackend {
             model.unemb.gemv_batch(&mut io, zpool, threads);
         }
         for c in ctxs.iter_mut() {
-            c.cache.advance();
+            c.kv.advance();
         }
         Ok(())
     }
@@ -253,6 +275,52 @@ impl NativeBackend {
         let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
         let logz: f32 = maxv + row.iter().map(|&v| (v - maxv).exp()).sum::<f32>().ln();
         logz - row[next as usize]
+    }
+
+    fn nll_impl(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let (b, s) = (self.batch, self.model.config.seq_len);
+        ensure!(tokens.len() == b * s, "expected {}x{} tokens, got {}", b, s, tokens.len());
+        let per_row = s - 1;
+        let mut out: Vec<f32> = Vec::with_capacity(b * per_row);
+        for r in 0..b {
+            // eval batches pad by repeating rows; unlike the fixed-shape XLA
+            // entry, the sequential engine can just reuse the previous result
+            if r > 0 && tokens[r * s..(r + 1) * s] == tokens[(r - 1) * s..r * s] {
+                let prev = out.len() - per_row;
+                out.extend_from_within(prev..);
+                continue;
+            }
+            self.reset_lane(0);
+            for t in 0..s {
+                let byte = self.check_token(tokens[r * s + t])?;
+                self.step_lanes(&[(0, byte)])?;
+                if t + 1 < s {
+                    let next = self.check_token(tokens[r * s + t + 1])?;
+                    out.push(self.nll_of_next(next));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn logits_impl(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let (b, s, v) = (self.batch, self.model.config.seq_len, self.model.config.vocab);
+        ensure!(tokens.len() == b * s, "expected {}x{} tokens, got {}", b, s, tokens.len());
+        let mut out: Vec<f32> = Vec::with_capacity(b * s * v);
+        for r in 0..b {
+            if r > 0 && tokens[r * s..(r + 1) * s] == tokens[(r - 1) * s..r * s] {
+                let prev = out.len() - s * v;
+                out.extend_from_within(prev..);
+                continue;
+            }
+            self.reset_lane(0);
+            for t in 0..s {
+                let byte = self.check_token(tokens[r * s + t])?;
+                self.step_lanes(&[(0, byte)])?;
+                out.extend_from_slice(&self.pool.lanes[0].arena.logits);
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -278,58 +346,42 @@ impl Backend for NativeBackend {
     }
 
     /// Reallocate the lane pool. Drops all decode state (every lane's KV
-    /// cache and prefix); the scheduler resets lanes on admission anyway.
+    /// view and prefix); the scheduler resets lanes on admission anyway.
+    /// A `set_kv_blocks` override survives the rebuild; otherwise the
+    /// arena is re-sized to the new lane count's worst case.
     fn set_lanes(&mut self, n: usize) -> usize {
-        self.pool = KvPool::new(&self.model.config, n);
+        self.rebuild_pool(n);
         self.pool.len()
     }
 
+    fn kv_stats(&self) -> Option<KvStats> {
+        Some(self.pool.stats())
+    }
+
+    fn set_kv_blocks(
+        &mut self,
+        n_blocks: Option<usize>,
+        block_len: Option<usize>,
+    ) -> Option<KvStats> {
+        self.kv_blocks = n_blocks;
+        self.kv_block_len = block_len;
+        self.rebuild_pool(self.pool.len());
+        self.kv_stats()
+    }
+
     fn nll(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
-        let (b, s) = (self.batch, self.model.config.seq_len);
-        ensure!(tokens.len() == b * s, "expected {}x{} tokens, got {}", b, s, tokens.len());
-        let per_row = s - 1;
-        let mut out: Vec<f32> = Vec::with_capacity(b * per_row);
-        for r in 0..b {
-            // eval batches pad by repeating rows; unlike the fixed-shape XLA
-            // entry, the sequential engine can just reuse the previous result
-            if r > 0 && tokens[r * s..(r + 1) * s] == tokens[(r - 1) * s..r * s] {
-                let prev = out.len() - per_row;
-                out.extend_from_within(prev..);
-                continue;
-            }
-            self.reset_lane(0);
-            for t in 0..s {
-                let byte = self.check_token(tokens[r * s + t])?;
-                self.step_lanes(&[(0, byte)])?;
-                if t + 1 < s {
-                    let next = self.check_token(tokens[r * s + t + 1])?;
-                    out.push(self.nll_of_next(next));
-                }
-            }
-        }
+        // lane 0 is always released, error or not — a failed row (bad
+        // token, or KV exhaustion under a deliberately small arena) must
+        // not strand blocks the serving scheduler is metering
+        let out = self.nll_impl(tokens);
         self.reset_lane(0);
-        Ok(out)
+        out
     }
 
     fn logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
-        let (b, s, v) = (self.batch, self.model.config.seq_len, self.model.config.vocab);
-        ensure!(tokens.len() == b * s, "expected {}x{} tokens, got {}", b, s, tokens.len());
-        let mut out: Vec<f32> = Vec::with_capacity(b * s * v);
-        for r in 0..b {
-            if r > 0 && tokens[r * s..(r + 1) * s] == tokens[(r - 1) * s..r * s] {
-                let prev = out.len() - s * v;
-                out.extend_from_within(prev..);
-                continue;
-            }
-            self.reset_lane(0);
-            for t in 0..s {
-                let byte = self.check_token(tokens[r * s + t])?;
-                self.step_lanes(&[(0, byte)])?;
-                out.extend_from_slice(&self.pool.lanes[0].arena.logits);
-            }
-        }
+        let out = self.logits_impl(tokens);
         self.reset_lane(0);
-        Ok(out)
+        out
     }
 
     fn decode_step(&mut self, text: &[u8]) -> Result<Vec<f32>> {
@@ -348,6 +400,14 @@ impl Backend for NativeBackend {
         const SEED: [u8; 1] = [ByteTokenizer::PAD];
         let mut windows: Vec<&[u8]> = Vec::with_capacity(reqs.len());
         let mut done: Vec<usize> = Vec::with_capacity(reqs.len());
+        let mut incremental: Vec<bool> = Vec::with_capacity(reqs.len());
+        // plan pass (no mutation): validate the lane set, pick incremental
+        // vs re-prefill per lane, and meter the block budget the whole
+        // sweep will need — so exhaustion fails *here*, typed and before
+        // any lane state is touched, and the scheduler can evict + retry
+        let bl = self.pool.blocks.block_len();
+        let mut need = 0usize;
+        let mut avail = self.pool.blocks.free_blocks();
         for (ri, &(lane, text)) in reqs.iter().enumerate() {
             ensure!(lane < self.pool.len(), "lane {lane} out of range ({} lanes)", self.pool.len());
             ensure!(
@@ -361,23 +421,41 @@ impl Backend for NativeBackend {
             } else {
                 &text[text.len().saturating_sub(s)..]
             };
-            let lane_ref = &mut self.pool.lanes[lane];
+            let lane_ref = &self.pool.lanes[lane];
             let keep = lane_ref.prefix.len();
             // incremental only when the cache really holds the recorded
             // prefix (scoring calls share lane 0 and reset it, and a failed
             // nll can leave a partial fill) — otherwise re-prefill
-            if lane_ref.cache.len == keep
+            let inc = lane_ref.kv.len() == keep
                 && window.len() >= keep
-                && window[..keep] == lane_ref.prefix[..]
-            {
+                && window[..keep] == lane_ref.prefix[..];
+            let target = blocks_for(window.len(), bl);
+            if inc {
                 // pure incremental: only the unseen suffix runs through
+                // (saturating: an aborted sweep can leave one block grown
+                // past `len`, which simply gets reused)
+                need += target.saturating_sub(lane_ref.kv.held_blocks());
                 done.push(keep);
             } else {
-                // window slid (or context switched): re-prefill from scratch
-                lane_ref.cache.clear();
+                // window slid (or context switched): re-prefill from
+                // scratch — its current blocks come back to the free list
+                avail += lane_ref.kv.held_blocks();
+                need += target;
                 done.push(0);
             }
+            incremental.push(inc);
             windows.push(window);
+        }
+        if need > avail {
+            return Err(KvExhausted { needed: need, free: avail }.into());
+        }
+        {
+            let KvPool { blocks, lanes } = &mut self.pool;
+            for (ri, &(lane, _)) in reqs.iter().enumerate() {
+                if !incremental[ri] {
+                    lanes[lane].kv.clear(blocks);
+                }
+            }
         }
         // lock-step advance over the pending suffixes
         let mut active: Vec<(usize, u8)> = Vec::with_capacity(reqs.len());
@@ -415,9 +493,7 @@ impl Backend for NativeBackend {
     }
 
     fn reset_lane(&mut self, lane: usize) {
-        if let Some(l) = self.pool.lanes.get_mut(lane) {
-            l.clear();
-        }
+        self.pool.reset_lane(lane);
     }
 }
 
@@ -572,6 +648,71 @@ mod tests {
         let b2 = mixed.decode_step(b"ta kiv").unwrap();
         assert_eq!(a, a2);
         assert_eq!(b, b2, "lane 0 did not recover from interleaved scoring");
+    }
+
+    #[test]
+    fn set_kv_blocks_overrides_and_survives_lane_rebuilds() {
+        let w = micro_weights(34);
+        let mut be =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        let st = be.kv_stats().unwrap();
+        // worst-case default: every lane can hold a full window
+        assert!(st.total_blocks * st.block_len >= be.seq());
+        assert_eq!(st.free_blocks, st.total_blocks);
+        let st = be.set_kv_blocks(Some(2), Some(4)).unwrap();
+        assert_eq!((st.total_blocks, st.block_len), (2, 4));
+        be.set_lanes(3);
+        let st = be.kv_stats().unwrap();
+        assert_eq!((st.total_blocks, st.block_len), (2, 4), "override lost on set_lanes");
+        assert_eq!(st.lane_blocks, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn decode_batch_exhaustion_is_typed_and_touches_no_lane() {
+        let w = micro_weights(35);
+        let mut be =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        be.set_lanes(2);
+        be.set_kv_blocks(Some(1), Some(4));
+        // lane 0 takes the only block (3 positions)
+        let a = be.decode_batch(&[(0, b"abc")]).unwrap().pop().unwrap();
+        // lane 1 cannot start: typed exhaustion, before any state change
+        let err = be.decode_batch(&[(1, b"xy")]).unwrap_err();
+        assert!(err.downcast_ref::<KvExhausted>().is_some(), "untyped: {err}");
+        // lane 0 is still incrementally consistent after the failed call
+        let a2 = be.decode_batch(&[(0, b"abc")]).unwrap().pop().unwrap();
+        assert_eq!(a, a2, "established lane perturbed by exhausted sweep");
+        // growth past the block boundary exhausts too (4 -> 5 positions)
+        be.decode_batch(&[(0, b"abcd")]).unwrap();
+        let err = be.decode_batch(&[(0, b"abcde")]).unwrap_err();
+        assert!(err.downcast_ref::<KvExhausted>().is_some(), "untyped: {err}");
+        // eviction frees the arena: lane 1 can run now
+        be.reset_lane(0);
+        assert_eq!(be.decode_batch(&[(1, b"xy")]).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn paged_and_flat_configs_agree_bit_for_bit() {
+        // block_len == seq (one block per lane) is exactly the old flat
+        // layout; a fine-grained paging of the same model must match it
+        let w = micro_weights(36);
+        let seq = w.config.seq_len;
+        let mk = |blocks: usize, bl: usize| {
+            let mut be =
+                NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+            be.set_kv_blocks(Some(blocks), Some(bl));
+            be
+        };
+        let mut flat = mk(1, seq);
+        let mut paged = mk(seq, 1); // one block per token
+        let text: Vec<u8> = (0..seq as u8 + 3).map(|i| i.wrapping_mul(29)).collect();
+        let mut cur = text[..2].to_vec();
+        while cur.len() < text.len() {
+            let a = flat.decode_step(&cur).unwrap();
+            let b = paged.decode_step(&cur).unwrap();
+            assert_eq!(a, b, "paged decode diverged at len {}", cur.len());
+            cur.push(text[cur.len()]);
+        }
     }
 
     #[test]

@@ -1,0 +1,543 @@
+//! Paged KV memory: a shared arena of fixed-size token blocks plus
+//! per-sequence block tables — the vLLM/PagedAttention idea applied to the
+//! packed 1-bit engine, where the weights are tiny (~1.06 bits/weight) and
+//! resident memory is dominated by KV state.
+//!
+//! The flat layout this replaces allocated one worst-case
+//! `[n_layers, seq, d]` K and V buffer per lane, so lane count was a hard
+//! memory ceiling even when most sequences are short. Here the memory is
+//! one [`KvBlockPool`] — a `[n_blocks, n_layers, block_len, d]` arena per
+//! side with a free list — and each lane holds a [`PagedKv`]: a block
+//! table mapping logical positions to pool blocks, growing one block at a
+//! time on demand and releasing every block on eviction or reset. Short
+//! sequences hold few blocks, so many more lanes fit in the same arena;
+//! when the pool runs dry, allocation fails with the typed [`KvExhausted`]
+//! error and the serving scheduler applies backpressure (queue stalls,
+//! lowest-progress eviction) instead of OOMing.
+//!
+//! Invariants (property-tested in this module and, heavier, in
+//! `tests/paged_parity.rs`):
+//!
+//! * a block is owned by at most one live sequence — alloc never hands out
+//!   a block that has not been released, release of an unowned block
+//!   panics (double-free is a logic error, not a recoverable state);
+//! * `free_blocks() + used_blocks() == n_blocks()` at every step;
+//! * the logical↔physical mapping round-trips: position `p` lives at
+//!   `(table[p / block_len], p % block_len)` and reads back exactly what
+//!   was stored.
+//!
+//! The per-position *arithmetic* of the decode path is unchanged — only
+//! the storage layout differs — so paged and flat-configured engines
+//! (`block_len == seq_len`, one block per lane) produce byte-identical
+//! greedy decodes; `tests/paged_parity.rs` pins that down.
+
+use std::fmt;
+
+/// Default tokens per KV block (CLI `--block-len`). Small enough that a
+/// short sequence wastes little, large enough that the block-table
+/// indirection stays a rounding error of the attention gather.
+pub const DEFAULT_BLOCK_LEN: usize = 16;
+
+/// The shared block pool has no free block for a requested allocation.
+///
+/// Carried as the typed source of the `anyhow` error the engine returns,
+/// so the scheduler can distinguish memory backpressure (evict the
+/// lowest-progress sequence, retry) from a genuine decode failure
+/// (poison every lane).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvExhausted {
+    /// Blocks the failing operation needed.
+    pub needed: usize,
+    /// Blocks that were actually available.
+    pub free: usize,
+}
+
+impl fmt::Display for KvExhausted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "kv exhausted: need {} block(s), {} free",
+            self.needed, self.free
+        )
+    }
+}
+
+impl std::error::Error for KvExhausted {}
+
+/// Blocks needed to hold `positions` KV rows at the given block length.
+pub fn blocks_for(positions: usize, block_len: usize) -> usize {
+    debug_assert!(block_len > 0);
+    (positions + block_len - 1) / block_len
+}
+
+/// One shared arena of fixed-size KV token blocks with a free list.
+///
+/// Layout per side (K and V): `[n_blocks, n_layers, block_len, d]` f32,
+/// allocated once at construction. Blocks are the unit of allocation;
+/// a block stores `block_len` consecutive token positions for *all*
+/// layers of one sequence.
+pub struct KvBlockPool {
+    n_layers: usize,
+    d: usize,
+    block_len: usize,
+    n_blocks: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Free-list stack; initialized so blocks are handed out in index
+    /// order (deterministic for tests).
+    free: Vec<usize>,
+    /// Per-block ownership bit — the double-free/alias guard.
+    live: Vec<bool>,
+}
+
+impl KvBlockPool {
+    /// Allocate an arena of `n_blocks` blocks of `block_len` tokens each
+    /// (both clamped to at least 1).
+    pub fn new(n_layers: usize, d: usize, n_blocks: usize, block_len: usize) -> KvBlockPool {
+        let n_blocks = n_blocks.max(1);
+        let block_len = block_len.max(1);
+        let elems = n_blocks * n_layers * block_len * d;
+        KvBlockPool {
+            n_layers,
+            d,
+            block_len,
+            n_blocks,
+            k: vec![0.0; elems],
+            v: vec![0.0; elems],
+            free: (0..n_blocks).rev().collect(),
+            live: vec![false; n_blocks],
+        }
+    }
+
+    pub fn block_len(&self) -> usize {
+        self.block_len
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+
+    /// Total arena bytes (capacity, not fill level) across both sides.
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+
+    /// Bytes of one block across both sides.
+    pub fn block_bytes(&self) -> usize {
+        2 * self.n_layers * self.block_len * self.d * 4
+    }
+
+    /// Take a free block. Fails with [`KvExhausted`] when the pool is dry.
+    pub fn alloc(&mut self) -> Result<usize, KvExhausted> {
+        match self.free.pop() {
+            Some(b) => {
+                debug_assert!(!self.live[b], "free list handed out a live block");
+                self.live[b] = true;
+                Ok(b)
+            }
+            None => Err(KvExhausted { needed: 1, free: 0 }),
+        }
+    }
+
+    /// Return a block to the free list. Panics on double-free or an
+    /// out-of-range block — both are sequencer logic errors that would
+    /// otherwise silently alias KV state across sequences.
+    pub fn release(&mut self, block: usize) {
+        assert!(block < self.n_blocks, "release of out-of-range kv block {block}");
+        assert!(self.live[block], "double free of kv block {block}");
+        self.live[block] = false;
+        self.free.push(block);
+    }
+
+    #[inline]
+    fn idx(&self, block: usize, layer: usize, off: usize) -> usize {
+        debug_assert!(block < self.n_blocks && layer < self.n_layers && off < self.block_len);
+        ((block * self.n_layers + layer) * self.block_len + off) * self.d
+    }
+
+    /// Store one position's K/V rows at `(block, layer, off)`.
+    pub fn store(&mut self, block: usize, layer: usize, off: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), self.d);
+        debug_assert_eq!(v_row.len(), self.d);
+        let o = self.idx(block, layer, off);
+        self.k[o..o + self.d].copy_from_slice(k_row);
+        self.v[o..o + self.d].copy_from_slice(v_row);
+    }
+
+    #[inline]
+    pub fn key(&self, block: usize, layer: usize, off: usize) -> &[f32] {
+        let o = self.idx(block, layer, off);
+        &self.k[o..o + self.d]
+    }
+
+    #[inline]
+    pub fn val(&self, block: usize, layer: usize, off: usize) -> &[f32] {
+        let o = self.idx(block, layer, off);
+        &self.v[o..o + self.d]
+    }
+}
+
+/// One sequence's view of the paged KV memory: a block table mapping
+/// logical positions to [`KvBlockPool`] blocks, plus the fill level.
+///
+/// Position `p` lives in table slot `p / block_len` at offset
+/// `p % block_len`. The table grows one block at a time through
+/// [`PagedKv::ensure_pos`] and releases everything via [`PagedKv::clear`]
+/// — a `PagedKv` never outlives its blocks' ownership silently (the pool
+/// panics on double-release, and `tests` below cover the interleavings).
+pub struct PagedKv {
+    /// Logical position cap (the model's `seq_len` — positions beyond it
+    /// have no position embedding).
+    seq: usize,
+    blocks: Vec<usize>,
+    len: usize,
+}
+
+impl PagedKv {
+    /// An empty view (no blocks held) with logical capacity `seq`.
+    pub fn new(seq: usize) -> PagedKv {
+        PagedKv { seq, blocks: Vec::new(), len: 0 }
+    }
+
+    /// Positions filled so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Logical capacity in positions.
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len >= self.seq
+    }
+
+    /// Blocks currently held by this sequence.
+    pub fn held_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// The block table (pool block index per `block_len` positions).
+    pub fn block_table(&self) -> &[usize] {
+        &self.blocks
+    }
+
+    /// Physical address of logical position `pos`.
+    #[inline]
+    pub fn physical(&self, pool: &KvBlockPool, pos: usize) -> (usize, usize) {
+        let bl = pool.block_len();
+        (self.blocks[pos / bl], pos % bl)
+    }
+
+    /// Grow the block table (allocating from `pool`) until position `pos`
+    /// is addressable. Fails with [`KvExhausted`] when the pool is dry; on
+    /// failure the table keeps whatever it grew so far — still a
+    /// consistent state, released by the next [`PagedKv::clear`].
+    pub fn ensure_pos(&mut self, pool: &mut KvBlockPool, pos: usize) -> Result<(), KvExhausted> {
+        debug_assert!(pos < self.seq, "position {pos} beyond seq cap {}", self.seq);
+        let need = blocks_for(pos + 1, pool.block_len());
+        while self.blocks.len() < need {
+            match pool.alloc() {
+                Ok(b) => self.blocks.push(b),
+                Err(_) => {
+                    return Err(KvExhausted {
+                        needed: need - self.blocks.len(),
+                        free: 0,
+                    })
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Store position `pos`'s K/V rows for `layer`. The caller must have
+    /// grown the table past `pos` (see [`PagedKv::ensure_pos`]) and bumps
+    /// `len` once per position via [`PagedKv::advance`] after all layers.
+    pub fn store(
+        &self,
+        pool: &mut KvBlockPool,
+        layer: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        let bl = pool.block_len();
+        pool.store(self.blocks[pos / bl], layer, pos % bl, k_row, v_row);
+    }
+
+    #[inline]
+    pub fn key<'p>(&self, pool: &'p KvBlockPool, layer: usize, pos: usize) -> &'p [f32] {
+        let bl = pool.block_len();
+        pool.key(self.blocks[pos / bl], layer, pos % bl)
+    }
+
+    #[inline]
+    pub fn val<'p>(&self, pool: &'p KvBlockPool, layer: usize, pos: usize) -> &'p [f32] {
+        let bl = pool.block_len();
+        pool.val(self.blocks[pos / bl], layer, pos % bl)
+    }
+
+    pub fn advance(&mut self) {
+        debug_assert!(self.len < self.seq, "paged kv overflow");
+        self.len += 1;
+    }
+
+    /// Logical reset: release every held block back to `pool`.
+    pub fn clear(&mut self, pool: &mut KvBlockPool) {
+        for b in self.blocks.drain(..) {
+            pool.release(b);
+        }
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Pcg32;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn alloc_release_cycle_and_accounting() {
+        let mut pool = KvBlockPool::new(2, 4, 3, 8);
+        assert_eq!((pool.n_blocks(), pool.free_blocks(), pool.used_blocks()), (3, 3, 0));
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!((pool.free_blocks(), pool.used_blocks()), (1, 2));
+        pool.release(a);
+        let c = pool.alloc().unwrap();
+        let d = pool.alloc().unwrap();
+        assert_eq!(pool.free_blocks(), 0);
+        assert_eq!(pool.alloc(), Err(KvExhausted { needed: 1, free: 0 }));
+        assert_eq!(c, a, "released block is recycled");
+        pool.release(b);
+        pool.release(c);
+        pool.release(d);
+        assert_eq!(pool.free_blocks(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut pool = KvBlockPool::new(1, 2, 2, 4);
+        let a = pool.alloc().unwrap();
+        pool.release(a);
+        pool.release(a);
+    }
+
+    #[test]
+    fn store_and_read_back_via_view() {
+        let mut pool = KvBlockPool::new(2, 3, 4, 2);
+        let mut kv = PagedKv::new(8);
+        for pos in 0..5usize {
+            kv.ensure_pos(&mut pool, pos).unwrap();
+            for layer in 0..2 {
+                let k: Vec<f32> = (0..3).map(|j| (pos * 10 + layer * 100 + j) as f32).collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                kv.store(&mut pool, layer, pos, &k, &v);
+            }
+            kv.advance();
+        }
+        assert_eq!(kv.len(), 5);
+        assert_eq!(kv.held_blocks(), 3, "5 positions at block_len 2");
+        for pos in 0..5usize {
+            for layer in 0..2 {
+                let k = kv.key(&pool, layer, pos);
+                assert_eq!(k[1], (pos * 10 + layer * 100 + 1) as f32);
+                assert_eq!(kv.val(&pool, layer, pos)[0], -((pos * 10 + layer * 100) as f32));
+            }
+        }
+        kv.clear(&mut pool);
+        assert_eq!((kv.len(), kv.held_blocks(), pool.free_blocks()), (0, 0, 4));
+    }
+
+    #[test]
+    fn ensure_pos_fails_cleanly_when_dry() {
+        let mut pool = KvBlockPool::new(1, 2, 2, 2);
+        let mut a = PagedKv::new(16);
+        let mut b = PagedKv::new(16);
+        a.ensure_pos(&mut pool, 3).unwrap(); // 2 blocks
+        let err = b.ensure_pos(&mut pool, 0).unwrap_err();
+        assert_eq!(err, KvExhausted { needed: 1, free: 0 });
+        // pool accounting unharmed; releasing a frees b's path
+        a.clear(&mut pool);
+        b.ensure_pos(&mut pool, 3).unwrap();
+        b.clear(&mut pool);
+    }
+
+    #[test]
+    fn blocks_for_boundaries() {
+        assert_eq!(blocks_for(0, 4), 0);
+        assert_eq!(blocks_for(1, 4), 1);
+        assert_eq!(blocks_for(4, 4), 1);
+        assert_eq!(blocks_for(5, 4), 2);
+        assert_eq!(blocks_for(12, 1), 12);
+    }
+
+    /// Drive `ops` random alloc-grow/release steps over `n_seqs` sequences
+    /// sharing one pool, verifying after every step: exact free/used
+    /// accounting, no block aliased across live sequences, and `bytes()`
+    /// constant (the arena never reallocates).
+    fn run_interleaving(seed: u64, n_seqs: usize, n_blocks: usize, block_len: usize, ops: usize) -> Result<(), String> {
+        let mut rng = Pcg32::seeded(seed);
+        let mut pool = KvBlockPool::new(1, 2, n_blocks, block_len);
+        let arena_bytes = pool.bytes();
+        let seq_cap = n_blocks * block_len;
+        let mut seqs: Vec<PagedKv> = (0..n_seqs).map(|_| PagedKv::new(seq_cap)).collect();
+        for step in 0..ops {
+            let i = rng.below(n_seqs);
+            if rng.f64() < 0.75 {
+                // grow by one position (may or may not need a block)
+                if !seqs[i].is_full() {
+                    let pos = seqs[i].len();
+                    match seqs[i].ensure_pos(&mut pool, pos) {
+                        Ok(()) => {
+                            let row = [pos as f32, i as f32];
+                            seqs[i].store(&mut pool, 0, pos, &row, &row);
+                            seqs[i].advance();
+                        }
+                        Err(e) => {
+                            if pool.free_blocks() != 0 {
+                                return Err(format!(
+                                    "step {step}: spurious {e} with {} free",
+                                    pool.free_blocks()
+                                ));
+                            }
+                        }
+                    }
+                }
+            } else {
+                seqs[i].clear(&mut pool);
+            }
+            // accounting is exact
+            let held: usize = seqs.iter().map(|s| s.held_blocks()).sum();
+            if held != pool.used_blocks() {
+                return Err(format!("step {step}: held {held} != used {}", pool.used_blocks()));
+            }
+            if pool.free_blocks() + pool.used_blocks() != pool.n_blocks() {
+                return Err(format!("step {step}: free+used != total"));
+            }
+            if pool.bytes() != arena_bytes {
+                return Err(format!("step {step}: arena reallocated"));
+            }
+            // no aliasing across live sequences
+            let mut seen: BTreeSet<usize> = BTreeSet::new();
+            for s in &seqs {
+                for &b in s.block_table() {
+                    if !seen.insert(b) {
+                        return Err(format!("step {step}: block {b} aliased"));
+                    }
+                }
+            }
+            // every sequence's contents survive its neighbors' churn
+            for (si, s) in seqs.iter().enumerate() {
+                for pos in 0..s.len() {
+                    let k = s.key(&pool, 0, pos);
+                    if k != [pos as f32, si as f32] {
+                        return Err(format!("step {step}: seq {si} pos {pos} corrupted"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn prop_interleavings_never_alias_or_leak() {
+        check(
+            "paged-kv-interleavings",
+            40,
+            |g| {
+                (
+                    g.rng.next_u64(),
+                    g.size(1, 4),  // sequences
+                    g.size(1, 6),  // blocks
+                    g.size(1, 5),  // block_len
+                    g.size(1, 60), // ops
+                )
+            },
+            |&(seed, n_seqs, n_blocks, block_len, ops)| {
+                run_interleaving(seed, n_seqs, n_blocks, block_len, ops)
+            },
+        );
+    }
+
+    /// Heavier version of the interleaving property for the CI `--ignored`
+    /// pass: more sequences, more blocks, long op chains.
+    #[test]
+    #[ignore = "slow: run via cargo test --release -- --ignored"]
+    fn prop_interleavings_never_alias_or_leak_heavy() {
+        check(
+            "paged-kv-interleavings-heavy",
+            60,
+            |g| {
+                (
+                    g.rng.next_u64(),
+                    g.size(1, 12),
+                    g.size(1, 32),
+                    g.size(1, 9),
+                    g.size(50, 600),
+                )
+            },
+            |&(seed, n_seqs, n_blocks, block_len, ops)| {
+                run_interleaving(seed, n_seqs, n_blocks, block_len, ops)
+            },
+        );
+    }
+
+    /// The logical↔physical round-trip law: `physical(p)` is
+    /// `(table[p / bl], p % bl)`, every mapped slot is in range, distinct
+    /// positions never collide, and stored rows read back exactly.
+    #[test]
+    fn prop_logical_physical_roundtrip() {
+        check(
+            "paged-kv-roundtrip",
+            40,
+            |g| (g.size(1, 7), g.size(1, 40)),
+            |&(block_len, positions)| {
+                let n_blocks = blocks_for(positions, block_len);
+                let mut pool = KvBlockPool::new(1, 1, n_blocks, block_len);
+                let mut kv = PagedKv::new(positions);
+                let mut phys: BTreeSet<(usize, usize)> = BTreeSet::new();
+                for pos in 0..positions {
+                    kv.ensure_pos(&mut pool, pos).map_err(|e| e.to_string())?;
+                    kv.store(&mut pool, 0, pos, &[pos as f32], &[pos as f32 + 0.5]);
+                    kv.advance();
+                    let (b, off) = kv.physical(&pool, pos);
+                    if b != kv.block_table()[pos / block_len] || off != pos % block_len {
+                        return Err(format!("pos {pos}: physical() broke the law"));
+                    }
+                    if off >= pool.block_len() || b >= pool.n_blocks() {
+                        return Err(format!("pos {pos}: ({b}, {off}) out of range"));
+                    }
+                    if !phys.insert((b, off)) {
+                        return Err(format!("pos {pos}: physical slot ({b}, {off}) reused"));
+                    }
+                }
+                for pos in 0..positions {
+                    if kv.key(&pool, 0, pos) != [pos as f32]
+                        || kv.val(&pool, 0, pos) != [pos as f32 + 0.5]
+                    {
+                        return Err(format!("pos {pos}: readback mismatch"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -118,7 +118,12 @@ impl PackedModel {
         PackedModel { records }
     }
 
-    pub fn save(&self, path: &Path) -> Result<()> {
+    /// Serialize to the HBQ1 byte image. Deterministic: the same records
+    /// always produce the same bytes, and `from_bytes` ∘ `to_bytes` is the
+    /// identity on the byte image (fuzz-tested below) — alpha/mu are
+    /// already fp16-quantized by the first save, so a load/save cycle
+    /// cannot drift.
+    pub fn to_bytes(&self) -> Vec<u8> {
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(&MAGIC.to_le_bytes());
         buf.extend_from_slice(&VERSION.to_le_bytes());
@@ -158,6 +163,11 @@ impl PackedModel {
                 }
             }
         }
+        buf
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let buf = self.to_bytes();
         let mut f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
         f.write_all(&buf)?;
         Ok(())
@@ -165,6 +175,19 @@ impl PackedModel {
 
     pub fn load(path: &Path) -> Result<PackedModel> {
         let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Self::from_bytes(&raw)
+    }
+
+    /// Parse an HBQ1 byte image. Corrupt input — truncation, a bad magic
+    /// or version, an unknown record kind, or a record whose declared
+    /// shape runs past the end of the buffer — returns `Err`; it never
+    /// panics, and every allocation sized by a header field is bounded by
+    /// the buffer's own size plus a small constant (payload lengths are
+    /// validated against the remaining bytes *before* any allocation and
+    /// the record-table reservation is capped, so a bit-flipped
+    /// `rows`/`cols`/record count cannot trigger a multi-gigabyte `Vec`
+    /// reservation).
+    pub fn from_bytes(raw: &[u8]) -> Result<PackedModel> {
         let mut i = 0usize;
         let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
             if *i + n > raw.len() {
@@ -185,7 +208,16 @@ impl PackedModel {
             bail!("unsupported version");
         }
         let n = u32_at(&mut i)? as usize;
-        let mut records = Vec::with_capacity(n);
+        // a record is at least 11 bytes (name_len + kind + rows + cols), so
+        // a corrupt count larger than the buffer could hold must fail here
+        // — not inside a Vec::with_capacity reservation
+        if (n as u64) * 11 > (raw.len() - i) as u64 {
+            bail!("truncated packed model: {n} records claimed in {} bytes", raw.len());
+        }
+        // cap the up-front reservation: `n` is attacker-controlled (only
+        // loosely bounded by the check above), and real models have tens
+        // of records, not thousands
+        let mut records = Vec::with_capacity(n.min(1024));
         for _ in 0..n {
             let nl = {
                 let s = take(&mut i, 2)?;
@@ -195,6 +227,35 @@ impl PackedModel {
             let kind = take(&mut i, 1)?[0];
             let rows = u32_at(&mut i)? as usize;
             let cols = u32_at(&mut i)? as usize;
+            // validate the declared payload against the remaining bytes
+            // before allocating anything sized by rows/cols; checked math
+            // — rows*cols*4 can wrap u64 for crafted u32 pairs, which
+            // would sneak a tiny "payload" past the length check
+            let payload: u64 = match kind {
+                0 => match (rows as u64)
+                    .checked_mul(cols as u64)
+                    .and_then(|p| p.checked_mul(4))
+                {
+                    Some(p) => p,
+                    None => bail!(
+                        "corrupt packed model: record {name:?} claims {rows}x{cols} elements"
+                    ),
+                },
+                1 => {
+                    let wpr = (cols as u64 + 63) / 64;
+                    // alpha + mu (rows × 2 bands × 2 bytes each) + signs;
+                    // bounded: rows, cols < 2^32 so rows*wpr*8 < 2^62
+                    (rows as u64) * 8 + (rows as u64) * wpr * 8
+                }
+                k => bail!("unknown record kind {k}"),
+            };
+            if payload > (raw.len() - i) as u64 {
+                bail!(
+                    "truncated packed model: record {name:?} claims {payload} payload bytes \
+                     with {} left",
+                    raw.len() - i
+                );
+            }
             let rec = match kind {
                 0 => {
                     let mut data = Vec::with_capacity(rows * cols);
@@ -269,7 +330,140 @@ impl PackedModel {
 mod tests {
     use super::*;
     use crate::tensor::Matrix;
+    use crate::util::proptest::check;
     use crate::util::rng::Pcg32;
+
+    /// A random model: dense and packed records of random shapes (packed
+    /// cols even, spanning one or more sign words), finite values.
+    fn arb_model(seed: u64, max_records: usize) -> PackedModel {
+        let mut rng = Pcg32::seeded(seed);
+        let n = rng.below(max_records + 1);
+        let mut records = Vec::new();
+        for ri in 0..n {
+            let name: String = (0..rng.below(12))
+                .map(|_| (b'a' + rng.below(26) as u8) as char)
+                .collect();
+            let rec = if rng.f64() < 0.5 {
+                let (rows, cols) = (1 + rng.below(4), 1 + rng.below(9));
+                let data = (0..rows * cols).map(|_| rng.normal_f32()).collect();
+                Record::Dense { rows, cols, data }
+            } else {
+                let rows = 1 + rng.below(5);
+                let cols = 2 * (1 + rng.below(40)); // even; up to 80 > one word
+                let w = Matrix::from_fn(rows, cols, |_, _| rng.normal_f32() * 0.1);
+                Record::Packed(HaarPackedLinear::from_dense(&w))
+            };
+            records.push((format!("{name}{ri}"), rec));
+        }
+        PackedModel { records }
+    }
+
+    fn roundtrip_case(seed: u64, max_records: usize) -> Result<(), String> {
+        let m = arb_model(seed, max_records);
+        let b1 = m.to_bytes();
+        let back = PackedModel::from_bytes(&b1).map_err(|e| format!("load failed: {e}"))?;
+        let b2 = back.to_bytes();
+        if b1 == b2 {
+            Ok(())
+        } else {
+            Err(format!("re-save differs: {} vs {} bytes", b1.len(), b2.len()))
+        }
+    }
+
+    fn corruption_case(seed: u64, max_records: usize) -> Result<(), String> {
+        let bytes = arb_model(seed, max_records).to_bytes();
+        let mut rng = Pcg32::seeded(seed ^ 0x9e3779b9);
+        // every strict prefix must fail loudly (records are sized exactly,
+        // so a cut always lands mid-record or mid-header): sample cuts
+        // plus the header boundaries
+        let mut cuts: Vec<usize> = (0..12).map(|_| rng.below(bytes.len())).collect();
+        cuts.extend([0, 4, 8, bytes.len() - 1]);
+        for cut in cuts {
+            if PackedModel::from_bytes(&bytes[..cut]).is_ok() {
+                return Err(format!("truncation at {cut}/{} accepted", bytes.len()));
+            }
+        }
+        // single-bit flips must never panic (the property under test is
+        // "no panic / no huge allocation"); flips inside magic or version
+        // must additionally be rejected
+        for _ in 0..16 {
+            let pos = rng.below(bytes.len());
+            let mut bad = bytes.clone();
+            bad[pos] ^= 1u8 << rng.below(8);
+            let res = PackedModel::from_bytes(&bad);
+            if pos < 8 && res.is_ok() {
+                return Err(format!("corrupt header accepted (byte {pos})"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn fuzz_save_load_save_byte_identical() {
+        check(
+            "hbq1-roundtrip",
+            30,
+            |g| (g.rng.next_u64(), g.size(0, 5)),
+            |&(seed, maxr)| roundtrip_case(seed, maxr),
+        );
+    }
+
+    #[test]
+    fn fuzz_truncated_and_bitflipped_inputs_error_not_panic() {
+        check(
+            "hbq1-corruption",
+            30,
+            |g| (g.rng.next_u64(), g.size(1, 4)),
+            |&(seed, maxr)| corruption_case(seed, maxr),
+        );
+    }
+
+    #[test]
+    #[ignore = "slow: run via cargo test --release -- --ignored"]
+    fn fuzz_hbq1_heavy() {
+        check(
+            "hbq1-roundtrip-heavy",
+            150,
+            |g| (g.rng.next_u64(), g.size(0, 10)),
+            |&(seed, maxr)| roundtrip_case(seed, maxr),
+        );
+        check(
+            "hbq1-corruption-heavy",
+            150,
+            |g| (g.rng.next_u64(), g.size(1, 8)),
+            |&(seed, maxr)| corruption_case(seed, maxr),
+        );
+    }
+
+    #[test]
+    fn corrupt_shape_fields_fail_without_allocating() {
+        // a dense record claiming 2^32-ish elements in a tiny file must be
+        // rejected by the payload check, not die reserving gigabytes
+        let model = PackedModel {
+            records: vec![(
+                "w".into(),
+                Record::Dense { rows: 1, cols: 2, data: vec![1.0, 2.0] },
+            )],
+        };
+        let mut bytes = model.to_bytes();
+        // record starts at 12: name_len(2) + name(1) + kind(1) => rows u32 at 16
+        bytes[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = PackedModel::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // same for a packed record's cols
+        let mut bytes = model.to_bytes();
+        bytes[15] = 1; // kind -> packed
+        bytes[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = PackedModel::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // rows*cols*4 wrapping u64 to 0 must not bypass the length check
+        // (0x8000_0000^2 * 4 == 2^64): Err, not a capacity-overflow panic
+        let mut bytes = model.to_bytes();
+        bytes[16..20].copy_from_slice(&0x8000_0000u32.to_le_bytes());
+        bytes[20..24].copy_from_slice(&0x8000_0000u32.to_le_bytes());
+        let err = PackedModel::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("corrupt"), "{err}");
+    }
 
     #[test]
     fn f16_roundtrip_values() {

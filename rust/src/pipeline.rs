@@ -190,14 +190,24 @@ impl Session {
     /// requested for continuous batching. Backends without multi-lane
     /// state (the stateless XLA path) keep a single logical lane; the
     /// generation scheduler adapts to whatever [`Backend::lanes`] reports.
+    ///
+    /// `kv_blocks`/`block_len` size the paged KV arena (CLI `--kv-blocks`
+    /// / `--block-len`); `None` keeps the backend's worst-case default.
+    /// Sizing below worst case is how serving trades memory for admission
+    /// backpressure — see [`Backend::set_kv_blocks`].
     pub fn serve_backend(
         &self,
         weights: &Weights,
         kind: BackendKind,
         lanes: usize,
+        kv_blocks: Option<usize>,
+        block_len: Option<usize>,
     ) -> Result<Box<dyn Backend>> {
         let mut be = self.gen_backend(weights, kind)?;
         be.set_lanes(lanes);
+        if kv_blocks.is_some() || block_len.is_some() {
+            be.set_kv_blocks(kv_blocks, block_len);
+        }
         Ok(be)
     }
 

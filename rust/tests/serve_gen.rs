@@ -98,6 +98,121 @@ fn late_admission_does_not_perturb_running_lane() {
     assert_eq!(b, want_b, "late-admitted lane diverged from solo run");
 }
 
+/// Acceptance pin for paged KV serving: an arena deliberately sized below
+/// worst case (2 lanes' worth of blocks for 4 clients on 4 lanes) must
+/// complete *every* request through admission backpressure — requests
+/// queue for blocks, never panic, never get evicted — and greedy outputs
+/// stay byte-identical across the contending clients.
+#[test]
+fn undersized_kv_arena_completes_all_requests_via_backpressure() {
+    let seed = 65;
+    let n_clients = 4;
+    let n_new = 6;
+    let mut be = packed_micro(seed);
+    be.set_lanes(4);
+    // seq 12 at block_len 4 -> 3 blocks per worst-case lane; grant 2 lanes' worth
+    be.set_kv_blocks(Some(6), Some(4));
+    let (listener, addr) = serve::bind("127.0.0.1:0").unwrap();
+
+    let clients: Vec<std::thread::JoinHandle<Vec<u8>>> = (0..n_clients)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut stream = stream;
+                let mut line = String::new();
+                // scoring while generation holds the arena: the engine
+                // loop defers the batch for blocks instead of failing it
+                stream.write_all(b"ppl ta kivo remo\n").unwrap();
+                reader.read_line(&mut line).unwrap();
+                assert!(
+                    line.starts_with("ppl "),
+                    "scoring failed under kv pressure: {line:?}"
+                );
+                // prompt 5 + 6 new tokens = 11 positions -> 3 blocks reserved
+                stream.write_all(format!("gen {n_new} 0 0 ta ki\n").as_bytes()).unwrap();
+                let mut toks: Vec<u8> = Vec::new();
+                loop {
+                    line.clear();
+                    reader.read_line(&mut line).unwrap();
+                    let t = line.trim_end();
+                    if let Some(b) = t.strip_prefix("tok ") {
+                        toks.push(b.parse().unwrap());
+                    } else {
+                        assert_eq!(t, format!("done {n_new}"), "request not completed: {t:?}");
+                        break;
+                    }
+                }
+                toks
+            })
+        })
+        .collect();
+
+    serve::serve_on(listener, &mut be, BatcherConfig::default(), Some(n_clients)).unwrap();
+    let outs: Vec<Vec<u8>> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+    for o in &outs[1..] {
+        assert_eq!(o, &outs[0], "backpressure leaked state between sequences");
+    }
+    let mut solo = packed_micro(seed);
+    let mut rng = Pcg32::seeded(0);
+    let full = engine::generate(&mut solo, b"ta ki", n_new, 0.0, &mut rng).unwrap();
+    assert_eq!(&full[b"ta ki".len()..], &outs[0][..]);
+}
+
+/// An arena too small for even one request: the sequence is admitted
+/// (its reservation clamps to the whole arena), decodes until the blocks
+/// run out, and is evicted with a single `err kv exhausted` line — the
+/// server neither panics nor wedges, and a request that fits afterwards
+/// completes normally on the same connection.
+#[test]
+fn kv_exhaustion_over_tcp_reports_err_and_recovers() {
+    let seed = 66;
+    let mut be = packed_micro(seed);
+    be.set_lanes(2);
+    be.set_kv_blocks(Some(1), Some(4)); // one 4-token block total
+    let (listener, addr) = serve::bind("127.0.0.1:0").unwrap();
+
+    let client = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut stream = stream;
+        let mut line = String::new();
+        // 4-byte prompt + 6 tokens needs 3 blocks; only 1 exists
+        stream.write_all(b"gen 6 0 0 abcd\n").unwrap();
+        let mut toks = 0usize;
+        loop {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let t = line.trim_end();
+            if t.starts_with("tok ") {
+                toks += 1;
+                assert!(toks < 6, "over-long sequence was never evicted");
+            } else {
+                assert_eq!(t, "err kv exhausted", "wrong eviction signal: {t:?}");
+                break;
+            }
+        }
+        // eviction released every block: a fitting request completes
+        stream.write_all(b"gen 2 0 0 ab\n").unwrap();
+        let mut generated = 0usize;
+        loop {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let t = line.trim_end();
+            if t.starts_with("tok ") {
+                generated += 1;
+            } else {
+                assert_eq!(t, "done 2", "server wedged after kv eviction: {t:?}");
+                break;
+            }
+        }
+        assert_eq!(generated, 2);
+    });
+
+    serve::serve_on(listener, &mut be, BatcherConfig::default(), Some(1)).unwrap();
+    client.join().unwrap();
+}
+
 /// Full protocol over TCP: more clients than lanes, each mixing legacy
 /// bare-line scoring, `ppl`, empty-input errors, bad syntax, and a greedy
 /// `gen` stream. Greedy determinism across contending clients is the
