@@ -7,10 +7,13 @@
 //! `--kv-blocks`/`--block-len` size the paged KV arena (default: worst
 //! case — shrink it to watch admission backpressure under load).
 //!
-//!     cargo run --release --example serve_quantized [-- --requests 64] [-- --clients 8] [-- --backend native] [-- --lanes 4] [-- --kv-blocks 16]
+//! `--spec-k N` turns on frequency-cascade speculative decoding for
+//! greedy generation requests (Haar low-band draft, full-model verify).
+//!
+//!     cargo run --release --example serve_quantized [-- --requests 64] [-- --clients 8] [-- --backend native] [-- --lanes 4] [-- --kv-blocks 16] [-- --spec-k 4]
 
 use hbllm::coordinator::{serve, BatcherConfig, QuantJobConfig};
-use hbllm::engine::{Backend, BackendKind};
+use hbllm::engine::{Backend, BackendKind, SpecConfig};
 use hbllm::pipeline::{EvalScope, Session};
 use hbllm::quant;
 use hbllm::util::cli::Args;
@@ -39,6 +42,9 @@ fn main() -> anyhow::Result<()> {
     let kv_blocks = args.get("kv-blocks").and_then(|v| v.parse().ok());
     let block_len = args.get("block-len").and_then(|v| v.parse().ok());
     let mut backend = session.serve_backend(&qw, kind, lanes, kv_blocks, block_len)?;
+    // `--spec-k N` drafts with the Haar low band on greedy requests (the
+    // sampling clients below stay on the plain path automatically)
+    let spec = backend.set_spec(SpecConfig::with_k(args.get_usize("spec-k", 0)));
 
     // request corpus: lines from wiki2s
     let corpus = session.corpus("wiki2s")?;
@@ -100,7 +106,12 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
-    serve::serve_on(listener, backend.as_mut(), BatcherConfig::default(), Some(n_clients))?;
+    serve::serve_on(
+        listener,
+        backend.as_mut(),
+        BatcherConfig { spec, ..Default::default() },
+        Some(n_clients),
+    )?;
     let mut lats: Vec<Duration> = Vec::new();
     let mut gen_tokens = 0usize;
     for c in clients {

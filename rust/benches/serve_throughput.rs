@@ -46,6 +46,7 @@ fn run_once(be: &mut dyn Backend, prompts: &[Vec<u8>]) -> usize {
                 max_new: MAX_NEW,
                 temperature: 0.0,
                 seed: i as u64,
+                client: i as u64,
                 reply: tx,
             });
             rx

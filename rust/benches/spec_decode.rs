@@ -1,0 +1,104 @@
+//! Frequency-cascade speculative decoding: greedy tokens/s and draft
+//! acceptance rate vs draft width `k`, against the plain decode baseline
+//! on the same packed synth model.
+//!
+//! The draft reads only the Haar low band of the packed weights (half the
+//! binary dots, zero extra storage); the full model verifies `k + 1`
+//! positions per round in one batched sweep, so the weight fetch that
+//! dominates 1-bit decoding is paid once per round instead of once per
+//! token. Every configuration first asserts byte-identical output against
+//! the plain baseline — this bench cannot silently trade correctness for
+//! speed.
+//!
+//! Results land in BENCH_spec.json via util::bench::write_json so the
+//! trajectory is comparable across commits.
+//!
+//!     cargo bench --bench spec_decode
+
+use hbllm::engine::{self, Backend, NativeBackend, PackedModel};
+use hbllm::model::testing::synth_weights;
+use hbllm::util::bench::{bench, write_json, Measurement, Table};
+use hbllm::util::json::Json;
+use hbllm::util::rng::Pcg32;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+const N_NEW: usize = 48;
+const KS: [usize; 3] = [1, 2, 4];
+
+fn main() -> anyhow::Result<()> {
+    // same shape as the serve bench: big enough that per-token GEMV cost
+    // dominates, small enough to run without artifacts
+    let w = synth_weights(7, 64, 2, 4, 128, 64);
+    let cfg = w.config.clone();
+    let prompt = b"ta kivo remo ".to_vec();
+
+    let mut measurements: Vec<Measurement> = Vec::new();
+    let mut tokens_per_s = BTreeMap::new();
+    let mut acceptance = BTreeMap::new();
+    let mut table = Table::new(&["config", "tokens/s", "vs plain", "acceptance"]);
+
+    // plain greedy baseline (decode_step path, one token per sweep)
+    let mut be = NativeBackend::with_threads(PackedModel::from_weights(&w, true)?, 1, 1);
+    let mut rng = Pcg32::seeded(0);
+    let reference = engine::generate(&mut be, &prompt, N_NEW, 0.0, &mut rng).unwrap();
+    let m = bench("plain", 0.5, || {
+        let mut rng = Pcg32::seeded(0);
+        std::hint::black_box(
+            engine::generate(&mut be, &prompt, N_NEW, 0.0, &mut rng).unwrap(),
+        );
+    });
+    let base_tps = N_NEW as f64 / m.median_s();
+    table.row(&[
+        "plain".into(),
+        format!("{base_tps:.0}"),
+        "1.00x".into(),
+        "-".into(),
+    ]);
+    tokens_per_s.insert("plain".to_string(), Json::Num(base_tps));
+    measurements.push(m);
+
+    for k in KS {
+        let mut be = NativeBackend::with_threads(PackedModel::from_weights(&w, true)?, 1, 1);
+        // correctness gate: speculative output must be byte-identical
+        let out = engine::generate_spec(&mut be, &prompt, N_NEW, k).unwrap();
+        assert_eq!(out, reference, "spec k={k} diverged from plain greedy");
+        let m = bench(&format!("spec-k{k}"), 0.5, || {
+            std::hint::black_box(engine::generate_spec(&mut be, &prompt, N_NEW, k).unwrap());
+        });
+        let tps = N_NEW as f64 / m.median_s();
+        let st = be.spec_stats().expect("native backend meters speculation");
+        let acc = st.acceptance();
+        table.row(&[
+            format!("spec k={k}"),
+            format!("{tps:.0}"),
+            format!("{:.2}x", tps / base_tps),
+            format!("{:.1}%", 100.0 * acc),
+        ]);
+        tokens_per_s.insert(format!("spec-k{k}"), Json::Num(tps));
+        acceptance.insert(format!("spec-k{k}"), Json::Num(acc));
+        measurements.push(m);
+    }
+
+    println!(
+        "\n== speculative decode ({N_NEW} greedy tokens, packed {} model, low-band draft) ==",
+        cfg.name
+    );
+    table.print();
+    println!("\nevery spec config was asserted byte-identical to the plain baseline");
+    println!("before timing; acceptance is cumulative over all timed rounds.");
+
+    let context = [
+        ("model", Json::Str(cfg.name.clone())),
+        ("d_model", Json::Num(cfg.d_model as f64)),
+        ("n_layers", Json::Num(cfg.n_layers as f64)),
+        ("seq_len", Json::Num(cfg.seq_len as f64)),
+        ("n_new", Json::Num(N_NEW as f64)),
+        ("tokens_per_s", Json::Obj(tokens_per_s)),
+        ("acceptance", Json::Obj(acceptance)),
+    ];
+    let out = Path::new("BENCH_spec.json");
+    write_json(out, &context, &measurements)?;
+    println!("\nwrote {}", out.display());
+    Ok(())
+}

@@ -3,23 +3,27 @@
 //! Subcommands:
 //!   info                         artifact + platform summary
 //!   quantize  --method M         quantize, report per-layer metrics
+//!                                (`--save model.hbq` writes the artifact)
 //!   eval      --method M         quantize + perplexity/QA row
 //!   serve     --method M --addr  continuous-batching generation + scoring
 //!                                server (`--lanes`, `--max-new`,
-//!                                `--kv-blocks`, `--block-len`)
-//!   generate  [--method M]       sample text locally
+//!                                `--kv-blocks`, `--block-len`, `--spec-k`;
+//!                                `--load model.hbq` serves a saved
+//!                                artifact without re-quantizing)
+//!   generate  [--method M]       sample text locally (`--load`, `--spec-k`)
 //!   ciq                          CIQ expressiveness table (§3.1)
 //!
 //! The serve wire protocol is documented in `README.md` §Serving.
 
 use crate::coordinator::{serve, BatcherConfig, QuantJobConfig};
-use crate::engine::{self, Backend, BackendKind};
+use crate::engine::{self, Backend, BackendKind, SpecConfig};
 use crate::pipeline::{EvalScope, Session};
 use crate::quant::{self, ciq, synth, Quantizer};
 use crate::util::bench::Table;
 use crate::util::cli::Args;
 use crate::util::fmt_sig;
 use anyhow::{anyhow, Result};
+use std::path::Path;
 
 pub fn run(args: Args) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -60,6 +64,10 @@ OPTIONS:
   --ppl-windows N          eval windows per corpus (default 64)
   --qa-items N             QA items per family (default 25)
   --calib-windows N        calibration windows (default 16)
+  --save FILE              quantize: also write the packed .hbq artifact
+  --load FILE              serve/generate: execute a saved .hbq artifact on
+                           the native engine instead of re-quantizing at
+                           startup (--method not needed)
   --addr HOST:PORT         serve address (default 127.0.0.1:7431)
   --lanes N                serve: concurrent KV decode lanes (default 4;
                            continuous batching sweeps the packed weights
@@ -70,6 +78,10 @@ OPTIONS:
   --block-len N            serve: tokens per KV block (default 16)
   --max-new N              serve: per-request generated-token cap (default 256)
                            generate: tokens to sample (default 120)
+  --spec-k N               speculative decoding: draft N tokens per round
+                           with the Haar low band, verify with the full
+                           packed model (greedy only; output is
+                           byte-identical to plain decode; default off)
   --pallas                 use the Pallas-attention HLO entry (xla backend)
 ";
 
@@ -141,7 +153,7 @@ fn info(args: &Args) -> Result<()> {
 fn quantize(args: &Args) -> Result<()> {
     let mut s = session(args)?;
     let m = method(args)?;
-    let (_, results) = s.quantize(m.as_ref(), &scope(args), &job(args))?;
+    let (qw, results) = s.quantize(m.as_ref(), &scope(args), &job(args))?;
     let mut t = Table::new(&["layer", "shape", "mse", "wbits", "sec"]);
     for r in &results {
         t.row(&[
@@ -155,6 +167,23 @@ fn quantize(args: &Args) -> Result<()> {
     t.print();
     let agg = crate::coordinator::scheduler::aggregate_wbits(&results);
     println!("aggregate W-bits: {}", fmt_sig(agg, 4));
+    if let Some(path) = args.get("save") {
+        // HBQ1 *is* the Haar-packed 1-bit form: packing a baseline's
+        // weights would silently re-quantize them into HBLLM's shape —
+        // the same misreporting native serving refuses (`native_pack`)
+        anyhow::ensure!(
+            native_pack(&m.name()),
+            "--save writes the HBQ1 Haar-packed 1-bit deployment form; packing {} \
+             weights would silently re-quantize them (use an hbllm-* method)",
+            m.name()
+        );
+        let art = crate::pack::format::PackedModel::from_weights(&qw);
+        art.save(Path::new(path))?;
+        println!(
+            "saved packed artifact to {path} ({} file bits/linear weight); serve it with --load",
+            fmt_sig(art.file_bits_per_linear_weight(), 4)
+        );
+    }
     Ok(())
 }
 
@@ -201,28 +230,41 @@ fn eval(args: &Args) -> Result<()> {
 
 fn serve_cmd(args: &Args) -> Result<()> {
     let mut s = session(args)?;
-    let m = method(args)?;
-    let sc = scope(args);
-    let (qw, _) = s.quantize(m.as_ref(), &sc, &job(args))?;
     let lanes = args.get_usize("lanes", 4);
     let kv_blocks = args.get("kv-blocks").and_then(|v| v.parse().ok());
     let block_len = args.get("block-len").and_then(|v| v.parse().ok());
-    let mut be = s.serve_backend(
-        &qw,
-        backend_kind(args, native_pack(&m.name()))?,
-        lanes,
-        kv_blocks,
-        block_len,
-    )?;
+    // either execute a saved .hbq artifact directly (native engine, no
+    // startup re-quantization) or quantize from the session weights
+    let (mut be, label) = match args.get("load") {
+        Some(path) => {
+            let be = s.loaded_backend(Path::new(path), lanes, kv_blocks, block_len)?;
+            (be, format!("artifact {path}"))
+        }
+        None => {
+            let m = method(args)?;
+            let (qw, _) = s.quantize(m.as_ref(), &scope(args), &job(args))?;
+            let be = s.serve_backend(
+                &qw,
+                backend_kind(args, native_pack(&m.name()))?,
+                lanes,
+                kv_blocks,
+                block_len,
+            )?;
+            (be, m.name())
+        }
+    };
+    // effective config: backends without a draft path report it disabled
+    // and the scheduler falls back to plain decoding
+    let spec = be.set_spec(SpecConfig::with_k(args.get_usize("spec-k", 0)));
     let cfg = BatcherConfig {
         max_new_cap: args.get_usize("max-new", BatcherConfig::default().max_new_cap),
+        spec,
         ..Default::default()
     };
     let addr = args.get_or("addr", "127.0.0.1:7431");
     let (listener, local) = serve::bind(addr)?;
     println!(
-        "serving quantized ({}) model on {local} [backend {}, {} lanes, max-new {}]",
-        m.name(),
+        "serving quantized ({label}) model on {local} [backend {}, {} lanes, max-new {}]",
         be.name(),
         be.lanes(),
         cfg.max_new_cap
@@ -236,29 +278,77 @@ fn serve_cmd(args: &Args) -> Result<()> {
             st.arena_bytes as f64 / (1024.0 * 1024.0)
         );
     }
+    if spec.enabled {
+        println!(
+            "speculative decoding: Haar low-band draft, k={} (greedy requests only; \
+             byte-identical output; draft KV allocated lazily per speculating lane, \
+             outside the paged arena above; acceptance reported on shutdown)",
+            spec.k
+        );
+    }
     println!("protocol: `ppl <text>` -> `ppl <v>` | `gen <max-new> <temp> <seed> <prompt>` -> `tok <byte>`* `done <n>`");
-    serve::serve_on(listener, be.as_mut(), cfg, None)
+    serve::serve_on(listener, be.as_mut(), cfg, None)?;
+    if let Some(st) = be.spec_stats() {
+        if st.enabled && st.drafted > 0 {
+            println!(
+                "spec acceptance: {:.1}% ({} of {} drafts over {} rounds; \
+                 draft kv {:.1} KiB)",
+                100.0 * st.acceptance(),
+                st.accepted,
+                st.drafted,
+                st.rounds,
+                st.draft_kv_bytes as f64 / 1024.0
+            );
+        }
+    }
+    Ok(())
 }
 
 fn generate_cmd(args: &Args) -> Result<()> {
     let mut s = session(args)?;
-    let (weights, pack) = match args.get("method") {
-        Some(_) => {
-            let m = method(args)?;
-            eprintln!("quantizing with {}...", m.name());
-            let w = s.quantize(m.as_ref(), &scope(args), &job(args))?.0;
-            let pack = native_pack(&m.name());
-            (w, pack)
+    let mut be = match args.get("load") {
+        Some(path) => s.loaded_backend(Path::new(path), 1, None, None)?,
+        None => {
+            let (weights, pack) = match args.get("method") {
+                Some(_) => {
+                    let m = method(args)?;
+                    eprintln!("quantizing with {}...", m.name());
+                    let w = s.quantize(m.as_ref(), &scope(args), &job(args))?.0;
+                    let pack = native_pack(&m.name());
+                    (w, pack)
+                }
+                None => (s.clone_weights(), false),
+            };
+            s.gen_backend(&weights, backend_kind(args, pack)?)?
         }
-        None => (s.clone_weights(), false),
     };
-    let mut be = s.gen_backend(&weights, backend_kind(args, pack)?)?;
     let prompt = args.get_or("prompt", "ta kivo ").as_bytes().to_vec();
     let n_new = args.get_usize("max-new", args.get_usize("tokens", 120));
     let temp = args.get_f64("temperature", 0.8) as f32;
-    let mut rng = crate::util::rng::Pcg32::seeded(args.get_usize("seed", 0) as u64);
-    let out = engine::generate(be.as_mut(), &prompt, n_new, temp, &mut rng)?;
+    let spec_k = args.get_usize("spec-k", 0);
+    let out = if spec_k > 0 && temp <= 0.0 {
+        be.set_spec(SpecConfig::with_k(spec_k));
+        engine::generate_spec(be.as_mut(), &prompt, n_new, spec_k)?
+    } else {
+        if spec_k > 0 {
+            eprintln!("--spec-k needs greedy decoding (--temperature 0); sampling plainly");
+        }
+        let mut rng = crate::util::rng::Pcg32::seeded(args.get_usize("seed", 0) as u64);
+        engine::generate(be.as_mut(), &prompt, n_new, temp, &mut rng)?
+    };
     println!("{}", String::from_utf8_lossy(&out));
+    if let Some(st) = be.spec_stats() {
+        if st.drafted > 0 {
+            eprintln!(
+                "[spec k={} acceptance {:.1}% — {} of {} drafts over {} rounds]",
+                spec_k,
+                100.0 * st.acceptance(),
+                st.accepted,
+                st.drafted,
+                st.rounds
+            );
+        }
+    }
     Ok(())
 }
 
@@ -333,6 +423,17 @@ mod tests {
         let a = parse("serve --method hbllm-row");
         assert_eq!(a.get("kv-blocks"), None);
         assert_eq!(a.get("block-len"), None);
+    }
+
+    #[test]
+    fn spec_load_save_flags_parse() {
+        let a = parse("serve --method hbllm-row --spec-k 4");
+        assert_eq!(a.get_usize("spec-k", 0), 4);
+        let a = parse("serve --load model.hbq");
+        assert_eq!(a.get("load"), Some("model.hbq"));
+        assert_eq!(a.get_usize("spec-k", 0), 0, "spec defaults off");
+        let a = parse("quantize --method hbllm-row --save out.hbq");
+        assert_eq!(a.get("save"), Some("out.hbq"));
     }
 
     #[test]

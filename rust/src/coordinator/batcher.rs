@@ -13,7 +13,10 @@
 //! generation steps on the real backend.
 
 use super::scheduler::{GenEvent, GenRequest};
+use crate::engine::SpecConfig;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Copy, Debug)]
@@ -24,6 +27,10 @@ pub struct BatcherConfig {
     pub max_wait: Duration,
     /// Admission-control cap on any single generation request's `max_new`.
     pub max_new_cap: usize,
+    /// Speculative decoding for greedy generation (`serve --spec-k`).
+    /// Pass the *effective* config `Backend::set_spec` returned so the
+    /// scheduler and backend agree; the default is disabled.
+    pub spec: SpecConfig,
 }
 
 impl Default for BatcherConfig {
@@ -32,6 +39,7 @@ impl Default for BatcherConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(20),
             max_new_cap: 256,
+            spec: SpecConfig::disabled(),
         }
     }
 }
@@ -56,12 +64,33 @@ pub struct Batcher {
     rx: Receiver<Work>,
 }
 
+/// Cloning a handle keeps its client identity (`clone` = same caller);
+/// [`BatcherHandle::connection`] mints a handle with a fresh client id —
+/// the serve accept loop calls it per TCP connection so the generation
+/// scheduler can round-robin admission across clients.
 #[derive(Clone)]
 pub struct BatcherHandle {
     tx: Sender<Work>,
+    /// Client identity attached to generation requests from this handle.
+    client: u64,
+    next_client: Arc<AtomicU64>,
 }
 
 impl BatcherHandle {
+    /// A handle carrying a fresh client id (same underlying channel).
+    pub fn connection(&self) -> BatcherHandle {
+        BatcherHandle {
+            tx: self.tx.clone(),
+            client: self.next_client.fetch_add(1, Ordering::Relaxed),
+            next_client: self.next_client.clone(),
+        }
+    }
+
+    /// The client id this handle stamps on generation requests.
+    pub fn client(&self) -> u64 {
+        self.client
+    }
+
     /// Blocking score call: perplexity (exp mean NLL/byte) for `text`.
     pub fn score(&self, text: &[u8]) -> Result<f64, String> {
         let (tx, rx) = channel();
@@ -89,6 +118,7 @@ impl BatcherHandle {
                 max_new,
                 temperature,
                 seed,
+                client: self.client,
                 reply: tx,
             }))
             .map_err(|_| "batcher gone".to_string())?;
@@ -99,7 +129,12 @@ impl BatcherHandle {
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> (Batcher, BatcherHandle) {
         let (tx, rx) = channel();
-        (Batcher { cfg, rx }, BatcherHandle { tx })
+        let handle = BatcherHandle {
+            tx,
+            client: 0,
+            next_client: Arc::new(AtomicU64::new(1)),
+        };
+        (Batcher { cfg, rx }, handle)
     }
 
     /// Blocking receive; `None` once every handle has dropped.
@@ -258,6 +293,16 @@ mod tests {
         assert_eq!(handle.score(b"x"), Err("boom".to_string()));
         drop(handle);
         worker.join().unwrap();
+    }
+
+    #[test]
+    fn connection_handles_get_distinct_client_ids() {
+        let (_batcher, handle) = Batcher::new(BatcherConfig::default());
+        let a = handle.connection();
+        let b = handle.connection();
+        assert_ne!(a.client(), b.client(), "connections share a client id");
+        assert_eq!(a.clone().client(), a.client(), "clone must keep identity");
+        assert_ne!(handle.connection().client(), b.client());
     }
 
     #[test]

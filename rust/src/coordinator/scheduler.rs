@@ -24,14 +24,14 @@ use super::progress::Progress;
 use crate::calib::CtxMap;
 use crate::data::ByteTokenizer;
 use crate::engine::paged::blocks_for;
-use crate::engine::{sample_logits, Backend, KvExhausted};
+use crate::engine::{sample_logits, Backend, KvExhausted, SpecConfig};
 use crate::model::Weights;
 use crate::quant::{BitsBreakdown, Quantizer};
 use crate::tensor::Matrix;
 use crate::util::rng::Pcg32;
 use anyhow::{anyhow, Result};
 use std::cmp::Reverse;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Mutex;
@@ -154,6 +154,10 @@ pub struct GenRequest {
     pub temperature: f32,
     /// Sampling RNG seed (ignored for greedy decoding).
     pub seed: u64,
+    /// Originating client connection. Admission round-robins across
+    /// clients (per-client FIFO), so one chatty connection cannot starve
+    /// the others; requests sharing a client id keep strict FIFO order.
+    pub client: u64,
     pub reply: Sender<GenEvent>,
 }
 
@@ -175,14 +179,24 @@ struct ActiveSeq {
 /// Admission-controlled continuous batching over a backend's KV lanes.
 ///
 /// The scheduler owns no model state — lanes live in the backend
-/// ([`Backend::lanes`]); it owns the queue, the per-sequence sampling
+/// ([`Backend::lanes`]); it owns the queues, the per-sequence sampling
 /// state, and the admit/step/evict policy. Drive it with repeated
 /// [`GenScheduler::step`] calls while [`GenScheduler::has_work`].
+///
+/// With a [`SpecConfig`] ([`GenScheduler::with_spec`]), greedy sequences
+/// decode speculatively through [`Backend::decode_batch_spec`] — several
+/// verified bytes per step — while sampling sequences share the same
+/// lanes on the plain path (mixed speculative/plain batches).
 pub struct GenScheduler {
     /// `slots[i]` is the sequence resident in backend lane `i`.
     slots: Vec<Option<ActiveSeq>>,
-    queue: VecDeque<GenRequest>,
+    /// Per-client FIFO queues; admission serves clients from `rr` in
+    /// rotation so a chatty client cannot starve the rest.
+    queues: BTreeMap<u64, VecDeque<GenRequest>>,
+    /// Round-robin rotation of client ids with pending requests.
+    rr: VecDeque<u64>,
     max_new_cap: usize,
+    spec: SpecConfig,
 }
 
 impl GenScheduler {
@@ -190,10 +204,19 @@ impl GenScheduler {
     /// stepped; `max_new_cap` bounds any single request's token budget
     /// (admission control — one request cannot monopolize a lane forever).
     pub fn new(lanes: usize, max_new_cap: usize) -> GenScheduler {
+        GenScheduler::with_spec(lanes, max_new_cap, SpecConfig::disabled())
+    }
+
+    /// As [`GenScheduler::new`], with speculative decoding for greedy
+    /// sequences. Pass the *effective* config [`Backend::set_spec`]
+    /// returned so scheduler and backend agree.
+    pub fn with_spec(lanes: usize, max_new_cap: usize, spec: SpecConfig) -> GenScheduler {
         GenScheduler {
             slots: (0..lanes.max(1)).map(|_| None).collect(),
-            queue: VecDeque::new(),
+            queues: BTreeMap::new(),
+            rr: VecDeque::new(),
             max_new_cap: max_new_cap.max(1),
+            spec,
         }
     }
 
@@ -206,13 +229,13 @@ impl GenScheduler {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
-    /// Requests waiting for a free lane.
+    /// Requests waiting for a free lane (all clients).
     pub fn queued(&self) -> usize {
-        self.queue.len()
+        self.queues.values().map(|q| q.len()).sum()
     }
 
     pub fn has_work(&self) -> bool {
-        self.active() > 0 || !self.queue.is_empty()
+        self.active() > 0 || !self.rr.is_empty()
     }
 
     /// Enqueue a request. A zero-token request completes immediately.
@@ -221,7 +244,33 @@ impl GenScheduler {
             let _ = req.reply.send(GenEvent::Done { text: req.prompt, generated: 0 });
             return;
         }
-        self.queue.push_back(req);
+        let client = req.client;
+        self.queues.entry(client).or_default().push_back(req);
+        if !self.rr.contains(&client) {
+            self.rr.push_back(client);
+        }
+    }
+
+    /// The next request in client rotation (front of the head client's
+    /// FIFO), without dequeuing it.
+    fn peek_next(&self) -> Option<&GenRequest> {
+        let client = self.rr.front()?;
+        self.queues.get(client).and_then(|q| q.front())
+    }
+
+    /// Dequeue the request [`Self::peek_next`] pointed at, rotating its
+    /// client to the back of the round-robin (or out of it when drained).
+    fn pop_next(&mut self) -> Option<GenRequest> {
+        let client = *self.rr.front()?;
+        let queue = self.queues.get_mut(&client)?;
+        let req = queue.pop_front();
+        if queue.is_empty() {
+            self.queues.remove(&client);
+            self.rr.pop_front();
+        } else {
+            self.rr.rotate_left(1);
+        }
+        req
     }
 
     /// Move queued requests into free lanes, highest index first: scoring
@@ -230,14 +279,21 @@ impl GenScheduler {
     /// full-window re-prefill per token under mixed traffic (the engine's
     /// prefix guard makes the clobber safe either way).
     ///
+    /// Admission order is round-robin across client connections
+    /// (per-client FIFO): with several clients queued, each free lane
+    /// goes to the next client in rotation, so one connection submitting
+    /// many requests cannot starve the others. A single client degrades
+    /// to the old strict global FIFO.
+    ///
     /// On KV-metered backends ([`Backend::kv_stats`]), admission is also
     /// gated on block memory: a request reserves enough blocks for its
     /// worst case (prompt + capped token budget, clipped to the window),
-    /// and the head of the queue stalls — strict FIFO, no starvation —
-    /// until evictions free that many unpromised blocks. A request too big
-    /// to ever fit reserves the whole arena and is admitted alone; if it
-    /// outgrows the arena mid-decode the exhaustion path below evicts it
-    /// with `kv exhausted` rather than wedging the sweep.
+    /// and the head of the rotation stalls — the rotation does not skip
+    /// it, so there is still no starvation — until evictions free that
+    /// many unpromised blocks. A request too big to ever fit reserves the
+    /// whole arena and is admitted alone; if it outgrows the arena
+    /// mid-decode the exhaustion path below evicts it with `kv exhausted`
+    /// rather than wedging the sweep.
     fn admit(&mut self, be: &mut dyn Backend) {
         let stats = be.kv_stats();
         let mut avail = match &stats {
@@ -263,7 +319,7 @@ impl GenScheduler {
             if self.slots[lane].is_some() {
                 continue;
             }
-            let Some(front) = self.queue.front() else { return };
+            let Some(front) = self.peek_next() else { return };
             let mut reserved = 0usize;
             if let Some(st) = &stats {
                 let prompt_len = front.prompt.len().max(1); // pad-seeded
@@ -277,7 +333,7 @@ impl GenScheduler {
                 }
                 avail -= reserved;
             }
-            let req = self.queue.pop_front().expect("front() was Some");
+            let req = self.pop_next().expect("peek_next() was Some");
             be.reset_lane(lane);
             let mut text = req.prompt;
             if text.is_empty() {
@@ -296,38 +352,32 @@ impl GenScheduler {
         }
     }
 
-    /// One continuous-batching step: admit, decode every active lane in a
-    /// single [`Backend::decode_batch`] sweep, sample + stream one token
-    /// per sequence, evict exhausted or abandoned sequences (freeing their
-    /// lanes for the next step's admissions). Returns tokens produced.
-    ///
-    /// A sweep refused for KV memory (typed [`KvExhausted`]) evicts the
+    /// Drive one backend sweep for a group of active lanes with the
+    /// eviction policy shared by the plain and speculative paths: a sweep
+    /// refused for KV memory (typed [`KvExhausted`]) evicts the group's
     /// lowest-progress sequence — its client gets `Error("kv exhausted")`
-    /// — and retries with the survivors, so one over-long sequence cannot
-    /// wedge the whole batch. Any other decode failure still poisons every
-    /// active lane (the backend's state is not trustworthy after it).
-    pub fn step(&mut self, be: &mut dyn Backend) -> usize {
-        self.admit(be);
-        let mut idxs: Vec<usize> = self
-            .slots
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.is_some())
-            .map(|(i, _)| i)
-            .collect();
-        if idxs.is_empty() {
-            return 0;
-        }
-        let rows = loop {
+    /// — and retries with the survivors; any other failure poisons every
+    /// lane in the group (the backend's state is not trustworthy after
+    /// it). Returns the surviving lanes and their per-lane results.
+    fn sweep_group<T>(
+        &mut self,
+        be: &mut dyn Backend,
+        mut idxs: Vec<usize>,
+        run: impl Fn(&mut dyn Backend, &[(usize, &[u8])]) -> Result<Vec<T>>,
+    ) -> (Vec<usize>, Vec<T>) {
+        loop {
+            if idxs.is_empty() {
+                return (idxs, Vec::new());
+            }
             let res = {
                 let reqs: Vec<(usize, &[u8])> = idxs
                     .iter()
                     .map(|&i| (i, self.slots[i].as_ref().unwrap().text.as_slice()))
                     .collect();
-                be.decode_batch(&reqs)
+                run(be, &reqs)
             };
             match res {
-                Ok(rows) => break rows,
+                Ok(out) => return (idxs, out),
                 Err(e) if e.downcast_ref::<KvExhausted>().is_some() => {
                     // memory backpressure, not a broken backend: free
                     // blocks by evicting the lowest-progress sequence
@@ -345,13 +395,10 @@ impl GenScheduler {
                     }
                     be.reset_lane(victim);
                     idxs.retain(|&i| i != victim);
-                    if idxs.is_empty() {
-                        return 0;
-                    }
                 }
                 Err(e) => {
-                    // a decode failure poisons every active lane: report and
-                    // drain so the serve loop does not spin on the error
+                    // a decode failure poisons every lane in the group:
+                    // report and drain so the serve loop does not spin
                     let msg = e.to_string();
                     for &i in &idxs {
                         if let Some(seq) = self.slots[i].take() {
@@ -359,29 +406,105 @@ impl GenScheduler {
                         }
                         be.reset_lane(i);
                     }
-                    return 0;
+                    return (Vec::new(), Vec::new());
                 }
             }
-        };
-        let mut produced = 0;
-        for (&i, row) in idxs.iter().zip(rows) {
-            let slot = &mut self.slots[i];
-            let seq = slot.as_mut().unwrap();
-            let next = sample_logits(&row, seq.temperature, &mut seq.rng) as u8;
-            seq.text.push(next);
+        }
+    }
+
+    /// Stream `bytes` to lane `i`'s client (clamped to its remaining
+    /// budget), then evict on budget exhaustion or a dead client. Returns
+    /// bytes actually produced.
+    fn commit_bytes(&mut self, be: &mut dyn Backend, i: usize, bytes: &[u8]) -> usize {
+        let slot = &mut self.slots[i];
+        let seq = slot.as_mut().unwrap();
+        let mut produced = 0usize;
+        let mut alive = true;
+        for &b in bytes {
+            if seq.remaining == 0 {
+                break; // speculative overshoot past the budget: dropped
+            }
+            seq.text.push(b);
             seq.generated += 1;
             seq.remaining -= 1;
             produced += 1;
-            let alive = seq.reply.send(GenEvent::Token(next)).is_ok();
-            let exhausted = seq.remaining == 0;
-            if exhausted || !alive {
-                let seq = slot.take().unwrap();
-                if exhausted {
-                    let _ = seq
-                        .reply
-                        .send(GenEvent::Done { text: seq.text, generated: seq.generated });
-                }
-                be.reset_lane(i); // free the KV lane for the next admission
+            alive = seq.reply.send(GenEvent::Token(b)).is_ok();
+            if !alive {
+                break;
+            }
+        }
+        let exhausted = seq.remaining == 0;
+        if exhausted || !alive {
+            let seq = slot.take().unwrap();
+            if exhausted {
+                let _ = seq
+                    .reply
+                    .send(GenEvent::Done { text: seq.text, generated: seq.generated });
+            }
+            be.reset_lane(i); // free the KV lane for the next admission
+        }
+        produced
+    }
+
+    /// One continuous-batching step: admit, decode every active lane —
+    /// greedy lanes speculatively via [`Backend::decode_batch_spec`] when
+    /// a [`SpecConfig`] is enabled (1 to `k + 1` verified bytes each),
+    /// sampling lanes via a plain [`Backend::decode_batch`] sweep — then
+    /// stream the new bytes and evict exhausted or abandoned sequences
+    /// (freeing their lanes for the next step's admissions). Returns
+    /// bytes produced across all lanes.
+    pub fn step(&mut self, be: &mut dyn Backend) -> usize {
+        self.admit(be);
+        let idxs: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_some())
+            .map(|(i, _)| i)
+            .collect();
+        if idxs.is_empty() {
+            return 0;
+        }
+        let use_spec = self.spec.enabled && self.spec.k > 0;
+        let (spec_idxs, plain_idxs): (Vec<usize>, Vec<usize>) = idxs
+            .into_iter()
+            .partition(|&i| use_spec && self.slots[i].as_ref().unwrap().temperature <= 0.0);
+        let mut produced = 0usize;
+        if !spec_idxs.is_empty() {
+            // clamp the draft width to the group's tightest remaining
+            // budget: admission reserved KV blocks for prompt + max_new
+            // only, so a round must never grow a lane's KV past that
+            // worst case (and drafts beyond the budget would be verified
+            // just to be dropped). A lane with `remaining == 1` pulls the
+            // group to k = 0 for one plain round — it is evicted at the
+            // end of it.
+            let min_remaining = spec_idxs
+                .iter()
+                .map(|&i| self.slots[i].as_ref().unwrap().remaining)
+                .min()
+                .unwrap_or(1);
+            let k = self.spec.k.min(min_remaining.saturating_sub(1));
+            let (alive, rounds) = self.sweep_group(
+                be,
+                spec_idxs,
+                |be: &mut dyn Backend, reqs: &[(usize, &[u8])]| be.decode_batch_spec(reqs, k),
+            );
+            for (&i, round) in alive.iter().zip(rounds) {
+                produced += self.commit_bytes(be, i, &round.bytes);
+            }
+        }
+        if !plain_idxs.is_empty() {
+            let (alive, rows) = self.sweep_group(
+                be,
+                plain_idxs,
+                |be: &mut dyn Backend, reqs: &[(usize, &[u8])]| be.decode_batch(reqs),
+            );
+            for (&i, row) in alive.iter().zip(rows) {
+                let next = {
+                    let seq = self.slots[i].as_mut().unwrap();
+                    sample_logits(&row, seq.temperature, &mut seq.rng) as u8
+                };
+                produced += self.commit_bytes(be, i, &[next]);
             }
         }
         produced
@@ -509,12 +632,22 @@ mod gen_tests {
     }
 
     fn submit(sched: &mut GenScheduler, prompt: &[u8], max_new: usize) -> Receiver<GenEvent> {
+        submit_for(sched, 0, prompt, max_new)
+    }
+
+    fn submit_for(
+        sched: &mut GenScheduler,
+        client: u64,
+        prompt: &[u8],
+        max_new: usize,
+    ) -> Receiver<GenEvent> {
         let (tx, rx) = channel();
         sched.submit(GenRequest {
             prompt: prompt.to_vec(),
             max_new,
             temperature: 0.0,
             seed: 0,
+            client,
             reply: tx,
         });
         rx
@@ -558,6 +691,140 @@ mod gen_tests {
                 other => panic!("expected Done, got {other:?}"),
             }
         }
+    }
+
+    /// Two clients, one lane: client A floods the queue before B's single
+    /// request arrives; round-robin admission must serve B's request
+    /// second, not after all of A's (the starvation the per-client
+    /// rotation exists to prevent). Within a client, FIFO order holds.
+    #[test]
+    fn round_robin_admission_prevents_client_starvation() {
+        let mut be = MockBackend { lanes: 1, resets: 0 };
+        let mut sched = GenScheduler::new(1, 8);
+        let a1 = submit_for(&mut sched, 1, b"a", 2);
+        let a2 = submit_for(&mut sched, 1, b"b", 2);
+        let a3 = submit_for(&mut sched, 1, b"c", 2);
+        let b1 = submit_for(&mut sched, 2, b"x", 2);
+        assert_eq!(sched.queued(), 4);
+
+        // completion order is the admission order (one lane, FIFO drain):
+        // track when each receiver sees Done relative to the others
+        let mut order: Vec<&'static str> = Vec::new();
+        let mut check = |done: &mut Vec<&'static str>| {
+            for (name, rx) in [("a1", &a1), ("a2", &a2), ("a3", &a3), ("b1", &b1)] {
+                if done.contains(&name) {
+                    continue;
+                }
+                if rx.try_iter().any(|e| matches!(e, GenEvent::Done { .. })) {
+                    done.push(name);
+                }
+            }
+        };
+        let mut steps = 0;
+        while sched.has_work() {
+            sched.step(&mut be);
+            check(&mut order);
+            steps += 1;
+            assert!(steps < 100, "scheduler failed to drain");
+        }
+        assert_eq!(
+            order,
+            vec!["a1", "b1", "a2", "a3"],
+            "rotation did not interleave clients"
+        );
+    }
+
+    #[test]
+    fn single_client_keeps_strict_fifo() {
+        let mut be = MockBackend { lanes: 1, resets: 0 };
+        let mut sched = GenScheduler::new(1, 8);
+        let r1 = submit(&mut sched, b"a", 1);
+        let r2 = submit(&mut sched, b"b", 1);
+        sched.step(&mut be);
+        assert!(r1.try_iter().any(|e| matches!(e, GenEvent::Done { .. })));
+        assert!(!r2.try_iter().any(|e| matches!(e, GenEvent::Done { .. })));
+        while sched.has_work() {
+            sched.step(&mut be);
+        }
+        assert!(r2.try_iter().any(|e| matches!(e, GenEvent::Done { .. })));
+    }
+
+    /// Speculative scheduling over the native backend: greedy requests
+    /// decode through `decode_batch_spec` (several bytes per step —
+    /// observable as fewer steps than tokens), outputs match the plain
+    /// scheduler byte for byte, and acceptance stats accumulate.
+    #[test]
+    fn spec_scheduler_matches_plain_and_commits_multibyte_steps() {
+        use crate::engine::{NativeBackend, PackedModel, SpecConfig};
+        use crate::model::testing::micro_weights;
+        let w = micro_weights(43);
+        let n_new = 8;
+        let run = |spec: SpecConfig| {
+            let mut be =
+                NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+            be.set_lanes(2);
+            let eff = be.set_spec(spec);
+            let mut sched = GenScheduler::with_spec(2, 64, eff);
+            let rx_a = submit(&mut sched, b"ta ki", n_new);
+            let rx_b = submit(&mut sched, b"vo", n_new);
+            let mut steps = 0usize;
+            while sched.has_work() {
+                sched.step(&mut be);
+                steps += 1;
+                assert!(steps < 100, "failed to drain");
+            }
+            let text = |rx: Receiver<GenEvent>| {
+                let mut toks = Vec::new();
+                for ev in rx.try_iter() {
+                    match ev {
+                        GenEvent::Token(b) => toks.push(b),
+                        GenEvent::Done { generated, .. } => assert_eq!(generated, n_new),
+                        GenEvent::Error(e) => panic!("unexpected error {e}"),
+                    }
+                }
+                toks
+            };
+            (text(rx_a), text(rx_b), steps, be.spec_stats().unwrap())
+        };
+        let (pa, pb, plain_steps, _) = run(SpecConfig::disabled());
+        let (sa, sb, spec_steps, stats) = run(SpecConfig::with_k(3));
+        assert_eq!(sa, pa, "speculative lane A diverged from plain");
+        assert_eq!(sb, pb, "speculative lane B diverged from plain");
+        assert!(
+            spec_steps <= plain_steps,
+            "speculation took more steps ({spec_steps} > {plain_steps})"
+        );
+        assert!(stats.rounds > 0 && stats.drafted > 0, "no speculation happened: {stats:?}");
+    }
+
+    /// Speculation must respect admission's KV reservation: with 1-token
+    /// blocks and an arena sized exactly to one request's worst case
+    /// (prompt 2 + max_new 2 = 4 blocks), an unclamped k = 4 verify sweep
+    /// would need 6 blocks and evict a request admission had guaranteed —
+    /// the per-round clamp to the remaining budget keeps it inside.
+    #[test]
+    fn spec_rounds_respect_admission_reservations() {
+        use crate::engine::{NativeBackend, PackedModel, SpecConfig};
+        use crate::model::testing::micro_weights;
+        let w = micro_weights(44);
+        let mut be =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        be.set_lanes(1);
+        be.set_kv_blocks(Some(4), Some(1));
+        let eff = be.set_spec(SpecConfig::with_k(4));
+        let mut sched = GenScheduler::with_spec(1, 2, eff);
+        let rx = submit(&mut sched, b"ab", 2);
+        let mut steps = 0;
+        while sched.has_work() {
+            sched.step(&mut be);
+            steps += 1;
+            assert!(steps < 20, "spec round wedged the scheduler");
+        }
+        let events: Vec<GenEvent> = rx.try_iter().collect();
+        assert!(
+            matches!(events.last(), Some(GenEvent::Done { generated: 2, .. })),
+            "request inside its reservation was evicted: {events:?}"
+        );
     }
 
     #[test]

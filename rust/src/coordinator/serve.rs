@@ -28,6 +28,14 @@
 //! sequence evicted mid-decode because the arena ran dry gets a single
 //! `err kv exhausted` line — the sweep itself keeps running for everyone
 //! else.
+//!
+//! Each TCP connection gets its own client id
+//! ([`BatcherHandle::connection`]) and generation admission round-robins
+//! across clients, so one chatty connection cannot starve the rest. With
+//! `serve --spec-k N`, greedy requests decode speculatively (the
+//! frequency cascade, `engine::spec`) — byte-identical output, several
+//! verified tokens per sweep — while sampling requests share the same
+//! lanes on the plain path.
 
 use super::batcher::{Batcher, BatcherConfig, BatcherHandle, Request, Work};
 use super::scheduler::{GenEvent, GenScheduler};
@@ -197,7 +205,7 @@ pub fn bind(addr: &str) -> Result<(TcpListener, std::net::SocketAddr)> {
 /// scoring the same way it backpressures generation admission.
 pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
     let cfg = batcher.cfg;
-    let mut sched = GenScheduler::new(be.lanes(), cfg.max_new_cap);
+    let mut sched = GenScheduler::with_spec(be.lanes(), cfg.max_new_cap, cfg.spec);
     let mut scores: Vec<Request> = Vec::new();
     let mut inbox: Vec<Work> = Vec::new();
     let mut connected = true;
@@ -284,7 +292,9 @@ pub fn serve_on(
         for stream in listener.incoming() {
             match stream {
                 Ok(s) => {
-                    let h = handle.clone();
+                    // fresh client id per connection: generation admission
+                    // round-robins across clients, not raw request order
+                    let h = handle.connection();
                     std::thread::spawn(move || handle_conn(s, h));
                     served += 1;
                     if let Some(max) = max_conns {

@@ -37,6 +37,20 @@
 //! into admission backpressure / lowest-progress eviction instead of an
 //! OOM.
 //!
+//! # Speculative decoding
+//!
+//! The Haar decomposition gives the artifact a *free draft model*: the
+//! deepest low band of every packed linear is a coarse approximation of
+//! the full matrix, readable from the same sign words at half the dot
+//! cost. [`spec`] drafts `k` tokens per round with that low-band forward
+//! and `NativeBackend::decode_batch_spec` verifies them in one
+//! multi-position sweep of the full packed model — greedy output stays
+//! byte-identical to plain decoding (rejections fall back to the verified
+//! token and roll the paged KV back via
+//! [`PagedKv::truncate_to`](paged::PagedKv::truncate_to)), while the
+//! dominant weight-traffic cost is paid once per round instead of once
+//! per token. `serve --spec-k` / `generate --spec-k` switch it on.
+//!
 //! # The Backend trait
 //!
 //! [`Backend`] is the serving contract: batched scoring (`nll`), full
@@ -55,12 +69,14 @@ pub mod kv;
 pub mod model;
 pub mod native;
 pub mod paged;
+pub mod spec;
 pub mod xla;
 
 pub use kv::{Arena, KvPool, Lane};
 pub use model::{LayerWeights, Linear, PackedModel};
 pub use native::NativeBackend;
 pub use paged::{KvBlockPool, KvExhausted, PagedKv};
+pub use spec::{DraftLane, SpecConfig, SpecRound, SpecStats};
 pub use xla::XlaBackend;
 
 use crate::data::ByteTokenizer;
@@ -171,6 +187,48 @@ pub trait Backend {
     fn decode_batch(&mut self, reqs: &[(usize, &[u8])]) -> Result<Vec<Vec<f32>>> {
         reqs.iter().map(|&(_, text)| self.decode_step(text)).collect()
     }
+
+    /// Configure speculative decoding (the frequency cascade, [`spec`]).
+    /// Returns the *effective* config: backends without a draft path (the
+    /// default, e.g. [`XlaBackend`]) report it disabled, and the serving
+    /// scheduler adapts to whatever comes back — so `--spec-k` on a
+    /// non-speculative backend degrades to plain decoding, never an error.
+    fn set_spec(&mut self, cfg: SpecConfig) -> SpecConfig {
+        let _ = cfg;
+        SpecConfig::disabled()
+    }
+
+    /// Cumulative speculative acceptance counters (the `kv_stats`-style
+    /// snapshot for the draft path). `None` on backends without one.
+    fn spec_stats(&self) -> Option<SpecStats> {
+        None
+    }
+
+    /// Greedy speculative decode: advance each `(lane, text)` pair by one
+    /// *round* — up to `k` drafted tokens verified against the full
+    /// model, committing between 1 and `k + 1` bytes per lane (see
+    /// [`SpecRound`]). Byte-identical to [`Self::decode_batch`] + greedy
+    /// argmax; only the schedule differs. Greedy-only by construction —
+    /// the scheduler keeps sampling lanes (`temperature > 0`) on the
+    /// plain path.
+    ///
+    /// The default is the degenerate cascade for backends without a draft
+    /// view: one plain `decode_batch` sweep, argmax, zero drafts — so the
+    /// speculative serve loop runs unchanged on any backend. KV-metered
+    /// implementations fail with a downcastable [`KvExhausted`] before
+    /// touching any lane, exactly like `decode_batch`.
+    fn decode_batch_spec(&mut self, reqs: &[(usize, &[u8])], k: usize) -> Result<Vec<SpecRound>> {
+        let _ = k;
+        let rows = self.decode_batch(reqs)?;
+        Ok(rows
+            .into_iter()
+            .map(|row| SpecRound {
+                bytes: vec![greedy_token(&row) as u8],
+                drafted: 0,
+                accepted: 0,
+            })
+            .collect())
+    }
 }
 
 /// Which backend to construct (CLI `--backend {xla,native}`).
@@ -195,16 +253,77 @@ impl BackendKind {
     }
 }
 
+/// One decode position's causal attention over cached KV rows `0..=t`:
+/// per head, score the query against every key, softmax with the
+/// max-subtracted accumulation order used everywhere in this crate, and
+/// mix the values into `attn`. `key(u)`/`val(u)` hand back row `u`
+/// (length ≥ `heads * dh`) from whatever storage the caller uses.
+///
+/// This is *the* copy of the decode attention inner loop: the plain path
+/// (`NativeBackend::step_lanes`), the speculative verify sweep
+/// (`sweep_positions`) and the low-band draft (`DraftLane::step`) all
+/// call it with their own accessors — paged gather vs flat offset — so
+/// the bit-parity between those paths is structural, not maintained by
+/// keeping hand-copies in sync.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attend_position<'a>(
+    heads: usize,
+    dh: usize,
+    scale: f32,
+    t: usize,
+    q: &[f32],
+    probs: &mut [f32],
+    attn: &mut [f32],
+    key: impl Fn(usize) -> &'a [f32],
+    val: impl Fn(usize) -> &'a [f32],
+) {
+    for hd in 0..heads {
+        let c0 = hd * dh;
+        let mut maxv = f32::NEG_INFINITY;
+        for u in 0..=t {
+            let krow = key(u);
+            let mut dot = 0f32;
+            for j in 0..dh {
+                dot += q[c0 + j] * krow[c0 + j];
+            }
+            let l = dot * scale;
+            probs[u] = l;
+            maxv = maxv.max(l);
+        }
+        let mut z = 0f32;
+        for u in 0..=t {
+            probs[u] = (probs[u] - maxv).exp();
+            z += probs[u];
+        }
+        let inv_z = 1.0 / z;
+        for j in 0..dh {
+            let mut acc = 0f32;
+            for u in 0..=t {
+                acc += probs[u] * inv_z * val(u)[c0 + j];
+            }
+            attn[c0 + j] = acc;
+        }
+    }
+}
+
+/// Greedy argmax over a logits row — the single source of greedy
+/// tie-breaking (last maximum wins, per `Iterator::max_by`), shared by
+/// [`sample_logits`], the speculative verifier's accept scan and the
+/// stateless [`Backend::decode_batch_spec`] fallback, so every decode
+/// path picks the same byte from the same row.
+pub fn greedy_token(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
 /// Sample a token from a logits row: argmax at `temperature <= 0`, else
 /// softmax sampling at the given temperature.
 pub fn sample_logits(row: &[f32], temperature: f32, rng: &mut Pcg32) -> usize {
     if temperature <= 0.0 {
-        return row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0);
+        return greedy_token(row);
     }
     let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
     let probs: Vec<f64> = row
@@ -243,6 +362,34 @@ pub fn generate(
         let row = be.decode_step(&text)?;
         let next = sample_logits(&row, temperature, rng);
         text.push(next as u8);
+    }
+    Ok(text)
+}
+
+/// Backend-generic *speculative* greedy generation via
+/// [`Backend::decode_batch_spec`]: each round commits every verified byte
+/// (1 to `k + 1` of them), clamped so exactly `n_new` bytes are produced.
+/// Byte-identical to [`generate`] at temperature 0 — speculation changes
+/// the schedule, never the output (`tests/spec_parity.rs`). `k = 0`, or a
+/// backend without a draft path, degenerates to one byte per round.
+pub fn generate_spec(be: &mut dyn Backend, prompt: &[u8], n_new: usize, k: usize) -> Result<Vec<u8>> {
+    let mut text: Vec<u8> = prompt.to_vec();
+    if text.is_empty() {
+        text.push(ByteTokenizer::PAD);
+    }
+    be.reset();
+    let mut produced = 0usize;
+    while produced < n_new {
+        // never draft past the byte budget: a round commits <= k + 1
+        let k_round = k.min(n_new - produced - 1);
+        let round = be
+            .decode_batch_spec(&[(0, text.as_slice())], k_round)?
+            .pop()
+            .expect("one lane in, one round out");
+        for &b in round.bytes.iter().take(n_new - produced) {
+            text.push(b);
+            produced += 1;
+        }
     }
     Ok(text)
 }

@@ -9,9 +9,9 @@
 //! across scoped std threads (rayon is unavailable offline).
 
 use crate::model::{ModelConfig, Tensor, Weights};
-use crate::pack::HaarPackedLinear;
+use crate::pack::{format, HaarPackedLinear};
 use crate::tensor::Matrix;
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 /// Minimum rows × cols before a GEMV fans out across threads; below this the
 /// spawn cost dominates the dot products.
@@ -105,6 +105,26 @@ impl Linear {
         }
     }
 
+    /// Low-band draft GEMV: `y ≈ W x` using only the Haar low band of a
+    /// packed layer (see [`HaarPackedLinear::gemv_rows_low`]) — the
+    /// frequency-cascade draft model's per-layer kernel. It reads the same
+    /// sign words as the full GEMV, skipping the high-band bit range and
+    /// scales, so the draft needs no extra weight storage. Dense layers
+    /// have no band structure and execute in full (a dense draft is
+    /// exact). Single-threaded by design: the draft runs at half the dot
+    /// count of the verifier and stays off the thread pool.
+    pub fn gemv_low(&self, x: &[f32], y: &mut [f32], z: &mut Vec<f32>) {
+        debug_assert_eq!(x.len(), self.cols());
+        debug_assert_eq!(y.len(), self.rows());
+        match self {
+            Linear::Dense(m) => dense_gemv_rows(m, x, 0, y),
+            Linear::Packed(p) => {
+                let sum_lo = p.prepare_activation_low(x, z);
+                p.gemv_rows_low(z, sum_lo, 0, y);
+            }
+        }
+    }
+
     /// Multi-lane GEMV: `io[l] = (x_l, y_l)` computes `y_l = W x_l` for
     /// every lane in one sweep of the weight rows. The packed path
     /// adjoint-transforms each lane's activation once into `z` (lane `l` at
@@ -188,6 +208,68 @@ impl Linear {
                 }
             }
         });
+    }
+}
+
+/// Name → record index over a loaded HBQ1 artifact's records.
+type ArtifactRecs<'a> = std::collections::BTreeMap<&'a str, &'a format::Record>;
+
+fn artifact_rec<'a>(recs: &ArtifactRecs<'a>, name: &str) -> Result<&'a format::Record> {
+    recs.get(name)
+        .copied()
+        .ok_or_else(|| anyhow!("artifact missing record {name:?}"))
+}
+
+fn artifact_vec1(recs: &ArtifactRecs<'_>, name: &str, expect: usize) -> Result<Vec<f32>> {
+    match artifact_rec(recs, name)? {
+        format::Record::Dense { data, .. } => {
+            ensure!(
+                data.len() == expect,
+                "record {name:?}: {} values do not match config length {expect}",
+                data.len()
+            );
+            Ok(data.clone())
+        }
+        format::Record::Packed(_) => bail!("record {name:?} is packed, expected an fp32 vector"),
+    }
+}
+
+fn artifact_mat(recs: &ArtifactRecs<'_>, name: &str, rows: usize, cols: usize) -> Result<Matrix> {
+    match artifact_rec(recs, name)? {
+        format::Record::Dense { rows: r, cols: c, data } => {
+            ensure!(
+                (*r, *c) == (rows, cols),
+                "record {name:?}: {r}x{c} does not match config {rows}x{cols}"
+            );
+            Ok(Matrix::from_vec(*r, *c, data.clone()))
+        }
+        format::Record::Packed(_) => bail!("record {name:?} is packed, expected fp32"),
+    }
+}
+
+/// Artifact linears: packed records are stored in paper orientation
+/// `[out, in]` (ready to execute as-is), dense ones in model orientation
+/// `[in, out]` (transposed here, as `PackedModel::from_weights` does).
+fn artifact_linear(recs: &ArtifactRecs<'_>, cfg: &ModelConfig, name: &str) -> Result<Linear> {
+    let sh = cfg
+        .param_shapes
+        .get(name)
+        .ok_or_else(|| anyhow!("config has no shape for {name:?}"))?;
+    ensure!(sh.len() == 2, "config shape for {name:?} is not 2-D");
+    let (n_in, n_out) = (sh[0], sh[1]);
+    match artifact_rec(recs, name)? {
+        format::Record::Packed(p) => {
+            ensure!(
+                (p.bits.rows, p.bits.cols) == (n_out, n_in),
+                "record {name:?}: packed {}x{} does not match config [out={n_out}, in={n_in}]",
+                p.bits.rows,
+                p.bits.cols
+            );
+            Ok(Linear::Packed(p.clone()))
+        }
+        format::Record::Dense { .. } => {
+            Ok(Linear::Dense(artifact_mat(recs, name, n_in, n_out)?.transpose()))
+        }
     }
 }
 
@@ -283,6 +365,45 @@ impl PackedModel {
             ln_f: w.get("ln_f").as_vec().to_vec(),
             unemb: linear("unemb"),
             config: cfg,
+        })
+    }
+
+    /// Build the serving model straight from a saved HBQ1 artifact
+    /// (`docs/FORMAT.md`): packed linear records execute as-is — no
+    /// dequantize→requantize round trip, so serving from disk is
+    /// bit-identical to serving the model that was saved — and dense
+    /// records fill the fp32 residue. The artifact stores no model
+    /// config; the caller supplies it (the CLI reads it from the
+    /// artifacts manifest) and every record's shape is validated against
+    /// it before anything is built.
+    pub fn from_artifact(cfg: &ModelConfig, art: &format::PackedModel) -> Result<PackedModel> {
+        ensure!(cfg.d_model % 2 == 0, "engine needs even d_model (row Haar)");
+        ensure!(cfg.d_ff % 2 == 0, "engine needs even d_ff (row Haar)");
+        let mut recs: ArtifactRecs<'_> = std::collections::BTreeMap::new();
+        for (name, rec) in &art.records {
+            recs.insert(name.as_str(), rec);
+        }
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = |k: &str| format!("l{i}.{k}");
+            layers.push(LayerWeights {
+                ln1: artifact_vec1(&recs, &p("ln1"), cfg.d_model)?,
+                wq: artifact_linear(&recs, cfg, &p("wq"))?,
+                wk: artifact_linear(&recs, cfg, &p("wk"))?,
+                wv: artifact_linear(&recs, cfg, &p("wv"))?,
+                wo: artifact_linear(&recs, cfg, &p("wo"))?,
+                ln2: artifact_vec1(&recs, &p("ln2"), cfg.d_model)?,
+                w1: artifact_linear(&recs, cfg, &p("w1"))?,
+                w2: artifact_linear(&recs, cfg, &p("w2"))?,
+            });
+        }
+        Ok(PackedModel {
+            tok_emb: artifact_mat(&recs, "tok_emb", cfg.vocab, cfg.d_model)?,
+            pos_emb: artifact_mat(&recs, "pos_emb", cfg.seq_len, cfg.d_model)?,
+            layers,
+            ln_f: artifact_vec1(&recs, "ln_f", cfg.d_model)?,
+            unemb: artifact_linear(&recs, cfg, "unemb")?,
+            config: cfg.clone(),
         })
     }
 
@@ -382,6 +503,61 @@ mod tests {
             drop(io);
             assert_eq!(got, want, "multi-lane gemv diverged from per-lane");
         }
+    }
+
+    #[test]
+    fn linear_gemv_low_matches_pack_low_and_dense_full() {
+        let mut rng = Pcg32::seeded(3);
+        let m = Matrix::from_fn(9, 64, |_, _| rng.normal_f32());
+        let p = HaarPackedLinear::from_dense(&m);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+        let mut want = vec![0.0; 9];
+        p.gemv_low(&x, &mut want);
+        let lin = Linear::Packed(p);
+        let mut y = vec![0.0; 9];
+        let mut z = Vec::new();
+        lin.gemv_low(&x, &mut y, &mut z);
+        assert_eq!(y, want);
+        // a dense layer has no bands: its draft view is the full GEMV
+        let d = Linear::Dense(m.clone());
+        let mut yd = vec![0.0; 9];
+        d.gemv_low(&x, &mut yd, &mut z);
+        assert_eq!(yd, m.matvec(&x));
+    }
+
+    #[test]
+    fn from_artifact_roundtrip_is_deterministic_and_validates() {
+        let w = micro_weights(42);
+        let art = format::PackedModel::from_weights(&w);
+        let loaded = format::PackedModel::from_bytes(&art.to_bytes()).unwrap();
+        let pm = PackedModel::from_artifact(&w.config, &loaded).unwrap();
+        assert_eq!(pm.layers.len(), w.config.n_layers);
+        assert_eq!((pm.unemb.rows(), pm.unemb.cols()), (256, 16));
+        assert!(matches!(pm.layers[0].wq, Linear::Packed(_)), "linears load packed");
+        // packed records execute as-is: re-loading the same bytes yields a
+        // bit-identical engine (fp16 scale quantization is idempotent)
+        let loaded2 = format::PackedModel::from_bytes(&loaded.to_bytes()).unwrap();
+        let pm2 = PackedModel::from_artifact(&w.config, &loaded2).unwrap();
+        let x: Vec<f32> = (0..16).map(|i| (i as f32) * 0.1 - 0.5).collect();
+        let mut y1 = vec![0.0; 16];
+        let mut y2 = vec![0.0; 16];
+        pm.layers[0].wq.gemv(&x, &mut y1, 1);
+        pm2.layers[0].wq.gemv(&x, &mut y2, 1);
+        assert_eq!(y1, y2);
+        // a vector record of the wrong length is a load-time error, not a
+        // mid-request rmsnorm panic (format::from_bytes only checks the
+        // record against its own header, not against the model config)
+        let mut short = format::PackedModel::from_bytes(&loaded2.to_bytes()).unwrap();
+        for (n, r) in short.records.iter_mut() {
+            if n == "ln_f" {
+                *r = format::Record::Dense { rows: 1, cols: 4, data: vec![1.0; 4] };
+            }
+        }
+        assert!(PackedModel::from_artifact(&w.config, &short).is_err(), "short ln_f accepted");
+        // a missing record is a load error, not a panic
+        let mut broken = format::PackedModel { records: loaded.records };
+        broken.records.retain(|(n, _)| n != "ln_f");
+        assert!(PackedModel::from_artifact(&w.config, &broken).is_err());
     }
 
     #[test]

@@ -21,7 +21,8 @@
 use super::kv::{Arena, KvPool, Lane};
 use super::model::PackedModel;
 use super::paged::{blocks_for, KvExhausted, PagedKv};
-use super::{Backend, KvStats};
+use super::spec::{DraftLane, SpecConfig, SpecRound, SpecStats};
+use super::{attend_position, greedy_token, Backend, KvStats};
 use crate::data::ByteTokenizer;
 use crate::model::{gelu_tanh, rmsnorm};
 use anyhow::{ensure, Result};
@@ -37,6 +38,14 @@ pub struct NativeBackend {
     /// components fall back to the worst-case default on pool rebuilds.
     kv_blocks: Option<usize>,
     kv_block_len: Option<usize>,
+    /// Speculative decoding config (`set_spec`) + one low-band draft lane
+    /// per KV lane, built lazily on the first speculative sweep.
+    spec: SpecConfig,
+    drafts: Vec<DraftLane>,
+    /// Per-position scratch for the multi-position verify sweep, grown on
+    /// demand and reused across rounds (one [`Arena`] per in-flight
+    /// position across all lanes).
+    spec_scratch: Vec<Arena>,
 }
 
 /// Per-lane view of one decode position: the lane's paged KV view plus
@@ -78,6 +87,9 @@ impl NativeBackend {
             threads: threads.max(1),
             kv_blocks: None,
             kv_block_len: None,
+            spec: SpecConfig::disabled(),
+            drafts: Vec::new(),
+            spec_scratch: Vec::new(),
         }
     }
 
@@ -92,6 +104,9 @@ impl NativeBackend {
         let (worst_blocks, bl) = KvPool::worst_case_geometry(cfg, n, self.kv_block_len);
         let blocks = self.kv_blocks.unwrap_or(worst_blocks);
         self.pool = KvPool::with_paging(cfg, n, blocks, bl);
+        // draft lanes track the pool's lane count; rebuilt lazily (with
+        // fresh counters) by the next speculative sweep
+        self.drafts.clear();
     }
 
     /// Advance the given lanes by one byte each: embed `byte` at each
@@ -181,33 +196,19 @@ impl NativeBackend {
             }
             for c in ctxs.iter_mut() {
                 c.kv.store(blocks, li, c.t, c.k, c.v);
-                for hd in 0..heads {
-                    let c0 = hd * dh;
-                    let mut maxv = f32::NEG_INFINITY;
-                    for u in 0..=c.t {
-                        let krow = c.kv.key(blocks, li, u);
-                        let mut dot = 0f32;
-                        for j in 0..dh {
-                            dot += c.q[c0 + j] * krow[c0 + j];
-                        }
-                        let l = dot * scale;
-                        c.probs[u] = l;
-                        maxv = maxv.max(l);
-                    }
-                    let mut z = 0f32;
-                    for u in 0..=c.t {
-                        c.probs[u] = (c.probs[u] - maxv).exp();
-                        z += c.probs[u];
-                    }
-                    let inv_z = 1.0 / z;
-                    for j in 0..dh {
-                        let mut acc = 0f32;
-                        for u in 0..=c.t {
-                            acc += c.probs[u] * inv_z * c.kv.val(blocks, li, u)[c0 + j];
-                        }
-                        c.attn[c0 + j] = acc;
-                    }
-                }
+                let LaneStep { kv, t, q, probs, attn, .. } = c;
+                let t = *t;
+                attend_position(
+                    heads,
+                    dh,
+                    scale,
+                    t,
+                    q,
+                    probs,
+                    attn,
+                    |u| kv.key(blocks, li, u),
+                    |u| kv.val(blocks, li, u),
+                );
             }
             {
                 let mut io: Vec<(&[f32], &mut [f32])> =
@@ -258,6 +259,207 @@ impl NativeBackend {
             c.kv.advance();
         }
         Ok(())
+    }
+
+    /// Multi-position verify sweep — the speculative decoder's hot path.
+    ///
+    /// For each `(lane, bytes, n_tail)` (sorted by lane, `bytes`
+    /// non-empty), feed every byte at the lane's next KV positions, but —
+    /// unlike the byte-by-byte [`NativeBackend::step_lanes`] loop — run
+    /// *all* positions of *all* lanes through each packed linear in one
+    /// `gemv_batch`: one fetch of the sign words per layer per round
+    /// serves `k + 1` speculative positions (and any owed prefill), which
+    /// is the entire economic argument for drafting. Within a layer,
+    /// later positions of a lane attend over the K/V rows stored for
+    /// earlier positions moments before, in the same pass.
+    ///
+    /// Per-position arithmetic (embed, rmsnorm, attention accumulation
+    /// order, GEMV expression) is identical to `step_lanes`, so each
+    /// position's logits row is bit-identical to what byte-by-byte
+    /// decoding would produce — the invariant `tests/spec_parity.rs` pins.
+    ///
+    /// Returns, per lane, the logits rows of its last `n_tail` positions.
+    /// KV state is advanced past every fed byte; rejection rollback is the
+    /// caller's job (`PagedKv::truncate_to`).
+    fn sweep_positions(&mut self, feeds: &[(usize, Vec<u8>, usize)]) -> Result<Vec<Vec<Vec<f32>>>> {
+        let n_lanes = self.pool.len();
+        let total: usize = feeds.iter().map(|f| f.1.len()).sum();
+        while self.spec_scratch.len() < total {
+            self.spec_scratch.push(Arena::new(&self.model.config));
+        }
+        let NativeBackend { model, pool, zpool, spec_scratch, threads, .. } = self;
+        let threads = *threads;
+        let KvPool { blocks, lanes: pool_lanes } = pool;
+        let cfg = &model.config;
+        let (d, heads, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // disjoint &mut Lane for the active set (ascending, unique)
+        let mut lanes: Vec<&mut Lane> = Vec::with_capacity(feeds.len());
+        {
+            let mut rest: &mut [Lane] = pool_lanes;
+            let mut consumed = 0usize;
+            for (idx, _, _) in feeds.iter() {
+                let idx = *idx;
+                ensure!(
+                    idx >= consumed,
+                    "spec sweep lanes must be sorted and unique (lane {idx})"
+                );
+                ensure!(idx < n_lanes, "lane {idx} out of range ({n_lanes} lanes)");
+                let (head, tail) = rest.split_at_mut(idx - consumed + 1);
+                lanes.push(head.last_mut().unwrap());
+                consumed = idx + 1;
+                rest = tail;
+            }
+        }
+
+        // grow each lane's block table to its last fed position, embed
+        // every (lane, position) item into its scratch slot
+        let scratch = &mut spec_scratch[..total];
+        let mut t0s: Vec<usize> = Vec::with_capacity(feeds.len());
+        {
+            let mut item = 0usize;
+            for (fi, (_, bytes, n_tail)) in feeds.iter().enumerate() {
+                ensure!(!bytes.is_empty(), "spec sweep with an empty feed");
+                ensure!(*n_tail <= bytes.len(), "spec tail longer than the feed");
+                let t0 = lanes[fi].kv.len();
+                ensure!(
+                    t0 + bytes.len() <= lanes[fi].kv.seq(),
+                    "spec sweep past the window (pos {} of {})",
+                    t0 + bytes.len(),
+                    lanes[fi].kv.seq()
+                );
+                lanes[fi].kv.ensure_pos(blocks, t0 + bytes.len() - 1)?;
+                t0s.push(t0);
+                for (p, &byte) in bytes.iter().enumerate() {
+                    let c = &mut scratch[item];
+                    let te = model.tok_emb.row(byte as usize);
+                    let pe = model.pos_emb.row(t0 + p);
+                    for j in 0..d {
+                        c.x[j] = te[j] + pe[j];
+                    }
+                    item += 1;
+                }
+            }
+        }
+
+        for (li, layer) in model.layers.iter().enumerate() {
+            // --- attention projections: all positions, one weight sweep ---
+            for c in scratch.iter_mut() {
+                rmsnorm(&c.x, &layer.ln1, &mut c.h);
+            }
+            {
+                let mut io: Vec<(&[f32], &mut [f32])> =
+                    scratch.iter_mut().map(|c| (&c.h[..], &mut c.q[..])).collect();
+                layer.wq.gemv_batch(&mut io, zpool, threads);
+            }
+            {
+                let mut io: Vec<(&[f32], &mut [f32])> =
+                    scratch.iter_mut().map(|c| (&c.h[..], &mut c.k[..])).collect();
+                layer.wk.gemv_batch(&mut io, zpool, threads);
+            }
+            {
+                let mut io: Vec<(&[f32], &mut [f32])> =
+                    scratch.iter_mut().map(|c| (&c.h[..], &mut c.v[..])).collect();
+                layer.wv.gemv_batch(&mut io, zpool, threads);
+            }
+            // --- attention: per lane, per position in order (a position
+            // reads the rows its predecessors just stored) ---
+            {
+                let mut item = 0usize;
+                for (fi, (_, bytes, _)) in feeds.iter().enumerate() {
+                    let t0 = t0s[fi];
+                    for p in 0..bytes.len() {
+                        let c = &mut scratch[item];
+                        let t = t0 + p;
+                        lanes[fi].kv.store(blocks, li, t, &c.k, &c.v);
+                        let kv = &lanes[fi].kv;
+                        attend_position(
+                            heads,
+                            dh,
+                            scale,
+                            t,
+                            &c.q,
+                            &mut c.probs,
+                            &mut c.attn,
+                            |u| kv.key(blocks, li, u),
+                            |u| kv.val(blocks, li, u),
+                        );
+                        item += 1;
+                    }
+                }
+            }
+            {
+                let mut io: Vec<(&[f32], &mut [f32])> =
+                    scratch.iter_mut().map(|c| (&c.attn[..], &mut c.proj[..])).collect();
+                layer.wo.gemv_batch(&mut io, zpool, threads);
+            }
+            for c in scratch.iter_mut() {
+                for j in 0..d {
+                    c.x[j] += c.proj[j];
+                }
+            }
+
+            // --- MLP ---
+            for c in scratch.iter_mut() {
+                rmsnorm(&c.x, &layer.ln2, &mut c.h);
+            }
+            {
+                let mut io: Vec<(&[f32], &mut [f32])> =
+                    scratch.iter_mut().map(|c| (&c.h[..], &mut c.ff[..])).collect();
+                layer.w1.gemv_batch(&mut io, zpool, threads);
+            }
+            for c in scratch.iter_mut() {
+                for vv in c.ff.iter_mut() {
+                    *vv = gelu_tanh(*vv);
+                }
+            }
+            {
+                let mut io: Vec<(&[f32], &mut [f32])> =
+                    scratch.iter_mut().map(|c| (&c.ff[..], &mut c.proj[..])).collect();
+                layer.w2.gemv_batch(&mut io, zpool, threads);
+            }
+            for c in scratch.iter_mut() {
+                for j in 0..d {
+                    c.x[j] += c.proj[j];
+                }
+            }
+        }
+
+        // --- unembed: only the tail positions need logits ---
+        for c in scratch.iter_mut() {
+            rmsnorm(&c.x, &model.ln_f, &mut c.h);
+        }
+        {
+            let mut tail_mask = vec![false; total];
+            let mut item = 0usize;
+            for (_, bytes, n_tail) in feeds {
+                for p in 0..bytes.len() {
+                    tail_mask[item + p] = p >= bytes.len() - n_tail;
+                }
+                item += bytes.len();
+            }
+            let mut io: Vec<(&[f32], &mut [f32])> = Vec::with_capacity(total);
+            for (j, c) in scratch.iter_mut().enumerate() {
+                if tail_mask[j] {
+                    io.push((&c.h[..], &mut c.logits[..]));
+                }
+            }
+            model.unemb.gemv_batch(&mut io, zpool, threads);
+        }
+
+        // advance past every fed byte and hand back the tail rows
+        let mut out = Vec::with_capacity(feeds.len());
+        let mut item = 0usize;
+        for (fi, (_, bytes, n_tail)) in feeds.iter().enumerate() {
+            for _ in 0..bytes.len() {
+                lanes[fi].kv.advance();
+            }
+            let start = item + bytes.len() - n_tail;
+            out.push((start..item + bytes.len()).map(|j| scratch[j].logits.clone()).collect());
+            item += bytes.len();
+        }
+        Ok(out)
     }
 
     fn check_token(&self, tok: i32) -> Result<u8> {
@@ -488,12 +690,188 @@ impl Backend for NativeBackend {
         Ok(out)
     }
 
+    fn set_spec(&mut self, cfg: SpecConfig) -> SpecConfig {
+        self.spec = SpecConfig { k: cfg.k, enabled: cfg.enabled && cfg.k > 0 };
+        self.spec
+    }
+
+    fn spec_stats(&self) -> Option<SpecStats> {
+        let mut st = SpecStats {
+            k: self.spec.k,
+            enabled: self.spec.enabled,
+            lane_drafted: vec![0; self.pool.len()],
+            lane_accepted: vec![0; self.pool.len()],
+            ..Default::default()
+        };
+        for (i, d) in self.drafts.iter().enumerate() {
+            st.rounds += d.rounds;
+            st.drafted += d.drafted;
+            st.accepted += d.accepted;
+            st.lane_drafted[i] = d.drafted;
+            st.lane_accepted[i] = d.accepted;
+            st.draft_kv_bytes += d.kv_bytes();
+        }
+        Some(st)
+    }
+
+    /// Speculative batched decode (the frequency cascade, `engine::spec`):
+    /// per `(lane, text)` pair, draft up to `k` bytes with the low-band
+    /// forward, verify them — together with any prefill the lane still
+    /// owes — in one multi-position sweep of the full packed model, and
+    /// return the verified bytes plus accept/reject bookkeeping. Greedy
+    /// output is byte-identical to [`NativeBackend::decode_batch`] +
+    /// argmax; only the schedule differs.
+    ///
+    /// Like `decode_batch`, a sweep that cannot fit its worst-case block
+    /// budget fails before touching any lane with a typed
+    /// [`KvExhausted`]; on draft rejection the lane's `PagedKv` is rolled
+    /// back (`truncate_to`), releasing the rejected positions' blocks.
+    fn decode_batch_spec(&mut self, reqs: &[(usize, &[u8])], k: usize) -> Result<Vec<SpecRound>> {
+        let s = self.model.config.seq_len;
+        const SEED: [u8; 1] = [ByteTokenizer::PAD];
+        while self.drafts.len() < self.pool.len() {
+            self.drafts.push(DraftLane::new(&self.model.config));
+        }
+        self.drafts.truncate(self.pool.len());
+
+        // plan pass (no mutation): windows, kept prefixes, draft widths
+        // (clamped to the window headroom so a round never has to slide),
+        // and the sweep's whole block budget — exhaustion fails here,
+        // typed, before any lane state is touched
+        let bl = self.pool.blocks.block_len();
+        let mut need = 0usize;
+        let mut avail = self.pool.blocks.free_blocks();
+        let mut windows: Vec<&[u8]> = Vec::with_capacity(reqs.len());
+        let mut keeps: Vec<usize> = Vec::with_capacity(reqs.len());
+        let mut k_effs: Vec<usize> = Vec::with_capacity(reqs.len());
+        for (ri, &(lane, text)) in reqs.iter().enumerate() {
+            ensure!(lane < self.pool.len(), "lane {lane} out of range ({} lanes)", self.pool.len());
+            ensure!(
+                ri == 0 || reqs[ri - 1].0 < lane,
+                "decode_batch_spec lanes must be sorted and unique"
+            );
+            let window: &[u8] = if text.is_empty() {
+                &SEED
+            } else {
+                &text[text.len().saturating_sub(s)..]
+            };
+            let lane_ref = &self.pool.lanes[lane];
+            let keep0 = lane_ref.prefix.len();
+            let inc = lane_ref.kv.len() == keep0
+                && window.len() >= keep0
+                && window[..keep0] == lane_ref.prefix[..];
+            let mut keep = if inc { keep0 } else { 0 };
+            if keep == window.len() {
+                // fully cached: re-feed the last byte (identical row at an
+                // identical position) so the round always scores >= 1
+                keep -= 1;
+            }
+            let k_eff = k.min(s - window.len());
+            let kept_blocks = blocks_for(keep, bl);
+            let target = blocks_for(window.len() + k_eff, bl);
+            avail += lane_ref.kv.held_blocks().saturating_sub(kept_blocks);
+            need += target - kept_blocks;
+            windows.push(window);
+            keeps.push(keep);
+            k_effs.push(k_eff);
+        }
+        if need > avail {
+            return Err(KvExhausted { needed: need, free: avail }.into());
+        }
+
+        // roll every lane back to its kept prefix (releases tail blocks;
+        // keep == 0 is a full clear for re-prefill)
+        {
+            let KvPool { blocks, lanes } = &mut self.pool;
+            for (ri, &(lane, _)) in reqs.iter().enumerate() {
+                lanes[lane].kv.truncate_to(blocks, keeps[ri]);
+                lanes[lane].prefix.truncate(keeps[ri]);
+            }
+        }
+
+        // draft phase: the low-band cascade proposes k_eff bytes per lane
+        let mut feeds: Vec<(usize, Vec<u8>, usize)> = Vec::with_capacity(reqs.len());
+        let mut proposals: Vec<Vec<u8>> = Vec::with_capacity(reqs.len());
+        {
+            let NativeBackend { model, drafts, .. } = self;
+            for (ri, &(lane, _)) in reqs.iter().enumerate() {
+                let proposal = if k_effs[ri] > 0 {
+                    drafts[lane].draft(model, windows[ri], k_effs[ri])
+                } else {
+                    Vec::new()
+                };
+                let mut bytes = windows[ri][keeps[ri]..].to_vec();
+                bytes.extend_from_slice(&proposal);
+                feeds.push((lane, bytes, k_effs[ri] + 1));
+                proposals.push(proposal);
+            }
+        }
+
+        // one multi-position verify sweep of the full packed model
+        let tails = self.sweep_positions(&feeds)?;
+
+        // an oversized sweep (fresh prompt, window slide, scoring clobber)
+        // transiently needs one scratch arena per prefill position; only
+        // the k + 1 verify positions per lane recur, so trim the pool back
+        // to the steady state instead of pinning O(lanes * seq) arenas
+        let steady: usize = k_effs.iter().map(|k| k + 2).sum();
+        if self.spec_scratch.len() > steady {
+            self.spec_scratch.truncate(steady);
+        }
+
+        // accept scan + rollback + commit
+        let mut out = Vec::with_capacity(reqs.len());
+        for (ri, &(lane, _)) in reqs.iter().enumerate() {
+            let rows = &tails[ri];
+            let proposal = &proposals[ri];
+            let mut bytes = Vec::with_capacity(proposal.len() + 1);
+            let mut accepted = 0usize;
+            for (i, &draft) in proposal.iter().enumerate() {
+                let target = greedy_token(&rows[i]) as u8;
+                if draft == target {
+                    bytes.push(draft);
+                    accepted += 1;
+                } else {
+                    // rejection falls back to the verified token
+                    bytes.push(target);
+                    break;
+                }
+            }
+            if accepted == proposal.len() {
+                // every draft survived: the final row is a free extra token
+                bytes.push(greedy_token(&rows[proposal.len()]) as u8);
+            }
+            {
+                // drop the KV rows computed for rejected drafts, returning
+                // their blocks to the free list
+                let KvPool { blocks, lanes } = &mut self.pool;
+                lanes[lane].kv.truncate_to(blocks, windows[ri].len() + accepted);
+                let prefix = &mut lanes[lane].prefix;
+                prefix.clear();
+                prefix.extend_from_slice(windows[ri]);
+                prefix.extend_from_slice(&proposal[..accepted]);
+            }
+            let dl = &mut self.drafts[lane];
+            dl.rounds += 1;
+            dl.drafted += proposal.len() as u64;
+            dl.accepted += accepted as u64;
+            out.push(SpecRound { bytes, drafted: proposal.len(), accepted });
+        }
+        Ok(out)
+    }
+
     fn reset(&mut self) {
         self.pool.clear_all();
+        for d in self.drafts.iter_mut() {
+            d.clear();
+        }
     }
 
     fn reset_lane(&mut self, lane: usize) {
         self.pool.reset_lane(lane);
+        if let Some(d) = self.drafts.get_mut(lane) {
+            d.clear();
+        }
     }
 }
 
@@ -713,6 +1091,83 @@ mod tests {
             assert_eq!(a, b, "paged decode diverged at len {}", cur.len());
             cur.push(text[cur.len()]);
         }
+    }
+
+    #[test]
+    fn spec_round_commits_greedy_tokens_and_keeps_prefix_consistent() {
+        let w = micro_weights(37);
+        let mk = || NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        // plain greedy reference
+        let mut plain = mk();
+        let mut want = b"ta ".to_vec();
+        for _ in 0..6 {
+            let row = plain.decode_batch(&[(0, &want)]).unwrap().pop().unwrap();
+            want.push(crate::engine::greedy_token(&row) as u8);
+        }
+        // speculative: same bytes, fewer rounds
+        let mut spec = mk();
+        let mut got = b"ta ".to_vec();
+        let mut rounds = 0usize;
+        while got.len() < want.len() {
+            let r = spec
+                .decode_batch_spec(&[(0, &got)], 2)
+                .unwrap()
+                .pop()
+                .unwrap();
+            assert!(!r.bytes.is_empty(), "a round must commit at least one byte");
+            assert!(r.bytes.len() <= r.drafted + 1);
+            assert!(r.accepted <= r.drafted);
+            for &b in r.bytes.iter().take(want.len() - got.len()) {
+                got.push(b);
+            }
+            rounds += 1;
+            assert!(rounds <= 6, "speculation never terminated");
+        }
+        assert_eq!(got, want, "speculative greedy diverged from plain");
+        // lane prefix/kv invariant holds for the next (plain) call
+        let row = spec.decode_batch(&[(0, &got)]).unwrap().pop().unwrap();
+        let row2 = plain.decode_batch(&[(0, &want)]).unwrap().pop().unwrap();
+        assert_eq!(row, row2, "post-spec lane state inconsistent");
+        let st = spec.spec_stats().unwrap();
+        assert!(st.rounds >= 1 && st.drafted >= 1);
+        assert_eq!(st.lane_drafted.len(), 1);
+    }
+
+    #[test]
+    fn spec_exhaustion_is_typed_and_rollback_releases_blocks() {
+        let w = micro_weights(38);
+        let mut be =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        be.set_lanes(2);
+        be.set_kv_blocks(Some(1), Some(4));
+        // 2-byte prompt + k=4 drafts needs 2 blocks; only 1 exists
+        let err = be.decode_batch_spec(&[(0, b"ab")], 4).unwrap_err();
+        assert!(err.downcast_ref::<KvExhausted>().is_some(), "untyped: {err}");
+        let st = be.kv_stats().unwrap();
+        assert_eq!(st.free_blocks, st.total_blocks, "failed plan touched lane state");
+        // k clamped to the free window fits: 2-byte prompt + k<=1 draft
+        let r = be.decode_batch_spec(&[(0, b"ab")], 1).unwrap().pop().unwrap();
+        assert!(!r.bytes.is_empty());
+        // whatever was rejected has been rolled back: held blocks cover
+        // exactly the verified prefix
+        let st = be.kv_stats().unwrap();
+        let held: usize = st.lane_blocks.iter().sum();
+        let verified = 2 + r.accepted;
+        assert_eq!(held, blocks_for(verified, st.block_len));
+    }
+
+    #[test]
+    fn set_spec_reports_effective_config() {
+        use crate::engine::SpecConfig;
+        let w = micro_weights(39);
+        let mut be =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        let eff = be.set_spec(SpecConfig { k: 4, enabled: true });
+        assert!(eff.enabled && eff.k == 4);
+        let eff = be.set_spec(SpecConfig { k: 0, enabled: true });
+        assert!(!eff.enabled, "k = 0 cannot be enabled");
+        let st = be.spec_stats().unwrap();
+        assert_eq!((st.rounds, st.drafted, st.accepted), (0, 0, 0));
     }
 
     #[test]

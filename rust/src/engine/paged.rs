@@ -295,6 +295,22 @@ impl PagedKv {
         self.len += 1;
     }
 
+    /// Roll back to `pos` filled positions, releasing every tail block no
+    /// longer needed to address `0..pos` back to `pool`. The speculative
+    /// decoder's rejection path: KV rows computed for rejected draft
+    /// tokens are dropped and their blocks returned to the free list in
+    /// the same call. `pos` must not exceed the current fill level;
+    /// `truncate_to(len())` is a no-op that still trims blocks a failed
+    /// sweep grew past `len` (see [`PagedKv::ensure_pos`]).
+    pub fn truncate_to(&mut self, pool: &mut KvBlockPool, pos: usize) {
+        debug_assert!(pos <= self.len, "truncate_to({pos}) beyond fill {}", self.len);
+        let keep = blocks_for(pos, pool.block_len());
+        for b in self.blocks.drain(keep.min(self.blocks.len())..) {
+            pool.release(b);
+        }
+        self.len = pos.min(self.len);
+    }
+
     /// Logical reset: release every held block back to `pool`.
     pub fn clear(&mut self, pool: &mut KvBlockPool) {
         for b in self.blocks.drain(..) {
@@ -367,6 +383,37 @@ mod tests {
     }
 
     #[test]
+    fn truncate_to_releases_tail_blocks_and_keeps_live_rows() {
+        let mut pool = KvBlockPool::new(1, 2, 4, 2);
+        let mut kv = PagedKv::new(8);
+        for pos in 0..7usize {
+            kv.ensure_pos(&mut pool, pos).unwrap();
+            let row = [pos as f32, 0.0];
+            kv.store(&mut pool, 0, pos, &row, &row);
+            kv.advance();
+        }
+        assert_eq!((kv.len(), kv.held_blocks(), pool.free_blocks()), (7, 4, 0));
+        // roll back to 3 positions: blocks 2 and 3 return to the free list
+        kv.truncate_to(&mut pool, 3);
+        assert_eq!((kv.len(), kv.held_blocks(), pool.free_blocks()), (3, 2, 2));
+        for pos in 0..3usize {
+            assert_eq!(kv.key(&pool, 0, pos)[0], pos as f32, "surviving row corrupted");
+        }
+        // freed blocks are allocatable by a second sequence immediately
+        let mut other = PagedKv::new(8);
+        other.ensure_pos(&mut pool, 3).unwrap();
+        assert_eq!(pool.free_blocks(), 0);
+        // truncating to the current length is a no-op
+        kv.truncate_to(&mut pool, 3);
+        assert_eq!((kv.len(), kv.held_blocks()), (3, 2));
+        // truncate to zero == clear
+        kv.truncate_to(&mut pool, 0);
+        assert_eq!((kv.len(), kv.held_blocks()), (0, 0));
+        other.clear(&mut pool);
+        assert_eq!(pool.free_blocks(), 4);
+    }
+
+    #[test]
     fn ensure_pos_fails_cleanly_when_dry() {
         let mut pool = KvBlockPool::new(1, 2, 2, 2);
         let mut a = PagedKv::new(16);
@@ -389,10 +436,13 @@ mod tests {
         assert_eq!(blocks_for(12, 1), 12);
     }
 
-    /// Drive `ops` random alloc-grow/release steps over `n_seqs` sequences
-    /// sharing one pool, verifying after every step: exact free/used
-    /// accounting, no block aliased across live sequences, and `bytes()`
-    /// constant (the arena never reallocates).
+    /// Drive `ops` random alloc-grow/truncate/release steps over `n_seqs`
+    /// sequences sharing one pool, verifying after every step: exact
+    /// free/used accounting, no block aliased across live sequences, and
+    /// `bytes()` constant (the arena never reallocates). Truncation (the
+    /// speculative-decode rollback) interleaves with growth and clears so
+    /// a partially rolled-back sequence's surviving rows must read back
+    /// exactly while its tail blocks are recycled by neighbors.
     fn run_interleaving(seed: u64, n_seqs: usize, n_blocks: usize, block_len: usize, ops: usize) -> Result<(), String> {
         let mut rng = Pcg32::seeded(seed);
         let mut pool = KvBlockPool::new(1, 2, n_blocks, block_len);
@@ -401,7 +451,8 @@ mod tests {
         let mut seqs: Vec<PagedKv> = (0..n_seqs).map(|_| PagedKv::new(seq_cap)).collect();
         for step in 0..ops {
             let i = rng.below(n_seqs);
-            if rng.f64() < 0.75 {
+            let dice = rng.f64();
+            if dice < 0.6 {
                 // grow by one position (may or may not need a block)
                 if !seqs[i].is_full() {
                     let pos = seqs[i].len();
@@ -420,6 +471,20 @@ mod tests {
                             }
                         }
                     }
+                }
+            } else if dice < 0.85 {
+                // roll back to a random earlier fill level (spec rejection)
+                let pos = rng.below(seqs[i].len() + 1);
+                let expect_held = blocks_for(pos, block_len);
+                seqs[i].truncate_to(&mut pool, pos);
+                if seqs[i].len() != pos {
+                    return Err(format!("step {step}: truncate_to({pos}) left len {}", seqs[i].len()));
+                }
+                if seqs[i].held_blocks() != expect_held {
+                    return Err(format!(
+                        "step {step}: truncate_to({pos}) holds {} blocks, want {expect_held}",
+                        seqs[i].held_blocks()
+                    ));
                 }
             } else {
                 seqs[i].clear(&mut pool);

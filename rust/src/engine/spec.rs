@@ -1,0 +1,347 @@
+//! Frequency-cascade speculative decoding: the draft model that lives
+//! *inside* the HBLLM artifact.
+//!
+//! HBLLM stores every linear as Haar-domain sign bits with per-band
+//! (α, μ). The deepest low band is, by construction, a coarse
+//! low-frequency approximation of the full weight matrix — so a
+//! low-band-only forward ([`Linear::gemv_low`](super::Linear::gemv_low))
+//! is a draft model that costs roughly half the binary dots and **zero**
+//! extra weight storage: it reads the same packed sign words, skipping
+//! the high-band bit range and scales.
+//!
+//! The cascade works the standard speculative-decoding way, specialized
+//! to greedy decoding:
+//!
+//! 1. a [`DraftLane`] runs the cheap low-band forward over its own small
+//!    flat KV state and greedily proposes `k` draft bytes;
+//! 2. the full packed model *verifies* them in one batched sweep
+//!    (`NativeBackend::decode_batch_spec`): the `k + 1` positions — plus
+//!    however much prefill the lane still owed — go through every packed
+//!    linear as one `gemv_batch`, so the bit-unpack/weight-traffic cost
+//!    that dominates 1-bit serving is paid once per round instead of once
+//!    per token;
+//! 3. the accept scan commits the longest draft prefix the full model
+//!    agrees with, plus one verified token (the correction on rejection,
+//!    a free bonus token on full acceptance) — so every round commits
+//!    between 1 and `k + 1` bytes and the output is **byte-identical** to
+//!    plain greedy decoding; rejected draft positions are rolled back
+//!    with [`PagedKv::truncate_to`](super::paged::PagedKv::truncate_to).
+//!
+//! This module holds the shared types ([`SpecConfig`], [`SpecRound`],
+//! [`SpecStats`]) and the draft-side state machine; the verify sweep
+//! lives in `engine::native` next to the plain decode path it mirrors.
+
+use super::kv::Arena;
+use super::model::PackedModel;
+use crate::model::{gelu_tanh, rmsnorm};
+
+/// Speculative-decoding configuration, threaded from the CLI (`--spec-k`)
+/// through the serving scheduler to the backend.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecConfig {
+    /// Draft tokens proposed per round; a round commits `1..=k+1` bytes.
+    pub k: usize,
+    /// Whether greedy lanes should decode speculatively. Sampling lanes
+    /// (`temperature > 0`) always take the plain path — the byte-identical
+    /// guarantee only holds for argmax decoding.
+    pub enabled: bool,
+}
+
+impl SpecConfig {
+    pub fn disabled() -> SpecConfig {
+        SpecConfig { k: 0, enabled: false }
+    }
+
+    /// Enabled iff `k > 0`.
+    pub fn with_k(k: usize) -> SpecConfig {
+        SpecConfig { k, enabled: k > 0 }
+    }
+}
+
+/// One lane's outcome of a speculative round: the committed bytes (always
+/// at least one — rejection falls back to the verified token) plus the
+/// accept/reject bookkeeping behind them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpecRound {
+    /// Verified bytes to append to the sequence, in order. Length is
+    /// `accepted + 1`: the accepted draft prefix, then either the
+    /// verifier's correction (on rejection) or its bonus token (on full
+    /// acceptance).
+    pub bytes: Vec<u8>,
+    /// Draft tokens proposed this round (0 when the window left no room).
+    pub drafted: usize,
+    /// Length of the accepted draft prefix (`<= drafted`).
+    pub accepted: usize,
+}
+
+/// Cumulative acceptance counters — the `kv_stats`-style snapshot for the
+/// speculative path, surfaced via `Backend::spec_stats`. Counters are
+/// per-service (they survive lane resets between sequences) but drop with
+/// the lanes on `set_lanes`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Configured draft width.
+    pub k: usize,
+    pub enabled: bool,
+    /// Speculative rounds executed across all lanes.
+    pub rounds: u64,
+    /// Draft tokens proposed across all lanes.
+    pub drafted: u64,
+    /// Draft tokens accepted across all lanes.
+    pub accepted: u64,
+    /// Per-lane drafted counters (`lane_drafted[i]` is lane `i`).
+    pub lane_drafted: Vec<u64>,
+    /// Per-lane accepted counters.
+    pub lane_accepted: Vec<u64>,
+    /// Bytes allocated for draft-side flat K/V buffers across all lanes
+    /// (lazily allocated, only for lanes that have actually drafted).
+    /// This memory sits *outside* the paged arena `kv_stats` reports —
+    /// budget for it when capping `--kv-blocks`.
+    pub draft_kv_bytes: usize,
+}
+
+impl SpecStats {
+    /// Fraction of drafted tokens the verifier accepted (0 when nothing
+    /// has been drafted yet).
+    pub fn acceptance(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+}
+
+/// Draft-side state for one KV lane: a flat `[n_layers, seq, d]` K/V
+/// buffer (the draft is one lane's half-cost shadow — paging it would
+/// buy nothing), the bytes behind it, and the lane's cumulative
+/// acceptance counters. The K/V buffer is allocated **lazily on the
+/// first draft step**, so lanes that never speculate (sampling clients
+/// in a mixed batch) cost only the small arena — and the allocated total
+/// is surfaced as [`SpecStats::draft_kv_bytes`], since this memory sits
+/// outside the paged arena `kv_stats` meters.
+///
+/// The draft forward mirrors `NativeBackend::step_lanes` op for op, with
+/// every linear routed through the low-band view. Draft output quality
+/// only affects the acceptance rate — never correctness: every proposed
+/// byte is checked against the full model before it is committed.
+pub struct DraftLane {
+    keys: Vec<f32>,
+    vals: Vec<f32>,
+    /// Positions filled so far (rows `0..len` are valid).
+    len: usize,
+    /// Bytes whose K/V rows fill positions `0..len`.
+    prefix: Vec<u8>,
+    /// Prefix length the current `arena.logits` row corresponds to (the
+    /// staleness guard for fully-cached syncs after a rollback).
+    logits_len: usize,
+    arena: Arena,
+    /// Low-band adjoint scratch.
+    zlow: Vec<f32>,
+    /// Cumulative counters, aggregated into [`SpecStats`].
+    pub rounds: u64,
+    pub drafted: u64,
+    pub accepted: u64,
+}
+
+impl DraftLane {
+    /// The K/V buffer is not allocated here — see the type docs.
+    pub fn new(cfg: &crate::model::ModelConfig) -> DraftLane {
+        DraftLane {
+            keys: Vec::new(),
+            vals: Vec::new(),
+            len: 0,
+            prefix: Vec::new(),
+            logits_len: 0,
+            arena: Arena::new(cfg),
+            zlow: Vec::new(),
+            rounds: 0,
+            drafted: 0,
+            accepted: 0,
+        }
+    }
+
+    /// Drop the draft's decode state (counters and the lazily-allocated
+    /// K/V buffer survive — the former are service stats, the latter is
+    /// reused by the lane's next speculating sequence).
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.prefix.clear();
+        self.logits_len = 0;
+    }
+
+    /// Bytes currently allocated for this lane's draft K/V buffer (zero
+    /// until the lane first drafts).
+    pub fn kv_bytes(&self) -> usize {
+        (self.keys.len() + self.vals.len()) * 4
+    }
+
+    /// One low-band decode step: embed `byte` at the next position, run
+    /// every block through [`Linear::gemv_low`](super::Linear::gemv_low),
+    /// leave the draft's next-token logits in the arena. Same op order as
+    /// the full engine's `step_lanes`, so the draft is the full forward
+    /// with the high band muted — nothing else differs.
+    fn step(&mut self, model: &PackedModel, byte: u8) {
+        let cfg = &model.config;
+        let (d, heads, dh, seq) = (cfg.d_model, cfg.n_heads, cfg.d_head(), cfg.seq_len);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let t = self.len;
+        debug_assert!(t < seq, "draft kv overflow");
+        let DraftLane { keys, vals, arena, zlow, .. } = self;
+        if keys.is_empty() {
+            // first draft step on this lane: allocate the flat K/V buffer
+            let n = model.config.n_layers * seq * d;
+            keys.resize(n, 0.0);
+            vals.resize(n, 0.0);
+        }
+        let Arena { x, h, q, k, v, attn, proj, ff, probs, logits } = arena;
+        let te = model.tok_emb.row(byte as usize);
+        let pe = model.pos_emb.row(t);
+        for j in 0..d {
+            x[j] = te[j] + pe[j];
+        }
+        for (li, layer) in model.layers.iter().enumerate() {
+            rmsnorm(x, &layer.ln1, h);
+            layer.wq.gemv_low(h, q, zlow);
+            layer.wk.gemv_low(h, k, zlow);
+            layer.wv.gemv_low(h, v, zlow);
+            let base = (li * seq + t) * d;
+            keys[base..base + d].copy_from_slice(k);
+            vals[base..base + d].copy_from_slice(v);
+            {
+                let krows: &[f32] = keys;
+                let vrows: &[f32] = vals;
+                super::attend_position(
+                    heads,
+                    dh,
+                    scale,
+                    t,
+                    q,
+                    probs,
+                    attn,
+                    |u| &krows[(li * seq + u) * d..][..d],
+                    |u| &vrows[(li * seq + u) * d..][..d],
+                );
+            }
+            layer.wo.gemv_low(attn, proj, zlow);
+            for j in 0..d {
+                x[j] += proj[j];
+            }
+            rmsnorm(x, &layer.ln2, h);
+            layer.w1.gemv_low(h, ff, zlow);
+            for vv in ff.iter_mut() {
+                *vv = gelu_tanh(*vv);
+            }
+            layer.w2.gemv_low(ff, proj, zlow);
+            for j in 0..d {
+                x[j] += proj[j];
+            }
+        }
+        rmsnorm(x, &model.ln_f, h);
+        model.unemb.gemv_low(h, logits, zlow);
+        self.len += 1;
+        self.logits_len = self.len;
+        self.prefix.push(byte);
+    }
+
+    /// Catch the draft up to `window`, then greedily propose `k` draft
+    /// bytes. Incremental: the longest cached prefix still matching
+    /// `window` is kept (a flat-KV rollback is just a length cut — this
+    /// is where rejected drafts from the previous round are discarded);
+    /// only the unseen suffix and the `k − 1` intermediate drafts run
+    /// through the low-band forward.
+    ///
+    /// Requires `window.len() + k <= seq` — the caller clamps `k` to the
+    /// window headroom, exactly as the verifier does.
+    pub fn draft(&mut self, model: &PackedModel, window: &[u8], k: usize) -> Vec<u8> {
+        debug_assert!(!window.is_empty(), "draft window must be non-empty");
+        debug_assert!(window.len() + k <= model.config.seq_len, "draft past the window");
+        let mut keep = 0;
+        let cap = self.len.min(self.prefix.len()).min(window.len());
+        while keep < cap && self.prefix[keep] == window[keep] {
+            keep += 1;
+        }
+        if keep == window.len() && self.logits_len != keep {
+            // fully cached but the logits row belongs to a longer,
+            // since-rolled-back prefix: re-step the last byte so the
+            // proposal conditions on exactly `window`
+            keep -= 1;
+        }
+        self.len = keep;
+        self.prefix.truncate(keep);
+        if self.logits_len > keep {
+            self.logits_len = 0; // stale until the next step
+        }
+        for &b in &window[keep..] {
+            self.step(model, b);
+        }
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let next = super::greedy_token(&self.arena.logits) as u8;
+            out.push(next);
+            if i + 1 < k {
+                self.step(model, next);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::PackedModel as EngineModel;
+    use crate::model::testing::micro_weights;
+
+    fn packed(seed: u64) -> EngineModel {
+        EngineModel::from_weights(&micro_weights(seed), true).unwrap()
+    }
+
+    #[test]
+    fn draft_is_deterministic_and_incremental() {
+        let m = packed(51);
+        let mut a = DraftLane::new(&m.config);
+        let mut b = DraftLane::new(&m.config);
+        let w: &[u8] = b"ta kivo";
+        let d1 = a.draft(&m, w, 3);
+        let d2 = b.draft(&m, w, 3);
+        assert_eq!(d1, d2, "draft not deterministic");
+        assert_eq!(d1.len(), 3);
+        // re-drafting the same window proposes the same bytes (the
+        // staleness guard re-steps the last byte after the rollback)
+        let d3 = a.draft(&m, w, 3);
+        assert_eq!(d1, d3, "incremental re-draft diverged");
+        // extending the window keeps the cached prefix and still matches
+        // a from-scratch draft
+        let mut longer = w.to_vec();
+        longer.push(d1[0]);
+        let inc = a.draft(&m, &longer, 2);
+        let mut fresh = DraftLane::new(&m.config);
+        let full = fresh.draft(&m, &longer, 2);
+        assert_eq!(inc, full, "incremental draft diverged from fresh");
+    }
+
+    #[test]
+    fn draft_rolls_back_divergent_prefixes() {
+        let m = packed(52);
+        let mut lane = DraftLane::new(&m.config);
+        let drafts = lane.draft(&m, b"ab", 4);
+        // pretend the verifier rejected everything: the next window
+        // shares only the original bytes plus a different continuation
+        let mut window = b"ab".to_vec();
+        window.push(drafts[0].wrapping_add(1));
+        let inc = lane.draft(&m, &window, 2);
+        let mut fresh = DraftLane::new(&m.config);
+        let full = fresh.draft(&m, &window, 2);
+        assert_eq!(inc, full, "rollback left stale draft state behind");
+    }
+
+    #[test]
+    fn spec_config_and_stats_basics() {
+        assert_eq!(SpecConfig::with_k(0), SpecConfig::disabled());
+        assert!(SpecConfig::with_k(4).enabled);
+        let st = SpecStats { drafted: 8, accepted: 6, ..Default::default() };
+        assert!((st.acceptance() - 0.75).abs() < 1e-12);
+        assert_eq!(SpecStats::default().acceptance(), 0.0);
+    }
+}

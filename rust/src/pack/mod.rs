@@ -312,6 +312,50 @@ impl HaarPackedLinear {
         }
     }
 
+    /// Low-band adjoint activation: the first half of
+    /// [`Self::prepare_activation`]'s output (`z_lo[k] = x[2k] + x[2k+1]`)
+    /// plus its sum — all a low-band-only draft GEMV needs. `z` is resized
+    /// to `cols/2`; the high-band butterfly is never computed, so the
+    /// prologue costs half of the full prepare.
+    pub fn prepare_activation_low(&self, x: &[f32], z: &mut Vec<f32>) -> f32 {
+        let m = self.bits.cols;
+        debug_assert_eq!(x.len(), m);
+        let h = m / 2;
+        z.resize(h, 0.0);
+        for k in 0..h {
+            z[k] = x[2 * k] + x[2 * k + 1];
+        }
+        z.iter().sum()
+    }
+
+    /// Low-band-only GEMV over rows `[i0, i0 + y.len())`: the frequency
+    /// cascade's *draft* view of this layer. Reads the same packed sign
+    /// words as [`Self::gemv_rows`] but only the low-band bit range
+    /// `[0, cols/2)` and only the band-0 `(α, μ)` — the high-band words and
+    /// scales are skipped entirely, so the draft costs roughly half the
+    /// dots with zero extra weight storage. Row `i`'s output equals
+    /// [`Self::gemv_rows`] with `alpha[i][1] = mu[i][1] = 0`: the deepest
+    /// Haar low band as a coarse approximation of the full row.
+    pub fn gemv_rows_low(&self, z: &[f32], sum_lo: f32, i0: usize, y: &mut [f32]) {
+        let h = self.bits.cols / 2;
+        debug_assert!(z.len() >= h);
+        for (k, out) in y.iter_mut().enumerate() {
+            let i = i0 + k;
+            let words = self.bits.row_words(i);
+            let dot_s_lo = signed_dot_range(words, z, 0, h);
+            *out = self.alpha[i][0] * dot_s_lo + self.mu[i][0] * sum_lo;
+        }
+    }
+
+    /// Convenience low-band GEMV (allocating); the draft hot loop uses
+    /// [`Self::prepare_activation_low`] + [`Self::gemv_rows_low`] with a
+    /// reused scratch instead.
+    pub fn gemv_low(&self, x: &[f32], y: &mut [f32]) {
+        let mut z = Vec::new();
+        let sum_lo = self.prepare_activation_low(x, &mut z);
+        self.gemv_rows_low(&z, sum_lo, 0, y);
+    }
+
     /// Multi-lane GEMV over rows `[i0, i0 + ys[l].len())`: one sweep of the
     /// packed sign words serves every lane. `z_all` holds the lanes'
     /// prepared activations back to back (`lane l` at `[l*m, (l+1)*m)`, see
@@ -490,6 +534,46 @@ mod tests {
             p.gemv_rows_lanes(&z_all, &sums, 0, &mut ys);
         }
         assert_eq!(got, want, "multi-lane sweep diverged from per-lane gemv");
+    }
+
+    #[test]
+    fn low_band_gemv_matches_zeroed_high_band() {
+        // the draft view must equal the full GEMV with the high band's
+        // (α, μ) forced to zero — same sign words, band 1 skipped
+        let mut rng = Pcg32::seeded(13);
+        for &(n, m) in &[(9usize, 64usize), (5, 130), (3, 2)] {
+            let w = rand_mat(&mut rng, n, m);
+            let p = HaarPackedLinear::from_dense(&w);
+            let mut hushed = p.clone();
+            for i in 0..n {
+                hushed.alpha[i][1] = 0.0;
+                hushed.mu[i][1] = 0.0;
+            }
+            let x: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+            let mut want = vec![0.0; n];
+            hushed.gemv(&x, &mut want);
+            let mut got = vec![0.0; n];
+            p.gemv_low(&x, &mut got);
+            assert_eq!(got, want, "(n={n},m={m}) draft view diverged");
+        }
+    }
+
+    #[test]
+    fn low_band_partial_row_ranges_agree_with_full() {
+        let mut rng = Pcg32::seeded(14);
+        let w = rand_mat(&mut rng, 23, 128);
+        let p = HaarPackedLinear::from_dense(&w);
+        let x: Vec<f32> = (0..128).map(|_| rng.normal_f32()).collect();
+        let mut full = vec![0.0; 23];
+        p.gemv_low(&x, &mut full);
+        let mut z = Vec::new();
+        let sum_lo = p.prepare_activation_low(&x, &mut z);
+        assert_eq!(z.len(), 64);
+        let mut part = vec![0.0; 23];
+        for (i0, i1) in [(0usize, 7usize), (7, 20), (20, 23)] {
+            p.gemv_rows_low(&z, sum_lo, i0, &mut part[i0..i1]);
+        }
+        assert_eq!(full, part);
     }
 
     #[test]

@@ -8,6 +8,7 @@ use crate::data::{Corpus, TaskFile};
 use crate::engine::{Backend, BackendKind, NativeBackend, PackedModel, XlaBackend};
 use crate::eval;
 use crate::model::Weights;
+use crate::pack;
 use crate::quant::Quantizer;
 use crate::runtime::{NllRunner, Runtime};
 use crate::util::json::Json;
@@ -204,6 +205,39 @@ impl Session {
         block_len: Option<usize>,
     ) -> Result<Box<dyn Backend>> {
         let mut be = self.gen_backend(weights, kind)?;
+        be.set_lanes(lanes);
+        if kv_blocks.is_some() || block_len.is_some() {
+            be.set_kv_blocks(kv_blocks, block_len);
+        }
+        Ok(be)
+    }
+
+    /// Serving model loaded from a saved `.hbq` artifact (CLI `--load`):
+    /// the HBQ1 records (`docs/FORMAT.md`) execute as-is on the native
+    /// engine — no re-quantization at startup, and bit-identical to the
+    /// model that was saved. The artifact stores no model config; the
+    /// session's manifest config is used and every record's shape is
+    /// validated against it.
+    pub fn load_packed(&self, path: &Path) -> Result<PackedModel> {
+        let art = pack::format::PackedModel::load(path)?;
+        PackedModel::from_artifact(&self.fp_weights.config, &art)
+            .with_context(|| format!("artifact {path:?} does not fit the manifest model"))
+    }
+
+    /// Native serving backend over a loaded `.hbq` artifact, with `lanes`
+    /// KV decode lanes and optional paged-KV geometry — the `--load`
+    /// counterpart of [`Session::serve_backend`]. Artifact serving is
+    /// native-only: the packed records *are* the execution format, so
+    /// there is nothing to hand the XLA path without dequantizing first.
+    pub fn loaded_backend(
+        &self,
+        path: &Path,
+        lanes: usize,
+        kv_blocks: Option<usize>,
+        block_len: Option<usize>,
+    ) -> Result<Box<dyn Backend>> {
+        let mut be: Box<dyn Backend> =
+            Box::new(NativeBackend::new(self.load_packed(path)?, self.eval_batch));
         be.set_lanes(lanes);
         if kv_blocks.is_some() || block_len.is_some() {
             be.set_kv_blocks(kv_blocks, block_len);

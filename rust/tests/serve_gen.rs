@@ -213,6 +213,65 @@ fn kv_exhaustion_over_tcp_reports_err_and_recovers() {
     client.join().unwrap();
 }
 
+/// `--load` round trip: a freshly *saved* HBQ1 artifact, reloaded from
+/// disk and served over TCP, must score and generate — and its greedy
+/// output must match a direct in-process generate over the same loaded
+/// records (the packed records execute as-is, no re-quantization).
+#[test]
+fn serve_from_saved_artifact_round_trips() {
+    use hbllm::pack::format;
+    let w = micro_weights(67);
+    let art = format::PackedModel::from_weights(&w);
+    let path = std::env::temp_dir().join("hbllm_serve_roundtrip.hbq");
+    art.save(&path).unwrap();
+    let loaded = format::PackedModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // reference: direct greedy generate over the same loaded records
+    let mut reference = NativeBackend::with_threads(
+        PackedModel::from_artifact(&w.config, &loaded).unwrap(),
+        1,
+        1,
+    );
+    let mut rng = Pcg32::seeded(0);
+    let n_new = 6;
+    let want = engine::generate(&mut reference, b"ta ki", n_new, 0.0, &mut rng).unwrap();
+
+    let mut be = NativeBackend::with_threads(
+        PackedModel::from_artifact(&w.config, &loaded).unwrap(),
+        1,
+        1,
+    );
+    be.set_lanes(2);
+    let (listener, addr) = serve::bind("127.0.0.1:0").unwrap();
+    let client = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut stream = stream;
+        let mut line = String::new();
+        stream.write_all(b"ppl ta kivo remo\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ppl "), "artifact serving cannot score: {line:?}");
+        stream.write_all(format!("gen {n_new} 0 0 ta ki\n").as_bytes()).unwrap();
+        let mut toks: Vec<u8> = Vec::new();
+        loop {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let t = line.trim_end();
+            if let Some(b) = t.strip_prefix("tok ") {
+                toks.push(b.parse().unwrap());
+            } else {
+                assert_eq!(t, format!("done {n_new}"), "bad terminator: {t:?}");
+                break;
+            }
+        }
+        toks
+    });
+    serve::serve_on(listener, &mut be, BatcherConfig::default(), Some(1)).unwrap();
+    let toks = client.join().unwrap();
+    assert_eq!(&want[b"ta ki".len()..], &toks[..], "served artifact diverged from direct decode");
+}
+
 /// Full protocol over TCP: more clients than lanes, each mixing legacy
 /// bare-line scoring, `ppl`, empty-input errors, bad syntax, and a greedy
 /// `gen` stream. Greedy determinism across contending clients is the
