@@ -10,9 +10,15 @@
 //! `--spec-k N` turns on frequency-cascade speculative decoding for
 //! greedy generation requests (Haar low-band draft, full-model verify).
 //!
-//!     cargo run --release --example serve_quantized [-- --requests 64] [-- --clients 8] [-- --backend native] [-- --lanes 4] [-- --kv-blocks 16] [-- --spec-k 4]
+//! `--http-clients N` (default 2) additionally serves the HTTP/SSE
+//! front-end from the same engine loop and streams N greedy generations
+//! through `POST /v1/generate` with alternating interactive/batch
+//! priorities, then snapshots `GET /v1/stats` — the TCP and HTTP clients
+//! contend for the same lanes and KV blocks.
+//!
+//!     cargo run --release --example serve_quantized [-- --requests 64] [-- --clients 8] [-- --backend native] [-- --lanes 4] [-- --kv-blocks 16] [-- --spec-k 4] [-- --http-clients 2]
 
-use hbllm::coordinator::{serve, BatcherConfig, QuantJobConfig};
+use hbllm::coordinator::{http, serve, BatcherConfig, Priority, QuantJobConfig};
 use hbllm::engine::{Backend, BackendKind, SpecConfig};
 use hbllm::pipeline::{EvalScope, Session};
 use hbllm::quant;
@@ -55,9 +61,12 @@ fn main() -> anyhow::Result<()> {
         .map(String::from)
         .collect();
 
+    let n_http = args.get_usize("http-clients", 2);
     let (listener, addr) = serve::bind("127.0.0.1:0")?;
+    let (http_listener, http_addr) = serve::bind("127.0.0.1:0")?;
+    let http_url = format!("http://{http_addr}");
     eprintln!(
-        "serving on {addr} [backend {}, {} lanes]; {n_clients} clients x {} score requests + 1 gen request each",
+        "serving on {addr} (http {http_addr}) [backend {}, {} lanes]; {n_clients} clients x {} score requests + 1 gen request each, {n_http} http/sse streams",
         backend.name(),
         backend.lanes(),
         lines.len()
@@ -106,12 +115,40 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
-    serve::serve_on(
-        listener,
-        backend.as_mut(),
-        BatcherConfig { spec, ..Default::default() },
-        Some(n_clients),
-    )?;
+    // HTTP/SSE streams contend with the TCP clients for the same lanes;
+    // priorities alternate so both admission tiers see traffic, and the
+    // first client snapshots /v1/stats while the service is live
+    let http_clients: Vec<std::thread::JoinHandle<(usize, Option<String>)>> = (0..n_http)
+        .map(|c| {
+            let url = http_url.clone();
+            std::thread::spawn(move || {
+                let prio = if c % 2 == 0 { Priority::Interactive } else { Priority::Batch };
+                let mut toks = 0usize;
+                let n = http::client_generate(
+                    &url,
+                    "ta kivo remo ",
+                    GEN_TOKENS,
+                    0.0,
+                    c as u64,
+                    prio,
+                    |_| toks += 1,
+                )
+                .expect("http generation failed");
+                assert_eq!(n, toks, "sse done count disagrees with streamed tokens");
+                let stats = (c == 0).then(|| {
+                    http::client_stats(&url).expect("stats fetch failed").to_string()
+                });
+                (toks, stats)
+            })
+        })
+        .collect();
+
+    let mut fronts = vec![serve::FrontEnd::line(listener, Some(n_clients))];
+    if n_http > 0 {
+        // one extra connection for the stats snapshot
+        fronts.push(http::HttpConn::front_end(http_listener, Some(n_http + 1)));
+    }
+    serve::serve_fronts(fronts, backend.as_mut(), BatcherConfig { spec, ..Default::default() })?;
     let mut lats: Vec<Duration> = Vec::new();
     let mut gen_tokens = 0usize;
     for c in clients {
@@ -119,12 +156,28 @@ fn main() -> anyhow::Result<()> {
         lats.extend(lat);
         gen_tokens += toks;
     }
+    let mut http_tokens = 0usize;
+    let mut stats_line = None;
+    for c in http_clients {
+        let (toks, stats) = c.join().unwrap();
+        http_tokens += toks;
+        stats_line = stats_line.or(stats);
+    }
     let wall = t0.elapsed().as_secs_f64();
     lats.sort();
     println!("\n== serving results (quantized model, scoring + generation) ==");
     println!("score reqs : {}", lats.len());
-    println!("gen tokens : {gen_tokens} ({n_clients} streams x {GEN_TOKENS})");
-    println!("throughput : {:.1} req/s (scores+gens over {wall:.2}s wall)", (lats.len() + n_clients) as f64 / wall);
+    println!("gen tokens : {gen_tokens} ({n_clients} tcp streams x {GEN_TOKENS})");
+    if n_http > 0 {
+        println!("http tokens: {http_tokens} ({n_http} sse streams x {GEN_TOKENS}, mixed priorities)");
+        if let Some(stats) = stats_line {
+            println!("live stats : {stats}");
+        }
+    }
+    println!(
+        "throughput : {:.1} req/s (scores+gens over {wall:.2}s wall)",
+        (lats.len() + n_clients + n_http) as f64 / wall
+    );
     if !lats.is_empty() {
         let q = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize].as_secs_f64() * 1e3;
         println!("latency    : p50 {:.1}ms  p90 {:.1}ms  p99 {:.1}ms (scoring)", q(0.5), q(0.9), q(0.99));

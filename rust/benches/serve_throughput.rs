@@ -19,7 +19,7 @@
 //!
 //!     cargo run --release --bench serve_throughput   (or cargo bench)
 
-use hbllm::coordinator::{GenEvent, GenRequest, GenScheduler};
+use hbllm::coordinator::{GenEvent, GenRequest, GenScheduler, Priority};
 use hbllm::engine::{Backend, NativeBackend, PackedModel};
 use hbllm::model::testing::synth_weights;
 use hbllm::util::bench::{bench, write_json, Measurement, Table};
@@ -47,6 +47,7 @@ fn run_once(be: &mut dyn Backend, prompts: &[Vec<u8>]) -> usize {
                 temperature: 0.0,
                 seed: i as u64,
                 client: i as u64,
+                priority: Priority::Interactive,
                 reply: tx,
             });
             rx

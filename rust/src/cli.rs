@@ -8,14 +8,18 @@
 //!   serve     --method M --addr  continuous-batching generation + scoring
 //!                                server (`--lanes`, `--max-new`,
 //!                                `--kv-blocks`, `--block-len`, `--spec-k`;
-//!                                `--load model.hbq` serves a saved
-//!                                artifact without re-quantizing)
-//!   generate  [--method M]       sample text locally (`--load`, `--spec-k`)
+//!                                `--http-port` adds the HTTP/SSE
+//!                                front-end; `--load model.hbq` serves a
+//!                                saved artifact without re-quantizing)
+//!   generate  [--method M]       sample text locally (`--load`, `--spec-k`),
+//!                                or stream from a running server's HTTP
+//!                                front-end (`--url`, `--priority`)
 //!   ciq                          CIQ expressiveness table (§3.1)
 //!
-//! The serve wire protocol is documented in `README.md` §Serving.
+//! The serving wire protocols (TCP verbs and HTTP endpoints) are
+//! specified in `docs/API.md`.
 
-use crate::coordinator::{serve, BatcherConfig, QuantJobConfig};
+use crate::coordinator::{http, serve, BatcherConfig, Priority, QuantJobConfig};
 use crate::engine::{self, Backend, BackendKind, SpecConfig};
 use crate::pipeline::{EvalScope, Session};
 use crate::quant::{self, ciq, synth, Quantizer};
@@ -51,8 +55,11 @@ COMMANDS:
   quantize --method M      quantize the model, print per-layer metrics
   eval --method M          quantize + evaluate (perplexity on c4s/wiki2s/ptbs + AvgQA)
   serve --method M         TCP generation + scoring server
-                           (`ppl <text>` and `gen <max-new> <temp> <seed> <prompt>` verbs)
-  generate [--method M]    sample text from the (optionally quantized) model
+                           (`ppl <text>`, `gen <max-new> <temp> <seed> <prompt>`,
+                           `prio <interactive|batch> gen ...` verbs;
+                           `--http-port` adds HTTP/SSE endpoints)
+  generate [--method M]    sample text from the (optionally quantized) model,
+                           or from a running server with `--url`
   ciq                      CIQ expressiveness table (paper §3.1)
 
 OPTIONS:
@@ -69,6 +76,14 @@ OPTIONS:
                            the native engine instead of re-quantizing at
                            startup (--method not needed)
   --addr HOST:PORT         serve address (default 127.0.0.1:7431)
+  --http-port N            serve: also expose the HTTP/SSE front-end on this
+                           port, same host as --addr (POST /v1/generate
+                           streams SSE, POST /v1/score, GET /v1/stats;
+                           spec in docs/API.md)
+  --url http://HOST:PORT   generate: stream from a running server's HTTP
+                           front-end instead of loading a model locally
+  --priority P             generate --url: admission tier, interactive
+                           (default) or batch
   --lanes N                serve: concurrent KV decode lanes (default 4;
                            continuous batching sweeps the packed weights
                            once per token across all active lanes)
@@ -263,12 +278,27 @@ fn serve_cmd(args: &Args) -> Result<()> {
     };
     let addr = args.get_or("addr", "127.0.0.1:7431");
     let (listener, local) = serve::bind(addr)?;
+    // --http-port binds the HTTP/SSE front-end on the same host; both
+    // listeners feed one engine loop (shared lanes, fairness, KV budget)
+    let http = match args.get("http-port") {
+        Some(p) => {
+            let port: u16 = p.parse().map_err(|_| anyhow!("bad --http-port {p}"))?;
+            let http_addr = std::net::SocketAddr::new(local.ip(), port);
+            Some(serve::bind(&http_addr.to_string())?)
+        }
+        None => None,
+    };
     println!(
         "serving quantized ({label}) model on {local} [backend {}, {} lanes, max-new {}]",
         be.name(),
         be.lanes(),
         cfg.max_new_cap
     );
+    if let Some((_, http_addr)) = &http {
+        println!(
+            "http front-end on {http_addr}: POST /v1/generate (SSE) | POST /v1/score | GET /v1/stats"
+        );
+    }
     if let Some(st) = be.kv_stats() {
         println!(
             "paged kv: {} blocks x {} tokens ({:.2} MiB arena); undersized arenas \
@@ -286,8 +316,14 @@ fn serve_cmd(args: &Args) -> Result<()> {
             spec.k
         );
     }
-    println!("protocol: `ppl <text>` -> `ppl <v>` | `gen <max-new> <temp> <seed> <prompt>` -> `tok <byte>`* `done <n>`");
-    serve::serve_on(listener, be.as_mut(), cfg, None)?;
+    println!(
+        "protocol: `ppl <text>` -> `ppl <v>` | `[prio <interactive|batch>] gen <max-new> <temp> <seed> <prompt>` -> `tok <byte>`* `done <n>`"
+    );
+    let mut fronts = vec![serve::FrontEnd::line(listener, None)];
+    if let Some((http_listener, _)) = http {
+        fronts.push(http::HttpConn::front_end(http_listener, None));
+    }
+    serve::serve_fronts(fronts, be.as_mut(), cfg)?;
     if let Some(st) = be.spec_stats() {
         if st.enabled && st.drafted > 0 {
             println!(
@@ -305,6 +341,30 @@ fn serve_cmd(args: &Args) -> Result<()> {
 }
 
 fn generate_cmd(args: &Args) -> Result<()> {
+    // thin-client mode: stream from a running server's HTTP front-end —
+    // no session, no artifacts, no local model
+    if let Some(url) = args.get("url") {
+        use std::io::Write as _;
+        let prompt = args.get_or("prompt", "ta kivo ");
+        let n_new = args.get_usize("max-new", args.get_usize("tokens", 120));
+        let temp = args.get_f64("temperature", 0.8) as f32;
+        let seed = args.get_usize("seed", 0) as u64;
+        let priority = match args.get("priority") {
+            Some(p) => Priority::parse(p)
+                .ok_or_else(|| anyhow!("unknown --priority {p} (expected interactive|batch)"))?,
+            None => Priority::Interactive,
+        };
+        print!("{prompt}");
+        std::io::stdout().flush().ok();
+        let n = http::client_generate(url, prompt, n_new, temp, seed, priority, |b| {
+            let mut out = std::io::stdout();
+            out.write_all(&[b]).ok();
+            out.flush().ok();
+        })?;
+        println!();
+        eprintln!("[{n} bytes streamed from {url}, priority {}]", priority.as_str());
+        return Ok(());
+    }
     let mut s = session(args)?;
     let mut be = match args.get("load") {
         Some(path) => s.loaded_backend(Path::new(path), 1, None, None)?,
@@ -423,6 +483,20 @@ mod tests {
         let a = parse("serve --method hbllm-row");
         assert_eq!(a.get("kv-blocks"), None);
         assert_eq!(a.get("block-len"), None);
+    }
+
+    #[test]
+    fn http_and_url_flags_parse() {
+        let a = parse("serve --method hbllm-row --http-port 7432");
+        assert_eq!(a.get("http-port").and_then(|v| v.parse::<u16>().ok()), Some(7432));
+        // absent flag keeps the HTTP front-end off
+        assert_eq!(parse("serve --method hbllm-row").get("http-port"), None);
+        let a = parse("generate --url http://127.0.0.1:7432 --priority batch");
+        assert_eq!(a.get("url"), Some("http://127.0.0.1:7432"));
+        assert_eq!(a.get("priority").and_then(Priority::parse), Some(Priority::Batch));
+        assert_eq!(parse("generate --url http://h --priority urgent")
+            .get("priority")
+            .and_then(Priority::parse), None);
     }
 
     #[test]

@@ -1,19 +1,26 @@
 //! Request plumbing between connection handlers and the thread that owns
 //! the model backend.
 //!
-//! Two request kinds flow through one channel: **scoring** (collect up to
-//! `max_batch` texts or wait `max_wait`, then flush in one backend call)
-//! and **generation** (handed to the continuous-batching
+//! Three request kinds flow through one channel: **scoring** (collect up
+//! to `max_batch` texts or wait `max_wait`, then flush in one backend
+//! call), **generation** (handed to the continuous-batching
 //! `GenScheduler`, which streams `GenEvent`s back per request and, on
 //! KV-metered backends, holds requests in its queue until enough paged-KV
-//! blocks are free — the channel itself never applies backpressure). The
+//! blocks are free — the channel itself never applies backpressure), and
+//! **stats** (a [`StatsSnapshot`] of scheduler queues + backend KV/spec
+//! counters, answered between sweeps — the `GET /v1/stats` payload). The
 //! backend-owning side is generic: [`Batcher::run`] drives a scoring-only
 //! closure (testable without any model runtime), while
 //! `coordinator::serve::run_engine` interleaves scoring batches with
 //! generation steps on the real backend.
+//!
+//! The channel is **front-end agnostic**: the line-oriented TCP protocol
+//! and the HTTP/SSE front-end (`coordinator::http`) both talk to the one
+//! engine loop through [`BatcherHandle`]s — see
+//! [`ClientConn`](super::serve::ClientConn).
 
-use super::scheduler::{GenEvent, GenRequest};
-use crate::engine::SpecConfig;
+use super::scheduler::{GenEvent, GenRequest, Priority};
+use crate::engine::{KvStats, SpecConfig, SpecStats};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
@@ -50,10 +57,41 @@ pub struct Request {
     pub reply: Sender<Result<f64, String>>,
 }
 
+/// Point-in-time service snapshot, answered by the backend-owning loop so
+/// scheduler queues and backend counters are read coherently between
+/// sweeps. Serialized as JSON by the HTTP front-end's `GET /v1/stats`
+/// (`docs/API.md`).
+#[derive(Clone, Debug, Default)]
+pub struct StatsSnapshot {
+    /// KV decode lanes the backend hosts.
+    pub lanes: usize,
+    /// Sequences currently resident in lanes.
+    pub active: usize,
+    /// Generation requests waiting for admission (both priority tiers).
+    pub queued: usize,
+    /// Per-(client, priority) pending queue depths, interactive tier
+    /// first, clients ascending.
+    pub clients: Vec<ClientQueue>,
+    /// Paged-KV occupancy (`None` on unmetered backends).
+    pub kv: Option<KvStats>,
+    /// Speculative-decoding counters (`None` without a draft path).
+    pub spec: Option<SpecStats>,
+}
+
+/// One client's pending generation queue in a [`StatsSnapshot`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClientQueue {
+    pub client: u64,
+    pub priority: Priority,
+    pub depth: usize,
+}
+
 /// One unit of work for the backend-owning thread.
 pub enum Work {
     Score(Request),
     Generate(GenRequest),
+    /// Answer with a [`StatsSnapshot`] at the next loop turn.
+    Stats(Sender<StatsSnapshot>),
 }
 
 /// The batcher owns the receive side; the scorer closure / engine loop
@@ -93,23 +131,34 @@ impl BatcherHandle {
 
     /// Blocking score call: perplexity (exp mean NLL/byte) for `text`.
     pub fn score(&self, text: &[u8]) -> Result<f64, String> {
+        let rx = self.score_async(text)?;
+        rx.recv().map_err(|_| "batcher dropped request".to_string())?
+    }
+
+    /// Submit a scoring request without waiting; the result arrives on the
+    /// returned receiver. A caller with several texts (the HTTP
+    /// `/v1/score` endpoint) submits them as one burst so the engine can
+    /// flush them in a single batched backend call.
+    pub fn score_async(&self, text: &[u8]) -> Result<Receiver<Result<f64, String>>, String> {
         let (tx, rx) = channel();
         self.tx
             .send(Work::Score(Request { text: text.to_vec(), reply: tx }))
             .map_err(|_| "batcher gone".to_string())?;
-        rx.recv().map_err(|_| "batcher dropped request".to_string())?
+        Ok(rx)
     }
 
-    /// Submit a generation request; events stream back on the returned
-    /// receiver ([`GenEvent::Token`]* then [`GenEvent::Done`], or
-    /// [`GenEvent::Error`]). Dropping the receiver mid-stream evicts the
-    /// sequence from its lane at the next step.
+    /// Submit a generation request at the given admission [`Priority`];
+    /// events stream back on the returned receiver ([`GenEvent::Token`]*
+    /// then [`GenEvent::Done`], or [`GenEvent::Error`]). Dropping the
+    /// receiver mid-stream evicts the sequence from its lane at the next
+    /// step.
     pub fn generate(
         &self,
         prompt: &[u8],
         max_new: usize,
         temperature: f32,
         seed: u64,
+        priority: Priority,
     ) -> Result<Receiver<GenEvent>, String> {
         let (tx, rx) = channel();
         self.tx
@@ -119,10 +168,19 @@ impl BatcherHandle {
                 temperature,
                 seed,
                 client: self.client,
+                priority,
                 reply: tx,
             }))
             .map_err(|_| "batcher gone".to_string())?;
         Ok(rx)
+    }
+
+    /// Blocking service-stats snapshot (scheduler queue depths + backend
+    /// KV/spec counters), answered by the engine loop between sweeps.
+    pub fn stats(&self) -> Result<StatsSnapshot, String> {
+        let (tx, rx) = channel();
+        self.tx.send(Work::Stats(tx)).map_err(|_| "batcher gone".to_string())?;
+        rx.recv().map_err(|_| "batcher dropped request".to_string())
     }
 }
 
@@ -161,14 +219,14 @@ impl Batcher {
 
     /// The one copy of the scoring batch policy: collect requests into
     /// `pending` until it holds `max_batch` texts or the `max_wait`
-    /// deadline expires. Generation requests are handed to `on_gen`; if it
-    /// returns `false` the top-up stops early (the engine loop uses this
-    /// to start decoding as soon as generation traffic arrives). Returns
-    /// `false` once every handle has dropped.
+    /// deadline expires. Non-scoring work (generation, stats) is handed
+    /// to `on_work`; if it returns `false` the top-up stops early (the
+    /// engine loop uses this to start decoding as soon as generation
+    /// traffic arrives). Returns `false` once every handle has dropped.
     pub fn top_up_scores(
         &self,
         pending: &mut Vec<Request>,
-        mut on_gen: impl FnMut(GenRequest) -> bool,
+        mut on_work: impl FnMut(Work) -> bool,
     ) -> bool {
         let deadline = Instant::now() + self.cfg.max_wait;
         while pending.len() < self.cfg.max_batch {
@@ -178,8 +236,8 @@ impl Batcher {
             }
             match self.recv_timeout(deadline - now) {
                 Ok(Work::Score(r)) => pending.push(r),
-                Ok(Work::Generate(g)) => {
-                    if !on_gen(g) {
+                Ok(other) => {
+                    if !on_work(other) {
                         break;
                     }
                 }
@@ -192,13 +250,20 @@ impl Batcher {
 
     /// Run a scoring-only batch loop until all senders hang up.
     /// `score_batch` maps a slice of texts to one score per text;
-    /// generation requests are answered with an error (use
-    /// `serve::run_engine` for a generation-capable loop).
+    /// generation requests are answered with an error and stats requests
+    /// with an empty snapshot — there is no scheduler or backend here
+    /// (use `serve::run_engine` for a generation-capable loop).
     pub fn run(self, mut score_batch: impl FnMut(&[Vec<u8>]) -> Vec<Result<f64, String>>) {
-        let reject = |g: GenRequest| {
-            let _ = g
-                .reply
-                .send(GenEvent::Error("generation not supported by this server".into()));
+        let answer_other = |w: Work| match w {
+            Work::Generate(g) => {
+                let _ = g
+                    .reply
+                    .send(GenEvent::Error("generation not supported by this server".into()));
+            }
+            Work::Stats(tx) => {
+                let _ = tx.send(StatsSnapshot::default());
+            }
+            Work::Score(_) => unreachable!("scoring work is batched, never forwarded"),
         };
         let mut pending: Vec<Request> = Vec::new();
         loop {
@@ -206,8 +271,8 @@ impl Batcher {
             if pending.is_empty() {
                 match self.recv() {
                     Some(Work::Score(r)) => pending.push(r),
-                    Some(Work::Generate(g)) => {
-                        reject(g);
+                    Some(other) => {
+                        answer_other(other);
                         continue;
                     }
                     None => return, // all senders dropped
@@ -216,8 +281,8 @@ impl Batcher {
             // top up until full or the wait budget expires; on disconnect
             // the flush below still answers what was collected, then the
             // next recv() observes the hangup
-            self.top_up_scores(&mut pending, |g| {
-                reject(g);
+            self.top_up_scores(&mut pending, |w| {
+                answer_other(w);
                 true
             });
             let texts: Vec<Vec<u8>> = pending.iter().map(|r| r.text.clone()).collect();
@@ -311,11 +376,24 @@ mod tests {
         let worker = std::thread::spawn(move || {
             batcher.run(|texts| texts.iter().map(|_| Ok(1.0)).collect());
         });
-        let rx = handle.generate(b"hi", 4, 0.0, 0).unwrap();
+        let rx = handle.generate(b"hi", 4, 0.0, 0, Priority::Interactive).unwrap();
         match rx.recv().unwrap() {
             GenEvent::Error(msg) => assert!(msg.contains("not supported"), "{msg}"),
             other => panic!("expected Error, got {other:?}"),
         }
+        drop(handle);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn scoring_only_loop_answers_stats_with_empty_snapshot() {
+        let (batcher, handle) = Batcher::new(BatcherConfig::default());
+        let worker = std::thread::spawn(move || {
+            batcher.run(|texts| texts.iter().map(|_| Ok(1.0)).collect());
+        });
+        let st = handle.stats().unwrap();
+        assert_eq!((st.lanes, st.active, st.queued), (0, 0, 0));
+        assert!(st.kv.is_none() && st.spec.is_none() && st.clients.is_empty());
         drop(handle);
         worker.join().unwrap();
     }

@@ -6,16 +6,26 @@
 //! parallelism (Table 3's wall-clock), and (b) serving the quantized model
 //! — batched perplexity scoring *and* admission-controlled
 //! continuous-batching generation over the engine's KV lanes (the
-//! deployment story in §3.6/§4.5). See `README.md` §Serving for the wire
-//! protocol.
+//! deployment story in §3.6/§4.5).
+//!
+//! Serving is split into one backend-owning engine loop
+//! ([`serve::run_engine`]) and pluggable transports
+//! ([`serve::ClientConn`]): the line-oriented TCP protocol
+//! ([`serve::LineConn`]) and the HTTP/SSE front-end ([`http::HttpConn`])
+//! feed the same [`GenScheduler`] — one admission policy (two-tier
+//! [`Priority`] rotation, per-client fairness, KV backpressure) whatever
+//! the wire format. The complete serving API (verbs, endpoints, SSE
+//! grammar, errors, priorities) is specified in `docs/API.md`; the
+//! request lifecycle is walked through in `docs/ARCHITECTURE.md`.
 
 pub mod batcher;
+pub mod http;
 pub mod progress;
 pub mod scheduler;
 pub mod serve;
 
-pub use batcher::{Batcher, BatcherConfig, BatcherHandle, Work};
+pub use batcher::{Batcher, BatcherConfig, BatcherHandle, ClientQueue, StatsSnapshot, Work};
 pub use progress::Progress;
 pub use scheduler::{
-    quantize_model, GenEvent, GenRequest, GenScheduler, LayerResult, QuantJobConfig,
+    quantize_model, GenEvent, GenRequest, GenScheduler, LayerResult, Priority, QuantJobConfig,
 };

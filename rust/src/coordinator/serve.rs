@@ -1,24 +1,36 @@
-//! Line-protocol TCP generation + scoring server over the quantized model.
+//! The serving core: the backend-owning engine loop ([`run_engine`]), the
+//! front-end plumbing that feeds it ([`ClientConn`], [`FrontEnd`],
+//! [`serve_fronts`]), and the line-oriented TCP protocol ([`LineConn`]).
 //!
-//! Protocol (one UTF-8 line per request; full spec in `README.md`
-//! §Serving):
+//! # TCP line protocol (full spec in `docs/API.md`)
+//!
+//! One UTF-8 line per request:
 //!
 //! * `ppl <text>` → `ppl <value>` (byte-level perplexity) or `err <msg>`.
 //!   Empty / whitespace-only text is `err empty input`, never a
 //!   perplexity over pad bytes.
-//!
-//! Verbs take precedence: a line is a verb iff it starts with `ppl ` or
-//! `gen`/`gen `; anything else is scored as legacy bare text (the pre-verb
-//! protocol). A legacy text that itself begins with a verb keyword must be
-//! sent as `ppl <text>` to be scored.
 //! * `gen <max-new> <temperature> <seed> <prompt…>` → a stream of
 //!   `tok <byte>` lines (one per sampled byte, written as it is decoded),
 //!   terminated by `done <n-generated>`, or `err <msg>`.
+//! * `prio <interactive|batch> gen <…>` → as `gen`, admitted at the given
+//!   [`Priority`] (plain `gen` is `interactive`).
+//!
+//! Verbs take precedence: a line is a verb iff it starts with `ppl `,
+//! `gen`/`gen `, or `prio `; anything else is scored as legacy bare text
+//! (the pre-verb protocol). A legacy text that itself begins with a verb
+//! keyword must be sent as `ppl <text>` to be scored.
+//!
+//! # One engine loop, many front-ends
 //!
 //! Backend-generic: any [`engine::Backend`](crate::engine::Backend) can be
 //! served. The backend stays on the [`run_engine`] thread (xla handles are
 //! not Sync, and the native engine's KV lanes are mutable state);
 //! connection handlers only exchange messages through the batcher channel.
+//! A *front-end* is just a listener plus a [`ClientConn`] implementation
+//! that translates its wire format into batcher work — [`LineConn`] for
+//! this module's TCP protocol, [`HttpConn`](super::http::HttpConn) for
+//! HTTP/SSE — so every transport shares one scheduler, one admission
+//! policy, and one decode sweep ([`serve_fronts`] accepts any mix).
 //! Generation is continuously batched: a [`GenScheduler`] admits queued
 //! requests into free KV lanes between decode sweeps, so sequences join
 //! and leave the running batch without draining it.
@@ -29,16 +41,20 @@
 //! `err kv exhausted` line — the sweep itself keeps running for everyone
 //! else.
 //!
-//! Each TCP connection gets its own client id
-//! ([`BatcherHandle::connection`]) and generation admission round-robins
-//! across clients, so one chatty connection cannot starve the rest. With
-//! `serve --spec-k N`, greedy requests decode speculatively (the
-//! frequency cascade, `engine::spec`) — byte-identical output, several
-//! verified tokens per sweep — while sampling requests share the same
-//! lanes on the plain path.
+//! Each connection (TCP or HTTP) gets its own client id
+//! ([`BatcherHandle::connection`]) and generation admission runs the
+//! scheduler's two-tier weighted rotation across clients, so one chatty
+//! connection cannot starve the rest and batch traffic rides behind
+//! interactive traffic without being starved. With `serve --spec-k N`,
+//! greedy requests decode speculatively (the frequency cascade,
+//! `engine::spec`) — byte-identical output, several verified tokens per
+//! sweep — while sampling requests share the same lanes on the plain
+//! path.
 
-use super::batcher::{Batcher, BatcherConfig, BatcherHandle, Request, Work};
-use super::scheduler::{GenEvent, GenScheduler};
+use super::batcher::{
+    Batcher, BatcherConfig, BatcherHandle, ClientQueue, Request, StatsSnapshot, Work,
+};
+use super::scheduler::{GenEvent, GenScheduler, Priority};
 use crate::engine::paged::blocks_for;
 use crate::engine::Backend;
 use anyhow::Result;
@@ -103,7 +119,12 @@ pub fn score_texts(be: &mut dyn Backend, texts: &[Vec<u8>]) -> Vec<Result<f64, S
 /// Stream a generation request's events back over the socket. Returns
 /// `false` once the connection is unusable (the dropped receiver then
 /// evicts the sequence from its KV lane at the engine's next step).
-fn handle_gen(args: &str, handle: &BatcherHandle, writer: &mut TcpStream) -> bool {
+fn handle_gen(
+    args: &str,
+    priority: Priority,
+    handle: &BatcherHandle,
+    writer: &mut TcpStream,
+) -> bool {
     let mut it = args.splitn(4, ' ');
     let parsed = (
         it.next().and_then(|s| s.parse::<usize>().ok()),
@@ -119,7 +140,7 @@ fn handle_gen(args: &str, handle: &BatcherHandle, writer: &mut TcpStream) -> boo
         }
     };
     let prompt = it.next().unwrap_or("");
-    let rx = match handle.generate(prompt.as_bytes(), max_new, temperature, seed) {
+    let rx = match handle.generate(prompt.as_bytes(), max_new, temperature, seed, priority) {
         Ok(rx) => rx,
         Err(e) => return writer.write_all(format!("err {e}\n").as_bytes()).is_ok(),
     };
@@ -141,35 +162,106 @@ fn handle_gen(args: &str, handle: &BatcherHandle, writer: &mut TcpStream) -> boo
     writer.write_all(b"err aborted\n").is_ok()
 }
 
-fn handle_conn(stream: TcpStream, handle: BatcherHandle) {
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
+/// One accepted transport session. A front-end is a listener plus a
+/// `ClientConn` implementation: the accept loop wraps each incoming
+/// stream with [`ClientConn::open`] and drives [`ClientConn::run`] on its
+/// own thread, with a [`BatcherHandle`] carrying that connection's fresh
+/// client id. All sessions — whatever their wire format — feed the same
+/// [`run_engine`] step loop through the handle, so admission fairness,
+/// priorities, KV backpressure and speculative decoding behave
+/// identically across transports. Implementations: [`LineConn`] (the TCP
+/// line protocol) and [`HttpConn`](super::http::HttpConn) (HTTP/SSE).
+pub trait ClientConn: Send + Sized + 'static {
+    /// Wrap an accepted stream in this front-end's session type.
+    fn open(stream: TcpStream) -> Self;
+    /// Serve the session to completion (blocking; runs on its own thread).
+    fn run(self, handle: BatcherHandle);
+}
+
+/// A bound listener paired with the [`ClientConn`] type its connections
+/// speak, ready for [`serve_fronts`].
+pub struct FrontEnd {
+    listener: TcpListener,
+    /// Stop accepting after this many connections (`None` = forever).
+    max_conns: Option<usize>,
+    spawn: fn(TcpStream, BatcherHandle),
+}
+
+impl FrontEnd {
+    /// Serve `C`-sessions from `listener`, at most `max_conns` of them.
+    pub fn new<C: ClientConn>(listener: TcpListener, max_conns: Option<usize>) -> FrontEnd {
+        FrontEnd { listener, max_conns, spawn: |s, h| C::open(s).run(h) }
+    }
+
+    /// The TCP line-protocol front-end (`ppl`/`gen`/`prio` verbs).
+    pub fn line(listener: TcpListener, max_conns: Option<usize>) -> FrontEnd {
+        FrontEnd::new::<LineConn>(listener, max_conns)
+    }
+}
+
+/// The line-oriented TCP session (`ppl`/`gen`/`prio` verbs plus legacy
+/// bare-line scoring) — the [`ClientConn`] behind [`FrontEnd::line`] and
+/// [`serve_on`]. Wire grammar in the module docs and `docs/API.md`.
+pub struct LineConn {
+    stream: TcpStream,
+}
+
+impl ClientConn for LineConn {
+    fn open(stream: TcpStream) -> LineConn {
+        LineConn { stream }
+    }
+
+    fn run(self, handle: BatcherHandle) {
+        let mut writer = match self.stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => return,
         };
-        if line.is_empty() {
-            continue;
-        }
-        let ok = if let Some(rest) = line.strip_prefix("gen ") {
-            handle_gen(rest, &handle, &mut writer)
-        } else if line == "gen" {
-            handle_gen("", &handle, &mut writer)
-        } else {
-            // `ppl <text>`, or a legacy bare line scored as-is
-            let text = line.strip_prefix("ppl ").unwrap_or(&line);
-            let resp = match handle.score(text.as_bytes()) {
-                Ok(ppl) => format!("ppl {ppl:.4}\n"),
-                Err(e) => format!("err {e}\n"),
+        let reader = BufReader::new(self.stream);
+        for line in reader.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => break,
             };
-            writer.write_all(resp.as_bytes()).is_ok()
-        };
-        if !ok {
-            break;
+            if line.is_empty() {
+                continue;
+            }
+            // `prio <level>` prefixes a gen verb with an admission tier;
+            // anything else after it is a usage error (scoring has no
+            // admission queue to prioritize)
+            let (priority, verb) = match line.strip_prefix("prio ") {
+                Some(rest) => {
+                    let (level, tail) = rest.split_once(' ').unwrap_or((rest, ""));
+                    match Priority::parse(level) {
+                        Some(p) if tail == "gen" || tail.starts_with("gen ") => (p, tail),
+                        _ => {
+                            let ok = writer
+                                .write_all(b"err usage: prio <interactive|batch> gen <max-new> <temperature> <seed> <prompt>\n")
+                                .is_ok();
+                            if ok {
+                                continue;
+                            }
+                            break;
+                        }
+                    }
+                }
+                None => (Priority::Interactive, line.as_str()),
+            };
+            let ok = if let Some(rest) = verb.strip_prefix("gen ") {
+                handle_gen(rest, priority, &handle, &mut writer)
+            } else if verb == "gen" {
+                handle_gen("", priority, &handle, &mut writer)
+            } else {
+                // `ppl <text>`, or a legacy bare line scored as-is
+                let text = verb.strip_prefix("ppl ").unwrap_or(verb);
+                let resp = match handle.score(text.as_bytes()) {
+                    Ok(ppl) => format!("ppl {ppl:.4}\n"),
+                    Err(e) => format!("err {e}\n"),
+                };
+                writer.write_all(resp.as_bytes()).is_ok()
+            };
+            if !ok {
+                break;
+            }
         }
     }
 }
@@ -226,15 +318,25 @@ pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
                 match w {
                     Work::Score(r) => scores.push(r),
                     Work::Generate(g) => sched.submit(g),
+                    Work::Stats(tx) => {
+                        let _ = tx.send(snapshot(&sched, &*be));
+                    }
                 }
             }
             // scoring-only service: let a partial batch fill up briefly
             // (generation traffic ends the wait — decoding is the batching
             // window once lanes are busy)
             if connected && !sched.has_work() && !scores.is_empty() {
-                connected = batcher.top_up_scores(&mut scores, |g| {
-                    sched.submit(g);
-                    false
+                connected = batcher.top_up_scores(&mut scores, |w| match w {
+                    Work::Generate(g) => {
+                        sched.submit(g);
+                        false
+                    }
+                    Work::Stats(tx) => {
+                        let _ = tx.send(snapshot(&sched, &*be));
+                        true
+                    }
+                    Work::Score(_) => unreachable!("scoring work is batched, never forwarded"),
                 });
             }
         }
@@ -274,44 +376,86 @@ pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
     }
 }
 
-/// Serve until `max_conns` connections have been handled (forever if None).
+/// The stats answer, built on the engine thread so scheduler queues and
+/// backend counters are read coherently between sweeps.
+fn snapshot(sched: &GenScheduler, be: &dyn Backend) -> StatsSnapshot {
+    StatsSnapshot {
+        lanes: sched.lanes(),
+        active: sched.active(),
+        queued: sched.queued(),
+        clients: sched
+            .queue_depths()
+            .into_iter()
+            .map(|(client, priority, depth)| ClientQueue { client, priority, depth })
+            .collect(),
+        kv: be.kv_stats(),
+        spec: be.spec_stats(),
+    }
+}
+
+/// Accept connections from one front-end until its `max_conns` budget is
+/// spent, spawning a session thread per connection. Each session gets a
+/// handle with a fresh client id: generation admission rotates across
+/// clients, not raw request order.
+fn accept_loop(front: FrontEnd, handle: BatcherHandle) {
+    let mut served = 0usize;
+    for stream in front.listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let h = handle.connection();
+                let spawn = front.spawn;
+                std::thread::spawn(move || spawn(s, h));
+                served += 1;
+                if let Some(max) = front.max_conns {
+                    if served >= max {
+                        break;
+                    }
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    // `handle` drops here; the engine loop exits once every
+    // per-connection clone is gone too
+}
+
+/// Serve any mix of front-ends over one backend: every listener's
+/// sessions feed the same [`run_engine`] step loop, so TCP and HTTP
+/// traffic share lanes, admission fairness, and KV backpressure.
 ///
 /// PJRT handles are not `Send`, so the engine loop (which drives the
-/// backend) runs on the *calling* thread; the accept loop and
-/// per-connection readers run on spawned threads and communicate through
-/// the batcher channel.
+/// backend) runs on the *calling* thread; accept loops and per-connection
+/// sessions run on spawned threads and communicate through the batcher
+/// channel. Returns when every front-end has exhausted its connection
+/// budget and all their sessions have drained (never, for a `max_conns:
+/// None` front-end).
+pub fn serve_fronts(fronts: Vec<FrontEnd>, be: &mut dyn Backend, cfg: BatcherConfig) -> Result<()> {
+    let (batcher, handle) = Batcher::new(cfg);
+    let accepts: Vec<std::thread::JoinHandle<()>> = fronts
+        .into_iter()
+        .map(|front| {
+            let h = handle.clone();
+            std::thread::spawn(move || accept_loop(front, h))
+        })
+        .collect();
+    drop(handle); // the engine loop's exit condition is the conn handles
+    run_engine(batcher, be);
+    for a in accepts {
+        a.join().ok();
+    }
+    Ok(())
+}
+
+/// Serve the TCP line protocol until `max_conns` connections have been
+/// handled (forever if `None`) — [`serve_fronts`] with a single
+/// [`FrontEnd::line`].
 pub fn serve_on(
     listener: TcpListener,
     be: &mut dyn Backend,
     cfg: BatcherConfig,
     max_conns: Option<usize>,
 ) -> Result<()> {
-    let (batcher, handle) = Batcher::new(cfg);
-    let accept = std::thread::spawn(move || {
-        let mut served = 0usize;
-        for stream in listener.incoming() {
-            match stream {
-                Ok(s) => {
-                    // fresh client id per connection: generation admission
-                    // round-robins across clients, not raw request order
-                    let h = handle.connection();
-                    std::thread::spawn(move || handle_conn(s, h));
-                    served += 1;
-                    if let Some(max) = max_conns {
-                        if served >= max {
-                            break;
-                        }
-                    }
-                }
-                Err(_) => break,
-            }
-        }
-        // `handle` drops here; the engine loop below exits once every
-        // per-connection clone is gone too
-    });
-    run_engine(batcher, be);
-    accept.join().ok();
-    Ok(())
+    serve_fronts(vec![FrontEnd::line(listener, max_conns)], be, cfg)
 }
 
 #[cfg(test)]

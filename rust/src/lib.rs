@@ -1,9 +1,11 @@
 //! HBLLM — wavelet-enhanced high-fidelity 1-bit post-training quantization
 //! for LLMs (NeurIPS 2025) — full-system Rust + JAX + Pallas reproduction.
 //!
-//! Start with `README.md` at the repository root (quickstart, architecture
-//! map, backend matrix, serving protocol) and `docs/FORMAT.md` (the packed
-//! `.hbq` wire format).
+//! Start with `README.md` at the repository root (quickstart, backend
+//! matrix), then `docs/ARCHITECTURE.md` (module graph + request
+//! lifecycle), `docs/API.md` (the serving wire protocols — TCP verbs and
+//! HTTP/SSE endpoints), and `docs/FORMAT.md` (the packed `.hbq` wire
+//! format).
 //!
 //! Layer map:
 //! * [`quant`] — the paper's contribution: HaarQuant + structure-aware
@@ -18,7 +20,8 @@
 //!   trait that makes eval/serving backend-generic
 //!   (`--backend {xla,native}`).
 //! * [`coordinator`] — quantization job scheduling, scoring batches, and
-//!   the continuous-batching generation server.
+//!   the continuous-batching generation server with its TCP and HTTP/SSE
+//!   front-ends and two-tier request priorities.
 
 pub mod calib;
 pub mod cli;

@@ -191,6 +191,10 @@ impl Session {
     /// requested for continuous batching. Backends without multi-lane
     /// state (the stateless XLA path) keep a single logical lane; the
     /// generation scheduler adapts to whatever [`Backend::lanes`] reports.
+    /// One such backend serves every front-end at once — the TCP line
+    /// protocol and the HTTP/SSE endpoints both drive it through the same
+    /// engine loop (`coordinator::serve::serve_fronts`; wire spec in
+    /// `docs/API.md`, request lifecycle in `docs/ARCHITECTURE.md`).
     ///
     /// `kv_blocks`/`block_len` size the paged KV arena (CLI `--kv-blocks`
     /// / `--block-len`); `None` keeps the backend's worst-case default.

@@ -1,0 +1,186 @@
+//! Markdown link-and-anchor checker over `README.md` and `docs/*.md` —
+//! the CI docs job runs it (std-only, no network): every relative link
+//! must resolve to a file in the repository, and every `#anchor` —
+//! same-file or cross-file — must match a heading's GitHub-style slug.
+//! External (`http://`, `https://`, `mailto:`) targets are out of scope.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives in <repo>/rust")
+        .to_path_buf()
+}
+
+/// The documents under check: the top-level README plus every `docs/*.md`.
+fn doc_set(root: &Path) -> Vec<PathBuf> {
+    let mut docs = vec![root.join("README.md")];
+    let mut extra: Vec<PathBuf> = fs::read_dir(root.join("docs"))
+        .expect("docs/ directory exists")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "md"))
+        .collect();
+    extra.sort();
+    docs.extend(extra);
+    docs
+}
+
+/// GitHub's heading→anchor slug: lowercase, punctuation dropped, spaces
+/// become hyphens (underscores and hyphens survive).
+fn slug(heading: &str) -> String {
+    heading
+        .trim()
+        .chars()
+        .filter_map(|c| {
+            let c = c.to_ascii_lowercase();
+            if c.is_alphanumeric() || c == '_' || c == '-' {
+                Some(c)
+            } else if c == ' ' {
+                Some('-')
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// Anchor slugs of every ATX heading in a document (fenced code blocks
+/// skipped — a bash comment is not a heading).
+fn heading_slugs(text: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut in_fence = false;
+    for line in text.lines() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        let trimmed = line.trim_start();
+        let hashes = trimmed.chars().take_while(|&c| c == '#').count();
+        if (1..=6).contains(&hashes) && trimmed.chars().nth(hashes) == Some(' ') {
+            // strip inline-code backticks: GitHub slugs ignore them
+            out.insert(slug(&trimmed[hashes + 1..].replace('`', "")));
+        }
+    }
+    out
+}
+
+/// Inline-link targets (`[text](target)`) on one line.
+fn links_in(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while let Some(p) = line[i..].find("](") {
+        let start = i + p + 2;
+        match line[start..].find(')') {
+            Some(q) => {
+                out.push(line[start..start + q].to_string());
+                i = start + q + 1;
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+#[test]
+fn markdown_links_and_anchors_resolve() {
+    let root = repo_root();
+    let mut failures: Vec<String> = Vec::new();
+    let mut checked = 0usize;
+    for doc in doc_set(&root) {
+        let text = fs::read_to_string(&doc).unwrap();
+        let dir = doc.parent().unwrap().to_path_buf();
+        let rel = doc.strip_prefix(&root).unwrap_or(&doc).display().to_string();
+        let mut in_fence = false;
+        for (ln, line) in text.lines().enumerate() {
+            if line.trim_start().starts_with("```") {
+                in_fence = !in_fence;
+                continue;
+            }
+            if in_fence {
+                continue;
+            }
+            for target in links_in(line) {
+                // drop an optional markdown link title after the path
+                let target = target.split_whitespace().next().unwrap_or("").to_string();
+                if target.is_empty()
+                    || target.starts_with("http://")
+                    || target.starts_with("https://")
+                    || target.starts_with("mailto:")
+                {
+                    continue;
+                }
+                checked += 1;
+                let (path_part, anchor) = match target.split_once('#') {
+                    Some((p, a)) => (p, Some(a.to_string())),
+                    None => (target.as_str(), None),
+                };
+                let file = if path_part.is_empty() { doc.clone() } else { dir.join(path_part) };
+                if !file.is_file() {
+                    failures.push(format!("{rel}:{}: broken link {target:?}", ln + 1));
+                    continue;
+                }
+                if let Some(a) = anchor {
+                    if file.extension().is_some_and(|x| x == "md") {
+                        let slugs = heading_slugs(&fs::read_to_string(&file).unwrap());
+                        if !slugs.contains(&a) {
+                            failures.push(format!(
+                                "{rel}:{}: anchor #{a} not found in {} (have: {})",
+                                ln + 1,
+                                path_part,
+                                slugs.iter().cloned().collect::<Vec<_>>().join(", ")
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(failures.is_empty(), "broken documentation links:\n{}", failures.join("\n"));
+    // the checker must actually be checking something — an empty doc set
+    // or a broken extractor would otherwise pass vacuously
+    assert!(checked >= 10, "only {checked} relative links found; extractor broken?");
+}
+
+/// The serving documentation suite exists and the README points into it.
+#[test]
+fn serving_docs_exist_and_are_linked() {
+    let root = repo_root();
+    for doc in ["docs/API.md", "docs/ARCHITECTURE.md", "docs/FORMAT.md"] {
+        assert!(root.join(doc).is_file(), "{doc} missing");
+    }
+    let readme = fs::read_to_string(root.join("README.md")).unwrap();
+    for target in ["docs/API.md", "docs/ARCHITECTURE.md"] {
+        assert!(
+            readme.contains(&format!("({target})")) || readme.contains(&format!("({target}#")),
+            "README does not link {target}"
+        );
+    }
+    // the API reference covers every serving surface the code exposes
+    let api = fs::read_to_string(root.join("docs/API.md")).unwrap();
+    for needle in [
+        "POST /v1/generate",
+        "POST /v1/score",
+        "GET /v1/stats",
+        "event: tok",
+        "prio <interactive|batch>",
+        "kv exhausted",
+        "X-Priority",
+    ] {
+        assert!(api.contains(needle), "docs/API.md lost its {needle:?} coverage");
+    }
+}
+
+#[test]
+fn slug_rules_match_github() {
+    assert_eq!(slug("SSE event grammar"), "sse-event-grammar");
+    assert_eq!(slug("POST /v1/generate"), "post-v1generate");
+    assert_eq!(slug("Priorities"), "priorities");
+    assert_eq!(slug("HTTP status codes"), "http-status-codes");
+}

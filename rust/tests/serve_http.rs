@@ -1,0 +1,399 @@
+//! The HTTP/SSE front-end, end to end (no artifacts needed): SSE
+//! generation pinned byte-identical to the TCP `gen` path and to a direct
+//! in-process decode — plain and speculative — plus the JSON score/stats
+//! endpoints, the `err kv exhausted` → recovery path over SSE, the TCP
+//! `prio` verb, and the 4xx error surface. Wire spec: `docs/API.md`.
+
+use hbllm::coordinator::{http, serve, BatcherConfig, Priority};
+use hbllm::engine::{self, Backend, NativeBackend, PackedModel, SpecConfig};
+use hbllm::model::testing::micro_weights;
+use hbllm::util::json::Json;
+use hbllm::util::rng::Pcg32;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+fn packed_micro(seed: u64) -> NativeBackend {
+    let w = micro_weights(seed);
+    NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1)
+}
+
+/// One raw HTTP request on its own connection; returns (status, body).
+fn http_request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut resp = String::new();
+    BufReader::new(stream).read_to_string(&mut resp).unwrap();
+    let (head, body) = resp.split_once("\r\n\r\n").expect("no header/body separator");
+    let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+    (status, body.to_string())
+}
+
+/// Parse an SSE body into (event, data) pairs.
+fn parse_events(body: &str) -> Vec<(String, String)> {
+    let mut events = Vec::new();
+    let mut ev = String::new();
+    for line in body.lines() {
+        if let Some(e) = line.strip_prefix("event: ") {
+            ev = e.to_string();
+        } else if let Some(d) = line.strip_prefix("data: ") {
+            events.push((ev.clone(), d.to_string()));
+        }
+    }
+    events
+}
+
+/// Drive a TCP `gen` (optionally `prio`-prefixed) and collect the
+/// streamed bytes; asserts the `done <n>` terminator.
+fn tcp_generate(addr: SocketAddr, line_out: &str, n_new: usize) -> Vec<u8> {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut stream = stream;
+    stream.write_all(line_out.as_bytes()).unwrap();
+    let mut toks: Vec<u8> = Vec::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let t = line.trim_end();
+        if let Some(b) = t.strip_prefix("tok ") {
+            toks.push(b.parse().unwrap());
+        } else {
+            assert_eq!(t, format!("done {n_new}"), "bad terminator: {t:?}");
+            break;
+        }
+    }
+    toks
+}
+
+/// The acceptance pin: for the same prompt/seed, the SSE stream from
+/// `POST /v1/generate` carries exactly the token payload sequence the TCP
+/// `gen` verb streams — and both match a direct in-process greedy decode.
+#[test]
+fn sse_generation_matches_tcp_byte_for_byte() {
+    let seed = 71;
+    let n_new = 6;
+    let mut be = packed_micro(seed);
+    be.set_lanes(2);
+    let (tcp_l, tcp_addr) = serve::bind("127.0.0.1:0").unwrap();
+    let (http_l, http_addr) = serve::bind("127.0.0.1:0").unwrap();
+
+    let tcp_client = std::thread::spawn(move || {
+        tcp_generate(tcp_addr, &format!("gen {n_new} 0 0 ta ki\n"), n_new)
+    });
+    let http_client = std::thread::spawn(move || {
+        let mut toks: Vec<u8> = Vec::new();
+        let n = http::client_generate(
+            &format!("http://{http_addr}"),
+            "ta ki",
+            n_new,
+            0.0,
+            0,
+            Priority::Interactive,
+            |b| toks.push(b),
+        )
+        .unwrap();
+        assert_eq!(n, n_new);
+        toks
+    });
+
+    serve::serve_fronts(
+        vec![serve::FrontEnd::line(tcp_l, Some(1)), http::HttpConn::front_end(http_l, Some(1))],
+        &mut be,
+        BatcherConfig::default(),
+    )
+    .unwrap();
+    let tcp_toks = tcp_client.join().unwrap();
+    let http_toks = http_client.join().unwrap();
+    assert_eq!(http_toks, tcp_toks, "SSE and TCP streams diverged");
+
+    let mut solo = packed_micro(seed);
+    let mut rng = Pcg32::seeded(0);
+    let want = engine::generate(&mut solo, b"ta ki", n_new, 0.0, &mut rng).unwrap();
+    assert_eq!(
+        &want[b"ta ki".len()..],
+        &http_toks[..],
+        "served stream diverged from direct decode"
+    );
+}
+
+/// Same pin with a speculative lane: `--spec-k` must not change a single
+/// byte on either front-end (the frequency cascade only reschedules).
+#[test]
+fn sse_spec_lane_matches_tcp_and_plain_decode() {
+    let seed = 72;
+    let n_new = 8;
+    let mut be = packed_micro(seed);
+    be.set_lanes(2);
+    let eff = be.set_spec(SpecConfig::with_k(3));
+    assert!(eff.enabled, "native backend must accept the draft config");
+    let (tcp_l, tcp_addr) = serve::bind("127.0.0.1:0").unwrap();
+    let (http_l, http_addr) = serve::bind("127.0.0.1:0").unwrap();
+
+    let tcp_client = std::thread::spawn(move || {
+        tcp_generate(tcp_addr, &format!("gen {n_new} 0 0 ta kivo\n"), n_new)
+    });
+    let http_client = std::thread::spawn(move || {
+        let mut toks: Vec<u8> = Vec::new();
+        http::client_generate(
+            &format!("http://{http_addr}"),
+            "ta kivo",
+            n_new,
+            0.0,
+            0,
+            Priority::Interactive,
+            |b| toks.push(b),
+        )
+        .unwrap();
+        toks
+    });
+
+    serve::serve_fronts(
+        vec![serve::FrontEnd::line(tcp_l, Some(1)), http::HttpConn::front_end(http_l, Some(1))],
+        &mut be,
+        BatcherConfig { spec: eff, ..Default::default() },
+    )
+    .unwrap();
+    let tcp_toks = tcp_client.join().unwrap();
+    let http_toks = http_client.join().unwrap();
+    assert_eq!(http_toks, tcp_toks, "speculative SSE diverged from speculative TCP");
+
+    // the reference is a *plain* greedy decode: speculation must be
+    // byte-invisible
+    let mut solo = packed_micro(seed);
+    let mut rng = Pcg32::seeded(0);
+    let want = engine::generate(&mut solo, b"ta kivo", n_new, 0.0, &mut rng).unwrap();
+    assert_eq!(&want[b"ta kivo".len()..], &http_toks[..], "speculation changed served bytes");
+}
+
+/// KV exhaustion over SSE: an arena too small for the request streams an
+/// `event: error` / `data: kv exhausted` terminal frame (mirroring the
+/// TCP `err kv exhausted` line), and a fitting request on a fresh
+/// connection completes afterwards — the eviction released every block.
+#[test]
+fn kv_exhaustion_over_sse_reports_error_event_and_recovers() {
+    let seed = 73;
+    let mut be = packed_micro(seed);
+    be.set_lanes(2);
+    be.set_kv_blocks(Some(1), Some(4)); // one 4-token block total
+    let (http_l, http_addr) = serve::bind("127.0.0.1:0").unwrap();
+
+    let client = std::thread::spawn(move || {
+        // 4-byte prompt + 6 tokens needs 3 blocks; only 1 exists
+        let (status, body) = http_request(
+            http_addr,
+            "POST",
+            "/v1/generate",
+            r#"{"prompt": "abcd", "max_new": 6}"#,
+        );
+        assert_eq!(status, 200);
+        let events = parse_events(&body);
+        let toks = events.iter().filter(|(e, _)| e == "tok").count();
+        assert!(toks < 6, "over-long sequence was never evicted");
+        assert_eq!(
+            events.last().map(|(e, d)| (e.as_str(), d.as_str())),
+            Some(("error", "kv exhausted")),
+            "wrong terminal frame: {events:?}"
+        );
+        // eviction released the arena: a fitting request completes
+        let (status, body) = http_request(
+            http_addr,
+            "POST",
+            "/v1/generate",
+            r#"{"prompt": "ab", "max_new": 2}"#,
+        );
+        assert_eq!(status, 200);
+        let events = parse_events(&body);
+        assert_eq!(
+            events.last().map(|(e, d)| (e.as_str(), d.as_str())),
+            Some(("done", "2")),
+            "server wedged after kv eviction: {events:?}"
+        );
+        assert_eq!(events.iter().filter(|(e, _)| e == "tok").count(), 2);
+    });
+
+    serve::serve_fronts(
+        vec![http::HttpConn::front_end(http_l, Some(2))],
+        &mut be,
+        BatcherConfig::default(),
+    )
+    .unwrap();
+    client.join().unwrap();
+}
+
+/// `POST /v1/score`: per-line results in request order, empty input as
+/// the TCP error string, ppl/nll agreeing with a direct in-process score.
+#[test]
+fn score_endpoint_scores_lines_and_flags_empty_input() {
+    let seed = 74;
+    let mut be = packed_micro(seed);
+    let (http_l, http_addr) = serve::bind("127.0.0.1:0").unwrap();
+
+    let client = std::thread::spawn(move || {
+        let (status, body) = http_request(
+            http_addr,
+            "POST",
+            "/v1/score",
+            r#"{"texts": ["ta kivo remo", "   ", "so lute"]}"#,
+        );
+        assert_eq!(status, 200, "score failed: {body}");
+        Json::parse(&body).unwrap()
+    });
+    serve::serve_fronts(
+        vec![http::HttpConn::front_end(http_l, Some(1))],
+        &mut be,
+        BatcherConfig::default(),
+    )
+    .unwrap();
+    let resp = client.join().unwrap();
+    let results = resp.get("results").and_then(Json::as_arr).expect("results array");
+    assert_eq!(results.len(), 3);
+
+    // same backend state ⇒ same scores as a direct call
+    let mut reference = packed_micro(seed);
+    let want = serve::score_texts(
+        &mut reference,
+        &[b"ta kivo remo".to_vec(), b"so lute".to_vec()],
+    );
+    for (res, want) in [&results[0], &results[2]].iter().zip(&want) {
+        let ppl = res.get("ppl").and_then(Json::as_f64).expect("ppl field");
+        let nll = res.get("nll").and_then(Json::as_f64).expect("nll field");
+        let w = *want.as_ref().unwrap();
+        assert!((ppl - w).abs() < 1e-9, "ppl {ppl} != direct {w}");
+        assert!((nll - w.ln()).abs() < 1e-9, "nll is not ln(ppl)");
+    }
+    assert_eq!(
+        results[1].get("error").and_then(Json::as_str),
+        Some("empty input"),
+        "whitespace-only line not rejected: {:?}",
+        results[1]
+    );
+}
+
+/// `GET /v1/stats` reports the lane count, paged-KV geometry and the
+/// (idle) queue state as JSON.
+#[test]
+fn stats_endpoint_reports_kv_geometry_and_queues() {
+    let seed = 75;
+    let mut be = packed_micro(seed);
+    be.set_lanes(3);
+    be.set_kv_blocks(Some(9), Some(4));
+    let (http_l, http_addr) = serve::bind("127.0.0.1:0").unwrap();
+
+    let client = std::thread::spawn(move || {
+        http::client_stats(&format!("http://{http_addr}")).unwrap()
+    });
+    serve::serve_fronts(
+        vec![http::HttpConn::front_end(http_l, Some(1))],
+        &mut be,
+        BatcherConfig::default(),
+    )
+    .unwrap();
+    let st = client.join().unwrap();
+    assert_eq!(st.get("lanes").and_then(Json::as_usize), Some(3));
+    assert_eq!(st.get("active").and_then(Json::as_usize), Some(0));
+    assert_eq!(st.get("queued").and_then(Json::as_usize), Some(0));
+    assert_eq!(st.at(&["kv", "total_blocks"]).and_then(Json::as_usize), Some(9));
+    assert_eq!(st.at(&["kv", "block_len"]).and_then(Json::as_usize), Some(4));
+    assert_eq!(st.at(&["kv", "free_blocks"]).and_then(Json::as_usize), Some(9));
+    // native backend always reports the spec surface; disabled by default
+    assert_eq!(st.at(&["spec", "enabled"]), Some(&Json::Bool(false)));
+    assert!(st.get("clients").and_then(Json::as_arr).is_some_and(|c| c.is_empty()));
+}
+
+/// The TCP `prio` verb: a batch-priority `gen` completes normally, bad
+/// levels and non-gen tails are usage errors, and the connection stays
+/// usable throughout.
+#[test]
+fn tcp_prio_verb_parses_and_generates() {
+    let seed = 76;
+    let n_new = 4;
+    let mut be = packed_micro(seed);
+    be.set_lanes(2);
+    let (tcp_l, tcp_addr) = serve::bind("127.0.0.1:0").unwrap();
+
+    let client = std::thread::spawn(move || {
+        let stream = TcpStream::connect(tcp_addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut stream = stream;
+        let mut line = String::new();
+        let mut req = |s: &str, line: &mut String| {
+            stream.write_all(s.as_bytes()).unwrap();
+            line.clear();
+            reader.read_line(line).unwrap();
+        };
+        // unknown level and non-gen tails are usage errors
+        req("prio urgent gen 4 0 0 ta\n", &mut line);
+        assert!(line.starts_with("err usage: prio"), "bad level accepted: {line:?}");
+        req("prio batch ppl ta kivo\n", &mut line);
+        assert!(line.starts_with("err usage: prio"), "prio must prefix gen only: {line:?}");
+        // a batch-priority generation streams like any other
+        stream.write_all(format!("prio batch gen {n_new} 0 0 ta ki\n").as_bytes()).unwrap();
+        let mut toks: Vec<u8> = Vec::new();
+        loop {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let t = line.trim_end();
+            if let Some(b) = t.strip_prefix("tok ") {
+                toks.push(b.parse().unwrap());
+            } else {
+                assert_eq!(t, format!("done {n_new}"), "bad terminator: {t:?}");
+                break;
+            }
+        }
+        // scoring still works on the same connection
+        req("ppl ta kivo remo\n", &mut line);
+        assert!(line.starts_with("ppl "), "connection unusable after prio gen: {line:?}");
+        toks
+    });
+
+    serve::serve_on(tcp_l, &mut be, BatcherConfig::default(), Some(1)).unwrap();
+    let toks = client.join().unwrap();
+    let mut solo = packed_micro(seed);
+    let mut rng = Pcg32::seeded(0);
+    let want = engine::generate(&mut solo, b"ta ki", n_new, 0.0, &mut rng).unwrap();
+    assert_eq!(&want[b"ta ki".len()..], &toks[..], "prio gen diverged from plain gen");
+}
+
+/// The HTTP error surface: unknown endpoints are 404, wrong methods 405,
+/// malformed bodies and unknown priorities 400 — all as JSON `error`
+/// objects, all without wedging the engine.
+#[test]
+fn http_error_surface_is_4xx_json() {
+    let seed = 77;
+    let mut be = packed_micro(seed);
+    let (http_l, http_addr) = serve::bind("127.0.0.1:0").unwrap();
+
+    let client = std::thread::spawn(move || {
+        let cases: Vec<(u16, String)> = vec![
+            http_request(http_addr, "POST", "/v1/nope", "{}"),
+            http_request(http_addr, "GET", "/v1/generate", ""),
+            http_request(http_addr, "POST", "/v1/generate", "not json"),
+            http_request(http_addr, "POST", "/v1/generate", r#"{"prompt": "x"}"#),
+            http_request(
+                http_addr,
+                "POST",
+                "/v1/generate",
+                r#"{"prompt": "x", "max_new": 2, "priority": "urgent"}"#,
+            ),
+            http_request(http_addr, "POST", "/v1/score", r#"{"lines": []}"#),
+        ];
+        cases
+    });
+    serve::serve_fronts(
+        vec![http::HttpConn::front_end(http_l, Some(6))],
+        &mut be,
+        BatcherConfig::default(),
+    )
+    .unwrap();
+    let cases = client.join().unwrap();
+    let want = [404, 405, 400, 400, 400, 400];
+    for ((status, body), want) in cases.iter().zip(want) {
+        assert_eq!(*status, want, "body: {body}");
+        let j = Json::parse(body).expect("error responses are JSON");
+        assert!(j.get("error").is_some(), "no error field in {body}");
+    }
+}
