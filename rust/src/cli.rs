@@ -78,8 +78,9 @@ OPTIONS:
   --addr HOST:PORT         serve address (default 127.0.0.1:7431)
   --http-port N            serve: also expose the HTTP/SSE front-end on this
                            port, same host as --addr (POST /v1/generate
-                           streams SSE, POST /v1/score, GET /v1/stats;
-                           spec in docs/API.md)
+                           streams SSE, POST /v1/score, GET /v1/stats,
+                           GET /v1/metrics in Prometheus text format;
+                           spec in docs/API.md and docs/OBSERVABILITY.md)
   --url http://HOST:PORT   generate: stream from a running server's HTTP
                            front-end instead of loading a model locally
   --priority P             generate --url: admission tier, interactive
@@ -296,7 +297,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     );
     if let Some((_, http_addr)) = &http {
         println!(
-            "http front-end on {http_addr}: POST /v1/generate (SSE) | POST /v1/score | GET /v1/stats"
+            "http front-end on {http_addr}: POST /v1/generate (SSE) | POST /v1/score | GET /v1/stats | GET /v1/metrics"
         );
     }
     if let Some(st) = be.kv_stats() {

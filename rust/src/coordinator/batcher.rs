@@ -19,6 +19,7 @@
 //! engine loop through [`BatcherHandle`]s — see
 //! [`ClientConn`](super::serve::ClientConn).
 
+use super::metrics::ServeMetrics;
 use super::scheduler::{GenEvent, GenRequest, Priority};
 use crate::engine::{KvStats, SpecConfig, SpecStats};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -90,8 +91,11 @@ pub struct ClientQueue {
 pub enum Work {
     Score(Request),
     Generate(GenRequest),
-    /// Answer with a [`StatsSnapshot`] at the next loop turn.
-    Stats(Sender<StatsSnapshot>),
+    /// Answer with a [`StatsSnapshot`] at the next loop turn — or an
+    /// error when the answering loop has no engine behind it (the
+    /// scoring-only [`Batcher::run`] loop), which the HTTP front-end
+    /// surfaces as a 503 rather than a fabricated all-zero snapshot.
+    Stats(Sender<Result<StatsSnapshot, String>>),
 }
 
 /// The batcher owns the receive side; the scorer closure / engine loop
@@ -100,6 +104,10 @@ pub enum Work {
 pub struct Batcher {
     pub cfg: BatcherConfig,
     rx: Receiver<Work>,
+    /// The serving metrics bundle shared with every [`BatcherHandle`];
+    /// the engine loop records lifecycle events into it and the HTTP
+    /// front-end renders it at `GET /v1/metrics`.
+    metrics: Arc<ServeMetrics>,
 }
 
 /// Cloning a handle keeps its client identity (`clone` = same caller);
@@ -112,6 +120,7 @@ pub struct BatcherHandle {
     /// Client identity attached to generation requests from this handle.
     client: u64,
     next_client: Arc<AtomicU64>,
+    metrics: Arc<ServeMetrics>,
 }
 
 impl BatcherHandle {
@@ -121,7 +130,15 @@ impl BatcherHandle {
             tx: self.tx.clone(),
             client: self.next_client.fetch_add(1, Ordering::Relaxed),
             next_client: self.next_client.clone(),
+            metrics: self.metrics.clone(),
         }
+    }
+
+    /// The serving metrics bundle every handle to this batcher shares.
+    /// Front-ends record request/connection accounting into it; the HTTP
+    /// front-end renders it as Prometheus text at `GET /v1/metrics`.
+    pub fn metrics(&self) -> &Arc<ServeMetrics> {
+        &self.metrics
     }
 
     /// The client id this handle stamps on generation requests.
@@ -177,22 +194,32 @@ impl BatcherHandle {
 
     /// Blocking service-stats snapshot (scheduler queue depths + backend
     /// KV/spec counters), answered by the engine loop between sweeps.
+    /// `Err` when no engine loop is answering (scoring-only server, or
+    /// the loop is gone) — surfaced as HTTP 503, never a zero snapshot.
     pub fn stats(&self) -> Result<StatsSnapshot, String> {
         let (tx, rx) = channel();
         self.tx.send(Work::Stats(tx)).map_err(|_| "batcher gone".to_string())?;
-        rx.recv().map_err(|_| "batcher dropped request".to_string())
+        rx.recv().map_err(|_| "batcher dropped request".to_string())?
     }
 }
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> (Batcher, BatcherHandle) {
         let (tx, rx) = channel();
+        let metrics = Arc::new(ServeMetrics::new());
         let handle = BatcherHandle {
             tx,
             client: 0,
             next_client: Arc::new(AtomicU64::new(1)),
+            metrics: metrics.clone(),
         };
-        (Batcher { cfg, rx }, handle)
+        (Batcher { cfg, rx, metrics }, handle)
+    }
+
+    /// The serving metrics bundle shared with every handle (see
+    /// [`BatcherHandle::metrics`]).
+    pub fn metrics(&self) -> &Arc<ServeMetrics> {
+        &self.metrics
     }
 
     /// Blocking receive; `None` once every handle has dropped.
@@ -250,8 +277,9 @@ impl Batcher {
 
     /// Run a scoring-only batch loop until all senders hang up.
     /// `score_batch` maps a slice of texts to one score per text;
-    /// generation requests are answered with an error and stats requests
-    /// with an empty snapshot — there is no scheduler or backend here
+    /// generation requests are answered with an error, and stats requests
+    /// with an `Err` — there is no scheduler or backend here, so
+    /// fabricating an all-zero snapshot would just mislead monitoring
     /// (use `serve::run_engine` for a generation-capable loop).
     pub fn run(self, mut score_batch: impl FnMut(&[Vec<u8>]) -> Vec<Result<f64, String>>) {
         let answer_other = |w: Work| match w {
@@ -261,7 +289,7 @@ impl Batcher {
                     .send(GenEvent::Error("generation not supported by this server".into()));
             }
             Work::Stats(tx) => {
-                let _ = tx.send(StatsSnapshot::default());
+                let _ = tx.send(Err("generation engine not running (scoring-only loop)".into()));
             }
             Work::Score(_) => unreachable!("scoring work is batched, never forwarded"),
         };
@@ -386,15 +414,25 @@ mod tests {
     }
 
     #[test]
-    fn scoring_only_loop_answers_stats_with_empty_snapshot() {
+    fn scoring_only_loop_answers_stats_with_error() {
         let (batcher, handle) = Batcher::new(BatcherConfig::default());
         let worker = std::thread::spawn(move || {
             batcher.run(|texts| texts.iter().map(|_| Ok(1.0)).collect());
         });
-        let st = handle.stats().unwrap();
-        assert_eq!((st.lanes, st.active, st.queued), (0, 0, 0));
-        assert!(st.kv.is_none() && st.spec.is_none() && st.clients.is_empty());
+        // no engine loop behind this server: stats must say so, not hand
+        // back a fabricated all-zero snapshot
+        let err = handle.stats().unwrap_err();
+        assert!(err.contains("not running"), "{err}");
         drop(handle);
         worker.join().unwrap();
+    }
+
+    #[test]
+    fn handles_share_one_metrics_bundle() {
+        let (batcher, handle) = Batcher::new(BatcherConfig::default());
+        let conn = handle.connection();
+        conn.metrics().tier(0).tokens.add(3);
+        assert_eq!(batcher.metrics().tokens(), 3, "metrics not shared");
+        assert_eq!(handle.clone().metrics().tokens(), 3);
     }
 }

@@ -1,0 +1,1013 @@
+//! First-class serving metrics (std-only, no crates): atomic counters,
+//! gauges and fixed-bucket log-spaced histograms behind a
+//! [`MetricsRegistry`] that renders the Prometheus text exposition
+//! format, plus [`ServeMetrics`] — the typed bundle of every metric the
+//! serving stack records, created once per engine and shared by `Arc`.
+//!
+//! # Lock discipline
+//!
+//! The hot path is lock-free: recording an event is one `fetch_add` on
+//! an `AtomicU64` (two for a histogram's sum/count) through a
+//! pre-registered handle — the per-token decode path never takes a
+//! mutex. The registry's `Mutex` is touched only at *registration*
+//! (startup, or the first time an HTTP status/verb combination appears)
+//! and at *render* (a `GET /v1/metrics` scrape), both off the decode
+//! path.
+//!
+//! # Exposition format
+//!
+//! [`MetricsRegistry::render`] emits the Prometheus text format
+//! (`# HELP` / `# TYPE`, one sample per line; histograms as cumulative
+//! `_bucket{le="..."}` series plus `_sum`/`_count`), with label values
+//! escaped per the spec (`\\`, `\"`, `\n`). Histogram bucket bounds are
+//! integers — the serving histograms record integer microseconds, so
+//! sums stay exact in a `u64`.
+//!
+//! The metric catalog — names, labels, semantics, and the chaos-harness
+//! invariants asserted over them — is documented in
+//! `docs/OBSERVABILITY.md` at the repository root.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Monotone event counter. Clones share the same underlying atomic.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(Arc::new(AtomicU64::new(0)))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+/// Point-in-time signed gauge. Clones share the same underlying atomic.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(Arc::new(AtomicI64::new(0)))
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+struct HistogramInner {
+    /// Upper bounds (inclusive) of the finite buckets, strictly
+    /// increasing; an implicit `+Inf` bucket follows.
+    bounds: Vec<u64>,
+    /// `bounds.len() + 1` per-bucket (non-cumulative) counts; the last
+    /// entry is the `+Inf` overflow bucket.
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Fixed-bucket histogram over `u64` values (the serving stack records
+/// integer microseconds). Recording is lock-free: a binary search over
+/// the immutable bounds plus three `fetch_add`s. Clones share state.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramInner>);
+
+impl Histogram {
+    /// A histogram with the given finite bucket upper bounds (must be
+    /// non-empty and strictly increasing; `+Inf` is implicit).
+    pub fn with_bounds(bounds: Vec<u64>) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one finite bucket");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing: {bounds:?}"
+        );
+        let buckets = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram(Arc::new(HistogramInner {
+            bounds,
+            buckets,
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }))
+    }
+
+    /// Log-spaced bounds: `start, start*factor, start*factor^2, ...`
+    /// (`count` of them, saturating on overflow). The serving default
+    /// `log_spaced(100, 4, 8)` spans 100 µs to ~6.5 s.
+    pub fn log_spaced(start: u64, factor: u64, count: usize) -> Histogram {
+        assert!(start > 0 && factor > 1 && count > 0);
+        let mut bounds = Vec::with_capacity(count);
+        let mut b = start;
+        for _ in 0..count {
+            if bounds.last().is_some_and(|&last| b <= last) {
+                break; // saturated
+            }
+            bounds.push(b);
+            b = b.saturating_mul(factor);
+        }
+        Histogram::with_bounds(bounds)
+    }
+
+    /// Index of the bucket `v` lands in: the first bound `>= v`, else
+    /// the `+Inf` overflow bucket.
+    #[inline]
+    fn bucket_index(&self, v: u64) -> usize {
+        self.0.bounds.partition_point(|&b| b < v)
+    }
+
+    /// Record one observation — lock-free, three `fetch_add`s.
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        let i = self.bucket_index(v);
+        self.0.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a `Duration` in integer microseconds.
+    #[inline]
+    pub fn observe_duration(&self, d: std::time::Duration) {
+        self.observe(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn bounds(&self) -> &[u64] {
+        &self.0.bounds
+    }
+
+    /// A consistent-enough snapshot: per-bucket (non-cumulative) counts,
+    /// the value sum, and the observation count. Concurrent observers
+    /// may skew `sum`/`count` by in-flight events; totals are exact once
+    /// writers quiesce.
+    pub fn snapshot(&self) -> (Vec<u64>, u64, u64) {
+        let buckets = self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        (buckets, self.0.sum.load(Ordering::Relaxed), self.0.count.load(Ordering::Relaxed))
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.0.sum.load(Ordering::Relaxed)
+    }
+}
+
+/// What a family's series hold; the registry keeps one kind per name.
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// One labeled series inside a family.
+struct Series {
+    labels: Vec<(String, String)>,
+    metric: Metric,
+}
+
+/// One metric family: a name, help text, and its labeled series in
+/// registration order (rendering is deterministic).
+struct Family {
+    name: String,
+    help: String,
+    series: Vec<Series>,
+}
+
+/// Registry of metric families. Registration and rendering take the
+/// internal mutex; the returned handles record without it.
+pub struct MetricsRegistry {
+    families: Mutex<Vec<Family>>,
+}
+
+/// Escape a label value per the Prometheus text format: backslash,
+/// double-quote and newline.
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn format_labels(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Labels plus one extra pair (the histogram `le` bound).
+fn format_labels_with(labels: &[(String, String)], key: &str, value: &str) -> String {
+    let mut inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
+        .collect();
+    inner.push(format!("{key}=\"{}\"", escape_label_value(value)));
+    format!("{{{}}}", inner.join(","))
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry { families: Mutex::new(Vec::new()) }
+    }
+
+    /// Register (or fetch) the series `(name, labels)` with the metric
+    /// built by `make`. Re-registration with the same name and labels
+    /// returns a handle to the *existing* series — registration is
+    /// idempotent, so dynamic label sets (HTTP status codes) can
+    /// register on first sight. Panics if `name` already holds a
+    /// different metric kind: that is a programming error that would
+    /// corrupt the exposition.
+    fn series(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Metric,
+    ) -> Metric {
+        let mut families = self.families.lock().unwrap();
+        let fam = match families.iter_mut().find(|f| f.name == name) {
+            Some(f) => f,
+            None => {
+                families.push(Family {
+                    name: name.to_string(),
+                    help: help.to_string(),
+                    series: Vec::new(),
+                });
+                families.last_mut().unwrap()
+            }
+        };
+        let owned: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        if let Some(s) = fam.series.iter().find(|s| s.labels == owned) {
+            return match &s.metric {
+                Metric::Counter(c) => Metric::Counter(c.clone()),
+                Metric::Gauge(g) => Metric::Gauge(g.clone()),
+                Metric::Histogram(h) => Metric::Histogram(h.clone()),
+            };
+        }
+        let metric = make();
+        if let Some(first) = fam.series.first() {
+            assert_eq!(
+                first.metric.kind(),
+                metric.kind(),
+                "metric {name} registered with two kinds"
+            );
+        }
+        let handle = match &metric {
+            Metric::Counter(c) => Metric::Counter(c.clone()),
+            Metric::Gauge(g) => Metric::Gauge(g.clone()),
+            Metric::Histogram(h) => Metric::Histogram(h.clone()),
+        };
+        fam.series.push(Series { labels: owned, metric });
+        handle
+    }
+
+    /// Register (or fetch) a counter series.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        match self.series(name, help, labels, || Metric::Counter(Counter::new())) {
+            Metric::Counter(c) => c,
+            _ => panic!("metric {name} is not a counter"),
+        }
+    }
+
+    /// Register (or fetch) a gauge series.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        match self.series(name, help, labels, || Metric::Gauge(Gauge::new())) {
+            Metric::Gauge(g) => g,
+            _ => panic!("metric {name} is not a gauge"),
+        }
+    }
+
+    /// Register (or fetch) a histogram series with the given finite
+    /// bucket bounds (ignored when the series already exists).
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        bounds: Vec<u64>,
+    ) -> Histogram {
+        match self.series(name, help, labels, || Metric::Histogram(Histogram::with_bounds(bounds)))
+        {
+            Metric::Histogram(h) => h,
+            _ => panic!("metric {name} is not a histogram"),
+        }
+    }
+
+    /// Render every family in the Prometheus text exposition format.
+    /// Families and series appear in registration order; histogram
+    /// buckets are rendered cumulatively, ending with `le="+Inf"`.
+    pub fn render(&self) -> String {
+        let families = self.families.lock().unwrap();
+        let mut out = String::new();
+        for fam in families.iter() {
+            let kind = match fam.series.first() {
+                Some(s) => s.metric.kind(),
+                None => continue,
+            };
+            out.push_str(&format!("# HELP {} {}\n", fam.name, fam.help));
+            out.push_str(&format!("# TYPE {} {kind}\n", fam.name));
+            for s in &fam.series {
+                match &s.metric {
+                    Metric::Counter(c) => {
+                        out.push_str(&format!(
+                            "{}{} {}\n",
+                            fam.name,
+                            format_labels(&s.labels),
+                            c.get()
+                        ));
+                    }
+                    Metric::Gauge(g) => {
+                        out.push_str(&format!(
+                            "{}{} {}\n",
+                            fam.name,
+                            format_labels(&s.labels),
+                            g.get()
+                        ));
+                    }
+                    Metric::Histogram(h) => {
+                        let (buckets, sum, _) = h.snapshot();
+                        let mut cum = 0u64;
+                        for (i, &bound) in h.bounds().iter().enumerate() {
+                            cum += buckets[i];
+                            out.push_str(&format!(
+                                "{}_bucket{} {cum}\n",
+                                fam.name,
+                                format_labels_with(&s.labels, "le", &bound.to_string()),
+                            ));
+                        }
+                        cum += buckets[h.bounds().len()];
+                        out.push_str(&format!(
+                            "{}_bucket{} {cum}\n",
+                            fam.name,
+                            format_labels_with(&s.labels, "le", "+Inf"),
+                        ));
+                        out.push_str(&format!(
+                            "{}_sum{} {sum}\n",
+                            fam.name,
+                            format_labels(&s.labels)
+                        ));
+                        // _count is the +Inf cumulative bucket by
+                        // construction — rendered from the same loads so
+                        // the exposition is internally consistent even
+                        // mid-storm
+                        out.push_str(&format!(
+                            "{}_count{} {cum}\n",
+                            fam.name,
+                            format_labels(&s.labels)
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> MetricsRegistry {
+        MetricsRegistry::new()
+    }
+}
+
+/// Priority-tier label values, indexed by `Priority::tier()`
+/// (0 = interactive, 1 = batch).
+pub const TIER_LABELS: [&str; 2] = ["interactive", "batch"];
+
+/// Terminal outcomes of an admitted generation request, indexed by
+/// [`Outcome`]: `done` (budget exhausted normally), `error` (a terminal
+/// `err` was sent — eviction, decode failure), `abandoned` (the client
+/// disconnected mid-stream and the lane was reclaimed).
+pub const OUTCOME_LABELS: [&str; 3] = ["done", "error", "abandoned"];
+
+/// Index into [`OUTCOME_LABELS`] / `TierMetrics::finished`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    Done = 0,
+    Error = 1,
+    Abandoned = 2,
+}
+
+/// Eviction causes, indexed by [`EvictCause`].
+pub const EVICT_LABELS: [&str; 3] = ["kv_exhausted", "client_gone", "decode_error"];
+
+/// Index into [`EVICT_LABELS`] / `ServeMetrics::evictions`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictCause {
+    KvExhausted = 0,
+    ClientGone = 1,
+    DecodeError = 2,
+}
+
+/// Per-priority-tier request metrics (one set per [`TIER_LABELS`] entry).
+pub struct TierMetrics {
+    /// Generation requests submitted at this tier.
+    pub started: Counter,
+    /// Terminal events by [`Outcome`] index.
+    pub finished: [Counter; 3],
+    /// Generated bytes streamed to clients.
+    pub tokens: Counter,
+    /// Submission → admission wait, µs.
+    pub queue_wait_us: Histogram,
+    /// Admission → first streamed token, µs.
+    pub ttft_us: Histogram,
+    /// Gap between consecutive streamed tokens, µs.
+    pub inter_token_us: Histogram,
+    /// Requests currently waiting for admission.
+    pub queued: Gauge,
+}
+
+impl TierMetrics {
+    fn new(reg: &MetricsRegistry, tier: &str) -> TierMetrics {
+        let l = [("priority", tier)];
+        TierMetrics {
+            started: reg.counter(
+                "hbllm_requests_started_total",
+                "Generation requests submitted, by admission tier.",
+                &l,
+            ),
+            finished: OUTCOME_LABELS.map(|o| {
+                reg.counter(
+                    "hbllm_requests_finished_total",
+                    "Generation requests terminated, by tier and outcome.",
+                    &[("priority", tier), ("outcome", o)],
+                )
+            }),
+            tokens: reg.counter(
+                "hbllm_tokens_total",
+                "Generated bytes streamed to clients, by tier.",
+                &l,
+            ),
+            queue_wait_us: reg.histogram(
+                "hbllm_queue_wait_us",
+                "Submission-to-admission wait in microseconds, by tier.",
+                &l,
+                default_latency_bounds(),
+            ),
+            ttft_us: reg.histogram(
+                "hbllm_ttft_us",
+                "Admission-to-first-token latency in microseconds, by tier.",
+                &l,
+                default_latency_bounds(),
+            ),
+            inter_token_us: reg.histogram(
+                "hbllm_inter_token_us",
+                "Inter-token gap in microseconds, by tier.",
+                &l,
+                default_latency_bounds(),
+            ),
+            queued: reg.gauge(
+                "hbllm_queued_requests",
+                "Requests waiting for admission, by tier.",
+                &l,
+            ),
+        }
+    }
+}
+
+/// The default log-spaced latency bucket bounds: 100 µs … ~6.5 s.
+fn default_latency_bounds() -> Vec<u64> {
+    let mut bounds = Vec::new();
+    let mut b = 100u64;
+    for _ in 0..8 {
+        bounds.push(b);
+        b = b.saturating_mul(4);
+    }
+    bounds
+}
+
+/// The serving stack's full metric bundle: every counter, gauge and
+/// histogram the engine loop, scheduler and front-ends record, all
+/// pre-registered so the decode path touches only atomics. One
+/// `Arc<ServeMetrics>` is created per `Batcher` and shared by every
+/// handle, connection session, and the engine loop.
+pub struct ServeMetrics {
+    pub registry: MetricsRegistry,
+    started_at: Instant,
+    /// Per-tier request metrics, indexed by `Priority::tier()`.
+    pub tiers: [TierMetrics; 2],
+    /// Evictions by [`EvictCause`] index.
+    pub evictions: [Counter; 3],
+    /// Admission stalled on KV-block backpressure, µs per stall.
+    pub kv_stall_us: Histogram,
+    /// Wall time of one decode sweep across all active lanes, µs.
+    pub sweep_us: Histogram,
+    pub spec_rounds: Counter,
+    pub spec_drafted: Counter,
+    pub spec_accepted: Counter,
+    pub spec_rejected: Counter,
+    /// Accepted draft tokens per speculative round (distribution).
+    pub spec_round_accepted: Histogram,
+    /// Lanes currently holding an active sequence.
+    pub active_lanes: Gauge,
+    pub kv_blocks_used: Gauge,
+    pub kv_blocks_total: Gauge,
+    /// High-water mark of concurrently allocated KV blocks.
+    pub kv_blocks_used_hwm: Gauge,
+    /// Open client connections, indexed 0 = tcp, 1 = http.
+    pub connections: [Gauge; 2],
+}
+
+/// Index into `ServeMetrics::connections`.
+pub const FRONT_LABELS: [&str; 2] = ["tcp", "http"];
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        let reg = MetricsRegistry::new();
+        let tiers = [TierMetrics::new(&reg, TIER_LABELS[0]), TierMetrics::new(&reg, TIER_LABELS[1])];
+        let evictions = EVICT_LABELS.map(|c| {
+            reg.counter(
+                "hbllm_evictions_total",
+                "Active sequences evicted from a decode lane, by cause.",
+                &[("cause", c)],
+            )
+        });
+        let kv_stall_us = reg.histogram(
+            "hbllm_kv_stall_us",
+            "Admission stalls on KV-block backpressure, microseconds per stall.",
+            &[],
+            default_latency_bounds(),
+        );
+        let sweep_us = reg.histogram(
+            "hbllm_sweep_us",
+            "Decode sweep wall time across all active lanes, microseconds.",
+            &[],
+            default_latency_bounds(),
+        );
+        let spec_rounds = reg.counter(
+            "hbllm_spec_rounds_total",
+            "Speculative verify rounds executed.",
+            &[],
+        );
+        let spec_drafted = reg.counter(
+            "hbllm_spec_drafted_total",
+            "Draft tokens proposed by the low-band draft.",
+            &[],
+        );
+        let spec_accepted = reg.counter(
+            "hbllm_spec_accepted_total",
+            "Draft tokens the full-model verifier accepted.",
+            &[],
+        );
+        let spec_rejected = reg.counter(
+            "hbllm_spec_rejected_total",
+            "Draft tokens the full-model verifier rejected.",
+            &[],
+        );
+        let spec_round_accepted = reg.histogram(
+            "hbllm_spec_round_accepted",
+            "Accepted draft tokens per speculative round.",
+            &[],
+            vec![0, 1, 2, 4, 8, 16],
+        );
+        let active_lanes =
+            reg.gauge("hbllm_active_lanes", "Decode lanes holding an active sequence.", &[]);
+        let kv_blocks_used =
+            reg.gauge("hbllm_kv_blocks_used", "KV blocks currently allocated.", &[]);
+        let kv_blocks_total =
+            reg.gauge("hbllm_kv_blocks_total", "KV blocks in the shared arena.", &[]);
+        let kv_blocks_used_hwm = reg.gauge(
+            "hbllm_kv_blocks_used_hwm",
+            "High-water mark of concurrently allocated KV blocks.",
+            &[],
+        );
+        let connections = FRONT_LABELS.map(|f| {
+            reg.gauge(
+                "hbllm_connections_active",
+                "Open client connections, by front-end.",
+                &[("front", f)],
+            )
+        });
+        ServeMetrics {
+            registry: reg,
+            started_at: Instant::now(),
+            tiers,
+            evictions,
+            kv_stall_us,
+            sweep_us,
+            spec_rounds,
+            spec_drafted,
+            spec_accepted,
+            spec_rejected,
+            spec_round_accepted,
+            active_lanes,
+            kv_blocks_used,
+            kv_blocks_total,
+            kv_blocks_used_hwm,
+            connections,
+        }
+    }
+
+    /// Per-tier metrics for `Priority::tier()` index `t`.
+    pub fn tier(&self, t: usize) -> &TierMetrics {
+        &self.tiers[t.min(1)]
+    }
+
+    /// Record one terminal event for tier `t`.
+    pub fn finish(&self, t: usize, outcome: Outcome) {
+        self.tier(t).finished[outcome as usize].inc();
+    }
+
+    /// Record one eviction.
+    pub fn evict(&self, cause: EvictCause) {
+        self.evictions[cause as usize].inc();
+    }
+
+    /// Count one open connection on front-end `front` (index into
+    /// [`FRONT_LABELS`]) for as long as the returned guard lives. RAII
+    /// so every exit path of a connection loop — clean close, protocol
+    /// error, panic unwind — decrements exactly once.
+    pub fn connection_guard(&self, front: usize) -> GaugeGuard {
+        let g = self.connections[front.min(1)].clone();
+        g.add(1);
+        GaugeGuard(g)
+    }
+
+    /// Account one HTTP request. Registers the (method, path, status)
+    /// series on first sight — a mutex acquisition, acceptable off the
+    /// decode path. Unknown paths must be collapsed by the caller (the
+    /// front-end maps them to `"other"`) so scrape-cardinality stays
+    /// bounded under path-scanning traffic.
+    pub fn http_request(&self, method: &str, path: &str, status: u16) {
+        self.registry
+            .counter(
+                "hbllm_http_requests_total",
+                "HTTP requests served, by method, path and status.",
+                &[("method", method), ("path", path), ("status", &status.to_string())],
+            )
+            .inc();
+    }
+
+    /// Account one TCP protocol line by verb (`ppl`, `gen`, `legacy`,
+    /// `bad`).
+    pub fn tcp_request(&self, verb: &str) {
+        self.registry
+            .counter(
+                "hbllm_tcp_requests_total",
+                "TCP protocol requests served, by verb.",
+                &[("verb", verb)],
+            )
+            .inc();
+    }
+
+    /// Milliseconds since this metrics bundle (≈ the engine) started.
+    pub fn uptime_ms(&self) -> u64 {
+        self.started_at.elapsed().as_millis().min(u64::MAX as u128) as u64
+    }
+
+    /// Cumulative generation requests submitted, both tiers.
+    pub fn requests_started(&self) -> u64 {
+        self.tiers.iter().map(|t| t.started.get()).sum()
+    }
+
+    /// Cumulative terminal events, both tiers, all outcomes.
+    pub fn requests_finished(&self) -> u64 {
+        self.tiers.iter().flat_map(|t| t.finished.iter().map(Counter::get)).sum()
+    }
+
+    /// Cumulative generated bytes streamed, both tiers.
+    pub fn tokens(&self) -> u64 {
+        self.tiers.iter().map(|t| t.tokens.get()).sum()
+    }
+
+    /// Cumulative evictions, all causes.
+    pub fn total_evictions(&self) -> u64 {
+        self.evictions.iter().map(Counter::get).sum()
+    }
+
+    /// Render the full Prometheus exposition.
+    pub fn render(&self) -> String {
+        self.registry.render()
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> ServeMetrics {
+        ServeMetrics::new()
+    }
+}
+
+/// Holds one unit on a gauge: incremented at construction (see
+/// [`ServeMetrics::connection_guard`]), decremented on drop.
+pub struct GaugeGuard(Gauge);
+
+impl Drop for GaugeGuard {
+    fn drop(&mut self) {
+        self.0.add(-1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // clones share state
+        let c2 = c.clone();
+        c2.inc();
+        assert_eq!(c.get(), 6);
+        let g = Gauge::new();
+        g.set(7);
+        g.add(-3);
+        assert_eq!(g.get(), 4);
+    }
+
+    #[test]
+    fn log_spaced_bounds_grow_geometrically_and_saturate() {
+        let h = Histogram::log_spaced(100, 4, 4);
+        assert_eq!(h.bounds(), &[100, 400, 1600, 6400]);
+        // near-overflow starts saturate instead of producing duplicates
+        let h = Histogram::log_spaced(u64::MAX / 2, 4, 5);
+        let b = h.bounds();
+        assert!(b.windows(2).all(|w| w[0] < w[1]), "non-increasing: {b:?}");
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_are_inclusive_upper() {
+        let h = Histogram::with_bounds(vec![10, 100, 1000]);
+        // a value equal to a bound lands in that bound's bucket
+        for (v, want) in [(0, 0), (10, 0), (11, 1), (100, 1), (101, 2), (1000, 2), (1001, 3)] {
+            assert_eq!(h.bucket_index(v), want, "value {v}");
+        }
+        h.observe(10);
+        h.observe(11);
+        h.observe(5000);
+        let (buckets, sum, count) = h.snapshot();
+        assert_eq!(buckets, vec![1, 1, 0, 1]);
+        assert_eq!(sum, 10 + 11 + 5000);
+        assert_eq!(count, 3);
+    }
+
+    #[test]
+    fn histogram_merges_concurrent_observers_exactly() {
+        let h = Histogram::with_bounds(vec![8, 64, 512]);
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.observe((i * 7 + t) % 600);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let (buckets, _, count) = h.snapshot();
+        assert_eq!(count, 4000);
+        assert_eq!(buckets.iter().sum::<u64>(), 4000, "observations lost in merge");
+    }
+
+    #[test]
+    fn prop_observed_values_land_in_containing_bucket() {
+        check(
+            "histogram-bucket-containment",
+            200,
+            |g| {
+                let n = g.size(1, 6);
+                let mut bounds: Vec<u64> =
+                    (0..n).map(|_| (g.rng.next_u64() % 100_000) + 1).collect();
+                bounds.sort();
+                bounds.dedup();
+                let v = g.rng.next_u64() % 200_000;
+                (bounds, v)
+            },
+            |(bounds, v)| {
+                let h = Histogram::with_bounds(bounds.clone());
+                h.observe(*v);
+                let (buckets, sum, count) = h.snapshot();
+                let i = buckets.iter().position(|&c| c == 1).ok_or("no bucket hit")?;
+                if buckets.iter().sum::<u64>() != 1 || count != 1 || sum != *v {
+                    return Err(format!("bad totals: {buckets:?} sum={sum} count={count}"));
+                }
+                // lower bound (exclusive) and upper bound (inclusive)
+                // of the hit bucket must contain v
+                let lo = if i == 0 { 0 } else { bounds[i - 1] };
+                let hi = bounds.get(i).copied().unwrap_or(u64::MAX);
+                if !(*v > lo || i == 0) || *v > hi {
+                    return Err(format!("v={v} outside bucket {i} ({lo}, {hi}]"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn label_values_escape_per_spec() {
+        assert_eq!(escape_label_value(r#"a"b"#), r#"a\"b"#);
+        assert_eq!(escape_label_value(r"a\b"), r"a\\b");
+        assert_eq!(escape_label_value("a\nb"), r"a\nb");
+        assert_eq!(escape_label_value("plain"), "plain");
+    }
+
+    #[test]
+    fn render_matches_expected_exposition_exactly() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("hbllm_test_total", "A test counter.", &[("kind", "a\"b")]);
+        c.add(3);
+        let g = reg.gauge("hbllm_test_gauge", "A test gauge.", &[]);
+        g.set(-2);
+        let h = reg.histogram("hbllm_test_us", "A test histogram.", &[], vec![10, 100]);
+        h.observe(5);
+        h.observe(50);
+        h.observe(50);
+        h.observe(5000);
+        let want = "\
+# HELP hbllm_test_total A test counter.
+# TYPE hbllm_test_total counter
+hbllm_test_total{kind=\"a\\\"b\"} 3
+# HELP hbllm_test_gauge A test gauge.
+# TYPE hbllm_test_gauge gauge
+hbllm_test_gauge -2
+# HELP hbllm_test_us A test histogram.
+# TYPE hbllm_test_us histogram
+hbllm_test_us_bucket{le=\"10\"} 1
+hbllm_test_us_bucket{le=\"100\"} 3
+hbllm_test_us_bucket{le=\"+Inf\"} 4
+hbllm_test_us_sum 5105
+hbllm_test_us_count 4
+";
+        assert_eq!(reg.render(), want);
+    }
+
+    #[test]
+    fn registration_is_idempotent_and_kind_checked() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("hbllm_dup_total", "h", &[("l", "x")]);
+        a.inc();
+        // same name+labels returns the same series
+        let b = reg.counter("hbllm_dup_total", "h", &[("l", "x")]);
+        b.inc();
+        assert_eq!(a.get(), 2);
+        // same name, new labels is a new series in the same family
+        let c = reg.counter("hbllm_dup_total", "h", &[("l", "y")]);
+        c.inc();
+        let text = reg.render();
+        assert!(text.contains("hbllm_dup_total{l=\"x\"} 2"), "{text}");
+        assert!(text.contains("hbllm_dup_total{l=\"y\"} 1"), "{text}");
+        assert_eq!(text.matches("# TYPE hbllm_dup_total").count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "two kinds")]
+    fn kind_conflict_panics() {
+        let reg = MetricsRegistry::new();
+        let _ = reg.counter("hbllm_conflict", "h", &[("l", "x")]);
+        let _ = reg.gauge("hbllm_conflict", "h", &[("l", "y")]);
+    }
+
+    #[test]
+    fn serve_metrics_totals_aggregate_across_tiers() {
+        let m = ServeMetrics::new();
+        m.tier(0).started.inc();
+        m.tier(0).started.inc();
+        m.tier(1).started.inc();
+        m.finish(0, Outcome::Done);
+        m.finish(1, Outcome::Error);
+        m.finish(1, Outcome::Abandoned);
+        m.tier(0).tokens.add(10);
+        m.tier(1).tokens.add(5);
+        m.evict(EvictCause::KvExhausted);
+        m.evict(EvictCause::ClientGone);
+        assert_eq!(m.requests_started(), 3);
+        assert_eq!(m.requests_finished(), 3);
+        assert_eq!(m.tokens(), 15);
+        assert_eq!(m.total_evictions(), 2);
+        // the exposition carries every family the bundle registered
+        let text = m.render();
+        for needle in [
+            "# TYPE hbllm_requests_started_total counter",
+            "# TYPE hbllm_requests_finished_total counter",
+            "# TYPE hbllm_tokens_total counter",
+            "# TYPE hbllm_evictions_total counter",
+            "# TYPE hbllm_queue_wait_us histogram",
+            "# TYPE hbllm_ttft_us histogram",
+            "# TYPE hbllm_inter_token_us histogram",
+            "# TYPE hbllm_kv_stall_us histogram",
+            "# TYPE hbllm_sweep_us histogram",
+            "# TYPE hbllm_spec_rounds_total counter",
+            "# TYPE hbllm_active_lanes gauge",
+            "# TYPE hbllm_kv_blocks_used_hwm gauge",
+            "# TYPE hbllm_connections_active gauge",
+            "hbllm_requests_finished_total{priority=\"batch\",outcome=\"error\"} 1",
+            "hbllm_evictions_total{cause=\"kv_exhausted\"} 1",
+        ] {
+            assert!(text.contains(needle), "exposition lost {needle:?}:\n{text}");
+        }
+    }
+
+    #[test]
+    fn http_and_tcp_accounting_register_dynamic_series() {
+        let m = ServeMetrics::new();
+        m.http_request("GET", "/v1/stats", 200);
+        m.http_request("GET", "/v1/stats", 200);
+        m.http_request("POST", "/v1/generate", 400);
+        m.tcp_request("ppl");
+        m.tcp_request("gen");
+        let text = m.render();
+        assert!(
+            text.contains(
+                "hbllm_http_requests_total{method=\"GET\",path=\"/v1/stats\",status=\"200\"} 2"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "hbllm_http_requests_total{method=\"POST\",path=\"/v1/generate\",status=\"400\"} 1"
+            ),
+            "{text}"
+        );
+        assert!(text.contains("hbllm_tcp_requests_total{verb=\"ppl\"} 1"), "{text}");
+        assert!(text.contains("hbllm_tcp_requests_total{verb=\"gen\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn connection_guard_decrements_on_every_exit_path() {
+        let m = ServeMetrics::new();
+        {
+            let _tcp = m.connection_guard(0);
+            let _http = m.connection_guard(1);
+            assert_eq!(m.connections[0].get(), 1);
+            assert_eq!(m.connections[1].get(), 1);
+        }
+        assert_eq!(m.connections[0].get(), 0);
+        assert_eq!(m.connections[1].get(), 0);
+        // survives a panicking connection loop (unwind drops the guard)
+        let g = m.connection_guard(1);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _held = g;
+            panic!("connection loop died");
+        }));
+        assert_eq!(m.connections[1].get(), 0);
+    }
+
+    #[test]
+    fn uptime_is_monotone_nonzero_eventually() {
+        let m = ServeMetrics::new();
+        let a = m.uptime_ms();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(m.uptime_ms() >= a);
+    }
+}

@@ -14,17 +14,23 @@
 //! ([`serve::LineConn`]) and the HTTP/SSE front-end ([`http::HttpConn`])
 //! feed the same [`GenScheduler`] — one admission policy (two-tier
 //! [`Priority`] rotation, per-client fairness, KV backpressure) whatever
-//! the wire format. The complete serving API (verbs, endpoints, SSE
-//! grammar, errors, priorities) is specified in `docs/API.md`; the
-//! request lifecycle is walked through in `docs/ARCHITECTURE.md`.
+//! the wire format. Every lifecycle event (admission, token, eviction,
+//! HTTP/TCP request) is recorded into one shared [`ServeMetrics`] bundle
+//! ([`metrics`]) exposed as a Prometheus text endpoint
+//! (`GET /v1/metrics`) — see `docs/OBSERVABILITY.md`. The complete
+//! serving API (verbs, endpoints, SSE grammar, errors, priorities) is
+//! specified in `docs/API.md`; the request lifecycle is walked through
+//! in `docs/ARCHITECTURE.md`.
 
 pub mod batcher;
 pub mod http;
+pub mod metrics;
 pub mod progress;
 pub mod scheduler;
 pub mod serve;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherHandle, ClientQueue, StatsSnapshot, Work};
+pub use metrics::{MetricsRegistry, ServeMetrics};
 pub use progress::Progress;
 pub use scheduler::{
     quantize_model, GenEvent, GenRequest, GenScheduler, LayerResult, Priority, QuantJobConfig,

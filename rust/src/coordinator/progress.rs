@@ -1,5 +1,11 @@
 //! Thread-safe progress/metrics collector for long-running jobs.
+//!
+//! Console output goes through the leveled [`crate::util::log`] shim
+//! (single-line `key=value` records at info level, filtered by
+//! `HBLLM_LOG`); the in-memory message log keeps the compact
+//! `[label] done/total item (elapsed)` format callers assert on.
 
+use crate::util::log;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -27,16 +33,13 @@ impl Progress {
 
     pub fn tick(&self, item: &str) {
         let done = self.done.fetch_add(1, Ordering::Relaxed) + 1;
-        let msg = format!(
-            "[{}] {}/{} {} ({:.1}s)",
-            self.label,
-            done,
-            self.total,
-            item,
-            self.started.elapsed().as_secs_f64()
-        );
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let msg = format!("[{}] {}/{} {} ({:.1}s)", self.label, done, self.total, item, elapsed);
         if !self.quiet {
-            eprintln!("{msg}");
+            log::info(&format!(
+                "event=progress job={} done={done} total={} item={item} elapsed_s={elapsed:.1}",
+                self.label, self.total
+            ));
         }
         self.log.lock().unwrap().push(msg);
     }

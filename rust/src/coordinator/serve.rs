@@ -212,6 +212,7 @@ impl ClientConn for LineConn {
     }
 
     fn run(self, handle: BatcherHandle) {
+        let _conn = handle.metrics().connection_guard(0); // FRONT_LABELS[0] = tcp
         let mut writer = match self.stream.try_clone() {
             Ok(w) => w,
             Err(_) => return,
@@ -234,6 +235,7 @@ impl ClientConn for LineConn {
                     match Priority::parse(level) {
                         Some(p) if tail == "gen" || tail.starts_with("gen ") => (p, tail),
                         _ => {
+                            handle.metrics().tcp_request("bad");
                             let ok = writer
                                 .write_all(b"err usage: prio <interactive|batch> gen <max-new> <temperature> <seed> <prompt>\n")
                                 .is_ok();
@@ -247,12 +249,23 @@ impl ClientConn for LineConn {
                 None => (Priority::Interactive, line.as_str()),
             };
             let ok = if let Some(rest) = verb.strip_prefix("gen ") {
+                handle.metrics().tcp_request("gen");
                 handle_gen(rest, priority, &handle, &mut writer)
             } else if verb == "gen" {
+                handle.metrics().tcp_request("gen");
                 handle_gen("", priority, &handle, &mut writer)
             } else {
                 // `ppl <text>`, or a legacy bare line scored as-is
-                let text = verb.strip_prefix("ppl ").unwrap_or(verb);
+                let text = match verb.strip_prefix("ppl ") {
+                    Some(t) => {
+                        handle.metrics().tcp_request("ppl");
+                        t
+                    }
+                    None => {
+                        handle.metrics().tcp_request("legacy");
+                        verb
+                    }
+                };
                 let resp = match handle.score(text.as_bytes()) {
                     Ok(ppl) => format!("ppl {ppl:.4}\n"),
                     Err(e) => format!("err {e}\n"),
@@ -298,6 +311,9 @@ pub fn bind(addr: &str) -> Result<(TcpListener, std::net::SocketAddr)> {
 pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
     let cfg = batcher.cfg;
     let mut sched = GenScheduler::with_spec(be.lanes(), cfg.max_new_cap, cfg.spec);
+    // one metrics bundle across scheduler lifecycle events and front-end
+    // request accounting — what `GET /v1/metrics` renders
+    sched.set_metrics(batcher.metrics().clone());
     let mut scores: Vec<Request> = Vec::new();
     let mut inbox: Vec<Work> = Vec::new();
     let mut connected = true;
@@ -319,7 +335,7 @@ pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
                     Work::Score(r) => scores.push(r),
                     Work::Generate(g) => sched.submit(g),
                     Work::Stats(tx) => {
-                        let _ = tx.send(snapshot(&sched, &*be));
+                        let _ = tx.send(Ok(snapshot(&sched, &*be)));
                     }
                 }
             }
@@ -333,7 +349,7 @@ pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
                         false
                     }
                     Work::Stats(tx) => {
-                        let _ = tx.send(snapshot(&sched, &*be));
+                        let _ = tx.send(Ok(snapshot(&sched, &*be)));
                         true
                     }
                     Work::Score(_) => unreachable!("scoring work is batched, never forwarded"),

@@ -172,6 +172,7 @@ impl KvPool {
             block_len: self.blocks.block_len(),
             total_blocks: self.blocks.n_blocks(),
             free_blocks: self.blocks.free_blocks(),
+            used_hwm: self.blocks.used_hwm(),
             lane_blocks: self.lanes.iter().map(|l| l.kv.held_blocks()).collect(),
             arena_bytes: self.blocks.bytes(),
         }

@@ -93,6 +93,10 @@ pub struct KvStats {
     pub total_blocks: usize,
     /// Blocks currently on the free list.
     pub free_blocks: usize,
+    /// High-water mark of concurrently allocated blocks over the arena's
+    /// lifetime — the capacity-planning signal: an arena whose high water
+    /// never nears `total_blocks` can be shrunk without backpressure.
+    pub used_hwm: usize,
     /// Blocks currently held by each decode lane (`lane_blocks[i]` is
     /// lane `i`; sums to `total_blocks - free_blocks`).
     pub lane_blocks: Vec<usize>,

@@ -46,6 +46,10 @@ pub struct NativeBackend {
     /// demand and reused across rounds (one [`Arena`] per in-flight
     /// position across all lanes).
     spec_scratch: Vec<Arena>,
+    /// Count of packed-weight sweeps executed (one per `step_lanes` or
+    /// `sweep_positions` call) — the unit the batching argument amortizes
+    /// over, surfaced for observability ([`NativeBackend::sweeps`]).
+    sweeps: u64,
 }
 
 /// Per-lane view of one decode position: the lane's paged KV view plus
@@ -90,11 +94,21 @@ impl NativeBackend {
             spec: SpecConfig::disabled(),
             drafts: Vec::new(),
             spec_scratch: Vec::new(),
+            sweeps: 0,
         }
     }
 
     pub fn model(&self) -> &PackedModel {
         &self.model
+    }
+
+    /// How many packed-weight sweeps this backend has executed — one per
+    /// batched decode step (`step_lanes`) or speculative verify pass
+    /// (`sweep_positions`), whatever the number of lanes it served. The
+    /// serving layer divides tokens by sweeps to see the batching
+    /// amortization; `hbllm_sweep_us` histograms the wall-clock per sweep.
+    pub fn sweeps(&self) -> u64 {
+        self.sweeps
     }
 
     /// Rebuild the lane pool for `n` lanes, honoring any `set_kv_blocks`
@@ -117,6 +131,7 @@ impl NativeBackend {
         if active.is_empty() {
             return Ok(());
         }
+        self.sweeps += 1;
         let n_lanes = self.pool.len();
         let NativeBackend { model, pool, zpool, threads, .. } = self;
         let threads = *threads;
@@ -282,6 +297,7 @@ impl NativeBackend {
     /// KV state is advanced past every fed byte; rejection rollback is the
     /// caller's job (`PagedKv::truncate_to`).
     fn sweep_positions(&mut self, feeds: &[(usize, Vec<u8>, usize)]) -> Result<Vec<Vec<Vec<f32>>>> {
+        self.sweeps += 1;
         let n_lanes = self.pool.len();
         let total: usize = feeds.iter().map(|f| f.1.len()).sum();
         while self.spec_scratch.len() < total {
@@ -1168,6 +1184,23 @@ mod tests {
         assert!(!eff.enabled, "k = 0 cannot be enabled");
         let st = be.spec_stats().unwrap();
         assert_eq!((st.rounds, st.drafted, st.accepted), (0, 0, 0));
+    }
+
+    #[test]
+    fn sweep_counter_amortizes_over_lanes() {
+        let w = micro_weights(40);
+        let mut be =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        be.set_lanes(2);
+        assert_eq!(be.sweeps(), 0);
+        // two lanes prefilling 3-byte prompts in lock step: 3 sweeps, not
+        // 6 — the amortization the counter exists to expose
+        be.decode_batch(&[(0, b"abc"), (1, b"xyz")]).unwrap();
+        assert_eq!(be.sweeps(), 3);
+        // a speculative round is one verify sweep regardless of k
+        let before = be.sweeps();
+        be.decode_batch_spec(&[(0, b"abcd")], 2).unwrap();
+        assert_eq!(be.sweeps(), before + 1);
     }
 
     #[test]

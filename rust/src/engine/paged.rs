@@ -88,6 +88,10 @@ pub struct KvBlockPool {
     free: Vec<usize>,
     /// Per-block ownership bit — the double-free/alias guard.
     live: Vec<bool>,
+    /// High-water mark of concurrently allocated blocks over the pool's
+    /// lifetime — the capacity-planning signal surfaced through
+    /// `KvStats::used_hwm` and the `hbllm_kv_blocks_used_hwm` gauge.
+    used_hwm: usize,
 }
 
 impl KvBlockPool {
@@ -106,6 +110,7 @@ impl KvBlockPool {
             v: vec![0.0; elems],
             free: (0..n_blocks).rev().collect(),
             live: vec![false; n_blocks],
+            used_hwm: 0,
         }
     }
 
@@ -125,6 +130,12 @@ impl KvBlockPool {
         self.n_blocks - self.free.len()
     }
 
+    /// Most blocks ever allocated at once (never decreases; 0 until the
+    /// first allocation).
+    pub fn used_hwm(&self) -> usize {
+        self.used_hwm
+    }
+
     /// Total arena bytes (capacity, not fill level) across both sides.
     pub fn bytes(&self) -> usize {
         (self.k.len() + self.v.len()) * 4
@@ -141,6 +152,7 @@ impl KvBlockPool {
             Some(b) => {
                 debug_assert!(!self.live[b], "free list handed out a live block");
                 self.live[b] = true;
+                self.used_hwm = self.used_hwm.max(self.used_blocks());
                 Ok(b)
             }
             None => Err(KvExhausted { needed: 1, free: 0 }),
@@ -331,20 +343,25 @@ mod tests {
     fn alloc_release_cycle_and_accounting() {
         let mut pool = KvBlockPool::new(2, 4, 3, 8);
         assert_eq!((pool.n_blocks(), pool.free_blocks(), pool.used_blocks()), (3, 3, 0));
+        assert_eq!(pool.used_hwm(), 0, "hwm nonzero before any allocation");
         let a = pool.alloc().unwrap();
         let b = pool.alloc().unwrap();
         assert_ne!(a, b);
         assert_eq!((pool.free_blocks(), pool.used_blocks()), (1, 2));
+        assert_eq!(pool.used_hwm(), 2);
         pool.release(a);
+        assert_eq!(pool.used_hwm(), 2, "hwm must not fall on release");
         let c = pool.alloc().unwrap();
         let d = pool.alloc().unwrap();
         assert_eq!(pool.free_blocks(), 0);
+        assert_eq!(pool.used_hwm(), 3, "full arena is the new high water");
         assert_eq!(pool.alloc(), Err(KvExhausted { needed: 1, free: 0 }));
         assert_eq!(c, a, "released block is recycled");
         pool.release(b);
         pool.release(c);
         pool.release(d);
         assert_eq!(pool.free_blocks(), 3);
+        assert_eq!(pool.used_hwm(), 3, "hwm survives a full drain");
     }
 
     #[test]

@@ -110,6 +110,14 @@ impl SpecStats {
             self.accepted as f64 / self.drafted as f64
         }
     }
+
+    /// Draft tokens the verifier rejected — the complement of
+    /// [`SpecStats::acceptance`], surfaced as its own counter
+    /// (`hbllm_spec_rejected_total`) so dashboards can rate-derive both
+    /// sides without subtraction across scrapes.
+    pub fn rejected(&self) -> u64 {
+        self.drafted - self.accepted
+    }
 }
 
 /// Draft-side state for one KV lane: a flat `[n_layers, seq, d]` K/V
@@ -342,6 +350,8 @@ mod tests {
         assert!(SpecConfig::with_k(4).enabled);
         let st = SpecStats { drafted: 8, accepted: 6, ..Default::default() };
         assert!((st.acceptance() - 0.75).abs() < 1e-12);
+        assert_eq!(st.rejected(), 2);
         assert_eq!(SpecStats::default().acceptance(), 0.0);
+        assert_eq!(SpecStats::default().rejected(), 0);
     }
 }

@@ -1,0 +1,138 @@
+//! Leveled, grep-able logging shim (std-only, no crates): single-line
+//! `key=value` records on stderr, timestamped, filtered by the
+//! `HBLLM_LOG` environment variable (`error|warn|info|debug`, default
+//! `info`). The serving stack routes its operational messages — progress
+//! ticks, evictions, KV exhaustion, client drops — through this module so
+//! a soak log can be sliced with `grep 'level=warn'` / `grep
+//! 'event=evict'` instead of read line by line.
+//!
+//! The level is parsed **once** (first use) and cached for the process
+//! lifetime; emission is a single `eprintln!` with no allocation beyond
+//! the caller's message. This is deliberately not a metrics path — the
+//! cumulative counters live in `coordinator::metrics`.
+
+use std::sync::OnceLock;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Log severity, ordered so `Error < Warn < Info < Debug` — a record is
+/// emitted when its level is at or above the configured threshold's
+/// verbosity (i.e. `record <= threshold`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+}
+
+impl Level {
+    /// Parse an `HBLLM_LOG` value (case-insensitive). Unknown values are
+    /// `None` so the caller can fall back to the default loudly-ignored.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// The process-wide threshold: `$HBLLM_LOG`, parsed once, default `info`.
+pub fn threshold() -> Level {
+    static THRESHOLD: OnceLock<Level> = OnceLock::new();
+    *THRESHOLD.get_or_init(|| {
+        std::env::var("HBLLM_LOG").ok().and_then(|v| Level::parse(&v)).unwrap_or(Level::Info)
+    })
+}
+
+/// Whether a record at `level` would be emitted.
+pub fn enabled(level: Level) -> bool {
+    level <= threshold()
+}
+
+/// Format one record: `ts=<unix-millis> level=<level> <msg>`. Pure so
+/// tests can pin the exact shape; `msg` is expected to already be
+/// `key=value` pairs (the caller owns its fields).
+pub fn format_line(ts_millis: u128, level: Level, msg: &str) -> String {
+    format!("ts={ts_millis} level={} {msg}", level.as_str())
+}
+
+/// Emit one record to stderr if `level` passes the threshold.
+pub fn log(level: Level, msg: &str) {
+    if !enabled(level) {
+        return;
+    }
+    let ts = SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_millis()).unwrap_or(0);
+    eprintln!("{}", format_line(ts, level, msg));
+}
+
+pub fn error(msg: &str) {
+    log(Level::Error, msg);
+}
+
+pub fn warn(msg: &str) {
+    log(Level::Warn, msg);
+}
+
+pub fn info(msg: &str) {
+    log(Level::Info, msg);
+}
+
+pub fn debug(msg: &str) {
+    log(Level::Debug, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_case_insensitively() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse(" Info "), Some(Level::Info));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("verbose"), None);
+        assert_eq!(Level::parse(""), None);
+    }
+
+    #[test]
+    fn level_order_matches_verbosity() {
+        // a record passes when its level <= threshold
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn format_is_single_line_key_value() {
+        let line = format_line(1723110000123, Level::Warn, "event=evict lane=3 cause=kv_exhausted");
+        assert_eq!(line, "ts=1723110000123 level=warn event=evict lane=3 cause=kv_exhausted");
+        assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn threshold_defaults_sanely() {
+        // whatever HBLLM_LOG says (or doesn't), the threshold is a valid
+        // level and warn-or-louder is never filtered below `warn` config
+        let t = threshold();
+        assert!(Level::parse(t.as_str()) == Some(t));
+        if t >= Level::Warn {
+            assert!(enabled(Level::Warn));
+        }
+        // errors are never filtered: Error is the minimum level
+        assert!(enabled(Level::Error));
+    }
+}

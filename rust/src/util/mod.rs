@@ -1,10 +1,12 @@
 //! In-tree substrates replacing unavailable crates (offline build):
 //! PRNG (rand), JSON (serde_json), property testing (proptest),
-//! benchmarking (criterion), CLI parsing (clap).
+//! benchmarking (criterion), CLI parsing (clap), leveled logging
+//! (log/env_logger).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod log;
 pub mod proptest;
 pub mod rng;
 

@@ -152,11 +152,12 @@ fn markdown_links_and_anchors_resolve() {
 #[test]
 fn serving_docs_exist_and_are_linked() {
     let root = repo_root();
-    for doc in ["docs/API.md", "docs/ARCHITECTURE.md", "docs/FORMAT.md"] {
+    for doc in ["docs/API.md", "docs/ARCHITECTURE.md", "docs/FORMAT.md", "docs/OBSERVABILITY.md"]
+    {
         assert!(root.join(doc).is_file(), "{doc} missing");
     }
     let readme = fs::read_to_string(root.join("README.md")).unwrap();
-    for target in ["docs/API.md", "docs/ARCHITECTURE.md"] {
+    for target in ["docs/API.md", "docs/ARCHITECTURE.md", "docs/OBSERVABILITY.md"] {
         assert!(
             readme.contains(&format!("({target})")) || readme.contains(&format!("({target}#")),
             "README does not link {target}"
@@ -168,12 +169,25 @@ fn serving_docs_exist_and_are_linked() {
         "POST /v1/generate",
         "POST /v1/score",
         "GET /v1/stats",
+        "GET /v1/metrics",
         "event: tok",
         "prio <interactive|batch>",
         "kv exhausted",
         "X-Priority",
     ] {
         assert!(api.contains(needle), "docs/API.md lost its {needle:?} coverage");
+    }
+    // the metric catalog covers the families the bundle registers
+    let obs = fs::read_to_string(root.join("docs/OBSERVABILITY.md")).unwrap();
+    for needle in [
+        "GET /v1/metrics",
+        "hbllm_requests_started_total",
+        "hbllm_ttft_us",
+        "hbllm_kv_blocks_used",
+        "hbllm_connections_active",
+        "chaos_soak",
+    ] {
+        assert!(obs.contains(needle), "docs/OBSERVABILITY.md lost its {needle:?} coverage");
     }
 }
 

@@ -358,6 +358,61 @@ fn tcp_prio_verb_parses_and_generates() {
     assert_eq!(&want[b"ta ki".len()..], &toks[..], "prio gen diverged from plain gen");
 }
 
+/// `/v1/stats` and `/v1/metrics` read the same atomics: after a
+/// generation completes, the stats JSON's `totals` object and the
+/// Prometheus exposition report identical cumulative counts.
+#[test]
+fn stats_totals_agree_with_prometheus_exposition() {
+    let seed = 78;
+    let mut be = packed_micro(seed);
+    be.set_lanes(2);
+    let (http_l, http_addr) = serve::bind("127.0.0.1:0").unwrap();
+
+    let client = std::thread::spawn(move || {
+        let url = format!("http://{http_addr}");
+        let mut toks = 0usize;
+        let n = http::client_generate(&url, "ta ki", 4, 0.0, 0, Priority::Interactive, |_| {
+            toks += 1;
+        })
+        .unwrap();
+        assert_eq!((n, toks), (4, 4));
+        // scrape both views after the request is fully terminal (the
+        // engine records the Done outcome before the client sees it)
+        let st = http::client_stats(&url).unwrap();
+        let text = http::client_metrics(&url).unwrap();
+        (st, text)
+    });
+    serve::serve_fronts(
+        vec![http::HttpConn::front_end(http_l, Some(3))],
+        &mut be,
+        BatcherConfig::default(),
+    )
+    .unwrap();
+    let (st, text) = client.join().unwrap();
+
+    // sum every series of a family in the exposition text
+    let sample = |name: &str| -> f64 {
+        text.lines()
+            .filter(|l| !l.starts_with('#'))
+            .filter_map(|l| l.rsplit_once(' '))
+            .filter(|(k, _)| *k == name || k.starts_with(&format!("{name}{{")))
+            .map(|(_, v)| v.parse::<f64>().unwrap())
+            .sum()
+    };
+    let total = |k: &str| st.at(&["totals", k]).and_then(Json::as_f64).unwrap();
+    assert_eq!(total("requests_started"), 1.0);
+    assert_eq!(total("requests_started"), sample("hbllm_requests_started_total"));
+    assert_eq!(total("requests_finished"), sample("hbllm_requests_finished_total"));
+    assert_eq!(total("tokens"), 4.0);
+    assert_eq!(total("tokens"), sample("hbllm_tokens_total"));
+    assert_eq!(total("evictions"), sample("hbllm_evictions_total"));
+    assert!(st.get("uptime_ms").and_then(Json::as_f64).unwrap() >= 0.0);
+    // the exposition is the documented text format
+    assert!(text.contains("# TYPE hbllm_requests_started_total counter"), "{text}");
+    assert!(text.contains("# TYPE hbllm_ttft_us histogram"), "{text}");
+    assert!(text.ends_with('\n'));
+}
+
 /// The HTTP error surface: unknown endpoints are 404, wrong methods 405,
 /// malformed bodies and unknown priorities 400 — all as JSON `error`
 /// objects, all without wedging the engine.
