@@ -98,6 +98,11 @@ OPTIONS:
                            with the Haar low band, verify with the full
                            packed model (greedy only; output is
                            byte-identical to plain decode; default off)
+  --prefix-cache N         serve: keep up to N finished prompts' KV prefixes
+                           resident; later requests sharing a prefix map the
+                           blocks read-only (copy-on-write) instead of
+                           re-prefilling (needs the native paged-KV backend;
+                           default 0 = off)
   --pallas                 use the Pallas-attention HLO entry (xla backend)
 ";
 
@@ -275,6 +280,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let cfg = BatcherConfig {
         max_new_cap: args.get_usize("max-new", BatcherConfig::default().max_new_cap),
         spec,
+        prefix_cache: args.get_usize("prefix-cache", 0),
         ..Default::default()
     };
     let addr = args.get_or("addr", "127.0.0.1:7431");
@@ -317,6 +323,13 @@ fn serve_cmd(args: &Args) -> Result<()> {
             spec.k
         );
     }
+    if cfg.prefix_cache > 0 {
+        println!(
+            "prefix cache: up to {} finished prompts keep their KV blocks resident \
+             (shared read-only via copy-on-write; hit rate reported on shutdown)",
+            cfg.prefix_cache
+        );
+    }
     println!(
         "protocol: `ppl <text>` -> `ppl <v>` | `[prio <interactive|batch>] gen <max-new> <temp> <seed> <prompt>` -> `tok <byte>`* `done <n>`"
     );
@@ -324,7 +337,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     if let Some((http_listener, _)) = http {
         fronts.push(http::HttpConn::front_end(http_listener, None));
     }
-    serve::serve_fronts(fronts, be.as_mut(), cfg)?;
+    let metrics = serve::serve_fronts(fronts, be.as_mut(), cfg)?;
     if let Some(st) = be.spec_stats() {
         if st.enabled && st.drafted > 0 {
             println!(
@@ -337,6 +350,17 @@ fn serve_cmd(args: &Args) -> Result<()> {
                 st.draft_kv_bytes as f64 / 1024.0
             );
         }
+    }
+    let (hits, misses) =
+        (metrics.prefix_cache_hits.get(), metrics.prefix_cache_misses.get());
+    if hits + misses > 0 {
+        let hwm = be.kv_stats().map_or(0, |st| st.shared_hwm);
+        println!(
+            "prefix cache: {:.1}% hit rate ({hits} of {} admissions; \
+             shared-block high water {hwm})",
+            100.0 * hits as f64 / (hits + misses) as f64,
+            hits + misses
+        );
     }
     Ok(())
 }
@@ -498,6 +522,14 @@ mod tests {
         assert_eq!(parse("generate --url http://h --priority urgent")
             .get("priority")
             .and_then(Priority::parse), None);
+    }
+
+    #[test]
+    fn prefix_cache_flag_parses() {
+        let a = parse("serve --method hbllm-row --prefix-cache 16");
+        assert_eq!(a.get_usize("prefix-cache", 0), 16);
+        // absent flag keeps prompt-prefix caching off
+        assert_eq!(parse("serve --method hbllm-row").get_usize("prefix-cache", 0), 0);
     }
 
     #[test]

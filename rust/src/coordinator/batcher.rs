@@ -39,6 +39,12 @@ pub struct BatcherConfig {
     /// Pass the *effective* config `Backend::set_spec` returned so the
     /// scheduler and backend agree; the default is disabled.
     pub spec: SpecConfig,
+    /// Prompt prefix-cache capacity in entries (`serve --prefix-cache`):
+    /// finished prompts keep their leading KV blocks resident so later
+    /// requests sharing the prefix map them read-only instead of
+    /// re-prefilling. `0` disables caching (the default); it only takes
+    /// effect on KV-metered backends that support block sharing.
+    pub prefix_cache: usize,
 }
 
 impl Default for BatcherConfig {
@@ -48,6 +54,7 @@ impl Default for BatcherConfig {
             max_wait: Duration::from_millis(20),
             max_new_cap: 256,
             spec: SpecConfig::disabled(),
+            prefix_cache: 0,
         }
     }
 }

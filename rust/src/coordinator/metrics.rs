@@ -559,6 +559,13 @@ pub struct ServeMetrics {
     pub kv_blocks_total: Gauge,
     /// High-water mark of concurrently allocated KV blocks.
     pub kv_blocks_used_hwm: Gauge,
+    /// KV blocks currently mapped by more than one block table
+    /// (prefix-sharing refcount > 1).
+    pub shared_blocks: Gauge,
+    /// Prompt-cache admissions that mapped a shared prefix.
+    pub prefix_cache_hits: Counter,
+    /// Prompt-cache admissions that found no usable prefix.
+    pub prefix_cache_misses: Counter,
     /// Open client connections, indexed 0 = tcp, 1 = http.
     pub connections: [Gauge; 2],
 }
@@ -626,6 +633,21 @@ impl ServeMetrics {
             "High-water mark of concurrently allocated KV blocks.",
             &[],
         );
+        let shared_blocks = reg.gauge(
+            "hbllm_shared_blocks",
+            "KV blocks currently mapped by more than one block table.",
+            &[],
+        );
+        let prefix_cache_hits = reg.counter(
+            "hbllm_prefix_cache_hits_total",
+            "Generation admissions that mapped a cached prompt prefix.",
+            &[],
+        );
+        let prefix_cache_misses = reg.counter(
+            "hbllm_prefix_cache_misses_total",
+            "Generation admissions that found no cached prompt prefix.",
+            &[],
+        );
         let connections = FRONT_LABELS.map(|f| {
             reg.gauge(
                 "hbllm_connections_active",
@@ -649,6 +671,9 @@ impl ServeMetrics {
             kv_blocks_used,
             kv_blocks_total,
             kv_blocks_used_hwm,
+            shared_blocks,
+            prefix_cache_hits,
+            prefix_cache_misses,
             connections,
         }
     }
@@ -950,6 +975,9 @@ hbllm_test_us_count 4
             "# TYPE hbllm_spec_rounds_total counter",
             "# TYPE hbllm_active_lanes gauge",
             "# TYPE hbllm_kv_blocks_used_hwm gauge",
+            "# TYPE hbllm_shared_blocks gauge",
+            "# TYPE hbllm_prefix_cache_hits_total counter",
+            "# TYPE hbllm_prefix_cache_misses_total counter",
             "# TYPE hbllm_connections_active gauge",
             "hbllm_requests_finished_total{priority=\"batch\",outcome=\"error\"} 1",
             "hbllm_evictions_total{cause=\"kv_exhausted\"} 1",

@@ -25,6 +25,7 @@
 pub mod batcher;
 pub mod http;
 pub mod metrics;
+pub mod prefix;
 pub mod progress;
 pub mod scheduler;
 pub mod serve;

@@ -1,0 +1,575 @@
+//! Radix-trie prompt-prefix cache for prefix-sharing KV reuse.
+//!
+//! Chat traffic is dominated by repeated prompt prefixes (system prompts,
+//! few-shot preambles). After a generation request finishes, the scheduler
+//! can retain its prompt's KV blocks ([`Backend::kv_retain_prefix`]) and
+//! park them here; a later admission whose prompt starts with a cached
+//! prefix maps those same physical blocks read-only
+//! ([`Backend::kv_adopt_prefix`]) and skips prefill for the matched
+//! positions. Divergence is handled by the pool's copy-on-write path
+//! ([`PagedKv::ensure_pos`]), so shared-prefix decode stays byte-identical
+//! to an independent prefill (pinned by `tests/prefix_parity.rs`).
+//!
+//! # Ownership contract
+//!
+//! The cache never touches the block pool itself — it only *holds* block
+//! ids whose refcounts the scheduler already bumped through the backend:
+//!
+//! * [`PrefixCache::insert`] takes ownership of a retained block list.
+//!   Its return value is every block list the caller must now release
+//!   (`kv_release_blocks`): LRU victims evicted to make room, or the
+//!   offered list itself when the insert is rejected (duplicate key, or
+//!   every resident entry pinned by a live mapping).
+//! * [`PrefixCache::drain`] returns every remaining list the same way —
+//!   the engine loop flushes the cache through it at shutdown so the
+//!   arena drains to `free == total`.
+//!
+//! An entry mapped into a decode lane ([`PrefixCache::mark_hit`]) is
+//! `live` until [`PrefixCache::release_lane`] runs for that lane; live
+//! entries are never evicted, so a cached prefix cannot be dropped out
+//! from under a sequence that shares its blocks (the blocks themselves
+//! are also refcount-protected — this guard keeps the *cache accounting*
+//! honest, e.g. hit-rate and eviction order).
+//!
+//! # Structure
+//!
+//! Keys live in a compressed radix trie over raw prompt bytes (arena of
+//! nodes + free list, children keyed by first label byte), so
+//! [`PrefixCache::lookup`] finds the longest cached prefix of a prompt in
+//! one walk. Removal prunes emptied leaves but does not re-merge
+//! pass-through interior nodes; their count is bounded by
+//! `capacity × max cached prefix length`, which the small fixed
+//! capacities used in serving keep negligible.
+//!
+//! [`Backend::kv_retain_prefix`]: crate::engine::Backend::kv_retain_prefix
+//! [`Backend::kv_adopt_prefix`]: crate::engine::Backend::kv_adopt_prefix
+//! [`PagedKv::ensure_pos`]: crate::engine::paged::PagedKv::ensure_pos
+
+use std::collections::BTreeMap;
+
+/// One node of the compressed radix trie.
+struct Node {
+    /// Bytes consumed stepping from the parent into this node (non-empty
+    /// except at the root).
+    label: Vec<u8>,
+    /// Entry id if a cached prefix ends exactly here.
+    entry: Option<usize>,
+    /// Children keyed by the first byte of their label (at most one child
+    /// per leading byte — the radix invariant).
+    children: BTreeMap<u8, usize>,
+}
+
+/// Arena-allocated compressed radix trie mapping byte keys to entry ids.
+struct Radix {
+    /// Slot 0 is the root (empty label, never freed).
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+}
+
+impl Radix {
+    fn new() -> Radix {
+        Radix {
+            nodes: vec![Node { label: Vec::new(), entry: None, children: BTreeMap::new() }],
+            free: Vec::new(),
+        }
+    }
+
+    fn alloc(&mut self, node: Node) -> usize {
+        match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Attach `entry` at exactly `key` (non-empty, not already present —
+    /// the cache checks `contains` first).
+    fn insert(&mut self, key: &[u8], entry: usize) {
+        let mut node = 0usize;
+        let mut rest = key;
+        loop {
+            let Some(&first) = rest.first() else {
+                debug_assert!(
+                    self.nodes[node].entry.is_none(),
+                    "duplicate radix insert"
+                );
+                self.nodes[node].entry = Some(entry);
+                return;
+            };
+            let Some(&child) = self.nodes[node].children.get(&first) else {
+                let leaf = self.alloc(Node {
+                    label: rest.to_vec(),
+                    entry: Some(entry),
+                    children: BTreeMap::new(),
+                });
+                self.nodes[node].children.insert(first, leaf);
+                return;
+            };
+            let common = rest
+                .iter()
+                .zip(self.nodes[child].label.iter())
+                .take_while(|(a, b)| a == b)
+                .count();
+            if common == self.nodes[child].label.len() {
+                // the whole child label is consumed; descend
+                node = child;
+                rest = &rest[common..];
+                continue;
+            }
+            // split the child: it keeps the common head (>= 1 byte since
+            // children are keyed by first byte), and its old content moves
+            // to a new node under the diverging tail
+            let tail = self.nodes[child].label.split_off(common);
+            let moved = Node {
+                label: tail,
+                entry: self.nodes[child].entry.take(),
+                children: std::mem::take(&mut self.nodes[child].children),
+            };
+            let moved_first = moved.label[0];
+            let moved_id = self.alloc(moved);
+            self.nodes[child].children.insert(moved_first, moved_id);
+            node = child;
+            rest = &rest[common..];
+            // next iteration lands the remainder: empty -> entry on the
+            // split node; non-empty -> a fresh leaf (its first byte
+            // differs from `moved_first` by construction)
+        }
+    }
+
+    /// Longest cached prefix of `key`: walks the trie while whole labels
+    /// match, returning the deepest entry passed — `(entry id, its key
+    /// length)` — or `None` when no cached key prefixes `key`.
+    fn longest(&self, key: &[u8]) -> Option<(usize, usize)> {
+        let mut node = 0usize;
+        let mut consumed = 0usize;
+        let mut best = None;
+        loop {
+            if let Some(e) = self.nodes[node].entry {
+                best = Some((e, consumed));
+            }
+            let Some(&first) = key.get(consumed) else { return best };
+            let Some(&child) = self.nodes[node].children.get(&first) else { return best };
+            let label = &self.nodes[child].label;
+            if key.len() - consumed < label.len()
+                || key[consumed..consumed + label.len()] != **label
+            {
+                return best;
+            }
+            consumed += label.len();
+            node = child;
+        }
+    }
+
+    /// Detach the entry stored at exactly `key` (no-op when absent) and
+    /// prune emptied leaves back up the path. Pass-through interior nodes
+    /// are left in place (see the module docs for the size bound).
+    fn remove(&mut self, key: &[u8]) {
+        let mut path = vec![0usize];
+        let mut consumed = 0usize;
+        while consumed < key.len() {
+            let node = *path.last().unwrap();
+            let Some(&child) = self.nodes[node].children.get(&key[consumed]) else { return };
+            let label_len = self.nodes[child].label.len();
+            if key.len() - consumed < label_len
+                || key[consumed..consumed + label_len] != self.nodes[child].label[..]
+            {
+                return;
+            }
+            consumed += label_len;
+            path.push(child);
+        }
+        let last = *path.last().unwrap();
+        self.nodes[last].entry = None;
+        for i in (1..path.len()).rev() {
+            let n = path[i];
+            if self.nodes[n].entry.is_some() || !self.nodes[n].children.is_empty() {
+                break;
+            }
+            let first = self.nodes[n].label[0];
+            self.nodes[path[i - 1]].children.remove(&first);
+            self.nodes[n].label = Vec::new();
+            self.free.push(n);
+        }
+    }
+}
+
+/// One cached prompt prefix and the retained KV blocks backing it.
+struct Entry {
+    prefix: Vec<u8>,
+    /// Block ids covering positions `0..prefix.len()`; the cache holds
+    /// one refcount on each (bumped by `kv_retain_prefix` before insert).
+    blocks: Vec<usize>,
+    /// Logical LRU timestamp (cache clock, not wall time).
+    last_used: u64,
+    /// Decode lanes currently mapping this entry; > 0 pins it against
+    /// eviction.
+    live: usize,
+}
+
+/// LRU prompt-prefix cache over a radix trie — see the module docs for
+/// the lifecycle and the block-ownership contract.
+pub struct PrefixCache {
+    capacity: usize,
+    radix: Radix,
+    entries: Vec<Option<Entry>>,
+    free_ids: Vec<usize>,
+    /// Logical clock bumped on every hit/insert/touch; orders LRU.
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    /// lane -> entry id mapped into that lane (one at a time per lane).
+    lanes: BTreeMap<usize, usize>,
+}
+
+impl PrefixCache {
+    /// A cache holding at most `capacity` prefixes (0 disables inserts —
+    /// every offer is handed straight back for release).
+    pub fn new(capacity: usize) -> PrefixCache {
+        PrefixCache {
+            capacity,
+            radix: Radix::new(),
+            entries: Vec::new(),
+            free_ids: Vec::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            lanes: BTreeMap::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Resident entries.
+    pub fn len(&self) -> usize {
+        self.entries.iter().filter(|e| e.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admissions that mapped a cached prefix (counted by [`mark_hit`]).
+    ///
+    /// [`mark_hit`]: PrefixCache::mark_hit
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Admissions that found no usable prefix (counted by [`mark_miss`]).
+    ///
+    /// [`mark_miss`]: PrefixCache::mark_miss
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Whether exactly `prefix` is cached.
+    pub fn contains(&self, prefix: &[u8]) -> bool {
+        !prefix.is_empty()
+            && self.radix.longest(prefix).is_some_and(|(_, m)| m == prefix.len())
+    }
+
+    /// Longest cached prefix usable for `prompt`, considering at most its
+    /// first `limit` bytes (the scheduler passes `prompt.len() - 1` so an
+    /// adoption always leaves at least one pending byte to decode).
+    /// Returns `(entry id, matched positions)`. Pure — counting a hit or
+    /// miss is the caller's explicit [`mark_hit`]/[`mark_miss`] call, so
+    /// stalled admissions retrying every step don't inflate the counters.
+    ///
+    /// [`mark_hit`]: PrefixCache::mark_hit
+    /// [`mark_miss`]: PrefixCache::mark_miss
+    pub fn lookup(&self, prompt: &[u8], limit: usize) -> Option<(usize, usize)> {
+        let limit = limit.min(prompt.len());
+        let (id, matched) = self.radix.longest(&prompt[..limit])?;
+        (matched > 0).then_some((id, matched))
+    }
+
+    /// The retained block list behind entry `id` (from [`lookup`]) — what
+    /// the scheduler hands to `kv_adopt_prefix`.
+    ///
+    /// [`lookup`]: PrefixCache::lookup
+    pub fn blocks(&self, id: usize) -> &[usize] {
+        &self.entries[id].as_ref().expect("stale prefix-cache entry id").blocks
+    }
+
+    /// Record that `lane` adopted entry `id`: counts the hit, freshens the
+    /// LRU stamp, and pins the entry against eviction until
+    /// [`release_lane`](PrefixCache::release_lane).
+    pub fn mark_hit(&mut self, id: usize, lane: usize) {
+        self.release_lane(lane); // a lane maps at most one entry
+        self.hits += 1;
+        self.clock += 1;
+        let e = self.entries[id].as_mut().expect("stale prefix-cache entry id");
+        e.last_used = self.clock;
+        e.live += 1;
+        self.lanes.insert(lane, id);
+    }
+
+    /// Count one admission that adopted nothing.
+    pub fn mark_miss(&mut self) {
+        self.misses += 1;
+    }
+
+    /// Drop `lane`'s pin (no-op when the lane maps nothing). Call at
+    /// every point a lane's sequence ends — finish, eviction, poison.
+    pub fn release_lane(&mut self, lane: usize) {
+        if let Some(id) = self.lanes.remove(&lane) {
+            if let Some(e) = self.entries[id].as_mut() {
+                e.live = e.live.saturating_sub(1);
+            }
+        }
+    }
+
+    /// Freshen the LRU stamp of an exactly-cached `prefix` (used instead
+    /// of a duplicate insert when a finishing prompt is already cached).
+    pub fn touch(&mut self, prefix: &[u8]) {
+        if let Some((id, m)) = self.radix.longest(prefix) {
+            if m == prefix.len() {
+                self.clock += 1;
+                if let Some(e) = self.entries[id].as_mut() {
+                    e.last_used = self.clock;
+                }
+            }
+        }
+    }
+
+    /// Offer a retained `(prefix, blocks)` pair. Returns every block list
+    /// the caller must now release through the backend: LRU victims
+    /// evicted to make room, or — when the offer is rejected (empty or
+    /// duplicate key, zero capacity, or all residents pinned live) — the
+    /// offered `blocks` themselves. The caller releases everything
+    /// returned, unconditionally; an empty return means the insert landed
+    /// and the cache kept the blocks.
+    #[must_use = "returned block lists still hold refcounts and must be released"]
+    pub fn insert(&mut self, prefix: Vec<u8>, blocks: Vec<usize>) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        if prefix.is_empty() || self.capacity == 0 || self.contains(&prefix) {
+            out.push(blocks);
+            return out;
+        }
+        while self.len() >= self.capacity {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter_map(|(i, e)| e.as_ref().map(|e| (i, e)))
+                .filter(|(_, e)| e.live == 0)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i);
+            match victim {
+                Some(i) => out.push(self.evict(i)),
+                None => {
+                    // every resident entry is mapped into a live lane;
+                    // rejecting keeps the never-evict-live invariant
+                    out.push(blocks);
+                    return out;
+                }
+            }
+        }
+        self.clock += 1;
+        let entry = Entry { prefix, blocks, last_used: self.clock, live: 0 };
+        let id = match self.free_ids.pop() {
+            Some(i) => {
+                self.entries[i] = Some(entry);
+                i
+            }
+            None => {
+                self.entries.push(Some(entry));
+                self.entries.len() - 1
+            }
+        };
+        self.radix.insert(&self.entries[id].as_ref().unwrap().prefix, id);
+        out
+    }
+
+    fn evict(&mut self, id: usize) -> Vec<usize> {
+        let e = self.entries[id].take().expect("evicting an empty cache slot");
+        self.radix.remove(&e.prefix);
+        self.free_ids.push(id);
+        e.blocks
+    }
+
+    /// Empty the cache, returning every held block list for release (the
+    /// engine loop flushes through this at shutdown so the arena drains
+    /// to `free == total`). Live pins are discarded with the entries —
+    /// the blocks a lane still maps stay protected by the lane's own
+    /// refcounts, not the cache's.
+    #[must_use = "returned block lists still hold refcounts and must be released"]
+    pub fn drain(&mut self) -> Vec<Vec<usize>> {
+        self.lanes.clear();
+        let out = self.entries.iter_mut().filter_map(Option::take).map(|e| e.blocks).collect();
+        self.entries.clear();
+        self.free_ids.clear();
+        self.radix = Radix::new();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn radix_longest_match_and_splits() {
+        let mut r = Radix::new();
+        r.insert(b"system: you are", 0);
+        r.insert(b"system: you can", 1); // splits at "system: you "
+        r.insert(b"sys", 2); // splits the shared head
+        assert_eq!(r.longest(b"system: you are helpful"), Some((0, 15)));
+        assert_eq!(r.longest(b"system: you can fly"), Some((1, 15)));
+        // deepest entry wins, shallower entries are fallbacks
+        assert_eq!(r.longest(b"system: you"), Some((2, 3)));
+        assert_eq!(r.longest(b"sys"), Some((2, 3)));
+        assert_eq!(r.longest(b"nothing"), None);
+        r.remove(b"sys");
+        assert_eq!(r.longest(b"system: you"), None);
+        assert_eq!(r.longest(b"system: you are helpful"), Some((0, 15)));
+    }
+
+    #[test]
+    fn lookup_clamps_to_limit_and_is_pure() {
+        let mut c = PrefixCache::new(4);
+        assert!(c.insert(b"hello world".to_vec(), vec![1, 2, 3]).is_empty());
+        // the full prompt equals the cached key, but limit = len - 1
+        // keeps one byte pending, so the match is refused
+        assert_eq!(c.lookup(b"hello world", 10), None);
+        assert_eq!(c.lookup(b"hello world, hi", 14), Some((0, 11)));
+        assert_eq!(c.blocks(0), &[1, 2, 3]);
+        // lookup counted nothing
+        assert_eq!((c.hits(), c.misses()), (0, 0));
+        c.mark_hit(0, 5);
+        c.mark_miss();
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_first() {
+        let mut c = PrefixCache::new(2);
+        assert!(c.insert(b"aaa".to_vec(), vec![10]).is_empty());
+        assert!(c.insert(b"bbb".to_vec(), vec![20]).is_empty());
+        // freshen "aaa" so "bbb" is the LRU victim
+        c.touch(b"aaa");
+        let evicted = c.insert(b"ccc".to_vec(), vec![30]);
+        assert_eq!(evicted, vec![vec![20]]);
+        assert!(c.contains(b"aaa") && c.contains(b"ccc") && !c.contains(b"bbb"));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn live_mapping_pins_entry_against_eviction() {
+        let mut c = PrefixCache::new(1);
+        assert!(c.insert(b"pinned".to_vec(), vec![7]).is_empty());
+        let (id, m) = c.lookup(b"pinned prompt", 12).unwrap();
+        assert_eq!(m, 6);
+        c.mark_hit(id, 0);
+        // the only resident is live: the offer comes straight back
+        let rejected = c.insert(b"other".to_vec(), vec![9]);
+        assert_eq!(rejected, vec![vec![9]]);
+        assert!(c.contains(b"pinned"));
+        // once the lane lets go, eviction works again
+        c.release_lane(0);
+        let evicted = c.insert(b"other".to_vec(), vec![9]);
+        assert_eq!(evicted, vec![vec![7]]);
+        assert!(c.contains(b"other") && !c.contains(b"pinned"));
+    }
+
+    #[test]
+    fn duplicate_and_empty_inserts_are_rejected() {
+        let mut c = PrefixCache::new(4);
+        assert!(c.insert(b"dup".to_vec(), vec![1]).is_empty());
+        assert_eq!(c.insert(b"dup".to_vec(), vec![2]), vec![vec![2]]);
+        assert_eq!(c.insert(Vec::new(), vec![3]), vec![vec![3]]);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.blocks(0), &[1], "duplicate insert must not clobber");
+        let mut off = PrefixCache::new(0);
+        assert_eq!(off.insert(b"x".to_vec(), vec![4]), vec![vec![4]]);
+    }
+
+    #[test]
+    fn drain_returns_every_held_block_list() {
+        let mut c = PrefixCache::new(3);
+        assert!(c.insert(b"a".to_vec(), vec![1, 2]).is_empty());
+        assert!(c.insert(b"b".to_vec(), vec![3]).is_empty());
+        c.mark_hit(c.lookup(b"ab", 1).unwrap().0, 0); // live pins don't block drain
+        let mut lists = c.drain();
+        lists.sort();
+        assert_eq!(lists, vec![vec![1, 2], vec![3]]);
+        assert!(c.is_empty());
+        assert_eq!(c.lookup(b"ab", 1), None);
+        // the cache is reusable after a drain
+        assert!(c.insert(b"a".to_vec(), vec![5]).is_empty());
+        assert_eq!(c.blocks(c.lookup(b"ab", 1).unwrap().0), &[5]);
+    }
+
+    #[test]
+    fn release_of_unmapped_lane_is_a_noop() {
+        let mut c = PrefixCache::new(2);
+        c.release_lane(3);
+        assert!(c.insert(b"k".to_vec(), vec![1]).is_empty());
+        let (id, _) = c.lookup(b"kk", 1).unwrap();
+        // re-hitting the same lane replaces, not stacks, the pin
+        c.mark_hit(id, 0);
+        c.mark_hit(id, 0);
+        c.release_lane(0);
+        // unpinned now: evictable
+        assert_eq!(c.insert(b"l".to_vec(), vec![2]), Vec::<Vec<usize>>::new());
+        assert_eq!(c.insert(b"m".to_vec(), vec![3]), vec![vec![1]]);
+    }
+
+    /// The radix trie agrees with a naive linear scan under random
+    /// insert/remove interleavings.
+    #[test]
+    fn prop_radix_matches_linear_scan() {
+        check(
+            "radix-vs-linear-scan",
+            200,
+            |g| {
+                let seed = g.rng.next_u64();
+                let ops = g.size(1, 40);
+                (seed, ops)
+            },
+            |&(seed, ops)| {
+                let mut rng = Pcg32::seeded(seed);
+                let mut key = |rng: &mut Pcg32| -> Vec<u8> {
+                    let len = 1 + rng.below(6);
+                    (0..len).map(|_| b'a' + rng.below(2) as u8).collect()
+                };
+                let mut radix = Radix::new();
+                let mut naive: Vec<(Vec<u8>, usize)> = Vec::new();
+                for op in 0..ops {
+                    let k = key(&mut rng);
+                    let present = naive.iter().any(|(nk, _)| *nk == k);
+                    if rng.below(3) == 0 {
+                        radix.remove(&k);
+                        naive.retain(|(nk, _)| *nk != k);
+                    } else if !present {
+                        radix.insert(&k, op);
+                        naive.push((k, op));
+                    }
+                    let q = key(&mut rng);
+                    let want = naive
+                        .iter()
+                        .filter(|(nk, _)| q.starts_with(nk))
+                        .max_by_key(|(nk, _)| nk.len())
+                        .map(|(nk, id)| (*id, nk.len()));
+                    let got = radix.longest(&q);
+                    if got != want {
+                        return Err(format!(
+                            "query {q:?}: radix {got:?} != naive {want:?} (keys: {:?})",
+                            naive.iter().map(|(k, _)| k.clone()).collect::<Vec<_>>()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -54,12 +54,14 @@
 use super::batcher::{
     Batcher, BatcherConfig, BatcherHandle, ClientQueue, Request, StatsSnapshot, Work,
 };
+use super::metrics::ServeMetrics;
 use super::scheduler::{GenEvent, GenScheduler, Priority};
 use crate::engine::paged::blocks_for;
 use crate::engine::Backend;
 use anyhow::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
 
 /// Decode steps a pending scoring batch waits for KV blocks before being
 /// flushed anyway (each step can evict and free blocks; after this many,
@@ -314,6 +316,10 @@ pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
     // one metrics bundle across scheduler lifecycle events and front-end
     // request accounting — what `GET /v1/metrics` renders
     sched.set_metrics(batcher.metrics().clone());
+    // prompt prefix cache (`serve --prefix-cache N`): finished prompts
+    // keep their leading KV blocks retained so later requests sharing a
+    // prefix map them read-only instead of re-prefilling
+    sched.set_prefix_cache(cfg.prefix_cache);
     let mut scores: Vec<Request> = Vec::new();
     let mut inbox: Vec<Work> = Vec::new();
     let mut connected = true;
@@ -357,7 +363,7 @@ pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
             }
         }
         if !connected && !sched.has_work() && scores.is_empty() {
-            return;
+            break;
         }
         // Scoring sweeps lane 0 over a full window, which on a metered
         // backend needs `ceil(seq / block_len)` KV blocks (lane 0's own
@@ -390,6 +396,9 @@ pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
             sched.step(be);
         }
     }
+    // shutdown: the prompt cache's retained blocks go back to the pool so
+    // the arena drains to empty (the soak harness asserts free == total)
+    sched.flush_prefix_cache(be);
 }
 
 /// The stats answer, built on the engine thread so scheduler queues and
@@ -444,9 +453,15 @@ fn accept_loop(front: FrontEnd, handle: BatcherHandle) {
 /// sessions run on spawned threads and communicate through the batcher
 /// channel. Returns when every front-end has exhausted its connection
 /// budget and all their sessions have drained (never, for a `max_conns:
-/// None` front-end).
-pub fn serve_fronts(fronts: Vec<FrontEnd>, be: &mut dyn Backend, cfg: BatcherConfig) -> Result<()> {
+/// None` front-end). The returned [`ServeMetrics`] bundle carries the
+/// run's final counters — what the CLI renders as its shutdown summary.
+pub fn serve_fronts(
+    fronts: Vec<FrontEnd>,
+    be: &mut dyn Backend,
+    cfg: BatcherConfig,
+) -> Result<Arc<ServeMetrics>> {
     let (batcher, handle) = Batcher::new(cfg);
+    let metrics = batcher.metrics().clone();
     let accepts: Vec<std::thread::JoinHandle<()>> = fronts
         .into_iter()
         .map(|front| {
@@ -459,7 +474,7 @@ pub fn serve_fronts(fronts: Vec<FrontEnd>, be: &mut dyn Backend, cfg: BatcherCon
     for a in accepts {
         a.join().ok();
     }
-    Ok(())
+    Ok(metrics)
 }
 
 /// Serve the TCP line protocol until `max_conns` connections have been
@@ -470,7 +485,7 @@ pub fn serve_on(
     be: &mut dyn Backend,
     cfg: BatcherConfig,
     max_conns: Option<usize>,
-) -> Result<()> {
+) -> Result<Arc<ServeMetrics>> {
     serve_fronts(vec![FrontEnd::line(listener, max_conns)], be, cfg)
 }
 

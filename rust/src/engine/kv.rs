@@ -173,6 +173,8 @@ impl KvPool {
             total_blocks: self.blocks.n_blocks(),
             free_blocks: self.blocks.free_blocks(),
             used_hwm: self.blocks.used_hwm(),
+            shared_blocks: self.blocks.shared_blocks(),
+            shared_hwm: self.blocks.shared_hwm(),
             lane_blocks: self.lanes.iter().map(|l| l.kv.held_blocks()).collect(),
             arena_bytes: self.blocks.bytes(),
         }

@@ -97,8 +97,17 @@ pub struct KvStats {
     /// lifetime — the capacity-planning signal: an arena whose high water
     /// never nears `total_blocks` can be shrunk without backpressure.
     pub used_hwm: usize,
+    /// Blocks currently mapped by more than one block table (a lane
+    /// sharing a prefix with another lane or with the serving prompt
+    /// cache) — prefill work the sharing path is deduplicating right now.
+    pub shared_blocks: usize,
+    /// High-water mark of `shared_blocks` over the arena's lifetime (the
+    /// serve shutdown summary's "was the cache earning its memory?"
+    /// signal).
+    pub shared_hwm: usize,
     /// Blocks currently held by each decode lane (`lane_blocks[i]` is
-    /// lane `i`; sums to `total_blocks - free_blocks`).
+    /// lane `i`; sums to `total_blocks - free_blocks` while no blocks are
+    /// shared — a shared block is counted by every lane mapping it).
     pub lane_blocks: Vec<usize>,
     /// Total bytes of the shared block arena (capacity, not fill level).
     pub arena_bytes: usize,
@@ -175,6 +184,41 @@ pub trait Backend {
     ) -> Option<KvStats> {
         let _ = (n_blocks, block_len);
         None
+    }
+
+    /// Retain the KV blocks covering `lane`'s first `positions` cached
+    /// positions on behalf of an external holder (the serving prompt
+    /// cache): every returned block's refcount is bumped, so the blocks
+    /// outlive the lane's eviction until [`Self::kv_release_blocks`]
+    /// drops them again. `None` on unmetered backends (the default), or
+    /// when the lane holds fewer than `positions` cached positions.
+    fn kv_retain_prefix(&mut self, lane: usize, positions: usize) -> Option<Vec<usize>> {
+        let _ = (lane, positions);
+        None
+    }
+
+    /// Drop references previously taken by [`Self::kv_retain_prefix`].
+    /// No-op on unmetered backends.
+    fn kv_release_blocks(&mut self, blocks: &[usize]) {
+        let _ = blocks;
+    }
+
+    /// Map a retained prefix into `lane` read-only: the lane is reset,
+    /// then starts at fill level `positions` over the shared `blocks`
+    /// with `prefix` as its consumed text — so the lane's next decode
+    /// sweep prefills only the bytes *beyond* the match, and its first
+    /// write into a shared block copy-on-writes a private clone
+    /// ([`PagedKv::share_prefix`](paged::PagedKv::share_prefix)). Returns
+    /// `false` (lane untouched) on unmetered backends, the default.
+    fn kv_adopt_prefix(
+        &mut self,
+        lane: usize,
+        blocks: &[usize],
+        positions: usize,
+        prefix: &[u8],
+    ) -> bool {
+        let _ = (lane, blocks, positions, prefix);
+        false
     }
 
     /// Next-token logits for several `(lane, text)` pairs in one step

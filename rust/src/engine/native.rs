@@ -587,6 +587,58 @@ impl Backend for NativeBackend {
         self.kv_stats()
     }
 
+    /// Bump the refcount of every block covering `lane`'s first
+    /// `positions` cached positions and hand the block list to the caller
+    /// (the serving prompt cache). The blocks now survive the lane's
+    /// eviction until `kv_release_blocks` drops them.
+    fn kv_retain_prefix(&mut self, lane: usize, positions: usize) -> Option<Vec<usize>> {
+        let bl = self.pool.blocks.block_len();
+        let l = self.pool.lanes.get(lane)?;
+        if positions == 0 || l.kv.len() < positions {
+            return None;
+        }
+        let taken: Vec<usize> = l.kv.block_table()[..blocks_for(positions, bl)].to_vec();
+        for &b in &taken {
+            self.pool.blocks.retain(b);
+        }
+        Some(taken)
+    }
+
+    fn kv_release_blocks(&mut self, blocks: &[usize]) {
+        for &b in blocks {
+            self.pool.blocks.release(b);
+        }
+    }
+
+    /// Reset `lane` and map the retained `blocks` into it read-only at
+    /// fill level `positions`, with `prefix` as its consumed text — the
+    /// lane's next `decode_batch` then takes the incremental path and
+    /// prefills only the bytes beyond the match; its first write into a
+    /// shared block copy-on-writes a private clone.
+    fn kv_adopt_prefix(
+        &mut self,
+        lane: usize,
+        blocks: &[usize],
+        positions: usize,
+        prefix: &[u8],
+    ) -> bool {
+        let bl = self.pool.blocks.block_len();
+        if lane >= self.pool.len()
+            || positions == 0
+            || positions != prefix.len()
+            || positions > self.model.config.seq_len
+            || blocks.len() < blocks_for(positions, bl)
+        {
+            return false;
+        }
+        self.reset_lane(lane);
+        let KvPool { blocks: arena, lanes } = &mut self.pool;
+        let l = &mut lanes[lane];
+        l.kv.share_prefix(arena, blocks, positions);
+        l.prefix.extend_from_slice(prefix);
+        true
+    }
+
     fn nll(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
         // lane 0 is always released, error or not — a failed row (bad
         // token, or KV exhaustion under a deliberately small arena) must
@@ -651,13 +703,16 @@ impl Backend for NativeBackend {
             if inc {
                 // pure incremental: only the unseen suffix runs through
                 // (saturating: an aborted sweep can leave one block grown
-                // past `len`, which simply gets reused)
+                // past `len`, which simply gets reused), plus one clone if
+                // the first write lands in a shared (prefix-cache) block
                 need += target.saturating_sub(lane_ref.kv.held_blocks());
+                need += lane_ref.kv.pending_cow(&self.pool.blocks);
                 done.push(keep);
             } else {
                 // window slid (or context switched): re-prefill from
-                // scratch — its current blocks come back to the free list
-                avail += lane_ref.kv.held_blocks();
+                // scratch — its sole-reference blocks come back to the
+                // free list (shared ones stay pinned by their other refs)
+                avail += lane_ref.kv.reclaimable_blocks(&self.pool.blocks);
                 need += target;
                 done.push(0);
             }
@@ -785,8 +840,22 @@ impl Backend for NativeBackend {
             let k_eff = k.min(s - window.len());
             let kept_blocks = blocks_for(keep, bl);
             let target = blocks_for(window.len() + k_eff, bl);
-            avail += lane_ref.kv.held_blocks().saturating_sub(kept_blocks);
+            // rollback credit: tail blocks beyond the kept prefix return
+            // to the free list only where this lane holds the sole
+            // reference (shared ones stay pinned by the prefix cache)
+            let table = lane_ref.kv.block_table();
+            avail += table[kept_blocks.min(table.len())..]
+                .iter()
+                .filter(|&&b| self.pool.blocks.refs(b) == 1)
+                .count();
             need += target - kept_blocks;
+            // first write after the rollback lands at `keep`: one clone
+            // if that slot is still a shared block
+            let cow_slot = keep / bl;
+            need += usize::from(
+                cow_slot < kept_blocks.min(table.len())
+                    && self.pool.blocks.refs(table[cow_slot]) > 1,
+            );
             windows.push(window);
             keeps.push(keep);
             k_effs.push(k_eff);
@@ -1201,6 +1270,59 @@ mod tests {
         let before = be.sweeps();
         be.decode_batch_spec(&[(0, b"abcd")], 2).unwrap();
         assert_eq!(be.sweeps(), before + 1);
+    }
+
+    #[test]
+    fn retain_adopt_roundtrip_shares_blocks_and_matches_prefill() {
+        let w = micro_weights(41);
+        let mut be =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        be.set_lanes(2);
+        be.set_kv_blocks(Some(8), Some(4));
+        let prompt: &[u8] = b"ta kiv";
+        be.decode_batch(&[(0, prompt)]).unwrap();
+        let cached = be.kv_retain_prefix(0, prompt.len()).unwrap();
+        assert_eq!(cached.len(), blocks_for(prompt.len(), 4));
+        assert_eq!(be.kv_stats().unwrap().shared_blocks, cached.len());
+        // evicting the donor lane keeps the cached blocks alive
+        be.reset_lane(0);
+        let st = be.kv_stats().unwrap();
+        assert_eq!(st.total_blocks - st.free_blocks, cached.len());
+        assert_eq!(st.shared_blocks, 0, "cache now holds the only reference");
+        // adopt into lane 1: decode runs incrementally (one sweep for the
+        // one unseen byte) and matches an independent prefill exactly
+        assert!(be.kv_adopt_prefix(1, &cached, prompt.len(), prompt));
+        let sweeps0 = be.sweeps();
+        let longer: &[u8] = b"ta kivo";
+        let got = be.decode_batch(&[(1, longer)]).unwrap().pop().unwrap();
+        assert_eq!(be.sweeps() - sweeps0, 1, "adopted lane re-prefilled");
+        let mut fresh =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        fresh.decode_step(prompt).unwrap();
+        let want = fresh.decode_step(longer).unwrap();
+        assert_eq!(got, want, "shared-prefix decode diverged");
+        // dropping the cache refs and the lane returns every block
+        be.kv_release_blocks(&cached);
+        be.reset_lane(1);
+        let st = be.kv_stats().unwrap();
+        assert_eq!(st.free_blocks, st.total_blocks, "blocks leaked");
+    }
+
+    #[test]
+    fn kv_adopt_rejects_malformed_mappings() {
+        let w = micro_weights(42);
+        let mut be =
+            NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+        be.set_lanes(2);
+        be.set_kv_blocks(Some(4), Some(4));
+        be.decode_batch(&[(0, b"abcde")]).unwrap();
+        let cached = be.kv_retain_prefix(0, 5).unwrap();
+        assert!(!be.kv_adopt_prefix(9, &cached, 5, b"abcde"), "lane out of range");
+        assert!(!be.kv_adopt_prefix(1, &cached, 5, b"abcd"), "prefix/positions mismatch");
+        assert!(!be.kv_adopt_prefix(1, &cached[..1], 5, b"abcde"), "too few blocks");
+        assert!(!be.kv_adopt_prefix(1, &cached, 0, b""), "empty adoption");
+        assert!(be.kv_adopt_prefix(1, &cached, 5, b"abcde"));
+        be.kv_release_blocks(&cached);
     }
 
     #[test]

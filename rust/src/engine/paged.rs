@@ -15,13 +15,26 @@
 //! error and the serving scheduler applies backpressure (queue stalls,
 //! lowest-progress eviction) instead of OOMing.
 //!
-//! Invariants (property-tested in this module and, heavier, in
-//! `tests/paged_parity.rs`):
+//! Blocks are **refcounted** so several sequences can map one physical
+//! prefix: [`PagedKv::share_prefix`] retains another table's leading
+//! blocks read-only (the serving prompt cache built on top of this skips
+//! prefill for the matched positions), and [`PagedKv::ensure_pos`]
+//! copy-on-writes the *divergence block* — the first shared block a
+//! sequence writes into is cloned to a private block before the write, so
+//! a shared prefix is never mutated in place. `release`/`clear`/
+//! `truncate_to` decrement instead of free while other references remain.
 //!
-//! * a block is owned by at most one live sequence — alloc never hands out
-//!   a block that has not been released, release of an unowned block
-//!   panics (double-free is a logic error, not a recoverable state);
-//! * `free_blocks() + used_blocks() == n_blocks()` at every step;
+//! Invariants (property-tested in this module and, heavier, in
+//! `tests/paged_parity.rs` / `tests/prefix_parity.rs`):
+//!
+//! * every block's refcount equals the number of live block-table entries
+//!   mapping it — alloc never hands out a referenced block, release of an
+//!   unreferenced block panics (double-free is a logic error, not a
+//!   recoverable state);
+//! * `free_blocks() + used_blocks() == n_blocks()` at every step, where a
+//!   block is "used" while its refcount is nonzero;
+//! * writes never land in a block with refcount > 1 (copy-on-write runs
+//!   first), so sharing is invisible to readers;
 //! * the logical↔physical mapping round-trips: position `p` lives at
 //!   `(table[p / block_len], p % block_len)` and reads back exactly what
 //!   was stored.
@@ -86,12 +99,22 @@ pub struct KvBlockPool {
     /// Free-list stack; initialized so blocks are handed out in index
     /// order (deterministic for tests).
     free: Vec<usize>,
-    /// Per-block ownership bit — the double-free/alias guard.
-    live: Vec<bool>,
+    /// Per-block reference count (0 = free) — the double-free/alias guard
+    /// and the prefix-sharing substrate: a block with `refs > 1` is mapped
+    /// by several block tables and is read-only until copy-on-write gives
+    /// a writer its private clone.
+    refs: Vec<u32>,
+    /// Blocks currently referenced more than once (maintained O(1) on
+    /// retain/release) — surfaced through `KvStats::shared_blocks` and
+    /// the `hbllm_shared_blocks` gauge.
+    shared: usize,
     /// High-water mark of concurrently allocated blocks over the pool's
     /// lifetime — the capacity-planning signal surfaced through
     /// `KvStats::used_hwm` and the `hbllm_kv_blocks_used_hwm` gauge.
     used_hwm: usize,
+    /// High-water mark of `shared` — how much prefill the sharing ever
+    /// deduplicated at once (serve shutdown summary).
+    shared_hwm: usize,
 }
 
 impl KvBlockPool {
@@ -109,8 +132,10 @@ impl KvBlockPool {
             k: vec![0.0; elems],
             v: vec![0.0; elems],
             free: (0..n_blocks).rev().collect(),
-            live: vec![false; n_blocks],
+            refs: vec![0; n_blocks],
+            shared: 0,
             used_hwm: 0,
+            shared_hwm: 0,
         }
     }
 
@@ -136,6 +161,23 @@ impl KvBlockPool {
         self.used_hwm
     }
 
+    /// Blocks currently mapped by more than one block table.
+    pub fn shared_blocks(&self) -> usize {
+        self.shared
+    }
+
+    /// Most blocks ever shared at once (never decreases; 0 until the
+    /// first [`KvBlockPool::retain`]).
+    pub fn shared_hwm(&self) -> usize {
+        self.shared_hwm
+    }
+
+    /// Current reference count of `block` (0 = free).
+    pub fn refs(&self, block: usize) -> u32 {
+        assert!(block < self.n_blocks, "refs of out-of-range kv block {block}");
+        self.refs[block]
+    }
+
     /// Total arena bytes (capacity, not fill level) across both sides.
     pub fn bytes(&self) -> usize {
         (self.k.len() + self.v.len()) * 4
@@ -146,12 +188,13 @@ impl KvBlockPool {
         2 * self.n_layers * self.block_len * self.d * 4
     }
 
-    /// Take a free block. Fails with [`KvExhausted`] when the pool is dry.
+    /// Take a free block (refcount 1). Fails with [`KvExhausted`] when the
+    /// pool is dry.
     pub fn alloc(&mut self) -> Result<usize, KvExhausted> {
         match self.free.pop() {
             Some(b) => {
-                debug_assert!(!self.live[b], "free list handed out a live block");
-                self.live[b] = true;
+                debug_assert!(self.refs[b] == 0, "free list handed out a live block");
+                self.refs[b] = 1;
                 self.used_hwm = self.used_hwm.max(self.used_blocks());
                 Ok(b)
             }
@@ -159,14 +202,35 @@ impl KvBlockPool {
         }
     }
 
-    /// Return a block to the free list. Panics on double-free or an
+    /// Add a reference to an allocated block — the prefix-sharing entry
+    /// point ([`PagedKv::share_prefix`] and the serving prompt cache call
+    /// this for every block they map). Panics on a free or out-of-range
+    /// block: retaining unowned memory would alias whatever sequence is
+    /// handed that block next.
+    pub fn retain(&mut self, block: usize) {
+        assert!(block < self.n_blocks, "retain of out-of-range kv block {block}");
+        assert!(self.refs[block] > 0, "retain of free kv block {block}");
+        if self.refs[block] == 1 {
+            self.shared += 1;
+            self.shared_hwm = self.shared_hwm.max(self.shared);
+        }
+        self.refs[block] += 1;
+    }
+
+    /// Drop one reference; the block returns to the free list only when
+    /// the last reference goes (sharing holders decrement, they never
+    /// free out from under each other). Panics on over-release or an
     /// out-of-range block — both are sequencer logic errors that would
     /// otherwise silently alias KV state across sequences.
     pub fn release(&mut self, block: usize) {
         assert!(block < self.n_blocks, "release of out-of-range kv block {block}");
-        assert!(self.live[block], "double free of kv block {block}");
-        self.live[block] = false;
-        self.free.push(block);
+        assert!(self.refs[block] > 0, "double free of kv block {block}");
+        self.refs[block] -= 1;
+        match self.refs[block] {
+            0 => self.free.push(block),
+            1 => self.shared -= 1,
+            _ => {}
+        }
     }
 
     #[inline]
@@ -194,6 +258,15 @@ impl KvBlockPool {
     pub fn val(&self, block: usize, layer: usize, off: usize) -> &[f32] {
         let o = self.idx(block, layer, off);
         &self.v[o..o + self.d]
+    }
+
+    /// Copy `src`'s full contents (all layers, all offsets, both sides)
+    /// into `dst` — the copy-on-write clone of a divergence block.
+    fn copy_block(&mut self, src: usize, dst: usize) {
+        debug_assert!(src < self.n_blocks && dst < self.n_blocks && src != dst);
+        let n = self.n_layers * self.block_len * self.d;
+        self.k.copy_within(src * n..(src + 1) * n, dst * n);
+        self.v.copy_within(src * n..(src + 1) * n, dst * n);
     }
 }
 
@@ -242,6 +315,14 @@ impl PagedKv {
         self.blocks.len()
     }
 
+    /// Held blocks whose release would actually hit the free list (sole
+    /// reference). Sweep planners count these — not `held_blocks` — when
+    /// budgeting how many blocks a [`PagedKv::clear`] frees, since blocks
+    /// shared with other holders survive the clear.
+    pub fn reclaimable_blocks(&self, pool: &KvBlockPool) -> usize {
+        self.blocks.iter().filter(|&&b| pool.refs(b) == 1).count()
+    }
+
     /// The block table (pool block index per `block_len` positions).
     pub fn block_table(&self) -> &[usize] {
         &self.blocks
@@ -255,12 +336,16 @@ impl PagedKv {
     }
 
     /// Grow the block table (allocating from `pool`) until position `pos`
-    /// is addressable. Fails with [`KvExhausted`] when the pool is dry; on
-    /// failure the table keeps whatever it grew so far — still a
-    /// consistent state, released by the next [`PagedKv::clear`].
+    /// is addressable **and writable**: every shared block the coming
+    /// writes (`len..=pos`) would land in is copy-on-write cloned to a
+    /// private block first, so a prefix mapped by other sequences is never
+    /// mutated in place. Fails with [`KvExhausted`] when the pool is dry;
+    /// on failure the table keeps whatever it grew or cloned so far —
+    /// still a consistent state, released by the next [`PagedKv::clear`].
     pub fn ensure_pos(&mut self, pool: &mut KvBlockPool, pos: usize) -> Result<(), KvExhausted> {
         debug_assert!(pos < self.seq, "position {pos} beyond seq cap {}", self.seq);
-        let need = blocks_for(pos + 1, pool.block_len());
+        let bl = pool.block_len();
+        let need = blocks_for(pos + 1, bl);
         while self.blocks.len() < need {
             match pool.alloc() {
                 Ok(b) => self.blocks.push(b),
@@ -272,11 +357,62 @@ impl PagedKv {
                 }
             }
         }
+        // copy-on-write pass: un-share the divergence block(s). Writes go
+        // to positions len..=pos, so only those slots can need a clone;
+        // fresh blocks from the loop above are born private (refs == 1).
+        for slot in (self.len / bl).min(pos / bl)..=pos / bl {
+            if pool.refs(self.blocks[slot]) > 1 {
+                let fresh = match pool.alloc() {
+                    Ok(b) => b,
+                    Err(_) => return Err(KvExhausted { needed: 1, free: 0 }),
+                };
+                pool.copy_block(self.blocks[slot], fresh);
+                pool.release(self.blocks[slot]);
+                self.blocks[slot] = fresh;
+            }
+        }
         Ok(())
     }
 
+    /// Map the leading `positions` of another block table into this empty
+    /// view **read-only**, retaining every mapped block. The view starts
+    /// at fill level `positions` — prefill for those positions is skipped
+    /// entirely — and the first write past the shared prefix triggers the
+    /// copy-on-write clone in [`PagedKv::ensure_pos`]. `donor` may be a
+    /// live sequence's table or the serving prompt cache's retained copy;
+    /// either way the donor keeps its own references.
+    pub fn share_prefix(&mut self, pool: &mut KvBlockPool, donor: &[usize], positions: usize) {
+        assert!(
+            self.blocks.is_empty() && self.len == 0,
+            "share_prefix into a non-empty view (clear it first)"
+        );
+        assert!(positions <= self.seq, "shared prefix {positions} beyond seq cap {}", self.seq);
+        let need = blocks_for(positions, pool.block_len());
+        assert!(
+            need <= donor.len(),
+            "donor table holds {} block(s), prefix of {positions} needs {need}",
+            donor.len()
+        );
+        for &b in &donor[..need] {
+            pool.retain(b);
+            self.blocks.push(b);
+        }
+        self.len = positions;
+    }
+
+    /// Blocks the next write (at position `len`) would have to
+    /// copy-on-write clone — 0, or 1 when the fill level sits inside a
+    /// shared divergence block. Admission/sweep planners add this to
+    /// their block budgets so a metered sweep never discovers mid-write
+    /// that the clone has no free block.
+    pub fn pending_cow(&self, pool: &KvBlockPool) -> usize {
+        let slot = self.len / pool.block_len();
+        usize::from(slot < self.blocks.len() && pool.refs(self.blocks[slot]) > 1)
+    }
+
     /// Store position `pos`'s K/V rows for `layer`. The caller must have
-    /// grown the table past `pos` (see [`PagedKv::ensure_pos`]) and bumps
+    /// grown the table past `pos` (see [`PagedKv::ensure_pos`], which also
+    /// copy-on-writes any shared block in the write range) and bumps
     /// `len` once per position via [`PagedKv::advance`] after all layers.
     pub fn store(
         &self,
@@ -287,7 +423,12 @@ impl PagedKv {
         v_row: &[f32],
     ) {
         let bl = pool.block_len();
-        pool.store(self.blocks[pos / bl], layer, pos % bl, k_row, v_row);
+        let b = self.blocks[pos / bl];
+        debug_assert!(
+            pool.refs(b) == 1,
+            "write into shared kv block {b} (ensure_pos would have cloned it)"
+        );
+        pool.store(b, layer, pos % bl, k_row, v_row);
     }
 
     #[inline]
@@ -323,7 +464,10 @@ impl PagedKv {
         self.len = pos.min(self.len);
     }
 
-    /// Logical reset: release every held block back to `pool`.
+    /// Logical reset: drop this view's reference on every held block. A
+    /// block mapped by no one else returns to the free list; one still
+    /// shared (another sequence or the prompt cache) merely loses this
+    /// reference.
     pub fn clear(&mut self, pool: &mut KvBlockPool) {
         for b in self.blocks.drain(..) {
             pool.release(b);
@@ -453,44 +597,193 @@ mod tests {
         assert_eq!(blocks_for(12, 1), 12);
     }
 
-    /// Drive `ops` random alloc-grow/truncate/release steps over `n_seqs`
-    /// sequences sharing one pool, verifying after every step: exact
-    /// free/used accounting, no block aliased across live sequences, and
-    /// `bytes()` constant (the arena never reallocates). Truncation (the
-    /// speculative-decode rollback) interleaves with growth and clears so
-    /// a partially rolled-back sequence's surviving rows must read back
-    /// exactly while its tail blocks are recycled by neighbors.
+    /// Fill `kv` with `positions` rows tagged `tag` (layer 0, d = 2).
+    fn fill(pool: &mut KvBlockPool, kv: &mut PagedKv, positions: usize, tag: f32) {
+        for pos in 0..positions {
+            kv.ensure_pos(pool, pos).unwrap();
+            let row = [pos as f32, tag];
+            kv.store(pool, 0, pos, &row, &row);
+            kv.advance();
+        }
+    }
+
+    #[test]
+    fn share_prefix_maps_donor_blocks_without_allocating() {
+        let mut pool = KvBlockPool::new(1, 2, 4, 2);
+        let mut donor = PagedKv::new(8);
+        fill(&mut pool, &mut donor, 5, 7.0); // 3 blocks
+        let free_before = pool.free_blocks();
+        let mut adopter = PagedKv::new(8);
+        let table: Vec<usize> = donor.block_table().to_vec();
+        adopter.share_prefix(&mut pool, &table, 5);
+        // no allocation: the same physical blocks, refcounted
+        assert_eq!(pool.free_blocks(), free_before);
+        assert_eq!((adopter.len(), adopter.held_blocks()), (5, 3));
+        assert_eq!(adopter.block_table(), donor.block_table());
+        assert_eq!(pool.shared_blocks(), 3);
+        assert_eq!(pool.shared_hwm(), 3);
+        for b in donor.block_table() {
+            assert_eq!(pool.refs(*b), 2);
+        }
+        // the adopter reads the donor's rows — prefill skipped entirely
+        for pos in 0..5 {
+            assert_eq!(adopter.key(&pool, 0, pos), [pos as f32, 7.0]);
+        }
+        // the divergence block (position 5 lives in half-full block 2) is
+        // what the next write would have to clone
+        assert_eq!(adopter.pending_cow(&pool), 1);
+        adopter.clear(&mut pool);
+        donor.clear(&mut pool);
+        assert_eq!(pool.free_blocks(), 4);
+        assert_eq!(pool.shared_blocks(), 0);
+        assert_eq!(pool.shared_hwm(), 3, "shared hwm survives the drain");
+    }
+
+    #[test]
+    fn cow_clones_divergence_block_on_first_write() {
+        let mut pool = KvBlockPool::new(1, 2, 4, 2);
+        let mut donor = PagedKv::new(8);
+        fill(&mut pool, &mut donor, 5, 7.0);
+        let mut adopter = PagedKv::new(8);
+        let table: Vec<usize> = donor.block_table().to_vec();
+        adopter.share_prefix(&mut pool, &table, 5);
+        // first write past the shared prefix: position 5 lands in shared
+        // block 2, which must be cloned (one alloc), not written in place
+        adopter.ensure_pos(&mut pool, 5).unwrap();
+        assert_eq!(pool.free_blocks(), 0, "COW clone did not allocate");
+        assert_ne!(adopter.block_table()[2], donor.block_table()[2], "divergence block not cloned");
+        assert_eq!(adopter.block_table()[..2], donor.block_table()[..2], "full blocks stay shared");
+        assert_eq!(pool.shared_blocks(), 2);
+        adopter.store(&mut pool, 0, 5, &[5.0, 9.0], &[5.0, 9.0]);
+        adopter.advance();
+        // the clone carried position 4's row across, and the donor's copy
+        // of position 4 (and its whole block) is untouched
+        assert_eq!(adopter.key(&pool, 0, 4), [4.0, 7.0]);
+        assert_eq!(adopter.key(&pool, 0, 5), [5.0, 9.0]);
+        assert_eq!(donor.key(&pool, 0, 4), [4.0, 7.0]);
+        assert_eq!(donor.len(), 5);
+        adopter.clear(&mut pool);
+        donor.clear(&mut pool);
+        assert_eq!(pool.free_blocks(), 4);
+    }
+
+    #[test]
+    fn release_decrements_and_frees_only_the_last_reference() {
+        let mut pool = KvBlockPool::new(1, 2, 3, 2);
+        let mut donor = PagedKv::new(6);
+        fill(&mut pool, &mut donor, 4, 3.0); // 2 full blocks
+        let mut adopter = PagedKv::new(6);
+        let table: Vec<usize> = donor.block_table().to_vec();
+        adopter.share_prefix(&mut pool, &table, 4);
+        // the donor leaving (evicted lane) must not free blocks the
+        // adopter still maps
+        donor.clear(&mut pool);
+        assert_eq!(pool.free_blocks(), 1, "shared blocks freed under the adopter");
+        assert_eq!(pool.shared_blocks(), 0);
+        for pos in 0..4 {
+            assert_eq!(adopter.key(&pool, 0, pos), [pos as f32, 3.0]);
+        }
+        // truncate decrements the tail reference; with the donor gone the
+        // tail block really frees
+        adopter.truncate_to(&mut pool, 2);
+        assert_eq!(pool.free_blocks(), 2);
+        adopter.clear(&mut pool);
+        assert_eq!(pool.free_blocks(), 3, "pool did not drain to empty");
+    }
+
+    #[test]
+    fn pending_cow_is_zero_for_block_aligned_prefixes() {
+        let mut pool = KvBlockPool::new(1, 2, 4, 2);
+        let mut donor = PagedKv::new(8);
+        fill(&mut pool, &mut donor, 4, 1.0); // exactly 2 blocks
+        let mut adopter = PagedKv::new(8);
+        let table: Vec<usize> = donor.block_table().to_vec();
+        adopter.share_prefix(&mut pool, &table, 4);
+        // fill level sits on a block boundary: the next write opens a
+        // fresh private block, nothing to clone
+        assert_eq!(adopter.pending_cow(&pool), 0);
+        adopter.ensure_pos(&mut pool, 4).unwrap();
+        adopter.store(&mut pool, 0, 4, &[4.0, 2.0], &[4.0, 2.0]);
+        adopter.advance();
+        assert_eq!(donor.key(&pool, 0, 3), [3.0, 1.0], "aligned share mutated the donor");
+        assert_eq!(pool.shared_blocks(), 2, "full blocks stay shared after the write");
+        adopter.clear(&mut pool);
+        donor.clear(&mut pool);
+    }
+
+    #[test]
+    #[should_panic(expected = "retain of free")]
+    fn retain_of_free_block_panics() {
+        let mut pool = KvBlockPool::new(1, 2, 2, 4);
+        let a = pool.alloc().unwrap();
+        pool.release(a);
+        pool.retain(a);
+    }
+
+    /// Drive `ops` random grow/share/truncate/release steps over `n_seqs`
+    /// sequences sharing one pool, verifying after every step: **exact
+    /// refcount accounting** (every block's refcount equals the number of
+    /// live block-table entries mapping it — this is simultaneously the
+    /// no-alias, no-leak, and no-double-free check), `free + used ==
+    /// total`, `shared_blocks` consistency, and `bytes()` constant (the
+    /// arena never reallocates). Sharing (`share_prefix`, the prompt-cache
+    /// substrate) interleaves with growth (which copy-on-writes divergence
+    /// blocks), truncation (spec-rejection rollback, decrementing shared
+    /// tails), and clears — and every sequence's contents must read back
+    /// exactly per a shadow model, so a COW write can never leak into a
+    /// sequence still mapping the original block.
     fn run_interleaving(seed: u64, n_seqs: usize, n_blocks: usize, block_len: usize, ops: usize) -> Result<(), String> {
         let mut rng = Pcg32::seeded(seed);
         let mut pool = KvBlockPool::new(1, 2, n_blocks, block_len);
         let arena_bytes = pool.bytes();
         let seq_cap = n_blocks * block_len;
         let mut seqs: Vec<PagedKv> = (0..n_seqs).map(|_| PagedKv::new(seq_cap)).collect();
+        // shadow model: the row each (sequence, position) must read back —
+        // an adopted prefix inherits the donor's rows until a write
+        // diverges it
+        let mut expect: Vec<Vec<[f32; 2]>> = vec![Vec::new(); n_seqs];
         for step in 0..ops {
             let i = rng.below(n_seqs);
             let dice = rng.f64();
-            if dice < 0.6 {
-                // grow by one position (may or may not need a block)
+            if dice < 0.5 {
+                // grow by one position (may need a fresh block and/or a
+                // copy-on-write clone of a shared divergence block)
                 if !seqs[i].is_full() {
                     let pos = seqs[i].len();
+                    let want = blocks_for(pos + 1, block_len)
+                        .saturating_sub(seqs[i].held_blocks())
+                        + seqs[i].pending_cow(&pool);
                     match seqs[i].ensure_pos(&mut pool, pos) {
                         Ok(()) => {
                             let row = [pos as f32, i as f32];
                             seqs[i].store(&mut pool, 0, pos, &row, &row);
                             seqs[i].advance();
+                            expect[i].push(row);
                         }
                         Err(e) => {
-                            if pool.free_blocks() != 0 {
+                            if pool.free_blocks() >= want {
                                 return Err(format!(
-                                    "step {step}: spurious {e} with {} free",
+                                    "step {step}: spurious {e} with {} free ({want} needed)",
                                     pool.free_blocks()
                                 ));
                             }
                         }
                     }
                 }
+            } else if dice < 0.65 {
+                // adopt a neighbor's prefix read-only (the prompt-cache
+                // path): reset, then map a random prefix of j's fill
+                let j = rng.below(n_seqs);
+                if j != i {
+                    let positions = rng.below(seqs[j].len() + 1);
+                    seqs[i].clear(&mut pool);
+                    let donor: Vec<usize> = seqs[j].block_table().to_vec();
+                    seqs[i].share_prefix(&mut pool, &donor, positions);
+                    expect[i] = expect[j][..positions].to_vec();
+                }
             } else if dice < 0.85 {
-                // roll back to a random earlier fill level (spec rejection)
+                // roll back to a random earlier fill level (spec
+                // rejection); a shared tail block decrements, not frees
                 let pos = rng.below(seqs[i].len() + 1);
                 let expect_held = blocks_for(pos, block_len);
                 seqs[i].truncate_to(&mut pool, pos);
@@ -503,34 +796,59 @@ mod tests {
                         seqs[i].held_blocks()
                     ));
                 }
+                expect[i].truncate(pos);
             } else {
                 seqs[i].clear(&mut pool);
+                expect[i].clear();
             }
-            // accounting is exact
-            let held: usize = seqs.iter().map(|s| s.held_blocks()).sum();
-            if held != pool.used_blocks() {
-                return Err(format!("step {step}: held {held} != used {}", pool.used_blocks()));
+            // exact refcount accounting — refs[b] must equal the number
+            // of live table entries mapping b (no alias, no leak, no
+            // double-free, all in one identity)
+            let mut counts = vec![0u32; n_blocks];
+            for s in &seqs {
+                for &b in s.block_table() {
+                    counts[b] += 1;
+                }
+            }
+            for (b, &c) in counts.iter().enumerate() {
+                if pool.refs(b) != c {
+                    return Err(format!(
+                        "step {step}: block {b} refcount {} != {c} live references",
+                        pool.refs(b)
+                    ));
+                }
+            }
+            let used = counts.iter().filter(|&&c| c > 0).count();
+            if used != pool.used_blocks() {
+                return Err(format!("step {step}: {used} referenced != used {}", pool.used_blocks()));
             }
             if pool.free_blocks() + pool.used_blocks() != pool.n_blocks() {
                 return Err(format!("step {step}: free+used != total"));
             }
+            let shared = counts.iter().filter(|&&c| c > 1).count();
+            if shared != pool.shared_blocks() {
+                return Err(format!(
+                    "step {step}: {shared} multi-ref blocks != shared_blocks {}",
+                    pool.shared_blocks()
+                ));
+            }
             if pool.bytes() != arena_bytes {
                 return Err(format!("step {step}: arena reallocated"));
             }
-            // no aliasing across live sequences
-            let mut seen: BTreeSet<usize> = BTreeSet::new();
-            for s in &seqs {
-                for &b in s.block_table() {
-                    if !seen.insert(b) {
-                        return Err(format!("step {step}: block {b} aliased"));
-                    }
-                }
-            }
-            // every sequence's contents survive its neighbors' churn
+            // every sequence reads back exactly its shadow-model rows —
+            // shared prefixes see the donor's rows, COW writes never leak
+            // into a neighbor still mapping the original block
             for (si, s) in seqs.iter().enumerate() {
+                if s.len() != expect[si].len() {
+                    return Err(format!(
+                        "step {step}: seq {si} fill {} != model {}",
+                        s.len(),
+                        expect[si].len()
+                    ));
+                }
                 for pos in 0..s.len() {
                     let k = s.key(&pool, 0, pos);
-                    if k != [pos as f32, si as f32] {
+                    if k != expect[si][pos] {
                         return Err(format!("step {step}: seq {si} pos {pos} corrupted"));
                     }
                 }

@@ -4,6 +4,11 @@
 //! deterministic seed; on failure it retries with a linear shrink pass (the
 //! generator receives a shrink level that should produce "smaller" cases)
 //! and panics with the seed so the failure is reproducible.
+//!
+//! Failures replay exactly: every panic prints the failing `seed=`, and
+//! setting `HBLLM_TEST_SEED=<seed>` overrides the name-hash base seed so
+//! case 0 of the local rerun regenerates the CI failure's input
+//! byte-for-byte (`HBLLM_TEST_SEED=123 cargo test <test_name>`).
 
 use super::rng::Pcg32;
 
@@ -40,7 +45,8 @@ pub fn check<T: std::fmt::Debug>(
     mut generate: impl FnMut(&mut Gen) -> T,
     mut prop: impl FnMut(&T) -> Result<(), String>,
 ) {
-    let base_seed = hb_seed(name);
+    let base_seed =
+        resolve_base_seed(name, std::env::var("HBLLM_TEST_SEED").ok().as_deref());
     for case in 0..cases {
         let seed = base_seed.wrapping_add(case as u64);
         let mut rng = Pcg32::seeded(seed);
@@ -54,13 +60,26 @@ pub fn check<T: std::fmt::Debug>(
                 let sinput = generate(&mut sg);
                 if let Err(smsg) = prop(&sinput) {
                     panic!(
-                        "property '{name}' failed (seed={seed}, shrink={level}): {smsg}\ninput: {sinput:?}"
+                        "property '{name}' failed (seed={seed}, shrink={level}): {smsg}\n\
+                         replay with HBLLM_TEST_SEED={seed}\ninput: {sinput:?}"
                     );
                 }
             }
-            panic!("property '{name}' failed (seed={seed}): {msg}\ninput: {input:?}");
+            panic!(
+                "property '{name}' failed (seed={seed}): {msg}\n\
+                 replay with HBLLM_TEST_SEED={seed}\ninput: {input:?}"
+            );
         }
     }
+}
+
+/// The base seed for a property: a decimal `HBLLM_TEST_SEED` override
+/// when set (and parseable — anything else falls back), otherwise the
+/// FNV-1a hash of the property name. With the override set, case 0 uses
+/// exactly that seed, so a `seed=N` from a CI panic replays as the first
+/// case locally.
+fn resolve_base_seed(name: &str, env: Option<&str>) -> u64 {
+    env.and_then(|v| v.trim().parse().ok()).unwrap_or_else(|| hb_seed(name))
 }
 
 /// FNV-1a hash of the property name -> base seed.
@@ -97,6 +116,17 @@ mod tests {
     #[should_panic(expected = "property 'always-fails' failed")]
     fn failing_property_panics_with_seed() {
         check("always-fails", 5, |g| g.size(1, 10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn seed_override_parses_and_falls_back() {
+        assert_eq!(resolve_base_seed("p", None), hb_seed("p"));
+        assert_eq!(resolve_base_seed("p", Some("42")), 42);
+        assert_eq!(resolve_base_seed("p", Some(" 7 ")), 7);
+        // garbage falls back to the name hash instead of hiding the run
+        assert_eq!(resolve_base_seed("p", Some("not-a-seed")), hb_seed("p"));
+        // the override is name-independent: one CI seed replays anywhere
+        assert_eq!(resolve_base_seed("a", Some("9")), resolve_base_seed("b", Some("9")));
     }
 
     #[test]

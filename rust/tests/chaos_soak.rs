@@ -673,6 +673,102 @@ fn chaos_soak_long() {
     run_chaos_fleet(92, 0x5eed_50a1, 4);
 }
 
+/// Repeated-prefix client waves against a prefix-cache-enabled server:
+/// one seeding request, then a wave of requests extending its prompt.
+/// At drain the hit/miss counters must account for every admission
+/// exactly (hits + misses == started), the only blocks still "used" are
+/// the ones the prompt cache legitimately retains (2 shared prefix
+/// blocks + one private tail per cached extension), and the shutdown
+/// flush returns the pool to `free == total` — no leak, no stale
+/// sharing.
+#[test]
+fn repeated_prefix_waves_drain_clean_with_consistent_hit_counters() {
+    let mut be = packed_micro(94);
+    be.set_lanes(2);
+    let block_len = 4usize;
+    let blocks = 2 * hbllm::engine::paged::blocks_for(be.seq(), block_len);
+    be.set_kv_blocks(Some(blocks), Some(block_len));
+    let (http_l, http_addr) = serve::bind("127.0.0.1:0").unwrap();
+
+    // wave 1 (1 request) seeds the cache; wave 2 (3 requests) extends
+    // the same 8-byte prompt, so every wave-2 admission is a hit
+    let wave2: [(&str, usize); 3] =
+        [("ta kivo r", 3), ("ta kivo re", 2), ("ta kivo rem", 1)];
+    let n_gens = 1 + wave2.len() as u64;
+    let supervisor = std::thread::spawn(move || {
+        let events =
+            read_sse(http_addr, r#"{"prompt": "ta kivo ", "max_new": 4}"#, Duration::ZERO);
+        assert_eq!(
+            events.last().map(|(e, d)| (e.as_str(), d.as_str())),
+            Some(("done", "4")),
+            "seed request failed: {events:?}"
+        );
+        let clients: Vec<_> = wave2
+            .iter()
+            .map(|&(prompt, max_new)| {
+                std::thread::spawn(move || {
+                    let body = format!(r#"{{"prompt": "{prompt}", "max_new": {max_new}}}"#);
+                    let events = read_sse(http_addr, &body, Duration::ZERO);
+                    let want = max_new.to_string();
+                    assert_eq!(
+                        events.last().map(|(e, d)| (e.as_str(), d.as_str())),
+                        Some(("done", want.as_str())),
+                        "prefix-extending request failed: {events:?}"
+                    );
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().expect("prefix client panicked");
+        }
+        drain_and_scrape(http_addr, n_gens)
+    });
+
+    serve::serve_fronts(
+        vec![http::HttpConn::front_end(http_l, Some(n_gens as usize + 1))],
+        &mut be,
+        BatcherConfig { prefix_cache: 8, ..Default::default() },
+    )
+    .unwrap();
+    let (stats, text) = supervisor.join().unwrap();
+    let m = parse_metrics(&text);
+    validate_exposition(&text);
+
+    // every admission is exactly one hit or one miss; only the seeding
+    // request (empty cache) can miss, every extension must hit
+    let hits = metric(&m, "hbllm_prefix_cache_hits_total");
+    let misses = metric(&m, "hbllm_prefix_cache_misses_total");
+    assert_eq!((hits, misses), (wave2.len() as f64, 1.0), "hit/miss split drifted");
+    assert_eq!(
+        hits + misses,
+        metric_sum(&m, "hbllm_requests_started_total", &[]),
+        "admissions escaped the hit/miss accounting"
+    );
+    let t = |k: &str| stats.at(&["totals", k]).and_then(Json::as_f64).unwrap();
+    assert_eq!(t("prefix_cache_hits"), hits, "/v1/stats disagrees with the exposition");
+    assert_eq!(t("prefix_cache_misses"), misses);
+
+    // at drain the only resident blocks are the cache's: the 2-block
+    // shared prefix plus one private tail per cached extension (lanes
+    // themselves hold nothing)
+    assert_eq!(metric(&m, "hbllm_kv_blocks_used"), (2 + wave2.len()) as f64);
+    assert_eq!(metric(&m, "hbllm_shared_blocks"), 2.0, "shared-prefix refcounts drifted");
+    assert_eq!(
+        stats.at(&["kv", "shared_blocks"]).and_then(Json::as_f64),
+        Some(2.0),
+        "/v1/stats kv.shared_blocks disagrees"
+    );
+    assert!(
+        stats.at(&["kv", "shared_hwm"]).and_then(Json::as_f64).unwrap() >= 2.0,
+        "shared high-water mark never rose"
+    );
+
+    // the shutdown flush returned every cache-held block to the pool
+    let st = be.kv_stats().expect("metered backend");
+    assert_eq!(st.free_blocks, st.total_blocks, "prefix cache leaked blocks at shutdown");
+    assert_eq!(st.shared_blocks, 0, "stale shared refcounts after flush");
+}
+
 /// An arena too small for any single request: every generation is
 /// admitted, stalls or decodes briefly, and terminates as `done` or
 /// `err kv exhausted` — never hangs, never leaks a block, and the

@@ -174,8 +174,16 @@ fn serving_docs_exist_and_are_linked() {
         "prio <interactive|batch>",
         "kv exhausted",
         "X-Priority",
+        "shared_blocks",
+        "prefix_cache_hits",
+        "prefix_cache_misses",
     ] {
         assert!(api.contains(needle), "docs/API.md lost its {needle:?} coverage");
+    }
+    // the prefix-sharing lifecycle is documented where the code lives
+    let arch = fs::read_to_string(root.join("docs/ARCHITECTURE.md")).unwrap();
+    for needle in ["Prefix sharing", "copy-on-write", "kv_adopt_prefix", "prefix_parity"] {
+        assert!(arch.contains(needle), "docs/ARCHITECTURE.md lost its {needle:?} coverage");
     }
     // the metric catalog covers the families the bundle registers
     let obs = fs::read_to_string(root.join("docs/OBSERVABILITY.md")).unwrap();
@@ -184,6 +192,9 @@ fn serving_docs_exist_and_are_linked() {
         "hbllm_requests_started_total",
         "hbllm_ttft_us",
         "hbllm_kv_blocks_used",
+        "hbllm_shared_blocks",
+        "hbllm_prefix_cache_hits_total",
+        "hbllm_prefix_cache_misses_total",
         "hbllm_connections_active",
         "chaos_soak",
     ] {
