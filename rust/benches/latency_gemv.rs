@@ -12,6 +12,10 @@ use hbllm::util::bench::{bench, black_box, Table};
 use hbllm::util::rng::Pcg32;
 
 fn main() {
+    println!(
+        "[latency] packed-GEMV kernel: {}",
+        hbllm::pack::kernels::active().name
+    );
     // OPT-175B shapes: attention d×d and MLP d×4d (scaled-down variants
     // first so the table also runs quickly on small machines)
     let shapes = [
@@ -38,7 +42,7 @@ fn main() {
             black_box(y[0]);
         });
 
-        let hp = HaarPackedLinear::from_dense(&w);
+        let hp = HaarPackedLinear::from_dense(&w).expect("bench shapes have even width");
         let mh = bench(label, 0.8, || {
             hp.gemv(&x, &mut y);
             black_box(y[0]);

@@ -104,6 +104,13 @@ OPTIONS:
                            re-prefilling (needs the native paged-KV backend;
                            default 0 = off)
   --pallas                 use the Pallas-attention HLO entry (xla backend)
+
+ENVIRONMENT:
+  HBLLM_KERNEL=K           force the packed-GEMV kernel (scalar|avx2|neon);
+                           unset auto-selects by CPU feature detection. All
+                           kernels are pinned bit-identical, so this only
+                           changes speed — scalar is the debugging reference
+  HBLLM_LOG=LEVEL          log threshold (error|warn|info|debug)
 ";
 
 fn session(args: &Args) -> Result<Session> {
@@ -296,10 +303,12 @@ fn serve_cmd(args: &Args) -> Result<()> {
         None => None,
     };
     println!(
-        "serving quantized ({label}) model on {local} [backend {}, {} lanes, max-new {}]",
+        "serving quantized ({label}) model on {local} [backend {}, {} lanes, max-new {}, \
+         gemv kernel {}]",
         be.name(),
         be.lanes(),
-        cfg.max_new_cap
+        cfg.max_new_cap,
+        crate::pack::kernels::active().name
     );
     if let Some((_, http_addr)) = &http {
         println!(

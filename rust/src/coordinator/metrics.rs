@@ -568,6 +568,11 @@ pub struct ServeMetrics {
     pub prefix_cache_misses: Counter,
     /// Open client connections, indexed 0 = tcp, 1 = http.
     pub connections: [Gauge; 2],
+    /// Info-style gauge: always 1, with the selected packed-GEMV kernel
+    /// (`pack::kernels::active()`) as its `kernel` label — so a
+    /// deployment can tell from its metrics whether it is running the
+    /// scalar, AVX2, or NEON path.
+    pub kernel_info: Gauge,
 }
 
 /// Index into `ServeMetrics::connections`.
@@ -655,6 +660,12 @@ impl ServeMetrics {
                 &[("front", f)],
             )
         });
+        let kernel_info = reg.gauge(
+            "hbllm_kernel_info",
+            "Selected packed-GEMV kernel (value is always 1; the kernel label carries the name).",
+            &[("kernel", crate::pack::kernels::active().name)],
+        );
+        kernel_info.set(1);
         ServeMetrics {
             registry: reg,
             started_at: Instant::now(),
@@ -675,6 +686,7 @@ impl ServeMetrics {
             prefix_cache_hits,
             prefix_cache_misses,
             connections,
+            kernel_info,
         }
     }
 
@@ -1009,6 +1021,18 @@ hbllm_test_us_count 4
         );
         assert!(text.contains("hbllm_tcp_requests_total{verb=\"ppl\"} 1"), "{text}");
         assert!(text.contains("hbllm_tcp_requests_total{verb=\"gen\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn kernel_info_exports_the_active_kernel_name() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.kernel_info.get(), 1);
+        let text = m.render();
+        let needle = format!(
+            "hbllm_kernel_info{{kernel=\"{}\"}} 1",
+            crate::pack::kernels::active().name
+        );
+        assert!(text.contains(&needle), "exposition lost {needle:?}:\n{text}");
     }
 
     #[test]

@@ -15,6 +15,14 @@
 //! binary dot product in the Haar domain; rows are fanned out across scoped
 //! threads when the layer is large enough.
 //!
+//! The binary dot itself is runtime-dispatched
+//! ([`pack::kernels`](crate::pack::kernels)): one kernel — scalar
+//! reference, AVX2, or NEON, selected once per process by CPU feature
+//! detection (`HBLLM_KERNEL` overrides) — serves plain decode, the
+//! low-band draft, and the multi-position verify sweep, and every kernel
+//! is pinned bit-identical to the scalar path, so the parity guarantees
+//! below hold whichever one runs.
+//!
 //! # KV memory layout
 //!
 //! KV state is **paged** ([`paged`]): one shared

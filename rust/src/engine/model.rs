@@ -335,27 +335,30 @@ impl PackedModel {
         let cfg = w.config.clone();
         ensure!(cfg.d_model % 2 == 0, "engine needs even d_model (row Haar)");
         ensure!(cfg.d_ff % 2 == 0, "engine needs even d_ff (row Haar)");
-        let linear = |name: &str| -> Linear {
-            // model stores [in, out] (x @ W); the engine wants [out, in]
+        let linear = |name: &str| -> Result<Linear> {
+            // model stores [in, out] (x @ W); the engine wants [out, in].
+            // Packing can fail with a typed `OddWidth` — unreachable after
+            // the even d_model/d_ff guards above, but propagated rather
+            // than asserted so the invariant lives in one place (pack/).
             let t = w.get(name).as_mat().transpose();
-            if pack {
-                Linear::Packed(HaarPackedLinear::from_dense(&t))
+            Ok(if pack {
+                Linear::Packed(HaarPackedLinear::from_dense(&t)?)
             } else {
                 Linear::Dense(t)
-            }
+            })
         };
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
             let p = |k: &str| format!("l{i}.{k}");
             layers.push(LayerWeights {
                 ln1: w.get(&p("ln1")).as_vec().to_vec(),
-                wq: linear(&p("wq")),
-                wk: linear(&p("wk")),
-                wv: linear(&p("wv")),
-                wo: linear(&p("wo")),
+                wq: linear(&p("wq"))?,
+                wk: linear(&p("wk"))?,
+                wv: linear(&p("wv"))?,
+                wo: linear(&p("wo"))?,
                 ln2: w.get(&p("ln2")).as_vec().to_vec(),
-                w1: linear(&p("w1")),
-                w2: linear(&p("w2")),
+                w1: linear(&p("w1"))?,
+                w2: linear(&p("w2"))?,
             });
         }
         Ok(PackedModel {
@@ -363,7 +366,7 @@ impl PackedModel {
             pos_emb: w.get("pos_emb").as_mat().clone(),
             layers,
             ln_f: w.get("ln_f").as_vec().to_vec(),
-            unemb: linear("unemb"),
+            unemb: linear("unemb")?,
             config: cfg,
         })
     }
@@ -463,7 +466,7 @@ mod tests {
     fn packed_linear_gemv_matches_pack_gemv() {
         let mut rng = Pcg32::seeded(2);
         let m = Matrix::from_fn(9, 64, |_, _| rng.normal_f32());
-        let p = HaarPackedLinear::from_dense(&m);
+        let p = HaarPackedLinear::from_dense(&m).unwrap();
         let x: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
         let mut want = vec![0.0; 9];
         p.gemv(&x, &mut want);
@@ -477,11 +480,10 @@ mod tests {
     fn gemv_batch_matches_per_lane_gemv() {
         let mut rng = Pcg32::seeded(7);
         let dense = Linear::Dense(Matrix::from_fn(11, 32, |_, _| rng.normal_f32()));
-        let packed = Linear::Packed(HaarPackedLinear::from_dense(&Matrix::from_fn(
-            11,
-            32,
-            |_, _| rng.normal_f32(),
-        )));
+        let packed = Linear::Packed(
+            HaarPackedLinear::from_dense(&Matrix::from_fn(11, 32, |_, _| rng.normal_f32()))
+                .unwrap(),
+        );
         for lin in [&dense, &packed] {
             let xs: Vec<Vec<f32>> = (0..3)
                 .map(|_| (0..32).map(|_| rng.normal_f32()).collect())
@@ -509,7 +511,7 @@ mod tests {
     fn linear_gemv_low_matches_pack_low_and_dense_full() {
         let mut rng = Pcg32::seeded(3);
         let m = Matrix::from_fn(9, 64, |_, _| rng.normal_f32());
-        let p = HaarPackedLinear::from_dense(&m);
+        let p = HaarPackedLinear::from_dense(&m).unwrap();
         let x: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
         let mut want = vec![0.0; 9];
         p.gemv_low(&x, &mut want);

@@ -82,6 +82,13 @@ impl NativeBackend {
     }
 
     pub fn with_threads(model: PackedModel, batch: usize, threads: usize) -> NativeBackend {
+        // every GEMV below (decode, draft, verify) dispatches through the
+        // process-wide packed-dot kernel; say which one once per backend
+        crate::util::log::info(&format!(
+            "native backend: {} threads, gemv kernel {}",
+            threads.max(1),
+            crate::pack::kernels::active().name
+        ));
         let pool = KvPool::new(&model.config, 1);
         NativeBackend {
             pool,

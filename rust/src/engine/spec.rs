@@ -30,6 +30,12 @@
 //! This module holds the shared types ([`SpecConfig`], [`SpecRound`],
 //! [`SpecStats`]) and the draft-side state machine; the verify sweep
 //! lives in `engine::native` next to the plain decode path it mirrors.
+//! Both the draft's low-band dots and the verify sweep's full dots route
+//! through the same runtime-dispatched kernel
+//! ([`pack::kernels::active`](crate::pack::kernels::active)) as plain
+//! decode — the SIMD paths accelerate all three at once, and their
+//! bit-identity pin is what keeps the accept scan, and therefore the
+//! byte-identical-output guarantee, kernel-independent.
 
 use super::kv::Arena;
 use super::model::PackedModel;

@@ -106,8 +106,16 @@ impl PackedModel {
                 Tensor::Vec1(v) => Record::Dense { rows: 1, cols: v.len(), data: v.clone() },
                 Tensor::Mat(m) => {
                     if linear.contains(name) {
-                        // paper orientation for packing
-                        Record::Packed(HaarPackedLinear::from_dense(&m.transpose()))
+                        // paper orientation for packing; a linear whose
+                        // packed width would be odd has no Haar band split
+                        // (`OddWidth`) — store it dense rather than
+                        // silently truncating its last column
+                        match HaarPackedLinear::from_dense(&m.transpose()) {
+                            Ok(p) => Record::Packed(p),
+                            Err(_) => {
+                                Record::Dense { rows: m.rows, cols: m.cols, data: m.data.clone() }
+                            }
+                        }
                     } else {
                         Record::Dense { rows: m.rows, cols: m.cols, data: m.data.clone() }
                     }
@@ -300,7 +308,13 @@ impl PackedModel {
                             }
                         }
                     }
-                    Record::Packed(HaarPackedLinear { bits, alpha, mu })
+                    // validated assembly: an odd `cols` (crafted or
+                    // bit-flipped) must fail the load, not produce a layer
+                    // whose GEMV ignores its last column
+                    match HaarPackedLinear::from_parts(bits, alpha, mu) {
+                        Ok(p) => Record::Packed(p),
+                        Err(e) => bail!("corrupt packed model: record {name:?}: {e}"),
+                    }
                 }
                 k => bail!("unknown record kind {k}"),
             };
@@ -351,7 +365,7 @@ mod tests {
                 let rows = 1 + rng.below(5);
                 let cols = 2 * (1 + rng.below(40)); // even; up to 80 > one word
                 let w = Matrix::from_fn(rows, cols, |_, _| rng.normal_f32() * 0.1);
-                Record::Packed(HaarPackedLinear::from_dense(&w))
+                Record::Packed(HaarPackedLinear::from_dense(&w).unwrap())
             };
             records.push((format!("{name}{ri}"), rec));
         }
@@ -466,6 +480,26 @@ mod tests {
     }
 
     #[test]
+    fn odd_cols_packed_record_is_rejected_at_load() {
+        // cols 2 -> 3 keeps words_per_row (and thus the declared payload)
+        // unchanged, so the record passes every length check and must be
+        // caught by the typed `OddWidth` validation in `from_parts`
+        let p = HaarPackedLinear::from_parts(
+            BitMatrix::zeros(1, 2),
+            vec![[0.0f32; 2]],
+            vec![[0.0f32; 2]],
+        )
+        .unwrap();
+        let model = PackedModel { records: vec![("w".into(), Record::Packed(p))] };
+        let mut bytes = model.to_bytes();
+        // record starts at 12: name_len(2) + name(1) + kind(1) + rows(4)
+        // => cols u32 at byte 20
+        bytes[20..24].copy_from_slice(&3u32.to_le_bytes());
+        let err = PackedModel::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("even input width"), "{err}");
+    }
+
+    #[test]
     fn f16_roundtrip_values() {
         for v in [0.0f32, 1.0, -1.0, 0.5, 65504.0, 1e-4, -3.1415926, 0.099975586] {
             let back = f16_bits_to_f32(f32_to_f16_bits(v));
@@ -483,7 +517,7 @@ mod tests {
     fn packed_roundtrip_preserves_gemv() {
         let mut rng = Pcg32::seeded(4);
         let w = Matrix::from_fn(32, 128, |_, _| rng.normal_f32() * 0.05);
-        let p = HaarPackedLinear::from_dense(&w);
+        let p = HaarPackedLinear::from_dense(&w).unwrap();
         let model = PackedModel {
             records: vec![("l0.wq".into(), Record::Packed(p.clone()))],
         };
@@ -532,7 +566,7 @@ mod tests {
         let mut rng = Pcg32::seeded(5);
         let w = Matrix::from_fn(64, 512, |_, _| rng.normal_f32());
         let model = PackedModel {
-            records: vec![("l".into(), Record::Packed(HaarPackedLinear::from_dense(&w)))],
+            records: vec![("l".into(), Record::Packed(HaarPackedLinear::from_dense(&w).unwrap()))],
         };
         let b = model.file_bits_per_linear_weight();
         assert!(b > 1.0 && b < 1.2, "{b}");

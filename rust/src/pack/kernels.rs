@@ -1,0 +1,380 @@
+//! Runtime-dispatched kernels for the packed sign-word dot product — the
+//! innermost loop of every decode, draft, and verify sweep.
+//!
+//! Three implementations of the same contract live here:
+//!
+//! * `scalar` — the byte-sign-table path, always compiled, always supported.
+//!   It is the canonical reference: the property tests and the
+//!   `kernels_conformance` suite pin every other kernel bit-identical to it.
+//! * `avx2` — x86-64, 8 f32 lanes per step (`_mm256`), selected when
+//!   `is_x86_feature_detected!("avx2")` holds at startup.
+//! * `neon` — aarch64, two 4-lane halves per step (`float32x4_t`).
+//!
+//! A note on the XNOR-popcount formulation from the binary-nets literature
+//! (BiLLM / PB-LLM in PAPERS.md): popcount realizes the speedup only when
+//! *both* operands are binarized. Here the activation side stays f32 (the
+//! Haar adjoint produces real-valued `z`), so the applicable trick is the
+//! FMA-free *sign gather*: the bit pattern becomes a sign-bit XOR mask and
+//! each step is a masked vector add — no multiplies, no table loads in the
+//! SIMD paths.
+//!
+//! ## The canonical reduction order
+//!
+//! f32 addition is not associative, and the serving parity suites
+//! (`engine_parity`, `spec_parity`, `prefix_parity`) demand byte-for-byte
+//! identical outputs whichever kernel runs. Every kernel therefore computes
+//! the *same* reduction, defined as:
+//!
+//! ```text
+//! lanes[8] = 0
+//! for j in j0..j1 (ascending):  lanes[j mod 8] += s_j · x[j]
+//! result = ((((((lanes[0] + lanes[1]) + lanes[2]) + ... ) + lanes[7])
+//! ```
+//!
+//! i.e. eight partial sums bucketed by *absolute* column index mod 8, each
+//! filled in ascending-`j` order, reduced left-to-right at the end. The
+//! bucketing is alignment-free — the value never depends on how `[j0, j1)`
+//! sits relative to byte or word boundaries — and it is exactly the shape a
+//! 256-bit register accumulates naturally, which is what lets the SIMD
+//! paths reproduce it bit-for-bit (for finite inputs; only NaN sign
+//! propagation may differ between `±1.0 * x` and a sign-bit XOR).
+//!
+//! ## Selection
+//!
+//! [`active`] resolves once per process, wasmer-style (an engine picked by
+//! `CpuFeature` set, SNIPPETS.md §2): the first compiled-in kernel the host
+//! supports wins, `scalar` is the fallback, and `HBLLM_KERNEL=<name>`
+//! (e.g. `HBLLM_KERNEL=scalar`) forces a specific kernel for debugging or
+//! cross-checking. An unknown or unsupported name logs a warning and falls
+//! back to auto-selection. The chosen name is printed in the `serve`
+//! banner and exported as the `kernel` label of `hbllm_kernel_info`.
+
+use std::sync::OnceLock;
+
+/// 256-entry byte -> eight ±1.0 multipliers table. Lets the scalar binary
+/// dot product run as plain vectorizable FMAs over 8-lane chunks instead of
+/// a serial trailing_zeros bit loop (§Perf L3: 53.7% -> ~30% of f32 GEMV).
+fn sign_table() -> &'static [[f32; 8]; 256] {
+    static TABLE: OnceLock<Box<[[f32; 8]; 256]>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = Box::new([[0f32; 8]; 256]);
+        for b in 0..256usize {
+            for k in 0..8 {
+                t[b][k] = if (b >> k) & 1 == 1 { 1.0 } else { -1.0 };
+            }
+        }
+        t
+    })
+}
+
+/// One sign-word dot implementation plus the metadata needed to pick it at
+/// startup. `name` is what the serve banner and `hbllm_kernel_info` report.
+pub struct Kernel {
+    pub name: &'static str,
+    supported: fn() -> bool,
+    dot: fn(&[u64], &[f32], usize, usize) -> f32,
+}
+
+impl Kernel {
+    /// Does the running CPU support this kernel? (`scalar` always does;
+    /// the SIMD kernels consult runtime feature detection, which std
+    /// caches after the first query.)
+    pub fn supported(&self) -> bool {
+        (self.supported)()
+    }
+
+    /// Σ_j s_j·x_j over `[j0, j1)` in the canonical reduction order (see
+    /// the module docs). The SIMD entries re-verify CPU support on entry —
+    /// a cached-flag load — so calling an unsupported kernel panics
+    /// instead of executing illegal instructions.
+    #[inline]
+    pub fn dot_range(&self, words: &[u64], x: &[f32], j0: usize, j1: usize) -> f32 {
+        (self.dot)(words, x, j0, j1)
+    }
+}
+
+impl std::fmt::Debug for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Kernel")
+            .field("name", &self.name)
+            .field("supported", &self.supported())
+            .finish()
+    }
+}
+
+fn scalar_supported() -> bool {
+    true
+}
+
+/// Scalar reference: byte-table body, per-bit head/tail, all feeding the
+/// eight `j mod 8` buckets of the canonical reduction.
+fn dot_scalar(words: &[u64], x: &[f32], j0: usize, j1: usize) -> f32 {
+    debug_assert!(j1 <= x.len());
+    debug_assert!(j0 >= j1 || (j1 - 1) / 64 < words.len());
+    let table = sign_table();
+    let mut lanes = [0f32; 8];
+    let mut j = j0;
+    // head: unaligned bits up to the next byte boundary
+    while j < j1 && j % 8 != 0 {
+        let bit = (words[j / 64] >> (j % 64)) & 1;
+        lanes[j % 8] += if bit == 1 { x[j] } else { -x[j] };
+        j += 1;
+    }
+    // body: whole bytes via the table; j % 8 == 0 here, so table slot k is
+    // exactly bucket (j + k) mod 8 == k
+    while j + 8 <= j1 {
+        let byte = ((words[j / 64] >> (j % 64)) & 0xff) as usize;
+        let signs = &table[byte];
+        let xs = &x[j..j + 8];
+        for k in 0..8 {
+            lanes[k] += signs[k] * xs[k];
+        }
+        j += 8;
+    }
+    // tail
+    while j < j1 {
+        let bit = (words[j / 64] >> (j % 64)) & 1;
+        lanes[j % 8] += if bit == 1 { x[j] } else { -x[j] };
+        j += 1;
+    }
+    let mut acc = 0f32;
+    for l in lanes {
+        acc += l;
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    pub fn supported() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+
+    pub fn dot(words: &[u64], x: &[f32], j0: usize, j1: usize) -> f32 {
+        // cached-flag load; guards the unsafe target_feature call below
+        assert!(supported(), "avx2 kernel invoked on a non-AVX2 host");
+        // SAFETY: AVX2 verified present on this CPU just above.
+        unsafe { dot_impl(words, x, j0, j1) }
+    }
+
+    /// Eight `j mod 8` buckets live in one `__m256`; each full byte is one
+    /// sign-bit XOR + vector add. Head/tail bits are folded into the same
+    /// bucket array before load / after store, so the reduction order is
+    /// exactly the canonical one.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_impl(words: &[u64], x: &[f32], j0: usize, j1: usize) -> f32 {
+        debug_assert!(j1 <= x.len());
+        debug_assert!(j0 >= j1 || (j1 - 1) / 64 < words.len());
+        let mut lanes = [0f32; 8];
+        let mut j = j0;
+        while j < j1 && j % 8 != 0 {
+            let bit = (words[j / 64] >> (j % 64)) & 1;
+            lanes[j % 8] += if bit == 1 { x[j] } else { -x[j] };
+            j += 1;
+        }
+        if j + 8 <= j1 {
+            // lane k of the register is bucket k: element k of a byte group
+            // tests bit k (set ⇒ +x, clear ⇒ flip the IEEE sign bit)
+            let bit_sel = _mm256_set_epi32(128, 64, 32, 16, 8, 4, 2, 1);
+            let sign_bit = _mm256_set1_epi32(i32::MIN);
+            let mut vacc = _mm256_loadu_ps(lanes.as_ptr());
+            while j + 8 <= j1 {
+                let byte = ((words[j / 64] >> (j % 64)) & 0xff) as i32;
+                let is_set = _mm256_cmpeq_epi32(
+                    _mm256_and_si256(_mm256_set1_epi32(byte), bit_sel),
+                    bit_sel,
+                );
+                let flip = _mm256_andnot_si256(is_set, sign_bit);
+                let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+                vacc = _mm256_add_ps(vacc, _mm256_xor_ps(xv, _mm256_castsi256_ps(flip)));
+                j += 8;
+            }
+            _mm256_storeu_ps(lanes.as_mut_ptr(), vacc);
+        }
+        while j < j1 {
+            let bit = (words[j / 64] >> (j % 64)) & 1;
+            lanes[j % 8] += if bit == 1 { x[j] } else { -x[j] };
+            j += 1;
+        }
+        let mut acc = 0f32;
+        for l in lanes {
+            acc += l;
+        }
+        acc
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    pub fn supported() -> bool {
+        // NEON is architecturally mandatory for aarch64 std targets, but
+        // consult the runtime detector anyway to keep the selection logic
+        // uniform across kernels.
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+
+    pub fn dot(words: &[u64], x: &[f32], j0: usize, j1: usize) -> f32 {
+        assert!(supported(), "neon kernel invoked without NEON support");
+        // SAFETY: NEON verified present on this CPU just above.
+        unsafe { dot_impl(words, x, j0, j1) }
+    }
+
+    /// The eight buckets split across two `float32x4_t` halves (buckets
+    /// 0..4 and 4..8); each full byte is two sign-bit XORs + two vector
+    /// adds. Same canonical reduction as the scalar reference.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_impl(words: &[u64], x: &[f32], j0: usize, j1: usize) -> f32 {
+        debug_assert!(j1 <= x.len());
+        debug_assert!(j0 >= j1 || (j1 - 1) / 64 < words.len());
+        let mut lanes = [0f32; 8];
+        let mut j = j0;
+        while j < j1 && j % 8 != 0 {
+            let bit = (words[j / 64] >> (j % 64)) & 1;
+            lanes[j % 8] += if bit == 1 { x[j] } else { -x[j] };
+            j += 1;
+        }
+        if j + 8 <= j1 {
+            let sel_lo: [u32; 4] = [1, 2, 4, 8];
+            let sel_hi: [u32; 4] = [16, 32, 64, 128];
+            let bits_lo = vld1q_u32(sel_lo.as_ptr());
+            let bits_hi = vld1q_u32(sel_hi.as_ptr());
+            let sign_bit = vdupq_n_u32(0x8000_0000);
+            let mut acc_lo = vld1q_f32(lanes.as_ptr());
+            let mut acc_hi = vld1q_f32(lanes.as_ptr().add(4));
+            while j + 8 <= j1 {
+                let byte = ((words[j / 64] >> (j % 64)) & 0xff) as u32;
+                let b = vdupq_n_u32(byte);
+                let set_lo = vceqq_u32(vandq_u32(b, bits_lo), bits_lo);
+                let set_hi = vceqq_u32(vandq_u32(b, bits_hi), bits_hi);
+                // BIC: sign_bit & !set — bit set ⇒ no flip (+x), clear ⇒ -x
+                let flip_lo = vbicq_u32(sign_bit, set_lo);
+                let flip_hi = vbicq_u32(sign_bit, set_hi);
+                let xlo = vld1q_f32(x.as_ptr().add(j));
+                let xhi = vld1q_f32(x.as_ptr().add(j + 4));
+                acc_lo = vaddq_f32(
+                    acc_lo,
+                    vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(xlo), flip_lo)),
+                );
+                acc_hi = vaddq_f32(
+                    acc_hi,
+                    vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(xhi), flip_hi)),
+                );
+                j += 8;
+            }
+            vst1q_f32(lanes.as_mut_ptr(), acc_lo);
+            vst1q_f32(lanes.as_mut_ptr().add(4), acc_hi);
+        }
+        while j < j1 {
+            let bit = (words[j / 64] >> (j % 64)) & 1;
+            lanes[j % 8] += if bit == 1 { x[j] } else { -x[j] };
+            j += 1;
+        }
+        let mut acc = 0f32;
+        for l in lanes {
+            acc += l;
+        }
+        acc
+    }
+}
+
+const SCALAR: Kernel = Kernel { name: "scalar", supported: scalar_supported, dot: dot_scalar };
+
+#[cfg(target_arch = "x86_64")]
+static KERNELS: [Kernel; 2] = [
+    Kernel { name: "avx2", supported: avx2::supported, dot: avx2::dot },
+    SCALAR,
+];
+#[cfg(target_arch = "aarch64")]
+static KERNELS: [Kernel; 2] = [
+    Kernel { name: "neon", supported: neon::supported, dot: neon::dot },
+    SCALAR,
+];
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+static KERNELS: [Kernel; 1] = [SCALAR];
+
+/// Every kernel compiled into this binary, preferred first, `scalar` last.
+/// Compiled-in is not the same as runnable: check [`Kernel::supported`]
+/// before calling anything but `scalar` (the conformance suite does).
+pub fn all() -> &'static [Kernel] {
+    &KERNELS
+}
+
+/// Resolve a kernel: an explicitly `requested` name wins if it is
+/// compiled-in and supported; otherwise (or with `None`) the first
+/// supported kernel in preference order is chosen. `scalar` is always
+/// compiled-in and always supported, so this cannot fail.
+pub fn select(requested: Option<&str>) -> &'static Kernel {
+    if let Some(name) = requested {
+        match KERNELS.iter().find(|k| k.name == name) {
+            Some(k) if k.supported() => return k,
+            Some(k) => crate::util::log::warn(&format!(
+                "HBLLM_KERNEL={} is compiled in but unsupported on this CPU; auto-selecting",
+                k.name
+            )),
+            None => crate::util::log::warn(&format!(
+                "HBLLM_KERNEL={name} unknown (compiled in: {}); auto-selecting",
+                KERNELS.iter().map(|k| k.name).collect::<Vec<_>>().join(", ")
+            )),
+        }
+    }
+    KERNELS
+        .iter()
+        .find(|k| k.supported())
+        .expect("scalar kernel is always compiled in and supported")
+}
+
+/// The process-wide kernel, resolved once on first use from the
+/// `HBLLM_KERNEL` environment variable (unset ⇒ auto-select). Every GEMV
+/// in the pack layer routes through this — full decode, the low-band
+/// draft, and the multi-position verify sweep all dispatch here.
+pub fn active() -> &'static Kernel {
+    static ACTIVE: OnceLock<&'static Kernel> = OnceLock::new();
+    ACTIVE.get_or_init(|| {
+        let requested = std::env::var("HBLLM_KERNEL").ok();
+        select(requested.as_deref())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_always_compiled_in_and_supported() {
+        let k = all().iter().find(|k| k.name == "scalar").expect("scalar missing");
+        assert!(k.supported());
+        assert_eq!(all().last().unwrap().name, "scalar", "scalar must be the fallback");
+    }
+
+    #[test]
+    fn select_honors_explicit_scalar() {
+        // the HBLLM_KERNEL=scalar debugging override resolves through here
+        assert_eq!(select(Some("scalar")).name, "scalar");
+    }
+
+    #[test]
+    fn select_falls_back_on_unknown_names() {
+        let auto = select(None);
+        assert!(auto.supported());
+        assert_eq!(select(Some("definitely-not-a-kernel")).name, auto.name);
+    }
+
+    #[test]
+    fn active_is_a_supported_kernel() {
+        assert!(active().supported());
+    }
+
+    #[test]
+    fn empty_range_is_zero_for_every_supported_kernel() {
+        let words = [u64::MAX];
+        let x = [1.0f32; 64];
+        for k in all().iter().filter(|k| k.supported()) {
+            assert_eq!(k.dot_range(&words, &x, 5, 5).to_bits(), 0f32.to_bits(), "{}", k.name);
+            assert_eq!(k.dot_range(&words, &x, 0, 0).to_bits(), 0f32.to_bits(), "{}", k.name);
+        }
+    }
+}

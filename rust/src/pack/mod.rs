@@ -10,64 +10,41 @@
 //! The serialized form of these layers (the `.hbq` deployment artifact,
 //! written by [`format`]) is specified byte-by-byte in `docs/FORMAT.md` at
 //! the repository root.
+//!
+//! The sign-word dot itself — scalar reference plus runtime-dispatched
+//! AVX2/NEON SIMD variants, all pinned bit-identical — lives in
+//! [`kernels`]; everything in this module routes through
+//! [`kernels::active`], so full decode, the low-band draft, and the
+//! multi-position verify sweep share one kernel selection.
 
 pub mod format;
+pub mod kernels;
 
 use crate::haar;
 use crate::tensor::Matrix;
-use std::sync::OnceLock;
-
-/// 256-entry byte -> eight ±1.0 multipliers table. Lets the binary dot
-/// product run as plain vectorizable FMAs over 8-lane chunks instead of a
-/// serial trailing_zeros bit loop (§Perf L3: 53.7% -> ~30% of f32 GEMV).
-fn sign_table() -> &'static [[f32; 8]; 256] {
-    static TABLE: OnceLock<Box<[[f32; 8]; 256]>> = OnceLock::new();
-    TABLE.get_or_init(|| {
-        let mut t = Box::new([[0f32; 8]; 256]);
-        for b in 0..256usize {
-            for k in 0..8 {
-                t[b][k] = if (b >> k) & 1 == 1 { 1.0 } else { -1.0 };
-            }
-        }
-        t
-    })
-}
 
 /// Signed dot product of a packed sign row against `x` over [j0, j1):
 /// Σ_j s_j·x_j with s_j = ±1 from the bit pattern. `j0`/`j1` need not be
-/// word-aligned; full bytes take the vectorized path. Public because the
-/// native inference engine (`engine`) reuses it as its innermost kernel.
+/// word-aligned.
+///
+/// Dispatches to the process-wide kernel ([`kernels::active`]). Whatever
+/// kernel runs, the result is computed in the canonical reduction order:
+/// eight partial sums bucketed by absolute column index mod 8, each filled
+/// in ascending-`j` order, reduced left-to-right — so the value is
+/// independent of both the selected kernel and how the range sits relative
+/// to byte/word boundaries (see `kernels` module docs; the former scalar
+/// path summed its unaligned head/tail into a ninth accumulator, which made
+/// results depend on `j0`/`j1` alignment).
+#[inline]
 pub fn signed_dot_range(words: &[u64], x: &[f32], j0: usize, j1: usize) -> f32 {
-    let table = sign_table();
-    let mut acc = 0f32;
-    let mut j = j0;
-    // head: unaligned bits up to the next byte boundary
-    while j < j1 && j % 8 != 0 {
-        let bit = (words[j / 64] >> (j % 64)) & 1;
-        acc += if bit == 1 { x[j] } else { -x[j] };
-        j += 1;
-    }
-    // body: whole bytes via the table; an 8-lane accumulator keeps the loop
-    // a straight-line vector FMA chain (§Perf iteration 2)
-    let mut lanes = [0f32; 8];
-    while j + 8 <= j1 {
-        let byte = ((words[j / 64] >> (j % 64)) & 0xff) as usize;
-        let signs = &table[byte];
-        let xs = &x[j..j + 8];
-        for k in 0..8 {
-            lanes[k] += signs[k] * xs[k];
-        }
-        j += 8;
-    }
-    acc += lanes.iter().sum::<f32>();
-    // tail
-    while j < j1 {
-        let bit = (words[j / 64] >> (j % 64)) & 1;
-        acc += if bit == 1 { x[j] } else { -x[j] };
-        j += 1;
-    }
-    acc
+    kernels::active().dot_range(words, x, j0, j1)
 }
+
+/// Sign-word byte budget per block of the cache-blocked multi-lane sweep
+/// ([`HaarPackedLinear::gemv_rows_lanes`]): small enough that one block of
+/// rows' words plus a single lane's adjoint activation sit comfortably in
+/// a 256 KiB+ L2, large enough that the per-block lane loop amortizes.
+const GEMV_BLOCK_BYTES: usize = 64 * 1024;
 
 /// Row-major bit matrix; bit = 1 encodes sign +1.
 #[derive(Clone, Debug)]
@@ -201,6 +178,29 @@ impl PackedLinear {
     }
 }
 
+/// A layer whose input width is odd: the Haar band split pairs adjacent
+/// columns (`z_lo[k] = x[2k] + x[2k+1]`), so an odd `cols` has no valid
+/// two-band layout — the last column would be silently dropped by the
+/// activation prologue. Rejected at construction and at HBQ1 load instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OddWidth {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl std::fmt::Display for OddWidth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "haar-packed layer needs an even input width (got {}x{}): \
+             the band split pairs adjacent columns",
+            self.rows, self.cols
+        )
+    }
+}
+
+impl std::error::Error for OddWidth {}
+
 /// HBLLM deployment layer: Haar-domain signs + per-row per-band (α, μ).
 ///
 /// y = HaarInv_row(α⊙s + μ) · x. Rather than reconstructing W, we use
@@ -208,6 +208,11 @@ impl PackedLinear {
 /// transform the activation once per call (O(m)), then every row is a plain
 /// binary dot in the Haar domain. This is the paper's "local convolution,
 /// fuses into the linear layer" argument, executable form.
+///
+/// Invariant: `bits.cols` is even (the two bands split at `cols/2`). The
+/// constructors ([`Self::from_dense`], [`Self::from_parts`]) enforce it
+/// with a typed [`OddWidth`] error; the fields stay public for the
+/// serializer, which only ever round-trips already-validated layers.
 #[derive(Clone)]
 pub struct HaarPackedLinear {
     pub bits: BitMatrix, // Haar-domain signs
@@ -216,8 +221,26 @@ pub struct HaarPackedLinear {
 }
 
 impl HaarPackedLinear {
+    /// Assemble a layer from already-packed parts (the HBQ1 load path),
+    /// rejecting odd widths — a crafted or bit-flipped artifact must not
+    /// produce a layer whose GEMV silently ignores its last column.
+    pub fn from_parts(
+        bits: BitMatrix,
+        alpha: Vec<[f32; 2]>,
+        mu: Vec<[f32; 2]>,
+    ) -> Result<HaarPackedLinear, OddWidth> {
+        if bits.cols % 2 != 0 {
+            return Err(OddWidth { rows: bits.rows, cols: bits.cols });
+        }
+        Ok(HaarPackedLinear { bits, alpha, mu })
+    }
+
     /// Quantize a dense W (row-Haar, one group per band, shared-mean style).
-    pub fn from_dense(w: &Matrix) -> HaarPackedLinear {
+    /// Odd `w.cols` is a typed error: see [`OddWidth`].
+    pub fn from_dense(w: &Matrix) -> Result<HaarPackedLinear, OddWidth> {
+        if w.cols % 2 != 0 {
+            return Err(OddWidth { rows: w.rows, cols: w.cols });
+        }
         let c = haar::fwd_rows(w);
         let h = c.cols / 2;
         let mut alpha = Vec::with_capacity(c.rows);
@@ -241,7 +264,7 @@ impl HaarPackedLinear {
                 signs.set(i, j, if v - ub[b] >= 0.0 { 1.0 } else { -1.0 });
             }
         }
-        HaarPackedLinear { bits: BitMatrix::from_signs(&signs), alpha, mu }
+        Ok(HaarPackedLinear { bits: BitMatrix::from_signs(&signs), alpha, mu })
     }
 
     /// Adjoint-transformed activation: z with `<c_i, z> = <HaarInv(c_i), x>`.
@@ -286,6 +309,9 @@ impl HaarPackedLinear {
         let m = self.bits.cols;
         debug_assert_eq!(x.len(), m);
         debug_assert_eq!(z.len(), m);
+        // even width is a construction invariant (`OddWidth`): h pairs
+        // cover x exactly, no column is dropped
+        debug_assert_eq!(m % 2, 0);
         let h = m / 2;
         for k in 0..h {
             z[k] = x[2 * k] + x[2 * k + 1];
@@ -301,11 +327,12 @@ impl HaarPackedLinear {
     pub fn gemv_rows(&self, z: &[f32], sum_lo: f32, sum_hi: f32, i0: usize, y: &mut [f32]) {
         let m = self.bits.cols;
         let h = m / 2;
+        let kern = kernels::active();
         for (k, out) in y.iter_mut().enumerate() {
             let i = i0 + k;
             let words = self.bits.row_words(i);
-            let dot_s_lo = signed_dot_range(words, z, 0, h);
-            let dot_s_hi = signed_dot_range(words, z, h, m);
+            let dot_s_lo = kern.dot_range(words, z, 0, h);
+            let dot_s_hi = kern.dot_range(words, z, h, m);
             let dot_lo = self.alpha[i][0] * dot_s_lo + self.mu[i][0] * sum_lo;
             let dot_hi = self.alpha[i][1] * dot_s_hi + self.mu[i][1] * sum_hi;
             *out = dot_lo + dot_hi;
@@ -339,10 +366,11 @@ impl HaarPackedLinear {
     pub fn gemv_rows_low(&self, z: &[f32], sum_lo: f32, i0: usize, y: &mut [f32]) {
         let h = self.bits.cols / 2;
         debug_assert!(z.len() >= h);
+        let kern = kernels::active();
         for (k, out) in y.iter_mut().enumerate() {
             let i = i0 + k;
             let words = self.bits.row_words(i);
-            let dot_s_lo = signed_dot_range(words, z, 0, h);
+            let dot_s_lo = kern.dot_range(words, z, 0, h);
             *out = self.alpha[i][0] * dot_s_lo + self.mu[i][0] * sum_lo;
         }
     }
@@ -360,11 +388,21 @@ impl HaarPackedLinear {
     /// packed sign words serves every lane. `z_all` holds the lanes'
     /// prepared activations back to back (`lane l` at `[l*m, (l+1)*m)`, see
     /// [`Self::prepare_activation_slice`]) and `sums[l]` the matching
-    /// per-band sums. Each row's bit words are fetched once and dotted
-    /// against all lanes while hot — the amortization that makes batched
-    /// decoding cheaper than `lanes × gemv_rows`. Per-row-per-lane
-    /// arithmetic is identical to [`Self::gemv_rows`], so single-lane and
-    /// batched decoding produce bit-identical results.
+    /// per-band sums.
+    ///
+    /// The sweep is cache-blocked: rows are processed in blocks whose sign
+    /// words fit an L2-sized budget, and within a block the lane loop is
+    /// outermost. The first lane's pass streams the block's words into L2;
+    /// every later lane re-reads them from cache while its own `z` slice
+    /// streams — so the working set is one row block + *one* lane's
+    /// activation, and the sign words cross L2 once per token no matter how
+    /// many lanes are batched. (The previous row-major order kept all
+    /// lanes' activations live at once, which fell out of L2 as the batch
+    /// grew.) Per-row-per-lane arithmetic is identical to
+    /// [`Self::gemv_rows`], and blocking only reorders *which* (row, lane)
+    /// output is computed when — never the arithmetic inside one — so
+    /// single-lane, batched, and blocked-vs-unblocked decoding all produce
+    /// bit-identical results (pinned by `tests/kernels_conformance.rs`).
     pub fn gemv_rows_lanes(
         &self,
         z_all: &[f32],
@@ -372,22 +410,47 @@ impl HaarPackedLinear {
         i0: usize,
         ys: &mut [&mut [f32]],
     ) {
+        self.gemv_rows_lanes_blocked(z_all, sums, i0, ys, GEMV_BLOCK_BYTES);
+    }
+
+    /// [`Self::gemv_rows_lanes`] with an explicit per-block sign-word byte
+    /// budget. Exposed (hidden) so the conformance suite can pin blocked
+    /// and unblocked sweeps against each other; production callers use the
+    /// default budget via `gemv_rows_lanes`.
+    #[doc(hidden)]
+    pub fn gemv_rows_lanes_blocked(
+        &self,
+        z_all: &[f32],
+        sums: &[(f32, f32)],
+        i0: usize,
+        ys: &mut [&mut [f32]],
+        block_bytes: usize,
+    ) {
         let m = self.bits.cols;
         let h = m / 2;
         debug_assert_eq!(ys.len(), sums.len());
         debug_assert_eq!(z_all.len(), ys.len() * m);
+        let kern = kernels::active();
         let rows = ys.first().map_or(0, |y| y.len());
-        for k in 0..rows {
-            let i = i0 + k;
-            let words = self.bits.row_words(i);
+        let row_bytes = self.bits.words_per_row * 8;
+        let block_rows = (block_bytes / row_bytes.max(1)).max(1);
+        let mut k0 = 0;
+        while k0 < rows {
+            let k1 = (k0 + block_rows).min(rows);
             for (l, y) in ys.iter_mut().enumerate() {
                 let z = &z_all[l * m..(l + 1) * m];
-                let dot_s_lo = signed_dot_range(words, z, 0, h);
-                let dot_s_hi = signed_dot_range(words, z, h, m);
-                let dot_lo = self.alpha[i][0] * dot_s_lo + self.mu[i][0] * sums[l].0;
-                let dot_hi = self.alpha[i][1] * dot_s_hi + self.mu[i][1] * sums[l].1;
-                y[k] = dot_lo + dot_hi;
+                let (sum_lo, sum_hi) = sums[l];
+                for (k, out) in y[k0..k1].iter_mut().enumerate() {
+                    let i = i0 + k0 + k;
+                    let words = self.bits.row_words(i);
+                    let dot_s_lo = kern.dot_range(words, z, 0, h);
+                    let dot_s_hi = kern.dot_range(words, z, h, m);
+                    let dot_lo = self.alpha[i][0] * dot_s_lo + self.mu[i][0] * sum_lo;
+                    let dot_hi = self.alpha[i][1] * dot_s_hi + self.mu[i][1] * sum_hi;
+                    *out = dot_lo + dot_hi;
+                }
             }
+            k0 = k1;
         }
     }
 
@@ -489,11 +552,97 @@ mod tests {
         );
     }
 
+    /// The canonical reduction order, computed naively per bit (see the
+    /// `kernels` module docs): eight buckets by absolute column index
+    /// mod 8, filled in ascending-`j` order, reduced left-to-right.
+    fn canonical_dot(words: &[u64], x: &[f32], j0: usize, j1: usize) -> f32 {
+        let mut lanes = [0f32; 8];
+        for j in j0..j1 {
+            let bit = (words[j / 64] >> (j % 64)) & 1;
+            lanes[j % 8] += if bit == 1 { x[j] } else { -x[j] };
+        }
+        let mut acc = 0f32;
+        for l in lanes {
+            acc += l;
+        }
+        acc
+    }
+
+    #[test]
+    fn every_kernel_matches_the_naive_per_bit_loop_exactly() {
+        // directed word-straddling / sub-byte / empty ranges plus random
+        // ones: each supported kernel must reproduce the canonical
+        // reduction order bit-for-bit, whatever the alignment of [j0, j1)
+        let mut rng = Pcg32::seeded(21);
+        let m = 200;
+        let mat = rand_mat(&mut rng, 1, m);
+        let bits = BitMatrix::from_signs(&mat);
+        let x: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+        let words = bits.row_words(0);
+        let mut ranges = vec![
+            (0usize, 0usize),
+            (7, 7),
+            (64, 64), // empty, at and off word boundaries
+            (3, 7),
+            (63, 64),
+            (62, 66),
+            (127, 130), // j1 - j0 < 8, some straddling a u64 boundary
+            (60, 68),
+            (1, 129),
+            (0, 64),
+            (64, 128),
+            (5, 200),
+            (0, 200),
+        ];
+        for _ in 0..40 {
+            let j0 = rng.below(m);
+            let j1 = j0 + rng.below(m - j0 + 1);
+            ranges.push((j0, j1));
+        }
+        for &(j0, j1) in &ranges {
+            let want = canonical_dot(words, &x, j0, j1);
+            for k in kernels::all().iter().filter(|k| k.supported()) {
+                let got = k.dot_range(words, &x, j0, j1);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "kernel {} diverged on [{j0},{j1}): {got} vs {want}",
+                    k.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn odd_width_is_a_typed_construction_error() {
+        let mut rng = Pcg32::seeded(22);
+        let w = rand_mat(&mut rng, 4, 5);
+        let err = HaarPackedLinear::from_dense(&w).unwrap_err();
+        assert_eq!(err, OddWidth { rows: 4, cols: 5 });
+        assert!(err.to_string().contains("even input width"), "{err}");
+        // the load-path constructor rejects the same shape...
+        let parts_err = HaarPackedLinear::from_parts(
+            BitMatrix::zeros(4, 5),
+            vec![[0.0f32; 2]; 4],
+            vec![[0.0f32; 2]; 4],
+        )
+        .unwrap_err();
+        assert_eq!(parts_err, OddWidth { rows: 4, cols: 5 });
+        // ...and even widths construct through both
+        assert!(HaarPackedLinear::from_dense(&rand_mat(&mut rng, 4, 6)).is_ok());
+        assert!(HaarPackedLinear::from_parts(
+            BitMatrix::zeros(4, 6),
+            vec![[0.0f32; 2]; 4],
+            vec![[0.0f32; 2]; 4],
+        )
+        .is_ok());
+    }
+
     #[test]
     fn gemv_rows_partial_ranges_agree_with_full() {
         let mut rng = Pcg32::seeded(9);
         let w = rand_mat(&mut rng, 23, 128);
-        let p = HaarPackedLinear::from_dense(&w);
+        let p = HaarPackedLinear::from_dense(&w).unwrap();
         let x: Vec<f32> = (0..128).map(|_| rng.normal_f32()).collect();
         let mut full = vec![0.0; 23];
         p.gemv(&x, &mut full);
@@ -509,7 +658,7 @@ mod tests {
     fn gemv_rows_lanes_is_bit_identical_to_per_lane_gemv() {
         let mut rng = Pcg32::seeded(11);
         let w = rand_mat(&mut rng, 17, 64);
-        let p = HaarPackedLinear::from_dense(&w);
+        let p = HaarPackedLinear::from_dense(&w).unwrap();
         let m = 64;
         let lanes = 3;
         let xs: Vec<Vec<f32>> = (0..lanes)
@@ -543,7 +692,7 @@ mod tests {
         let mut rng = Pcg32::seeded(13);
         for &(n, m) in &[(9usize, 64usize), (5, 130), (3, 2)] {
             let w = rand_mat(&mut rng, n, m);
-            let p = HaarPackedLinear::from_dense(&w);
+            let p = HaarPackedLinear::from_dense(&w).unwrap();
             let mut hushed = p.clone();
             for i in 0..n {
                 hushed.alpha[i][1] = 0.0;
@@ -562,7 +711,7 @@ mod tests {
     fn low_band_partial_row_ranges_agree_with_full() {
         let mut rng = Pcg32::seeded(14);
         let w = rand_mat(&mut rng, 23, 128);
-        let p = HaarPackedLinear::from_dense(&w);
+        let p = HaarPackedLinear::from_dense(&w).unwrap();
         let x: Vec<f32> = (0..128).map(|_| rng.normal_f32()).collect();
         let mut full = vec![0.0; 23];
         p.gemv_low(&x, &mut full);
@@ -611,7 +760,7 @@ mod tests {
         let mut rng = Pcg32::seeded(3);
         for &(n, m) in &[(16usize, 128usize), (8, 256), (5, 128)] {
             let w = rand_mat(&mut rng, n, m);
-            let p = HaarPackedLinear::from_dense(&w);
+            let p = HaarPackedLinear::from_dense(&w).unwrap();
             let dense = p.to_dense();
             let x: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
             let mut y = vec![0.0; n];

@@ -182,7 +182,16 @@ fn serving_docs_exist_and_are_linked() {
     }
     // the prefix-sharing lifecycle is documented where the code lives
     let arch = fs::read_to_string(root.join("docs/ARCHITECTURE.md")).unwrap();
-    for needle in ["Prefix sharing", "copy-on-write", "kv_adopt_prefix", "prefix_parity"] {
+    for needle in [
+        "Prefix sharing",
+        "copy-on-write",
+        "kv_adopt_prefix",
+        "prefix_parity",
+        "Kernel dispatch",
+        "HBLLM_KERNEL",
+        "kernels_conformance",
+        "bit-identity",
+    ] {
         assert!(arch.contains(needle), "docs/ARCHITECTURE.md lost its {needle:?} coverage");
     }
     // the metric catalog covers the families the bundle registers
@@ -196,6 +205,7 @@ fn serving_docs_exist_and_are_linked() {
         "hbllm_prefix_cache_hits_total",
         "hbllm_prefix_cache_misses_total",
         "hbllm_connections_active",
+        "hbllm_kernel_info",
         "chaos_soak",
     ] {
         assert!(obs.contains(needle), "docs/OBSERVABILITY.md lost its {needle:?} coverage");

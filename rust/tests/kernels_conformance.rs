@@ -1,0 +1,202 @@
+//! Kernel conformance: every compiled-in packed-GEMV kernel the host can
+//! run (`scalar` always; AVX2/NEON when supported) is driven through the
+//! same randomized `(words, x, j0, j1)` cases and pinned **bit-identical**
+//! — to the scalar reference and to a naive per-bit implementation of the
+//! canonical reduction order (see `pack::kernels` module docs). This is
+//! the contract that lets the serving parity suites (`engine_parity`,
+//! `spec_parity`, `prefix_parity`) hold whichever kernel dispatch picks.
+//!
+//! Also here: the cache-blocked multi-lane sweep is pinned against the
+//! unblocked sweep and the per-lane GEMV at 1, 2, and 7 lanes, and the
+//! `HBLLM_KERNEL=scalar` override is exercised in a child process.
+
+use hbllm::engine::model::Linear;
+use hbllm::pack::{kernels, BitMatrix, HaarPackedLinear};
+use hbllm::tensor::Matrix;
+use hbllm::util::rng::Pcg32;
+
+/// The canonical reduction order, computed naively per bit: eight buckets
+/// by absolute column index mod 8, filled in ascending-`j` order, reduced
+/// left-to-right.
+fn canonical_dot(words: &[u64], x: &[f32], j0: usize, j1: usize) -> f32 {
+    let mut lanes = [0f32; 8];
+    for j in j0..j1 {
+        let bit = (words[j / 64] >> (j % 64)) & 1;
+        lanes[j % 8] += if bit == 1 { x[j] } else { -x[j] };
+    }
+    let mut acc = 0f32;
+    for l in lanes {
+        acc += l;
+    }
+    acc
+}
+
+fn random_row(rng: &mut Pcg32, m: usize) -> (BitMatrix, Vec<f32>) {
+    let mat = Matrix::from_fn(1, m, |_, _| {
+        let v = rng.normal_f32();
+        if v == 0.0 {
+            1.0
+        } else {
+            v
+        }
+    });
+    let bits = BitMatrix::from_signs(&mat);
+    let x: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+    (bits, x)
+}
+
+#[test]
+fn every_supported_kernel_is_bit_identical_to_scalar() {
+    let scalar = kernels::all().iter().find(|k| k.name == "scalar").expect("scalar kernel");
+    let mut rng = Pcg32::seeded(0x5eed);
+    for case in 0..300 {
+        let m = 1 + rng.below(320);
+        let (bits, x) = random_row(&mut rng, m);
+        let j0 = rng.below(m);
+        let j1 = j0 + rng.below(m - j0 + 1);
+        let words = bits.row_words(0);
+        let want = scalar.dot_range(words, &x, j0, j1);
+        // the scalar reference itself implements the canonical order
+        let naive = canonical_dot(words, &x, j0, j1);
+        assert_eq!(
+            want.to_bits(),
+            naive.to_bits(),
+            "scalar diverged from the naive per-bit loop on [{j0},{j1}) of {m} (case {case})"
+        );
+        for k in kernels::all().iter().filter(|k| k.supported()) {
+            let got = k.dot_range(words, &x, j0, j1);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "kernel {} diverged from scalar on [{j0},{j1}) of {m} (case {case}): \
+                 {got} vs {want}",
+                k.name
+            );
+        }
+    }
+}
+
+#[test]
+fn alignment_sweep_pins_kernels_across_byte_and_word_boundaries() {
+    // exhaustive (j0, j1) window around the first u64 boundary: empty
+    // ranges, sub-byte ranges, byte-straddling and word-straddling ranges
+    // all included by construction
+    let mut rng = Pcg32::seeded(0xa119);
+    let m = 144;
+    let (bits, x) = random_row(&mut rng, m);
+    let words = bits.row_words(0);
+    let supported: Vec<_> = kernels::all().iter().filter(|k| k.supported()).collect();
+    assert!(!supported.is_empty());
+    for j0 in 0..=80usize {
+        for j1 in j0..=m.min(j0 + 80) {
+            let want = canonical_dot(words, &x, j0, j1);
+            for k in &supported {
+                let got = k.dot_range(words, &x, j0, j1);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "kernel {} diverged on [{j0},{j1})",
+                    k.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gemv_rows_lanes_blocked_matches_unblocked_at_1_2_7_lanes() {
+    let mut rng = Pcg32::seeded(77);
+    let (rows, m) = (33usize, 96usize);
+    let w = Matrix::from_fn(rows, m, |_, _| rng.normal_f32());
+    let p = HaarPackedLinear::from_dense(&w).unwrap();
+    for &lanes in &[1usize, 2, 7] {
+        let xs: Vec<Vec<f32>> = (0..lanes)
+            .map(|_| (0..m).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let mut z_all = vec![0.0f32; lanes * m];
+        let mut sums = Vec::new();
+        for (l, x) in xs.iter().enumerate() {
+            sums.push(p.prepare_activation_slice(x, &mut z_all[l * m..(l + 1) * m]));
+        }
+        let run = |budget: usize| -> Vec<Vec<f32>> {
+            let mut out: Vec<Vec<f32>> = (0..lanes).map(|_| vec![0.0; rows]).collect();
+            let mut ys: Vec<&mut [f32]> = out.iter_mut().map(|y| y.as_mut_slice()).collect();
+            p.gemv_rows_lanes_blocked(&z_all, &sums, 0, &mut ys, budget);
+            out
+        };
+        // one block covering every row == the unblocked sweep
+        let unblocked = run(usize::MAX);
+        // tiny and mid-sized budgets force 1-row and few-row blocks;
+        // blocking must only reorder the (row, lane) schedule, never the
+        // arithmetic, so outputs are bit-identical
+        for budget in [0usize, 1, 13, 64, 1 << 20] {
+            assert_eq!(run(budget), unblocked, "lanes={lanes} budget={budget}");
+        }
+        // the production entry point (default L2 budget)
+        let mut got: Vec<Vec<f32>> = (0..lanes).map(|_| vec![0.0; rows]).collect();
+        {
+            let mut ys: Vec<&mut [f32]> = got.iter_mut().map(|y| y.as_mut_slice()).collect();
+            p.gemv_rows_lanes(&z_all, &sums, 0, &mut ys);
+        }
+        assert_eq!(got, unblocked, "lanes={lanes} default budget");
+        // and the single-lane reference GEMV, lane by lane
+        for (l, x) in xs.iter().enumerate() {
+            let mut y = vec![0.0; rows];
+            p.gemv(x, &mut y);
+            assert_eq!(y, got[l], "lane {l} of {lanes} diverged from per-lane gemv");
+        }
+    }
+}
+
+#[test]
+fn linear_gemv_batch_matches_per_lane_at_1_2_7_lanes() {
+    let mut rng = Pcg32::seeded(78);
+    let lin = Linear::Packed(
+        HaarPackedLinear::from_dense(&Matrix::from_fn(19, 64, |_, _| rng.normal_f32())).unwrap(),
+    );
+    for &lanes in &[1usize, 2, 7] {
+        let xs: Vec<Vec<f32>> = (0..lanes)
+            .map(|_| (0..64).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let mut want: Vec<Vec<f32>> = Vec::new();
+        for x in &xs {
+            let mut y = vec![0.0; 19];
+            lin.gemv(x, &mut y, 1);
+            want.push(y);
+        }
+        let mut got: Vec<Vec<f32>> = (0..lanes).map(|_| vec![0.0; 19]).collect();
+        let mut io: Vec<(&[f32], &mut [f32])> = xs
+            .iter()
+            .zip(got.iter_mut())
+            .map(|(x, y)| (x.as_slice(), y.as_mut_slice()))
+            .collect();
+        let mut z = Vec::new();
+        lin.gemv_batch(&mut io, &mut z, 2);
+        drop(io);
+        assert_eq!(got, want, "{lanes}-lane gemv_batch diverged from per-lane gemv");
+    }
+}
+
+/// `HBLLM_KERNEL=scalar` must force the scalar path. The selection is
+/// cached per process, so the override is exercised in a child: this test
+/// re-executes its own binary filtered to itself with the variable set,
+/// and the child branch asserts what `active()` resolved to.
+#[test]
+fn hbllm_kernel_env_forces_scalar() {
+    if std::env::var("HBLLM_KERNEL").as_deref() == Ok("scalar") {
+        assert_eq!(kernels::active().name, "scalar");
+        return;
+    }
+    let exe = std::env::current_exe().expect("test binary path");
+    let out = std::process::Command::new(exe)
+        .args(["hbllm_kernel_env_forces_scalar", "--exact", "--test-threads=1"])
+        .env("HBLLM_KERNEL", "scalar")
+        .output()
+        .expect("spawn child test process");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success() && stdout.contains("1 passed"),
+        "override child failed:\n{stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
