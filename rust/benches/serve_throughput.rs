@@ -43,6 +43,7 @@ fn run_pool(sched: &mut GenScheduler, be: &mut dyn Backend, prompts: &[Vec<u8>])
         .map(|(i, p)| {
             let (tx, rx) = channel();
             sched.submit(GenRequest {
+                id: 1 + i as u64,
                 prompt: p.clone(),
                 max_new: MAX_NEW,
                 temperature: 0.0,

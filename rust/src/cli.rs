@@ -79,7 +79,8 @@ OPTIONS:
   --http-port N            serve: also expose the HTTP/SSE front-end on this
                            port, same host as --addr (POST /v1/generate
                            streams SSE, POST /v1/score, GET /v1/stats,
-                           GET /v1/metrics in Prometheus text format;
+                           GET /v1/metrics in Prometheus text format,
+                           GET /v1/trace with --trace;
                            spec in docs/API.md and docs/OBSERVABILITY.md)
   --url http://HOST:PORT   generate: stream from a running server's HTTP
                            front-end instead of loading a model locally
@@ -103,6 +104,11 @@ OPTIONS:
                            blocks read-only (copy-on-write) instead of
                            re-prefilling (needs the native paged-KV backend;
                            default 0 = off)
+  --trace N                serve: flight-record the last N finished requests'
+                           span timelines (enqueue/admit/prefill/sweeps/first
+                           token/finish) for GET /v1/trace — plain JSON, or
+                           ?format=chrome for Perfetto (default 0 = off; the
+                           per-token path stays allocation-free when off)
   --pallas                 use the Pallas-attention HLO entry (xla backend)
 
 ENVIRONMENT:
@@ -288,6 +294,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         max_new_cap: args.get_usize("max-new", BatcherConfig::default().max_new_cap),
         spec,
         prefix_cache: args.get_usize("prefix-cache", 0),
+        trace: args.get_usize("trace", 0),
         ..Default::default()
     };
     let addr = args.get_or("addr", "127.0.0.1:7431");
@@ -312,7 +319,16 @@ fn serve_cmd(args: &Args) -> Result<()> {
     );
     if let Some((_, http_addr)) = &http {
         println!(
-            "http front-end on {http_addr}: POST /v1/generate (SSE) | POST /v1/score | GET /v1/stats | GET /v1/metrics"
+            "http front-end on {http_addr}: POST /v1/generate (SSE) | POST /v1/score | GET /v1/stats | GET /v1/metrics{}",
+            if cfg.trace > 0 { " | GET /v1/trace" } else { "" }
+        );
+    }
+    if cfg.trace > 0 {
+        println!(
+            "request tracing: flight recorder keeps the last {} finished requests' \
+             span timelines (plus the slowest-TTFT exemplars); fetch GET /v1/trace, \
+             or ?format=chrome for Perfetto",
+            cfg.trace
         );
     }
     if let Some(st) = be.kv_stats() {
@@ -370,6 +386,20 @@ fn serve_cmd(args: &Args) -> Result<()> {
             100.0 * hits as f64 / (hits + misses) as f64,
             hits + misses
         );
+    }
+    // per-tier latency quantiles — the same bucket-interpolated estimator
+    // `/v1/stats.latency` serves, so the shutdown line matches monitoring
+    for (name, t) in [("interactive", metrics.tier(0)), ("batch", metrics.tier(1))] {
+        let p = |q| t.ttft_us.quantile(q);
+        if let (Some(p50), Some(p95), Some(p99)) = (p(0.5), p(0.95), p(0.99)) {
+            let opt = |v: Option<f64>| v.map_or("-".to_string(), |x| format!("{x:.0}"));
+            println!(
+                "latency [{name}]: ttft p50/p95/p99 {p50:.0}/{p95:.0}/{p99:.0} us | \
+                 inter-token p99 {} us | queue-wait p99 {} us",
+                opt(t.inter_token_us.quantile(0.99)),
+                opt(t.queue_wait_us.quantile(0.99)),
+            );
+        }
     }
     Ok(())
 }
@@ -539,6 +569,15 @@ mod tests {
         assert_eq!(a.get_usize("prefix-cache", 0), 16);
         // absent flag keeps prompt-prefix caching off
         assert_eq!(parse("serve --method hbllm-row").get_usize("prefix-cache", 0), 0);
+    }
+
+    #[test]
+    fn trace_flag_parses() {
+        let a = parse("serve --method hbllm-row --trace 128");
+        assert_eq!(a.get_usize("trace", 0), 128);
+        // absent flag keeps the flight recorder off (no per-request
+        // timeline allocation on the decode path)
+        assert_eq!(parse("serve --method hbllm-row").get_usize("trace", 0), 0);
     }
 
     #[test]

@@ -21,6 +21,7 @@
 
 use super::metrics::ServeMetrics;
 use super::scheduler::{GenEvent, GenRequest, Priority};
+use super::trace::TraceRecorder;
 use crate::engine::{KvStats, SpecConfig, SpecStats};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -45,6 +46,12 @@ pub struct BatcherConfig {
     /// re-prefilling. `0` disables caching (the default); it only takes
     /// effect on KV-metered backends that support block sharing.
     pub prefix_cache: usize,
+    /// Flight-recorder capacity in completed request timelines
+    /// (`serve --trace N`): the last `N` finished requests keep their
+    /// span timelines for `GET /v1/trace`. `0` disables recording (the
+    /// default) — request ids are still minted, but the decode path
+    /// never builds a timeline.
+    pub trace: usize,
 }
 
 impl Default for BatcherConfig {
@@ -55,6 +62,7 @@ impl Default for BatcherConfig {
             max_new_cap: 256,
             spec: SpecConfig::disabled(),
             prefix_cache: 0,
+            trace: 0,
         }
     }
 }
@@ -115,6 +123,10 @@ pub struct Batcher {
     /// the engine loop records lifecycle events into it and the HTTP
     /// front-end renders it at `GET /v1/metrics`.
     metrics: Arc<ServeMetrics>,
+    /// The trace flight recorder shared with every handle; request ids
+    /// are minted from it and the engine loop publishes completed span
+    /// timelines into it (`GET /v1/trace`).
+    trace: Arc<TraceRecorder>,
 }
 
 /// Cloning a handle keeps its client identity (`clone` = same caller);
@@ -128,6 +140,7 @@ pub struct BatcherHandle {
     client: u64,
     next_client: Arc<AtomicU64>,
     metrics: Arc<ServeMetrics>,
+    trace: Arc<TraceRecorder>,
 }
 
 impl BatcherHandle {
@@ -138,6 +151,7 @@ impl BatcherHandle {
             client: self.next_client.fetch_add(1, Ordering::Relaxed),
             next_client: self.next_client.clone(),
             metrics: self.metrics.clone(),
+            trace: self.trace.clone(),
         }
     }
 
@@ -151,6 +165,12 @@ impl BatcherHandle {
     /// The client id this handle stamps on generation requests.
     pub fn client(&self) -> u64 {
         self.client
+    }
+
+    /// The trace flight recorder every handle to this batcher shares —
+    /// the HTTP front-end serves it at `GET /v1/trace`.
+    pub fn trace(&self) -> &Arc<TraceRecorder> {
+        &self.trace
     }
 
     /// Blocking score call: perplexity (exp mean NLL/byte) for `text`.
@@ -187,6 +207,7 @@ impl BatcherHandle {
         let (tx, rx) = channel();
         self.tx
             .send(Work::Generate(GenRequest {
+                id: self.trace.mint_id(),
                 prompt: prompt.to_vec(),
                 max_new,
                 temperature,
@@ -214,19 +235,27 @@ impl Batcher {
     pub fn new(cfg: BatcherConfig) -> (Batcher, BatcherHandle) {
         let (tx, rx) = channel();
         let metrics = Arc::new(ServeMetrics::new());
+        let trace = Arc::new(TraceRecorder::new(cfg.trace));
         let handle = BatcherHandle {
             tx,
             client: 0,
             next_client: Arc::new(AtomicU64::new(1)),
             metrics: metrics.clone(),
+            trace: trace.clone(),
         };
-        (Batcher { cfg, rx, metrics }, handle)
+        (Batcher { cfg, rx, metrics, trace }, handle)
     }
 
     /// The serving metrics bundle shared with every handle (see
     /// [`BatcherHandle::metrics`]).
     pub fn metrics(&self) -> &Arc<ServeMetrics> {
         &self.metrics
+    }
+
+    /// The trace flight recorder shared with every handle (see
+    /// [`BatcherHandle::trace`]).
+    pub fn trace(&self) -> &Arc<TraceRecorder> {
+        &self.trace
     }
 
     /// Blocking receive; `None` once every handle has dropped.

@@ -185,6 +185,43 @@ impl Histogram {
     pub fn sum(&self) -> u64 {
         self.0.sum.load(Ordering::Relaxed)
     }
+
+    /// Estimate the `q`-quantile (`q` clamped to `[0, 1]`) from the
+    /// bucket counts by linear interpolation inside the containing
+    /// bucket — the same estimator as Prometheus `histogram_quantile`,
+    /// so a dashboard and the in-process SLO gate agree. `None` on an
+    /// empty histogram.
+    ///
+    /// **Overflow-bucket semantics:** a rank that lands in the `+Inf`
+    /// bucket reports the largest *finite* bound. The true value is
+    /// unknowable above the last edge, so the estimate is a documented
+    /// lower bound ("at least this"), never a fabricated larger number —
+    /// an SLO asserted against it can only be *stricter* than reality.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let (buckets, _, count) = self.snapshot();
+        if count == 0 {
+            return None;
+        }
+        let rank = q.clamp(0.0, 1.0) * count as f64;
+        let last_bound = *self.0.bounds.last().expect("bounds non-empty") as f64;
+        let mut cum = 0u64;
+        for (i, &c) in buckets.iter().enumerate() {
+            let next = cum + c;
+            if c > 0 && next as f64 >= rank {
+                if i == self.0.bounds.len() {
+                    return Some(last_bound); // +Inf bucket: clamp
+                }
+                let lo = if i == 0 { 0.0 } else { self.0.bounds[i - 1] as f64 };
+                let hi = self.0.bounds[i] as f64;
+                let frac = ((rank - cum as f64) / c as f64).clamp(0.0, 1.0);
+                return Some(lo + (hi - lo) * frac);
+            }
+            cum = next;
+        }
+        // float rounding pushed the rank past every bucket: the last
+        // edge is still the honest answer
+        Some(last_bound)
+    }
 }
 
 /// What a family's series hold; the registry keeps one kind per name.
@@ -568,6 +605,12 @@ pub struct ServeMetrics {
     pub prefix_cache_misses: Counter,
     /// Open client connections, indexed 0 = tcp, 1 = http.
     pub connections: [Gauge; 2],
+    /// SSE generate streams that exited without a `done` event (client
+    /// disconnect mid-stream, terminal error, or engine shutdown).
+    /// `hbllm_http_requests_total` labels its status at header-write
+    /// time — a stream dying after `200 OK` still counts as a 200 — so
+    /// this counter is the only honest record of mid-stream failures.
+    pub http_streams_aborted: Counter,
     /// Info-style gauge: always 1, with the selected packed-GEMV kernel
     /// (`pack::kernels::active()`) as its `kernel` label — so a
     /// deployment can tell from its metrics whether it is running the
@@ -660,6 +703,11 @@ impl ServeMetrics {
                 &[("front", f)],
             )
         });
+        let http_streams_aborted = reg.counter(
+            "hbllm_http_streams_aborted_total",
+            "SSE generate streams that exited without a done event.",
+            &[],
+        );
         let kernel_info = reg.gauge(
             "hbllm_kernel_info",
             "Selected packed-GEMV kernel (value is always 1; the kernel label carries the name).",
@@ -686,6 +734,7 @@ impl ServeMetrics {
             prefix_cache_hits,
             prefix_cache_misses,
             connections,
+            http_streams_aborted,
             kernel_info,
         }
     }
@@ -885,6 +934,77 @@ mod tests {
                 let hi = bounds.get(i).copied().unwrap_or(u64::MAX);
                 if !(*v > lo || i == 0) || *v > hi {
                     return Err(format!("v={v} outside bucket {i} ({lo}, {hi}]"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn quantile_of_empty_histogram_is_none() {
+        let h = Histogram::with_bounds(vec![10, 100]);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), None, "empty histogram answered q={q}");
+        }
+    }
+
+    #[test]
+    fn quantile_with_all_mass_in_overflow_clamps_to_last_finite_bound() {
+        let h = Histogram::with_bounds(vec![10, 100]);
+        h.observe(5_000);
+        h.observe(9_000);
+        // the true values are unknowable above the last edge; every
+        // quantile reports the documented lower bound instead
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), Some(100.0), "q={q}");
+        }
+    }
+
+    #[test]
+    fn quantile_interpolates_linearly_within_a_single_bucket() {
+        let h = Histogram::with_bounds(vec![100, 200]);
+        for _ in 0..4 {
+            h.observe(150); // all mass in the (100, 200] bucket
+        }
+        assert_eq!(h.quantile(0.0), Some(100.0), "rank 0 sits on the lower edge");
+        assert_eq!(h.quantile(0.5), Some(150.0), "midpoint of the bucket");
+        assert_eq!(h.quantile(1.0), Some(200.0), "rank count sits on the upper edge");
+        // out-of-range q clamps rather than extrapolating
+        assert_eq!(h.quantile(-1.0), Some(100.0));
+        assert_eq!(h.quantile(7.0), Some(200.0));
+    }
+
+    #[test]
+    fn prop_quantiles_are_monotone_in_q_and_bounded_by_bucket_edges() {
+        check(
+            "histogram-quantile-monotone-bounded",
+            200,
+            |g| {
+                let nb = g.size(1, 6);
+                let mut bounds: Vec<u64> =
+                    (0..nb).map(|_| (g.rng.next_u64() % 100_000) + 1).collect();
+                bounds.sort();
+                bounds.dedup();
+                let nv = g.size(1, 32);
+                let vals: Vec<u64> = (0..nv).map(|_| g.rng.next_u64() % 200_000).collect();
+                (bounds, vals)
+            },
+            |(bounds, vals)| {
+                let h = Histogram::with_bounds(bounds.clone());
+                for &v in vals {
+                    h.observe(v);
+                }
+                let last = *bounds.last().unwrap() as f64;
+                let mut prev = 0.0f64;
+                for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+                    let v = h.quantile(q).ok_or("non-empty histogram answered None")?;
+                    if !(0.0..=last).contains(&v) {
+                        return Err(format!("q={q}: {v} escapes the bucket edges [0, {last}]"));
+                    }
+                    if v < prev {
+                        return Err(format!("not monotone at q={q}: {v} < {prev}"));
+                    }
+                    prev = v;
                 }
                 Ok(())
             },

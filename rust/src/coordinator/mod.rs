@@ -29,6 +29,7 @@ pub mod prefix;
 pub mod progress;
 pub mod scheduler;
 pub mod serve;
+pub mod trace;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherHandle, ClientQueue, StatsSnapshot, Work};
 pub use metrics::{MetricsRegistry, ServeMetrics};
@@ -36,3 +37,4 @@ pub use progress::Progress;
 pub use scheduler::{
     quantize_model, GenEvent, GenRequest, GenScheduler, LayerResult, Priority, QuantJobConfig,
 };
+pub use trace::{SloSpec, Timeline, TraceRecorder};

@@ -316,6 +316,9 @@ pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
     // one metrics bundle across scheduler lifecycle events and front-end
     // request accounting — what `GET /v1/metrics` renders
     sched.set_metrics(batcher.metrics().clone());
+    // one flight recorder across the scheduler's span stamps and the
+    // HTTP front-end's `GET /v1/trace` (`serve --trace N`)
+    sched.set_trace(batcher.trace().clone());
     // prompt prefix cache (`serve --prefix-cache N`): finished prompts
     // keep their leading KV blocks retained so later requests sharing a
     // prefix map them read-only instead of re-prefilling

@@ -1,0 +1,616 @@
+//! Per-request tracing and SLO gates: the flight recorder behind
+//! `serve --trace N` and `GET /v1/trace`.
+//!
+//! Every generation request carries an id minted at its front-end
+//! ([`TraceRecorder::mint_id`], threaded through `GenRequest`); while the
+//! request is resident the scheduler accumulates its span timeline —
+//! enqueue, admission (with any KV-stall wait), prefix-cache adoption,
+//! prefill, each decode/spec sweep, first token, finish — in a
+//! [`TimelineBuilder`] owned by the engine thread. Only the *terminal*
+//! event hands the completed [`Timeline`] to the [`TraceRecorder`]'s
+//! bounded ring buffer, so tracing adds nothing to the per-token decode
+//! path beyond an `Option` check, and `--trace 0` adds no locks or
+//! allocations at all (the builder is never created).
+//!
+//! # Lock discipline
+//!
+//! The ring cursor is a lock-free `fetch_add`; each slot is guarded by
+//! its own mutex, taken once per *completed request* (publication) and
+//! at `GET /v1/trace` scrapes — never on the per-token path. The
+//! recorder additionally pins the [`EXEMPLARS`] slowest-TTFT completed
+//! traces, so a latency spike stays inspectable after the ring has
+//! wrapped past it.
+//!
+//! # Export
+//!
+//! [`Timeline::to_json`] renders the `GET /v1/trace` JSON;
+//! [`chrome_trace`] renders the same timelines as Chrome trace-event
+//! JSON (`?format=chrome`), loadable directly in Perfetto or
+//! `chrome://tracing` — one `ph: "X"` complete event per span, one `tid`
+//! per request. See `docs/OBSERVABILITY.md` §Tracing.
+//!
+//! # SLOs
+//!
+//! [`SloSpec`] states the latency service levels as p99 bounds checked
+//! through [`Histogram::quantile`]; the chaos harness and the CI
+//! `soak-smoke` job assert them ([`SloSpec::check`]), with bounds scaled
+//! by the `HBLLM_SLO_SCALE` environment variable ([`slo_scale`]) so slow
+//! shared runners loosen the gates without disabling them. The
+//! *structural* timeline invariants ([`Timeline::validate`]) are never
+//! scaled.
+
+use super::metrics::{Histogram, ServeMetrics};
+use super::scheduler::INTERACTIVE_BURST;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Completed traces with the slowest TTFTs pinned outside the ring.
+pub const EXEMPLARS: usize = 4;
+
+/// The span catalog — one kind per request lifecycle stage (documented
+/// in `docs/OBSERVABILITY.md` §Tracing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Submission → admission (the queue wait).
+    Enqueue,
+    /// The admission turn itself; `arg` is the KV-stall wait in µs the
+    /// head of the rotation spent blocked on free blocks (0 = no stall).
+    Admit,
+    /// Instant: a cached prompt prefix was mapped read-only into the
+    /// lane; `arg` is the matched byte count.
+    PrefixAdopt,
+    /// The sequence's first sweep — prompt prefill plus its first
+    /// decoded byte run inside it.
+    Prefill,
+    /// One plain decode sweep the sequence took part in.
+    Sweep,
+    /// One speculative decode round; `arg` is the accepted draft count.
+    SpecSweep,
+    /// Instant: the first byte reached the client; `arg` is the TTFT µs.
+    FirstToken,
+    /// Instant terminal event; the timeline's `outcome` names it.
+    Finish,
+}
+
+impl SpanKind {
+    /// Wire name used by both JSON exports.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Enqueue => "enqueue",
+            SpanKind::Admit => "admit",
+            SpanKind::PrefixAdopt => "prefix_adopt",
+            SpanKind::Prefill => "prefill",
+            SpanKind::Sweep => "sweep",
+            SpanKind::SpecSweep => "spec_sweep",
+            SpanKind::FirstToken => "first_token",
+            SpanKind::Finish => "finish",
+        }
+    }
+}
+
+/// One completed span: a half-open `[start, start + dur)` interval in
+/// microseconds since the recorder's epoch. Instant events have
+/// `dur_us == 0`.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Kind-specific payload — see each [`SpanKind`] variant.
+    pub arg: u64,
+    /// The backend's cumulative sweep counter
+    /// (`Backend::sweeps_executed`) right after this span's sweep, so a
+    /// scheduler-side span joins to engine-side counters; 0 for
+    /// non-sweep spans.
+    pub sweep: u64,
+}
+
+/// One request's completed span timeline.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    pub id: u64,
+    pub client: u64,
+    /// Admission tier label (`interactive` / `batch`).
+    pub priority: &'static str,
+    /// Terminal outcome label (`done` / `error` / `abandoned`).
+    pub outcome: &'static str,
+    /// Admission → first streamed byte, when one was streamed.
+    pub ttft_us: Option<u64>,
+    pub spans: Vec<Span>,
+}
+
+impl Timeline {
+    /// The `GET /v1/trace` JSON shape for one timeline.
+    pub fn to_json(&self) -> Json {
+        let spans: Vec<Json> = self
+            .spans
+            .iter()
+            .map(|s| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(s.kind.name().to_string()));
+                m.insert("start_us".to_string(), Json::Num(s.start_us as f64));
+                m.insert("dur_us".to_string(), Json::Num(s.dur_us as f64));
+                m.insert("arg".to_string(), Json::Num(s.arg as f64));
+                m.insert("sweep".to_string(), Json::Num(s.sweep as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("id".to_string(), Json::Num(self.id as f64));
+        m.insert("client".to_string(), Json::Num(self.client as f64));
+        m.insert("priority".to_string(), Json::Str(self.priority.to_string()));
+        m.insert("outcome".to_string(), Json::Str(self.outcome.to_string()));
+        m.insert(
+            "ttft_us".to_string(),
+            self.ttft_us.map_or(Json::Null, |t| Json::Num(t as f64)),
+        );
+        m.insert("spans".to_string(), Json::Arr(spans));
+        Json::Obj(m)
+    }
+
+    /// Structural invariants every well-formed timeline satisfies,
+    /// asserted *unscaled* by the chaos harness on every run: spans
+    /// present, `enqueue` first and `finish` last, start timestamps
+    /// monotone non-decreasing, every span nested within the request
+    /// lifetime, and a `first_token` span exactly when a TTFT was
+    /// recorded. Returns human-readable violations (empty = valid).
+    pub fn validate(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        let Some(first) = self.spans.first() else {
+            return vec![format!("req {}: timeline has no spans", self.id)];
+        };
+        let last = self.spans.last().expect("non-empty");
+        if first.kind != SpanKind::Enqueue {
+            v.push(format!("req {}: first span is {}, not enqueue", self.id, first.kind.name()));
+        }
+        if last.kind != SpanKind::Finish {
+            v.push(format!("req {}: last span is {}, not finish", self.id, last.kind.name()));
+        }
+        let (lo, hi) = (first.start_us, last.start_us + last.dur_us);
+        let mut prev = lo;
+        for s in &self.spans {
+            if s.start_us < prev {
+                v.push(format!(
+                    "req {}: span {} starts at {} after a span starting at {prev}",
+                    self.id,
+                    s.kind.name(),
+                    s.start_us
+                ));
+            }
+            prev = s.start_us;
+            if s.start_us < lo || s.start_us + s.dur_us > hi {
+                v.push(format!(
+                    "req {}: span {} [{}, {}) escapes the request lifetime [{lo}, {hi})",
+                    self.id,
+                    s.kind.name(),
+                    s.start_us,
+                    s.start_us + s.dur_us
+                ));
+            }
+        }
+        let has_first = self.spans.iter().any(|s| s.kind == SpanKind::FirstToken);
+        if has_first != self.ttft_us.is_some() {
+            v.push(format!(
+                "req {}: first_token span {} but ttft_us is {:?}",
+                self.id,
+                if has_first { "present" } else { "absent" },
+                self.ttft_us
+            ));
+        }
+        v
+    }
+}
+
+/// Accumulates one request's spans while it is resident. Owned by the
+/// engine thread (inside the scheduler's per-lane state): plain `Vec`
+/// pushes, no sharing, no locks. Created only when tracing is enabled.
+#[derive(Debug)]
+pub struct TimelineBuilder {
+    id: u64,
+    client: u64,
+    priority: &'static str,
+    ttft_us: Option<u64>,
+    spans: Vec<Span>,
+}
+
+impl TimelineBuilder {
+    pub fn new(id: u64, client: u64, priority: &'static str) -> TimelineBuilder {
+        TimelineBuilder { id, client, priority, ttft_us: None, spans: Vec::with_capacity(8) }
+    }
+
+    /// Record a completed span (`end_us >= start_us`).
+    pub fn span(&mut self, kind: SpanKind, start_us: u64, end_us: u64, arg: u64, sweep: u64) {
+        self.spans.push(Span {
+            kind,
+            start_us,
+            dur_us: end_us.saturating_sub(start_us),
+            arg,
+            sweep,
+        });
+    }
+
+    /// Record an instant event (zero duration).
+    pub fn instant(&mut self, kind: SpanKind, at_us: u64, arg: u64) {
+        self.span(kind, at_us, at_us, arg, 0);
+    }
+
+    /// Record the first streamed byte (stamps the TTFT).
+    pub fn first_token(&mut self, at_us: u64, ttft_us: u64) {
+        self.ttft_us = Some(ttft_us);
+        self.instant(SpanKind::FirstToken, at_us, ttft_us);
+    }
+
+    /// Seal the timeline with its terminal event.
+    pub fn finish(mut self, outcome: &'static str, at_us: u64) -> Timeline {
+        self.instant(SpanKind::Finish, at_us, 0);
+        Timeline {
+            id: self.id,
+            client: self.client,
+            priority: self.priority,
+            outcome,
+            ttft_us: self.ttft_us,
+            spans: self.spans,
+        }
+    }
+}
+
+/// The bounded flight recorder (`serve --trace N`): the last `capacity`
+/// completed request timelines in a ring, plus the [`EXEMPLARS`]
+/// slowest-TTFT completions pinned outside it. Capacity 0 disables
+/// recording entirely ([`TraceRecorder::enabled`]) while ids keep being
+/// minted — `req=<id>` log lines and SSE streams work untraced.
+pub struct TraceRecorder {
+    epoch: Instant,
+    next_id: AtomicU64,
+    /// Total timelines ever recorded; `cursor % capacity` is the next
+    /// slot to overwrite. Lock-free.
+    cursor: AtomicU64,
+    slots: Vec<Mutex<Option<Arc<Timeline>>>>,
+    exemplars: Mutex<Vec<Arc<Timeline>>>,
+}
+
+impl TraceRecorder {
+    pub fn new(capacity: usize) -> TraceRecorder {
+        TraceRecorder {
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(0),
+            cursor: AtomicU64::new(0),
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+            exemplars: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Whether completed timelines are recorded. When false, the
+    /// scheduler never creates a [`TimelineBuilder`] — the decode path
+    /// carries no tracing cost beyond an `Option` check.
+    pub fn enabled(&self) -> bool {
+        !self.slots.is_empty()
+    }
+
+    /// Mint the next request id (1-based; 0 marks an unminted request,
+    /// e.g. scheduler unit tests that bypass the batcher).
+    pub fn mint_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Microseconds since the recorder's epoch — the time base every
+    /// span timestamp shares.
+    pub fn now_us(&self) -> u64 {
+        self.us_at(Instant::now())
+    }
+
+    /// An `Instant` (e.g. an enqueue stamp taken before tracing looked
+    /// at it) on the recorder's time base.
+    pub fn us_at(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.epoch).as_micros().min(u64::MAX as u128) as u64
+    }
+
+    /// Publish a completed timeline: one slot overwrite in the ring
+    /// (lock-free cursor, per-slot mutex) and, when its TTFT ranks among
+    /// the slowest seen, a pin in the exemplar set. Never called on the
+    /// per-token path — only at a request's terminal event.
+    pub fn record(&self, t: Timeline) {
+        if !self.enabled() {
+            return;
+        }
+        let t = Arc::new(t);
+        let i = (self.cursor.fetch_add(1, Ordering::Relaxed) as usize) % self.slots.len();
+        *self.slots[i].lock().unwrap() = Some(t.clone());
+        if let Some(ttft) = t.ttft_us {
+            let mut ex = self.exemplars.lock().unwrap();
+            let slowest_kept = ex.last().and_then(|e| e.ttft_us).unwrap_or(0);
+            if ex.len() < EXEMPLARS || ttft > slowest_kept {
+                ex.push(t);
+                // slowest first; ties keep the earlier completion
+                ex.sort_by_key(|e| std::cmp::Reverse(e.ttft_us.unwrap_or(0)));
+                ex.truncate(EXEMPLARS);
+            }
+        }
+    }
+
+    /// The ring's resident timelines, oldest first.
+    pub fn recent(&self) -> Vec<Arc<Timeline>> {
+        if !self.enabled() {
+            return Vec::new();
+        }
+        let n = self.cursor.load(Ordering::Relaxed);
+        let cap = self.slots.len() as u64;
+        let first = n.saturating_sub(cap);
+        (first..n)
+            .filter_map(|i| self.slots[(i % cap) as usize].lock().unwrap().clone())
+            .collect()
+    }
+
+    /// The pinned slowest-TTFT completions, slowest first.
+    pub fn exemplars(&self) -> Vec<Arc<Timeline>> {
+        self.exemplars.lock().unwrap().clone()
+    }
+
+    /// The `GET /v1/trace` payload: recent timelines plus exemplars.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "recent".to_string(),
+            Json::Arr(self.recent().iter().map(|t| t.to_json()).collect()),
+        );
+        m.insert(
+            "exemplars".to_string(),
+            Json::Arr(self.exemplars().iter().map(|t| t.to_json()).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Render timelines as Chrome trace-event JSON (the `?format=chrome`
+/// export): a flat array of `ph: "X"` complete events, `ts`/`dur` in
+/// microseconds, one `tid` per request id — load the response body
+/// as-is in Perfetto (ui.perfetto.dev) or `chrome://tracing`.
+pub fn chrome_trace(timelines: &[Arc<Timeline>]) -> Json {
+    let mut events = Vec::new();
+    for t in timelines {
+        for s in &t.spans {
+            let mut args = BTreeMap::new();
+            args.insert("arg".to_string(), Json::Num(s.arg as f64));
+            args.insert("sweep".to_string(), Json::Num(s.sweep as f64));
+            args.insert("priority".to_string(), Json::Str(t.priority.to_string()));
+            args.insert("outcome".to_string(), Json::Str(t.outcome.to_string()));
+            let mut e = BTreeMap::new();
+            e.insert("name".to_string(), Json::Str(s.kind.name().to_string()));
+            e.insert("ph".to_string(), Json::Str("X".to_string()));
+            e.insert("ts".to_string(), Json::Num(s.start_us as f64));
+            e.insert("dur".to_string(), Json::Num(s.dur_us as f64));
+            e.insert("pid".to_string(), Json::Num(1.0));
+            e.insert("tid".to_string(), Json::Num(t.id as f64));
+            e.insert("args".to_string(), Json::Obj(args));
+            events.push(Json::Obj(e));
+        }
+    }
+    Json::Arr(events)
+}
+
+/// The latency SLO catalog, stated as p99 bounds in microseconds and
+/// checked through [`Histogram::quantile`] (see `docs/OBSERVABILITY.md`
+/// for the catalog table). The batch queue-wait bound is derived from
+/// the interactive TTFT bound times `INTERACTIVE_BURST + 1`: the
+/// scheduler guarantees a batch admission after at most that many
+/// interactive turns, so batch waiting is bounded by the rotation
+/// factor, not unbounded starvation.
+#[derive(Clone, Copy, Debug)]
+pub struct SloSpec {
+    /// Interactive tier: p99 admission → first token, µs.
+    pub interactive_p99_ttft_us: f64,
+    /// Batch tier: p99 submission → admission wait, µs.
+    pub batch_p99_queue_wait_us: f64,
+    /// Interactive tier: p99 gap between streamed bytes, µs.
+    pub interactive_p99_inter_token_us: f64,
+}
+
+impl SloSpec {
+    /// An interactive-first catalog: the batch queue-wait bound follows
+    /// from the TTFT bound and the admission rotation factor.
+    pub fn interactive_first(p99_ttft_us: f64, p99_inter_token_us: f64) -> SloSpec {
+        SloSpec {
+            interactive_p99_ttft_us: p99_ttft_us,
+            batch_p99_queue_wait_us: p99_ttft_us * (INTERACTIVE_BURST + 1) as f64,
+            interactive_p99_inter_token_us: p99_inter_token_us,
+        }
+    }
+
+    /// Every bound multiplied by `s` (runner-speed compensation).
+    pub fn scaled(self, s: f64) -> SloSpec {
+        SloSpec {
+            interactive_p99_ttft_us: self.interactive_p99_ttft_us * s,
+            batch_p99_queue_wait_us: self.batch_p99_queue_wait_us * s,
+            interactive_p99_inter_token_us: self.interactive_p99_inter_token_us * s,
+        }
+    }
+
+    /// Bounds scaled by the `HBLLM_SLO_SCALE` environment variable
+    /// ([`slo_scale`]) — how CI loosens the gates on slow shared runners
+    /// without disabling them.
+    pub fn from_env(self) -> SloSpec {
+        self.scaled(slo_scale())
+    }
+
+    /// Check every SLO against a metrics bundle's histograms. Returns
+    /// human-readable violations; empty means all gates hold. A
+    /// histogram with no observations passes vacuously (no traffic at a
+    /// tier is not a latency regression).
+    pub fn check(&self, m: &ServeMetrics) -> Vec<String> {
+        let mut v = Vec::new();
+        let mut gate = |name: &str, h: &Histogram, bound: f64| {
+            if let Some(p99) = h.quantile(0.99) {
+                if p99 > bound {
+                    v.push(format!(
+                        "{name}: p99 {p99:.0}µs exceeds the SLO bound {bound:.0}µs"
+                    ));
+                }
+            }
+        };
+        gate("interactive ttft", &m.tier(0).ttft_us, self.interactive_p99_ttft_us);
+        gate("batch queue_wait", &m.tier(1).queue_wait_us, self.batch_p99_queue_wait_us);
+        gate(
+            "interactive inter_token",
+            &m.tier(0).inter_token_us,
+            self.interactive_p99_inter_token_us,
+        );
+        v
+    }
+}
+
+/// The `HBLLM_SLO_SCALE` multiplier: a positive float loosening (>1) or
+/// tightening (<1) every [`SloSpec`] bound; unset, unparsable or
+/// non-positive values mean 1.0.
+pub fn slo_scale() -> f64 {
+    std::env::var("HBLLM_SLO_SCALE")
+        .ok()
+        .and_then(|s| s.trim().parse::<f64>().ok())
+        .filter(|s| *s > 0.0 && s.is_finite())
+        .unwrap_or(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tl(id: u64, ttft: u64) -> Timeline {
+        let mut b = TimelineBuilder::new(id, 0, "interactive");
+        b.span(SpanKind::Enqueue, 0, 10, 0, 0);
+        b.span(SpanKind::Admit, 10, 10, 0, 0);
+        b.span(SpanKind::Prefill, 12, 20, 1, 1);
+        b.first_token(20, ttft);
+        b.finish("done", 30)
+    }
+
+    #[test]
+    fn ids_are_monotone_and_start_at_one() {
+        let r = TraceRecorder::new(0);
+        assert_eq!(r.mint_id(), 1);
+        assert_eq!(r.mint_id(), 2);
+        assert!(!r.enabled(), "capacity 0 must disable recording");
+        r.record(tl(1, 5)); // silently dropped
+        assert!(r.recent().is_empty());
+        assert!(r.exemplars().is_empty());
+    }
+
+    #[test]
+    fn ring_keeps_the_last_capacity_timelines_in_order() {
+        let r = TraceRecorder::new(3);
+        for id in 1..=5 {
+            r.record(tl(id, 100));
+        }
+        let ids: Vec<u64> = r.recent().iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![3, 4, 5], "ring must hold the newest 3, oldest first");
+    }
+
+    #[test]
+    fn exemplars_pin_the_slowest_ttfts() {
+        let r = TraceRecorder::new(2);
+        for (id, ttft) in [(1, 50), (2, 900), (3, 10), (4, 700), (5, 30), (6, 800), (7, 20)] {
+            r.record(tl(id, ttft));
+        }
+        let ex: Vec<(u64, Option<u64>)> = r.exemplars().iter().map(|t| (t.id, t.ttft_us)).collect();
+        // EXEMPLARS = 4 slowest, slowest first — the ring only holds the
+        // last 2 but the 900µs spike from id 2 stays pinned
+        assert_eq!(ex, vec![(2, Some(900)), (6, Some(800)), (4, Some(700)), (1, Some(50))]);
+    }
+
+    #[test]
+    fn well_formed_timeline_validates_clean() {
+        let t = tl(7, 8);
+        assert!(t.validate().is_empty(), "{:?}", t.validate());
+        assert_eq!(t.spans.first().unwrap().kind, SpanKind::Enqueue);
+        assert_eq!(t.spans.last().unwrap().kind, SpanKind::Finish);
+        assert_eq!(t.ttft_us, Some(8));
+    }
+
+    #[test]
+    fn validate_catches_structural_violations() {
+        // out-of-order start timestamps
+        let mut b = TimelineBuilder::new(1, 0, "batch");
+        b.span(SpanKind::Enqueue, 0, 10, 0, 0);
+        b.span(SpanKind::Sweep, 5, 8, 0, 0); // goes backwards
+        let t = b.finish("done", 30);
+        assert!(t.validate().iter().any(|v| v.contains("after a span")), "{:?}", t.validate());
+        // ttft recorded without a first_token span
+        let t = Timeline {
+            id: 2,
+            client: 0,
+            priority: "interactive",
+            outcome: "done",
+            ttft_us: Some(9),
+            spans: vec![
+                Span { kind: SpanKind::Enqueue, start_us: 0, dur_us: 1, arg: 0, sweep: 0 },
+                Span { kind: SpanKind::Finish, start_us: 2, dur_us: 0, arg: 0, sweep: 0 },
+            ],
+        };
+        assert!(t.validate().iter().any(|v| v.contains("first_token")), "{:?}", t.validate());
+        // empty timeline
+        let t = Timeline {
+            id: 3,
+            client: 0,
+            priority: "interactive",
+            outcome: "error",
+            ttft_us: None,
+            spans: Vec::new(),
+        };
+        assert_eq!(t.validate().len(), 1);
+    }
+
+    #[test]
+    fn json_exports_parse_and_carry_the_span_catalog() {
+        let r = TraceRecorder::new(4);
+        r.record(tl(1, 5));
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        let recent = j.get("recent").and_then(Json::as_arr).unwrap();
+        assert_eq!(recent.len(), 1);
+        let spans = recent[0].get("spans").and_then(Json::as_arr).unwrap();
+        let names: Vec<&str> =
+            spans.iter().filter_map(|s| s.get("name").and_then(Json::as_str)).collect();
+        assert_eq!(names, vec!["enqueue", "admit", "prefill", "first_token", "finish"]);
+        assert_eq!(recent[0].at(&["ttft_us"]).and_then(Json::as_f64), Some(5.0));
+        // chrome trace: flat array of complete events on the same base
+        let c = Json::parse(&chrome_trace(&r.recent()).to_string()).unwrap();
+        let events = c.as_arr().unwrap();
+        assert_eq!(events.len(), 5);
+        for e in events {
+            assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+            assert_eq!(e.get("tid").and_then(Json::as_f64), Some(1.0));
+            assert!(e.get("ts").and_then(Json::as_f64).is_some());
+            assert!(e.get("dur").and_then(Json::as_f64).is_some());
+        }
+    }
+
+    #[test]
+    fn slo_check_flags_only_violated_gates() {
+        let m = ServeMetrics::new();
+        for _ in 0..100 {
+            m.tier(0).ttft_us.observe(150); // lands in (100, 400]
+            m.tier(1).queue_wait_us.observe(150);
+        }
+        // generous bounds: everything passes (inter-token is empty and
+        // passes vacuously)
+        let ok = SloSpec::interactive_first(1_000_000.0, 1_000_000.0);
+        assert!(ok.check(&m).is_empty(), "{:?}", ok.check(&m));
+        // a 1µs TTFT bound must trip exactly the ttft gate, and the
+        // derived batch bound (4µs) the queue-wait gate
+        let tight = SloSpec::interactive_first(1.0, 1_000_000.0);
+        let violations = tight.check(&m);
+        assert_eq!(violations.len(), 2, "{violations:?}");
+        assert!(violations[0].contains("interactive ttft"), "{violations:?}");
+        assert!(violations[1].contains("batch queue_wait"), "{violations:?}");
+    }
+
+    #[test]
+    fn slo_scaling_multiplies_every_bound() {
+        let s = SloSpec::interactive_first(100.0, 10.0).scaled(3.0);
+        assert_eq!(s.interactive_p99_ttft_us, 300.0);
+        assert_eq!(s.batch_p99_queue_wait_us, 300.0 * (INTERACTIVE_BURST + 1) as f64);
+        assert_eq!(s.interactive_p99_inter_token_us, 30.0);
+        // unset env means identity scale
+        assert!(slo_scale() > 0.0);
+    }
+}

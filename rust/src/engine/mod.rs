@@ -285,6 +285,14 @@ pub trait Backend {
             })
             .collect())
     }
+
+    /// Cumulative forward sweeps this backend has executed — the join
+    /// key the trace subsystem stamps on sweep spans so a scheduler-side
+    /// timeline lines up with engine-side counters. Backends that don't
+    /// count sweeps report 0 (spans still record wall-clock intervals).
+    fn sweeps_executed(&self) -> u64 {
+        0
+    }
 }
 
 /// Which backend to construct (CLI `--backend {xla,native}`).

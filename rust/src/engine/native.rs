@@ -583,6 +583,10 @@ impl Backend for NativeBackend {
         Some(self.pool.stats())
     }
 
+    fn sweeps_executed(&self) -> u64 {
+        self.sweeps
+    }
+
     fn set_kv_blocks(
         &mut self,
         n_blocks: Option<usize>,

@@ -17,19 +17,30 @@
 //!   ttft.count + inter_token.count`) and the exposition itself is
 //!   well-formed (cumulative buckets, `+Inf` terminal, `_count`
 //!   agreement);
+//! * every SSE stream that ends any way but a delivered `done` is
+//!   counted by `hbllm_http_streams_aborted_total` — exactly the planned
+//!   disconnects, nothing else;
 //! * `/v1/stats` totals and the Prometheus text agree at drain.
 //!
 //! The fleet is planned up front from a fixed [`Pcg32`] seed so the
 //! connection budgets handed to `serve_fronts` are exact and the run is
 //! reproducible. `chaos_soak_long` is the same fleet at soak scale,
 //! `#[ignore]`d for tier-1 (run with `cargo test -- --ignored`).
+//!
+//! `trace_wave_meets_slos_and_exports_ordered_timelines` drives a
+//! deterministic sequential wave against a `--trace`-enabled server and
+//! is the latency regression gate: it checks the [`SloSpec`] bounds
+//! through [`Histogram::quantile`] (scaled by `HBLLM_SLO_SCALE` for slow
+//! runners) and verifies `GET /v1/trace` returns well-formed,
+//! correctly-ordered span timelines — the structural invariants are
+//! asserted unscaled.
 
-use hbllm::coordinator::{http, serve, BatcherConfig};
+use hbllm::coordinator::{http, serve, BatcherConfig, SloSpec};
 use hbllm::engine::{Backend, NativeBackend, PackedModel, SpecConfig};
 use hbllm::model::testing::micro_weights;
 use hbllm::util::json::Json;
 use hbllm::util::rng::Pcg32;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::{Duration, Instant};
@@ -120,9 +131,10 @@ fn parse_events(body: &str) -> Vec<(String, String)> {
 }
 
 /// Read a full SSE stream (server closes the connection after the
-/// terminal frame, so EOF is the delimiter here), optionally sleeping
-/// between lines to emulate a slow reader.
-fn read_sse(addr: SocketAddr, body: &str, per_line_delay: Duration) -> Vec<(String, String)> {
+/// terminal frame, so EOF is the delimiter here) and return the raw SSE
+/// body, optionally sleeping between lines to emulate a slow reader.
+/// The raw form keeps the `id:` lines that [`parse_events`] skips.
+fn read_sse_raw(addr: SocketAddr, body: &str, per_line_delay: Duration) -> String {
     let mut stream = TcpStream::connect(addr).unwrap();
     let req = format!(
         "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
@@ -144,7 +156,12 @@ fn read_sse(addr: SocketAddr, body: &str, per_line_delay: Duration) -> Vec<(Stri
     }
     let (head, sse) = text.split_once("\r\n\r\n").expect("no header/body separator");
     assert!(head.starts_with("HTTP/1.1 200"), "generate refused: {head}");
-    parse_events(sse)
+    sse.to_string()
+}
+
+/// [`read_sse_raw`] parsed into (event, data) pairs.
+fn read_sse(addr: SocketAddr, body: &str, per_line_delay: Duration) -> Vec<(String, String)> {
+    parse_events(&read_sse_raw(addr, body, per_line_delay))
 }
 
 /// Drive one TCP line-protocol exchange and collect the generation
@@ -343,11 +360,11 @@ fn drain_and_scrape(addr: SocketAddr, expected_started: u64) -> (Json, String) {
 // The fleet
 // ---------------------------------------------------------------------------
 
-/// Per wave: 7 TCP connections, 12 HTTP connections, 9 admitted
+/// Per wave: 7 TCP connections, 13 HTTP connections, 9 admitted
 /// generation requests (4 TCP + 5 HTTP), of which 2 are batch-tier
 /// anchors and 1 is a zero-token request.
 const TCP_CONNS_PER_WAVE: usize = 7;
-const HTTP_CONNS_PER_WAVE: usize = 12;
+const HTTP_CONNS_PER_WAVE: usize = 13;
 const GENS_PER_WAVE: u64 = 9;
 const ZERO_TOKEN_PER_WAVE: u64 = 1;
 const BATCH_DONE_PER_WAVE: u64 = 2;
@@ -430,14 +447,13 @@ fn spawn_wave(
         assert_eq!((n, toks), (5, 5), "interactive HTTP anchor did not complete");
     }));
     go(jitter(rng), Box::new(move || {
-        let (status, body) = http_request(
+        // read_sse (EOF-delimited), NOT read_framed: an SSE response has
+        // no Content-Length, so framed reading would miss every event
+        let events = read_sse(
             http_addr,
-            "POST",
-            "/v1/generate",
             &format!(r#"{{"prompt": "{h2}", "max_new": 3, "priority": "batch"}}"#),
+            Duration::ZERO,
         );
-        assert_eq!(status, 200);
-        let events = parse_events(&body);
         assert_eq!(
             events.last().map(|(e, d)| (e.as_str(), d.as_str())),
             Some(("done", "3")),
@@ -471,6 +487,12 @@ fn spawn_wave(
     go(jitter(rng), Box::new(move || {
         let (status, _) = http_request(http_addr, "GET", "/v1/nope", "");
         assert_eq!(status, 404);
+    }));
+    go(jitter(rng), Box::new(move || {
+        // tracing is off on this server: the endpoint must say so (404)
+        // rather than serve an empty recorder
+        let (status, body) = http_request(http_addr, "GET", "/v1/trace", "");
+        assert_eq!(status, 404, "trace must 404 when disabled: {body}");
     }));
     go(jitter(rng), Box::new(move || {
         // unusable framing: the server answers 400 and hangs up
@@ -622,7 +644,8 @@ fn run_chaos_fleet(model_seed: u64, plan_seed: u64, waves: usize) {
 
     // --- front-end accounting: exact planned error counts ---
     assert_eq!(metric_sum(&m, "hbllm_http_requests_total", &["status=\"400\""]), (2 * w) as f64);
-    assert_eq!(metric_sum(&m, "hbllm_http_requests_total", &["status=\"404\""]), w as f64);
+    // /v1/nope plus the trace-disabled probe
+    assert_eq!(metric_sum(&m, "hbllm_http_requests_total", &["status=\"404\""]), (2 * w) as f64);
     assert_eq!(metric_sum(&m, "hbllm_http_requests_total", &["status=\"405\""]), w as f64);
     assert_eq!(metric_sum(&m, "hbllm_http_requests_total", &["status=\"413\""]), w as f64);
     assert_eq!(
@@ -636,6 +659,13 @@ fn run_chaos_fleet(model_seed: u64, plan_seed: u64, waves: usize) {
     assert_eq!(metric(&m, "hbllm_tcp_requests_total{verb=\"ppl\"}"), w as f64);
     assert_eq!(metric(&m, "hbllm_tcp_requests_total{verb=\"legacy\"}"), w as f64);
     assert_eq!(metric(&m, "hbllm_tcp_requests_total{verb=\"bad\"}"), w as f64);
+    // exactly the planned SSE disconnect aborts its stream each wave;
+    // every other HTTP stream verified `done` delivery client-side
+    assert_eq!(
+        metric(&m, "hbllm_http_streams_aborted_total"),
+        w as f64,
+        "aborted-stream accounting drifted"
+    );
 
     // --- gauges at drain: nothing held, nothing leaked ---
     assert_eq!(metric(&m, "hbllm_active_lanes"), 0.0);
@@ -671,6 +701,159 @@ fn chaos_fleet_drains_clean_and_metrics_agree() {
 #[ignore = "soak scale; run explicitly or via the CI soak job"]
 fn chaos_soak_long() {
     run_chaos_fleet(92, 0x5eed_50a1, 4);
+}
+
+/// The latency regression gate: a known deterministic wave — three
+/// sequential interactive requests (3 tokens each) then one batch
+/// request (2 tokens) — against a `--trace`-enabled server.
+///
+/// * at least two latency SLOs are asserted through
+///   [`Histogram::quantile`] via [`SloSpec::check`] (interactive p99
+///   TTFT, batch p99 queue-wait, interactive p99 inter-token), scaled by
+///   `HBLLM_SLO_SCALE` so slow shared runners gate on proportionally
+///   relaxed bounds;
+/// * `GET /v1/trace` returns well-formed, correctly-ordered span
+///   timelines for the wave — the structural invariants (span order,
+///   monotone starts, first-token/ttft agreement, exemplar ordering) are
+///   asserted UNSCALED: they must hold however slow the machine is;
+/// * every SSE frame carries a monotonically numbered `id:` line.
+#[test]
+fn trace_wave_meets_slos_and_exports_ordered_timelines() {
+    let mut be = packed_micro(95);
+    be.set_lanes(2);
+    let (http_l, http_addr) = serve::bind("127.0.0.1:0").unwrap();
+
+    let n_gens = 4u64;
+    let supervisor = std::thread::spawn(move || {
+        // sequential clients: each waits for its `done` before the next
+        // connects, so request ids, ring order, and span shapes are
+        // fully deterministic (one active lane at a time)
+        for i in 0..3 {
+            let body = format!(r#"{{"prompt": "ta kivo t{i}", "max_new": 3}}"#);
+            let sse = read_sse_raw(http_addr, &body, Duration::ZERO);
+            let ids: Vec<u64> = sse
+                .lines()
+                .filter_map(|l| l.strip_prefix("id: "))
+                .map(|v| v.parse().unwrap())
+                .collect();
+            assert_eq!(ids, vec![0, 1, 2, 3], "SSE ids must number frames from 0:\n{sse}");
+            let events = parse_events(&sse);
+            assert_eq!(
+                events.last().map(|(e, d)| (e.as_str(), d.as_str())),
+                Some(("done", "3")),
+                "interactive request {i} failed: {events:?}"
+            );
+        }
+        let events = read_sse(
+            http_addr,
+            r#"{"prompt": "so lu", "max_new": 2, "priority": "batch"}"#,
+            Duration::ZERO,
+        );
+        assert_eq!(
+            events.last().map(|(e, d)| (e.as_str(), d.as_str())),
+            Some(("done", "2")),
+            "batch request failed: {events:?}"
+        );
+        // drain first so every timeline is recorded before the scrape
+        let (stats, text) = drain_and_scrape(http_addr, n_gens);
+        let (status, trace_body) = http_request(http_addr, "GET", "/v1/trace", "");
+        assert_eq!(status, 200, "trace endpoint refused: {trace_body}");
+        let (status, chrome_body) =
+            http_request(http_addr, "GET", "/v1/trace?format=chrome", "");
+        assert_eq!(status, 200, "chrome export refused: {chrome_body}");
+        (stats, text, trace_body, chrome_body)
+    });
+
+    let metrics = serve::serve_fronts(
+        // 4 generations + the drain poller + the two trace scrapes
+        vec![http::HttpConn::front_end(http_l, Some(n_gens as usize + 3))],
+        &mut be,
+        BatcherConfig { trace: 8, ..Default::default() },
+    )
+    .unwrap();
+    let (stats, text, trace_body, chrome_body) = supervisor.join().unwrap();
+    validate_exposition(&text);
+    let m = parse_metrics(&text);
+    assert_eq!(
+        metric(&m, "hbllm_http_streams_aborted_total"),
+        0.0,
+        "no stream in this wave disconnects"
+    );
+
+    // --- SLO gates through Histogram::quantile (scaled for CI) ---
+    let slo = SloSpec::interactive_first(2_000_000.0, 500_000.0).from_env();
+    let violations = slo.check(&metrics);
+    assert!(violations.is_empty(), "SLO violations: {violations:?}");
+    let ttft = &metrics.tier(0).ttft_us;
+    let (p50, p99) = (ttft.quantile(0.5).unwrap(), ttft.quantile(0.99).unwrap());
+    assert!(p50 <= p99, "quantiles must be monotone in q: p50 {p50} > p99 {p99}");
+    assert!(
+        metrics.tier(1).queue_wait_us.quantile(0.99).is_some(),
+        "the batch request must leave queue-wait mass to gate on"
+    );
+    // /v1/stats exposes the same quantiles for dashboards
+    assert!(
+        stats.at(&["latency", "interactive", "ttft_us", "p99"]).and_then(Json::as_f64).is_some(),
+        "/v1/stats latency section missing: {stats:?}"
+    );
+
+    // --- /v1/trace: well-formed, correctly-ordered timelines ---
+    let j = Json::parse(&trace_body).unwrap();
+    let recent = j.get("recent").and_then(Json::as_arr).expect("recent array");
+    assert_eq!(recent.len(), n_gens as usize, "the ring must hold the whole wave");
+    let name = |s: &Json| s.get("name").and_then(Json::as_str).unwrap().to_string();
+    for (i, tl) in recent.iter().enumerate() {
+        // ids were minted in admission order and the ring is oldest-first
+        assert_eq!(tl.get("id").and_then(Json::as_f64), Some((i + 1) as f64));
+        let want_prio = if i < 3 { "interactive" } else { "batch" };
+        assert_eq!(tl.get("priority").and_then(Json::as_str), Some(want_prio));
+        assert_eq!(tl.get("outcome").and_then(Json::as_str), Some("done"));
+        let spans = tl.get("spans").and_then(Json::as_arr).expect("spans array");
+        // one active request at a time: admission, a prefill sweep that
+        // yields the first token, one plain sweep per remaining token
+        let want: &[&str] = if i < 3 {
+            &["enqueue", "admit", "prefill", "first_token", "sweep", "sweep", "finish"]
+        } else {
+            &["enqueue", "admit", "prefill", "first_token", "sweep", "finish"]
+        };
+        let names: Vec<String> = spans.iter().map(&name).collect();
+        assert_eq!(names, want, "timeline {i} span catalog drifted");
+        let mut prev = 0.0;
+        for s in spans {
+            let start = s.get("start_us").and_then(Json::as_f64).expect("start_us");
+            assert!(s.get("dur_us").and_then(Json::as_f64).is_some(), "dur_us missing");
+            assert!(start >= prev, "span starts must be monotone: {start} < {prev}");
+            prev = start;
+        }
+        // first_token span and ttft_us travel together
+        assert!(
+            tl.get("ttft_us").and_then(Json::as_f64).is_some(),
+            "completed generation lost its ttft"
+        );
+    }
+
+    // exemplars pin the slowest TTFTs, slowest first
+    let ex = j.get("exemplars").and_then(Json::as_arr).expect("exemplars array");
+    assert_eq!(ex.len(), n_gens as usize, "all four completions carry a ttft");
+    let tt: Vec<f64> =
+        ex.iter().map(|t| t.get("ttft_us").and_then(Json::as_f64).unwrap()).collect();
+    assert!(tt.windows(2).all(|w| w[0] >= w[1]), "exemplars must be slowest-first: {tt:?}");
+
+    // --- ?format=chrome: flat complete-event array, one tid per request ---
+    let c = Json::parse(&chrome_body).unwrap();
+    let events = c.as_arr().expect("chrome trace is a flat event array");
+    assert!(!events.is_empty());
+    for e in events.iter() {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(e.get("name").and_then(Json::as_str).is_some());
+        assert!(e.get("ts").and_then(Json::as_f64).is_some());
+        assert!(e.get("dur").and_then(Json::as_f64).is_some());
+    }
+    let tids: BTreeSet<u64> = events
+        .iter()
+        .map(|e| e.get("tid").and_then(Json::as_f64).unwrap() as u64)
+        .collect();
+    assert_eq!(tids, (1..=n_gens).collect::<BTreeSet<u64>>(), "one lane per request id");
 }
 
 /// Repeated-prefix client waves against a prefix-cache-enabled server:

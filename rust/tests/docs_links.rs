@@ -177,6 +177,10 @@ fn serving_docs_exist_and_are_linked() {
         "shared_blocks",
         "prefix_cache_hits",
         "prefix_cache_misses",
+        "GET /v1/trace",
+        "format=chrome",
+        "\"latency\"",
+        "id: 0",
     ] {
         assert!(api.contains(needle), "docs/API.md lost its {needle:?} coverage");
     }
@@ -206,7 +210,13 @@ fn serving_docs_exist_and_are_linked() {
         "hbllm_prefix_cache_misses_total",
         "hbllm_connections_active",
         "hbllm_kernel_info",
+        "hbllm_http_streams_aborted_total",
         "chaos_soak",
+        "/v1/trace",
+        "quantile",
+        "HBLLM_SLO_SCALE",
+        "INTERACTIVE_BURST",
+        "Perfetto",
     ] {
         assert!(obs.contains(needle), "docs/OBSERVABILITY.md lost its {needle:?} coverage");
     }
