@@ -19,7 +19,9 @@
 //! The serving wire protocols (TCP verbs and HTTP endpoints) are
 //! specified in `docs/API.md`.
 
-use crate::coordinator::{http, serve, BatcherConfig, Priority, QuantJobConfig};
+use crate::coordinator::{
+    http, run_router, serve, BatcherConfig, Priority, QuantJobConfig, RouterConfig,
+};
 use crate::engine::{self, Backend, BackendKind, SpecConfig};
 use crate::pipeline::{EvalScope, Session};
 use crate::quant::{self, ciq, synth, Quantizer};
@@ -36,6 +38,7 @@ pub fn run(args: Args) -> Result<()> {
         "quantize" => quantize(&args),
         "eval" => eval(&args),
         "serve" => serve_cmd(&args),
+        "router" => router_cmd(&args),
         "generate" => generate_cmd(&args),
         "ciq" => ciq_cmd(&args),
         "help" | _ => {
@@ -57,7 +60,13 @@ COMMANDS:
   serve --method M         TCP generation + scoring server
                            (`ppl <text>`, `gen <max-new> <temp> <seed> <prompt>`,
                            `prio <interactive|batch> gen ...` verbs;
-                           `--http-port` adds HTTP/SSE endpoints)
+                           `--http-port` adds HTTP/SSE endpoints; SIGTERM
+                           drains gracefully, as do the `drain` verb and
+                           POST /v1/drain)
+  router --workers A,B     multi-replica front-end over running serve
+                           workers: same wire protocols, load-aware sticky
+                           placement, transparent retry on replica death
+                           (also reachable as `serve --router`)
   generate [--method M]    sample text from the (optionally quantized) model,
                            or from a running server with `--url`
   ciq                      CIQ expressiveness table (paper §3.1)
@@ -68,6 +77,8 @@ OPTIONS:
   --backend B              xla (PJRT over dequantized fp32, default) or
                            native (pure-Rust packed engine with KV cache)
   --workers N              quantization worker threads
+                           (router: comma-separated worker addresses instead,
+                           e.g. --workers 127.0.0.1:7431,127.0.0.1:7441)
   --ppl-windows N          eval windows per corpus (default 64)
   --qa-items N             QA items per family (default 25)
   --calib-windows N        calibration windows (default 16)
@@ -110,6 +121,14 @@ OPTIONS:
                            ?format=chrome for Perfetto (default 0 = off; the
                            per-token path stays allocation-free when off)
   --pallas                 use the Pallas-attention HLO entry (xla backend)
+
+ROUTER OPTIONS (docs/ARCHITECTURE.md section \"Router tier\"):
+  --addr HOST:PORT         router TCP listen address (default 127.0.0.1:7430)
+  --http-port N            router HTTP front-end port (same host as --addr)
+  --health-interval-ms N   worker /v1/stats poll period (default 50)
+  --sticky-prefix N        prompt bytes hashed for sticky placement (default 32)
+  --load-slack N           extra load the sticky worker may carry before
+                           placement falls back to least-loaded (default 8)
 
 ENVIRONMENT:
   HBLLM_KERNEL=K           force the packed-GEMV kernel (scalar|avx2|neon);
@@ -263,6 +282,14 @@ fn eval(args: &Args) -> Result<()> {
 }
 
 fn serve_cmd(args: &Args) -> Result<()> {
+    // `serve --router` is the router tier under the familiar verb — no
+    // model, no engine; it fans out to already-running workers
+    if args.has_flag("router") {
+        return router_cmd(args);
+    }
+    // SIGTERM = graceful drain: admission closes, queued requests get
+    // `err draining`, active lanes finish, then the process exits
+    serve::install_sigterm_drain();
     let mut s = session(args)?;
     let lanes = args.get_usize("lanes", 4);
     let kv_blocks = args.get("kv-blocks").and_then(|v| v.parse().ok());
@@ -401,6 +428,64 @@ fn serve_cmd(args: &Args) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// The router tier (`router --workers a:p,b:p` or `serve --router`): a
+/// front-end over already-running `serve` worker processes. Speaks the
+/// same TCP/HTTP protocols to clients; placement, stickiness and retry
+/// semantics are documented in `docs/ARCHITECTURE.md` §Router tier.
+fn router_cmd(args: &Args) -> Result<()> {
+    let workers: Vec<String> = args
+        .get("workers")
+        .ok_or_else(|| anyhow!("--workers host:port[,host:port,...] required"))?
+        .split(',')
+        .map(|w| w.trim().to_string())
+        .filter(|w| !w.is_empty())
+        .collect();
+    anyhow::ensure!(!workers.is_empty(), "--workers needs at least one host:port");
+    let mut cfg = RouterConfig::default();
+    if let Some(ms) = args.get("health-interval-ms") {
+        let ms: u64 = ms.parse().map_err(|_| anyhow!("bad --health-interval-ms {ms}"))?;
+        cfg.health_interval = std::time::Duration::from_millis(ms.max(1));
+    }
+    cfg.sticky_prefix = args.get_usize("sticky-prefix", cfg.sticky_prefix);
+    cfg.load_slack = args.get_usize("load-slack", cfg.load_slack as usize) as u64;
+    let addr = args.get_or("addr", "127.0.0.1:7430");
+    let (listener, local) = serve::bind(addr)?;
+    let http = match args.get("http-port") {
+        Some(p) => {
+            let port: u16 = p.parse().map_err(|_| anyhow!("bad --http-port {p}"))?;
+            let http_addr = std::net::SocketAddr::new(local.ip(), port);
+            Some(serve::bind(&http_addr.to_string())?)
+        }
+        None => None,
+    };
+    println!(
+        "router on {local} over {} worker{}: {}",
+        workers.len(),
+        if workers.len() == 1 { "" } else { "s" },
+        workers.join(", ")
+    );
+    if let Some((_, http_addr)) = &http {
+        println!(
+            "http front-end on {http_addr}: POST /v1/generate (SSE) | POST /v1/score | \
+             GET /v1/stats (fleet) | GET /v1/metrics | GET|POST /v1/workers"
+        );
+    }
+    println!(
+        "placement: sticky prefix hash over {} prompt bytes, load slack {}, \
+         health poll every {:?}",
+        cfg.sticky_prefix, cfg.load_slack, cfg.health_interval
+    );
+    let metrics =
+        run_router(Some((listener, None)), http.map(|(l, _)| (l, None)), workers, cfg)?;
+    println!(
+        "router done: {} tcp + {} http requests, {} retried",
+        metrics.requests[0].get(),
+        metrics.requests[1].get(),
+        metrics.retries.get()
+    );
     Ok(())
 }
 
@@ -589,6 +674,28 @@ mod tests {
         assert_eq!(a.get_usize("spec-k", 0), 0, "spec defaults off");
         let a = parse("quantize --method hbllm-row --save out.hbq");
         assert_eq!(a.get("save"), Some("out.hbq"));
+    }
+
+    #[test]
+    fn router_flags_parse() {
+        let a = parse("router --workers 127.0.0.1:7431,127.0.0.1:7441 --http-port 7430");
+        let workers: Vec<&str> = a.get("workers").unwrap().split(',').collect();
+        assert_eq!(workers, ["127.0.0.1:7431", "127.0.0.1:7441"]);
+        assert_eq!(a.get("http-port").and_then(|v| v.parse::<u16>().ok()), Some(7430));
+        // tuning knobs fall back to RouterConfig defaults when absent
+        assert_eq!(a.get_usize("sticky-prefix", 32), 32);
+        assert_eq!(a.get_usize("load-slack", 8), 8);
+        assert_eq!(a.get("health-interval-ms"), None);
+        let a = parse("router --workers a:1 --sticky-prefix 16 --load-slack 2 --health-interval-ms 25");
+        assert_eq!(a.get_usize("sticky-prefix", 32), 16);
+        assert_eq!(a.get_usize("load-slack", 8), 2);
+        assert_eq!(a.get("health-interval-ms"), Some("25"));
+        // `serve --router` delegates to router mode
+        assert!(parse("serve --router --workers a:1").has_flag("router"));
+        assert!(!parse("serve --method hbllm-row").has_flag("router"));
+        // a router with no fleet is a usage error, not a hang
+        assert!(router_cmd(&parse("router")).is_err());
+        assert!(router_cmd(&parse("router --workers ,")).is_err());
     }
 
     #[test]

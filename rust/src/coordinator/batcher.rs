@@ -23,7 +23,7 @@ use super::metrics::ServeMetrics;
 use super::scheduler::{GenEvent, GenRequest, Priority};
 use super::trace::TraceRecorder;
 use crate::engine::{KvStats, SpecConfig, SpecStats};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -92,6 +92,11 @@ pub struct StatsSnapshot {
     pub kv: Option<KvStats>,
     /// Speculative-decoding counters (`None` without a draft path).
     pub spec: Option<SpecStats>,
+    /// The server is draining: admission is closed, active lanes are
+    /// finishing, and the process exits once they do. A router's health
+    /// check reads this to stop placing work here before the port goes
+    /// away (`docs/ARCHITECTURE.md` §Router tier).
+    pub draining: bool,
 }
 
 /// One client's pending generation queue in a [`StatsSnapshot`].
@@ -127,6 +132,11 @@ pub struct Batcher {
     /// are minted from it and the engine loop publishes completed span
     /// timelines into it (`GET /v1/trace`).
     trace: Arc<TraceRecorder>,
+    /// Graceful-drain latch shared with every handle: once set (the
+    /// `drain` TCP verb, `POST /v1/drain`, or SIGTERM), the engine loop
+    /// fails queued requests, rejects new admissions, finishes active
+    /// lanes, flushes the prefix cache, and exits.
+    draining: Arc<AtomicBool>,
 }
 
 /// Cloning a handle keeps its client identity (`clone` = same caller);
@@ -141,6 +151,7 @@ pub struct BatcherHandle {
     next_client: Arc<AtomicU64>,
     metrics: Arc<ServeMetrics>,
     trace: Arc<TraceRecorder>,
+    draining: Arc<AtomicBool>,
 }
 
 impl BatcherHandle {
@@ -152,7 +163,20 @@ impl BatcherHandle {
             next_client: self.next_client.clone(),
             metrics: self.metrics.clone(),
             trace: self.trace.clone(),
+            draining: self.draining.clone(),
         }
+    }
+
+    /// Begin a graceful drain: admission closes, active lanes finish,
+    /// the prefix cache is flushed, and the engine loop exits. Idempotent
+    /// — the latch only ever goes one way.
+    pub fn drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether a drain has been requested on this batcher.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
     }
 
     /// The serving metrics bundle every handle to this batcher shares.
@@ -236,14 +260,22 @@ impl Batcher {
         let (tx, rx) = channel();
         let metrics = Arc::new(ServeMetrics::new());
         let trace = Arc::new(TraceRecorder::new(cfg.trace));
+        let draining = Arc::new(AtomicBool::new(false));
         let handle = BatcherHandle {
             tx,
             client: 0,
             next_client: Arc::new(AtomicU64::new(1)),
             metrics: metrics.clone(),
             trace: trace.clone(),
+            draining: draining.clone(),
         };
-        (Batcher { cfg, rx, metrics, trace }, handle)
+        (Batcher { cfg, rx, metrics, trace, draining }, handle)
+    }
+
+    /// Whether a graceful drain has been requested through any handle
+    /// (see [`BatcherHandle::drain`]).
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
     }
 
     /// The serving metrics bundle shared with every handle (see
@@ -461,6 +493,22 @@ mod tests {
         assert!(err.contains("not running"), "{err}");
         drop(handle);
         worker.join().unwrap();
+    }
+
+    #[test]
+    fn drain_latch_is_shared_and_one_way() {
+        let (batcher, handle) = Batcher::new(BatcherConfig::default());
+        assert!(!batcher.is_draining());
+        let conn = handle.connection();
+        assert!(!conn.is_draining());
+        // any handle can trip the latch; every view agrees afterwards
+        conn.drain();
+        assert!(batcher.is_draining());
+        assert!(handle.is_draining());
+        assert!(handle.connection().is_draining());
+        // idempotent: draining again changes nothing
+        handle.drain();
+        assert!(batcher.is_draining());
     }
 
     #[test]

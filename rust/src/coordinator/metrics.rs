@@ -838,6 +838,84 @@ impl Drop for GaugeGuard {
     }
 }
 
+/// The router tier's metric bundle (`coordinator::router`). Its own
+/// registry, deliberately separate from any [`ServeMetrics`]: the router
+/// is a different process from its workers, and its `GET /v1/metrics`
+/// must describe routing decisions (placement, retries, worker liveness)
+/// — worker-side engine metrics are scraped from the workers themselves.
+pub struct RouterMetrics {
+    pub registry: MetricsRegistry,
+    /// Client requests the router accepted, indexed by [`FRONT_LABELS`]
+    /// (0 = tcp, 1 = http). Counts generation and scoring requests alike
+    /// — one increment per request placed, whatever its outcome.
+    pub requests: [Counter; 2],
+    /// Un-started requests transparently replayed on a healthy worker
+    /// after a replica death (`docs/API.md` §Errors: replay only ever
+    /// happens before the first output byte reaches the client).
+    pub retries: Counter,
+    /// Open client connections at the router, by front-end — the leak
+    /// invariant the chaos harness asserts at drain.
+    pub connections: [Gauge; 2],
+}
+
+impl RouterMetrics {
+    pub fn new() -> RouterMetrics {
+        let reg = MetricsRegistry::new();
+        let requests = FRONT_LABELS.map(|f| {
+            reg.counter(
+                "hbllm_router_requests_total",
+                "Client requests the router accepted, by front-end.",
+                &[("front", f)],
+            )
+        });
+        let retries = reg.counter(
+            "hbllm_router_retries_total",
+            "Un-started requests replayed on a healthy worker after a replica death.",
+            &[],
+        );
+        let connections = FRONT_LABELS.map(|f| {
+            reg.gauge(
+                "hbllm_router_connections_active",
+                "Open client connections at the router, by front-end.",
+                &[("front", f)],
+            )
+        });
+        RouterMetrics { registry: reg, requests, retries, connections }
+    }
+
+    /// Liveness gauge for one worker: 1 while the health loop considers
+    /// it placeable (up and not draining), 0 otherwise. Registered on
+    /// first sight; repeated calls return the same series — worker
+    /// addresses come from the operator, not from clients, so the
+    /// cardinality is bounded by fleet size.
+    pub fn worker_up(&self, worker: &str) -> Gauge {
+        self.registry.gauge(
+            "hbllm_router_worker_up",
+            "Worker liveness as the router's health loop sees it (1 = placeable).",
+            &[("worker", worker)],
+        )
+    }
+
+    /// Count one open router connection on front-end `front` (index into
+    /// [`FRONT_LABELS`]) for as long as the returned guard lives.
+    pub fn connection_guard(&self, front: usize) -> GaugeGuard {
+        let g = self.connections[front.min(1)].clone();
+        g.add(1);
+        GaugeGuard(g)
+    }
+
+    /// Render the router's Prometheus exposition.
+    pub fn render(&self) -> String {
+        self.registry.render()
+    }
+}
+
+impl Default for RouterMetrics {
+    fn default() -> RouterMetrics {
+        RouterMetrics::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1181,5 +1259,33 @@ hbllm_test_us_count 4
         let a = m.uptime_ms();
         std::thread::sleep(std::time::Duration::from_millis(2));
         assert!(m.uptime_ms() >= a);
+    }
+
+    #[test]
+    fn router_metrics_register_and_render() {
+        let m = RouterMetrics::new();
+        m.requests[0].inc();
+        m.requests[1].add(2);
+        m.retries.inc();
+        // worker_up registers per-address series idempotently
+        m.worker_up("127.0.0.1:7001").set(1);
+        m.worker_up("127.0.0.1:7002").set(0);
+        assert_eq!(m.worker_up("127.0.0.1:7001").get(), 1, "re-lookup lost the series");
+        {
+            let _c = m.connection_guard(0);
+            assert_eq!(m.connections[0].get(), 1);
+        }
+        assert_eq!(m.connections[0].get(), 0);
+        let text = m.render();
+        for needle in [
+            "hbllm_router_requests_total{front=\"tcp\"} 1",
+            "hbllm_router_requests_total{front=\"http\"} 2",
+            "hbllm_router_retries_total 1",
+            "hbllm_router_worker_up{worker=\"127.0.0.1:7001\"} 1",
+            "hbllm_router_worker_up{worker=\"127.0.0.1:7002\"} 0",
+            "hbllm_router_connections_active{front=\"tcp\"} 0",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
     }
 }

@@ -21,18 +21,26 @@
 //! serving API (verbs, endpoints, SSE grammar, errors, priorities) is
 //! specified in `docs/API.md`; the request lifecycle is walked through
 //! in `docs/ARCHITECTURE.md`.
+//!
+//! Multi-replica deployments put the [`router`] tier in front: a
+//! separate process speaking the same client protocols, fanning requests
+//! out to N `serve` worker processes with sticky prompt-prefix placement
+//! and transparent replay on replica death (`docs/ARCHITECTURE.md`
+//! §Router tier, pinned by `tests/router_failover.rs`).
 
 pub mod batcher;
 pub mod http;
 pub mod metrics;
 pub mod prefix;
 pub mod progress;
+pub mod router;
 pub mod scheduler;
 pub mod serve;
 pub mod trace;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherHandle, ClientQueue, StatsSnapshot, Work};
-pub use metrics::{MetricsRegistry, ServeMetrics};
+pub use metrics::{MetricsRegistry, RouterMetrics, ServeMetrics};
+pub use router::{prefix_hash, rendezvous_pick, run_router, RouterConfig};
 pub use progress::Progress;
 pub use scheduler::{
     quantize_model, GenEvent, GenRequest, GenScheduler, LayerResult, Priority, QuantJobConfig,

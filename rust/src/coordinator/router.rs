@@ -1,0 +1,1034 @@
+//! The router tier: a front-end process that speaks this repo's existing
+//! client protocols — the TCP line protocol and HTTP/SSE, unchanged — and
+//! fans the requests out to N independent `serve` worker processes over
+//! localhost TCP ([`run_router`]; CLI: `router --workers a:p,b:p` or
+//! `serve --router`).
+//!
+//! Clients cannot tell a router from a single worker: the byte streams
+//! are pinned identical by `tests/router_failover.rs`. What the router
+//! adds is placement and failover across replicas:
+//!
+//! * **Load-aware placement.** A health loop polls every worker's
+//!   `GET /v1/stats` on a short interval ([`RouterConfig::health_interval`])
+//!   and records queue depth + active lanes as that worker's load, plus
+//!   its `draining` flag. A worker whose poll fails its deadline is down;
+//!   a draining worker stops receiving placements but keeps its active
+//!   streams (satellite: graceful drain).
+//! * **Sticky prefix routing.** Generation requests hash the first
+//!   [`RouterConfig::sticky_prefix`] bytes of the prompt ([`prefix_hash`])
+//!   and pick a worker by highest-random-weight hashing over the healthy
+//!   set ([`rendezvous_pick`]). Requests sharing a prompt prefix land on
+//!   the same replica, so its prompt prefix cache (`serve
+//!   --prefix-cache`) keeps hitting — unless that worker's load exceeds
+//!   the least-loaded worker by more than [`RouterConfig::load_slack`],
+//!   in which case placement falls back to least-loaded (cache affinity
+//!   is a hint, not a hotspot).
+//! * **Retry on replica death.** The failure semantics extend
+//!   `docs/API.md` §Errors without changing it: a request that has not
+//!   yet produced output replays transparently on a surviving worker
+//!   (the client never notices; `hbllm_router_retries_total` counts it);
+//!   a stream that dies after its first byte surfaces the documented
+//!   retryable `aborted` error, exactly as a restarting single server
+//!   would. Scoring is idempotent and always replayable. With no healthy
+//!   workers left, requests fail fast with `no healthy workers`.
+//!
+//! The router keeps its own metrics registry
+//! ([`RouterMetrics`](super::metrics::RouterMetrics), `GET /v1/metrics`)
+//! and serves an aggregate `GET /v1/stats` over the fleet. Workers can be
+//! added at runtime (`POST /v1/workers {"add": "host:port"}`) — the
+//! chaos harness uses this to bring in a replacement after a kill.
+//! Fleet topology, the placement policy, and the full failure matrix are
+//! documented in `docs/ARCHITECTURE.md` §Router tier.
+
+use super::http::{
+    drain_unread, error_json, obj, read_request, read_response_head, respond, respond_json,
+    HttpRequest, Incoming,
+};
+use super::metrics::RouterMetrics;
+use super::scheduler::Priority;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Tuning knobs for [`run_router`]. `Default` is sized for localhost
+/// fleets (the only deployment this repo ships): tight health deadlines,
+/// a sticky window matching a typical shared system-prompt prefix.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// How often the health loop polls each worker's `GET /v1/stats`.
+    pub health_interval: Duration,
+    /// TCP connect deadline per worker dial — a dead replica must fail
+    /// placement fast, not hang it.
+    pub connect_timeout: Duration,
+    /// Read deadline for bounded round-trips (health polls, scoring).
+    /// Generation streams deliberately carry no read deadline: replica
+    /// death shows up as EOF/reset, while a slow decode is not an error.
+    pub read_timeout: Duration,
+    /// How many leading prompt bytes feed [`prefix_hash`] — requests
+    /// agreeing on this window stick to the same worker.
+    pub sticky_prefix: usize,
+    /// Load headroom the sticky worker is allowed over the least-loaded
+    /// worker before placement abandons affinity for balance.
+    pub load_slack: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            health_interval: Duration::from_millis(50),
+            connect_timeout: Duration::from_millis(250),
+            read_timeout: Duration::from_secs(2),
+            sticky_prefix: 32,
+            load_slack: 8,
+        }
+    }
+}
+
+/// FNV-1a over the first `sticky_prefix` bytes of the prompt — the
+/// sticky-routing key. Pure and stable so tests can predict placement:
+/// two prompts sharing the window hash identically, whatever their tails.
+pub fn prefix_hash(prompt: &[u8], sticky_prefix: usize) -> u64 {
+    fnv1a(&prompt[..prompt.len().min(sticky_prefix)])
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Highest-random-weight (rendezvous) choice: mix the request hash with
+/// each address and pick the maximum. Deterministic, and minimally
+/// disruptive — removing one address only moves the keys that mapped to
+/// it, which is exactly the failover property the sticky prompt cache
+/// wants. Returns an index into `addrs` (`None` when empty).
+pub fn rendezvous_pick<S: AsRef<str>>(hash: u64, addrs: &[S]) -> Option<usize> {
+    addrs
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, a)| mix(hash, fnv1a(a.as_ref().as_bytes())))
+        .map(|(i, _)| i)
+}
+
+/// SplitMix64-style avalanche of the (request, worker) pair.
+fn mix(a: u64, b: u64) -> u64 {
+    let mut x = a ^ b.rotate_left(32);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// One worker as the router sees it. Liveness and load are atomics so
+/// session threads read them lock-free; the health loop (and the
+/// forward-failure path) are the writers.
+struct WorkerState {
+    addr: String,
+    up: AtomicBool,
+    draining: AtomicBool,
+    /// Queue depth + active lanes from the last health poll, bumped
+    /// optimistically on every placement so a burst between polls still
+    /// spreads out.
+    load: AtomicU64,
+    up_gauge: super::metrics::Gauge,
+}
+
+impl WorkerState {
+    /// Eligible for new placements: answered its last poll and not
+    /// draining. Active streams on a draining worker are unaffected —
+    /// only *placement* stops.
+    fn placeable(&self) -> bool {
+        self.up.load(Ordering::SeqCst) && !self.draining.load(Ordering::SeqCst)
+    }
+
+    fn set_health(&self, up: bool, draining: bool, load: u64) {
+        self.up.store(up, Ordering::SeqCst);
+        self.draining.store(draining, Ordering::SeqCst);
+        self.load.store(load, Ordering::SeqCst);
+        self.up_gauge.set((up && !draining) as i64);
+    }
+}
+
+/// What one forwarded generation attempt did.
+enum Attempt {
+    /// A terminal frame (`done` or a worker `error`) was delivered.
+    Finished,
+    /// The client side stopped accepting writes.
+    ClientGone,
+    /// The worker connection died; `streamed` says whether any output
+    /// byte had already reached the client (true = not replayable).
+    WorkerDied { streamed: bool },
+    /// The worker answered non-200 before streaming (400 usage, 503
+    /// draining/engine-gone); body is its JSON error.
+    Rejected { status: u16, body: String },
+}
+
+/// What a whole relayed generation (attempts + replays) came to.
+enum Relay {
+    Finished,
+    ClientGone,
+    /// Died after first output; `next_id` is the SSE id the terminal
+    /// `aborted` frame must carry to stay monotone.
+    Aborted { next_id: u64 },
+    NoWorkers,
+    Rejected { status: u16, body: String },
+}
+
+/// Shared router state: the worker pool, config, and metrics. Session
+/// threads hold an `Arc<Router>`.
+struct Router {
+    cfg: RouterConfig,
+    workers: Mutex<Vec<Arc<WorkerState>>>,
+    metrics: Arc<RouterMetrics>,
+}
+
+impl Router {
+    fn new(cfg: RouterConfig, metrics: Arc<RouterMetrics>) -> Router {
+        Router { cfg, workers: Mutex::new(Vec::new()), metrics }
+    }
+
+    /// Register a worker address (idempotent). New workers start down
+    /// until a poll sees them — callers wanting immediate placement run
+    /// [`Router::poll_all`] right after.
+    fn add_worker(&self, addr: &str) -> bool {
+        let mut pool = self.workers.lock().unwrap();
+        if pool.iter().any(|w| w.addr == addr) {
+            return false;
+        }
+        pool.push(Arc::new(WorkerState {
+            addr: addr.to_string(),
+            up: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            load: AtomicU64::new(0),
+            up_gauge: self.metrics.worker_up(addr),
+        }));
+        true
+    }
+
+    fn snapshot(&self) -> Vec<Arc<WorkerState>> {
+        self.workers.lock().unwrap().clone()
+    }
+
+    /// One health sweep over the fleet: load + draining from each
+    /// worker's `GET /v1/stats`, down on any transport/deadline failure
+    /// (a 503 — engine gone — is down too: it cannot take placements).
+    fn poll_all(&self) {
+        for w in self.snapshot() {
+            match fetch_worker_stats(&w.addr, &self.cfg) {
+                Ok((load, draining)) => w.set_health(true, draining, load),
+                Err(_) => {
+                    w.up.store(false, Ordering::SeqCst);
+                    w.up_gauge.set(0);
+                }
+            }
+        }
+    }
+
+    /// A forward failed against `w`: stop placing there immediately (the
+    /// health loop re-admits it if it comes back).
+    fn mark_down(&self, w: &WorkerState) {
+        w.up.store(false, Ordering::SeqCst);
+        w.up_gauge.set(0);
+    }
+
+    /// Pick a worker. `hash`: sticky rendezvous placement, overridden to
+    /// least-loaded only when the sticky worker is `load_slack` busier
+    /// than the least-loaded one. `None` (scoring): plain least-loaded.
+    /// The winner's load is bumped so a same-instant burst spreads.
+    fn place(&self, hash: Option<u64>) -> Option<Arc<WorkerState>> {
+        let healthy: Vec<Arc<WorkerState>> =
+            self.snapshot().into_iter().filter(|w| w.placeable()).collect();
+        if healthy.is_empty() {
+            return None;
+        }
+        let load = |w: &WorkerState| w.load.load(Ordering::SeqCst);
+        let least = (0..healthy.len()).min_by_key(|&i| load(&healthy[i])).unwrap();
+        let pick = match hash {
+            Some(h) => {
+                let addrs: Vec<&str> = healthy.iter().map(|w| w.addr.as_str()).collect();
+                let sticky = rendezvous_pick(h, &addrs).unwrap();
+                if load(&healthy[sticky]) > load(&healthy[least]) + self.cfg.load_slack {
+                    least
+                } else {
+                    sticky
+                }
+            }
+            None => least,
+        };
+        let w = healthy[pick].clone();
+        w.load.fetch_add(1, Ordering::SeqCst);
+        Some(w)
+    }
+
+    /// Forward one scoring POST, replaying across workers on transport
+    /// failure (scoring is idempotent — `docs/API.md` §Errors). Returns
+    /// the first worker response, or `None` with no healthy workers.
+    fn forward_score(&self, body: &[u8]) -> Option<(u16, String)> {
+        while let Some(w) = self.place(None) {
+            match post_worker(&w.addr, "/v1/score", body, &self.cfg) {
+                Ok(resp) => return Some(resp),
+                Err(_) => {
+                    self.mark_down(&w);
+                    self.metrics.retries.inc();
+                }
+            }
+        }
+        None
+    }
+
+    /// Relay one generation end to end: place, stream, and replay dead
+    /// attempts while nothing has reached the client. `sink(id, event,
+    /// data)` writes one frame in the caller's wire format and reports
+    /// whether the client is still there; `id` stays monotone from 0
+    /// across replays, so the client-visible stream is indistinguishable
+    /// from a single worker's.
+    fn relay_generation<F: FnMut(u64, &str, &str) -> bool>(
+        &self,
+        body: &str,
+        hash: u64,
+        sink: &mut F,
+    ) -> Relay {
+        let mut next_id = 0u64;
+        loop {
+            let Some(w) = self.place(Some(hash)) else {
+                return Relay::NoWorkers;
+            };
+            match try_stream(&w.addr, body, &self.cfg, &mut next_id, sink) {
+                Attempt::Finished => return Relay::Finished,
+                Attempt::ClientGone => return Relay::ClientGone,
+                Attempt::WorkerDied { streamed: true } => {
+                    self.mark_down(&w);
+                    return Relay::Aborted { next_id };
+                }
+                Attempt::WorkerDied { streamed: false } => {
+                    // nothing reached the client: replay elsewhere,
+                    // invisibly (the tentpole's retry semantics)
+                    self.mark_down(&w);
+                    self.metrics.retries.inc();
+                }
+                Attempt::Rejected { status: 503, .. } => {
+                    // admission refused (draining / engine gone) — the
+                    // request never started, so it replays like a death;
+                    // the health loop sorts out draining vs down
+                    self.mark_down(&w);
+                    self.metrics.retries.inc();
+                }
+                Attempt::Rejected { status, body } => {
+                    // deterministic client error (bad usage): every
+                    // worker would say the same — forward, don't retry
+                    return Relay::Rejected { status, body };
+                }
+            }
+        }
+    }
+}
+
+/// Dial a worker with the connect deadline (hostnames fall back to the
+/// blocking resolver path — worker addresses are normally numeric).
+fn connect_worker(addr: &str, cfg: &RouterConfig) -> std::io::Result<TcpStream> {
+    match addr.parse::<SocketAddr>() {
+        Ok(sa) => TcpStream::connect_timeout(&sa, cfg.connect_timeout),
+        Err(_) => TcpStream::connect(addr),
+    }
+}
+
+/// `GET /v1/stats` from one worker → (queued + active as load, draining).
+fn fetch_worker_stats(addr: &str, cfg: &RouterConfig) -> Result<(u64, bool)> {
+    let mut s = connect_worker(addr, cfg)?;
+    s.set_read_timeout(Some(cfg.read_timeout))?;
+    s.write_all(
+        format!("GET /v1/stats HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").as_bytes(),
+    )?;
+    let mut reader = BufReader::new(s);
+    let status = read_response_head(&mut reader)?;
+    let mut body = String::new();
+    reader.read_to_string(&mut body)?;
+    if status != 200 {
+        bail!("worker {addr} stats answered {status}");
+    }
+    let j = Json::parse(&body).map_err(|e| anyhow!("worker {addr} stats: {e}"))?;
+    let num =
+        |k: &str| j.get(k).and_then(Json::as_f64).map(|v| v.max(0.0) as u64).unwrap_or(0);
+    let draining = j.get("draining") == Some(&Json::Bool(true));
+    Ok((num("queued") + num("active"), draining))
+}
+
+/// POST a JSON body to one worker and read the whole response.
+fn post_worker(addr: &str, path: &str, body: &[u8], cfg: &RouterConfig) -> Result<(u16, String)> {
+    let mut s = connect_worker(addr, cfg)?;
+    s.set_read_timeout(Some(cfg.read_timeout))?;
+    let head = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    s.write_all(head.as_bytes())?;
+    s.write_all(body)?;
+    let mut reader = BufReader::new(s);
+    let status = read_response_head(&mut reader)?;
+    let mut resp = String::new();
+    reader.read_to_string(&mut resp)?;
+    Ok((status, resp))
+}
+
+/// One streaming attempt against one worker. `next_id` only advances on
+/// frames actually handed to `sink`, so ids stay contiguous across a
+/// replay. A worker-side `aborted` with nothing streamed is folded into
+/// `WorkerDied` — the worker's engine died under the request, which is
+/// exactly the replayable case.
+fn try_stream<F: FnMut(u64, &str, &str) -> bool>(
+    addr: &str,
+    body: &str,
+    cfg: &RouterConfig,
+    next_id: &mut u64,
+    sink: &mut F,
+) -> Attempt {
+    let mut s = match connect_worker(addr, cfg) {
+        Ok(s) => s,
+        Err(_) => return Attempt::WorkerDied { streamed: false },
+    };
+    let head = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    if s.write_all(head.as_bytes()).is_err() || s.write_all(body.as_bytes()).is_err() {
+        return Attempt::WorkerDied { streamed: false };
+    }
+    let mut reader = BufReader::new(s);
+    let status = match read_response_head(&mut reader) {
+        Ok(st) => st,
+        Err(_) => return Attempt::WorkerDied { streamed: false },
+    };
+    if status != 200 {
+        let mut b = String::new();
+        if reader.read_to_string(&mut b).is_err() {
+            return Attempt::WorkerDied { streamed: false };
+        }
+        return Attempt::Rejected { status, body: b };
+    }
+    let mut streamed = false;
+    let mut event = String::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return Attempt::WorkerDied { streamed },
+            Ok(_) => {}
+        }
+        let t = line.trim_end();
+        if let Some(e) = t.strip_prefix("event: ") {
+            event = e.to_string();
+        } else if let Some(d) = t.strip_prefix("data: ") {
+            match event.as_str() {
+                "tok" => {
+                    let id = *next_id;
+                    *next_id += 1;
+                    if !sink(id, "tok", d) {
+                        return Attempt::ClientGone;
+                    }
+                    streamed = true;
+                }
+                "done" => {
+                    let id = *next_id;
+                    *next_id += 1;
+                    return if sink(id, "done", d) {
+                        Attempt::Finished
+                    } else {
+                        Attempt::ClientGone
+                    };
+                }
+                "error" if d == "aborted" && !streamed => {
+                    return Attempt::WorkerDied { streamed: false };
+                }
+                "error" => {
+                    // a real engine answer (`kv exhausted`, `draining`):
+                    // forwarded verbatim, never retried — replaying a
+                    // request its worker rejected would double-charge
+                    // the documented error semantics
+                    let id = *next_id;
+                    *next_id += 1;
+                    return if sink(id, "error", d) {
+                        Attempt::Finished
+                    } else {
+                        Attempt::ClientGone
+                    };
+                }
+                _ => return Attempt::WorkerDied { streamed },
+            }
+        }
+        // blank lines delimit frames
+    }
+}
+
+/// Build a worker `/v1/generate` body from TCP `gen` verb arguments
+/// (seed as a decimal string so the full u64 range round-trips).
+fn gen_body(prompt: &str, max_new: usize, temperature: f32, seed: u64, prio: Priority) -> String {
+    obj(vec![
+        ("prompt", Json::Str(prompt.to_string())),
+        ("max_new", Json::Num(max_new as f64)),
+        ("temperature", Json::Num(temperature as f64)),
+        ("seed", Json::Str(seed.to_string())),
+        ("priority", Json::Str(prio.as_str().to_string())),
+    ])
+    .to_string()
+}
+
+/// Pull the `error` field out of a worker's JSON error body (falling
+/// back to the raw text) so the TCP front can say `err <msg>`.
+fn error_text(body: &str) -> String {
+    Json::parse(body)
+        .ok()
+        .and_then(|j| j.get("error").and_then(Json::as_str).map(String::from))
+        .unwrap_or_else(|| body.trim().to_string())
+}
+
+/// Forward one TCP `gen` request. Returns `false` once the client
+/// connection is unusable — mirrors `serve::handle_gen` byte for byte on
+/// every path it shares.
+fn forward_gen_tcp(
+    router: &Router,
+    args: &str,
+    priority: Priority,
+    writer: &mut TcpStream,
+) -> bool {
+    let mut it = args.splitn(4, ' ');
+    let parsed = (
+        it.next().and_then(|s| s.parse::<usize>().ok()),
+        it.next().and_then(|s| s.parse::<f32>().ok()),
+        it.next().and_then(|s| s.parse::<u64>().ok()),
+    );
+    let (max_new, temperature, seed) = match parsed {
+        (Some(m), Some(t), Some(s)) => (m, t, s),
+        _ => {
+            return writer
+                .write_all(b"err usage: gen <max-new> <temperature> <seed> <prompt>\n")
+                .is_ok()
+        }
+    };
+    let prompt = it.next().unwrap_or("");
+    router.metrics.requests[0].inc();
+    let body = gen_body(prompt, max_new, temperature, seed, priority);
+    let hash = prefix_hash(prompt.as_bytes(), router.cfg.sticky_prefix);
+    let mut sink = |_id: u64, event: &str, data: &str| -> bool {
+        let line = match event {
+            "tok" => format!("tok {data}\n"),
+            "done" => format!("done {data}\n"),
+            _ => format!("err {data}\n"),
+        };
+        writer.write_all(line.as_bytes()).is_ok()
+    };
+    match router.relay_generation(&body, hash, &mut sink) {
+        Relay::Finished => true,
+        Relay::ClientGone => false,
+        Relay::Aborted { .. } => writer.write_all(b"err aborted\n").is_ok(),
+        Relay::NoWorkers => writer.write_all(b"err no healthy workers\n").is_ok(),
+        Relay::Rejected { body, .. } => {
+            writer.write_all(format!("err {}\n", error_text(&body)).as_bytes()).is_ok()
+        }
+    }
+}
+
+/// One TCP line-protocol session at the router. Verb grammar and byte
+/// streams match [`serve::LineConn`](super::serve::LineConn) exactly —
+/// `tests/router_failover.rs` pins the equivalence — except `drain`,
+/// which is a per-worker verb and is answered with an error here.
+fn run_tcp_session(router: &Router, stream: TcpStream) {
+    let _conn = router.metrics.connection_guard(0);
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.is_empty() {
+            continue;
+        }
+        if line == "drain" {
+            // draining is a worker lifecycle action, not a routed one:
+            // the operator drains replicas individually (POST /v1/drain)
+            // and the health loop stops placing there
+            if writer.write_all(b"err drain is not routed; drain workers directly\n").is_ok() {
+                continue;
+            }
+            break;
+        }
+        let (priority, verb) = match line.strip_prefix("prio ") {
+            Some(rest) => {
+                let (level, tail) = rest.split_once(' ').unwrap_or((rest, ""));
+                match Priority::parse(level) {
+                    Some(p) if tail == "gen" || tail.starts_with("gen ") => (p, tail),
+                    _ => {
+                        let ok = writer
+                            .write_all(b"err usage: prio <interactive|batch> gen <max-new> <temperature> <seed> <prompt>\n")
+                            .is_ok();
+                        if ok {
+                            continue;
+                        }
+                        break;
+                    }
+                }
+            }
+            None => (Priority::Interactive, line.as_str()),
+        };
+        let ok = if let Some(rest) = verb.strip_prefix("gen ") {
+            forward_gen_tcp(router, rest, priority, &mut writer)
+        } else if verb == "gen" {
+            forward_gen_tcp(router, "", priority, &mut writer)
+        } else {
+            // `ppl <text>` or a legacy bare line: one idempotent scoring
+            // round-trip through a worker's /v1/score
+            let text = verb.strip_prefix("ppl ").unwrap_or(verb);
+            router.metrics.requests[0].inc();
+            let body =
+                obj(vec![("texts", Json::Arr(vec![Json::Str(text.to_string())]))]).to_string();
+            let resp = match router.forward_score(body.as_bytes()) {
+                None => "err no healthy workers\n".to_string(),
+                Some((200, resp)) => {
+                    let first = Json::parse(&resp)
+                        .ok()
+                        .and_then(|j| j.get("results")?.as_arr()?.first().cloned());
+                    match first {
+                        Some(r) => match r.get("ppl").and_then(Json::as_f64) {
+                            // the worker's TCP front formats the same f64
+                            // with {:.4}; Json round-trips it exactly, so
+                            // these bytes match a direct connection
+                            Some(ppl) => format!("ppl {ppl:.4}\n"),
+                            None => format!(
+                                "err {}\n",
+                                r.get("error").and_then(Json::as_str).unwrap_or("score failed")
+                            ),
+                        },
+                        None => "err score failed\n".to_string(),
+                    }
+                }
+                Some((_, resp)) => format!("err {}\n", error_text(&resp)),
+            };
+            writer.write_all(resp.as_bytes()).is_ok()
+        };
+        if !ok {
+            break;
+        }
+    }
+}
+
+/// Map a relayed status code back onto a reason phrase for the
+/// response's start line (the worker's phrase is not kept).
+fn reason_for(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        503 => "Service Unavailable",
+        _ => "Error",
+    }
+}
+
+/// Aggregate fleet stats for the router's `GET /v1/stats`: one row per
+/// worker (placement's exact view) plus the healthy count.
+fn fleet_stats_json(router: &Router) -> Json {
+    let workers = router.snapshot();
+    let healthy = workers.iter().filter(|w| w.placeable()).count();
+    let rows = workers
+        .iter()
+        .map(|w| {
+            obj(vec![
+                ("worker", Json::Str(w.addr.clone())),
+                ("up", Json::Bool(w.up.load(Ordering::SeqCst))),
+                ("draining", Json::Bool(w.draining.load(Ordering::SeqCst))),
+                ("load", Json::Num(w.load.load(Ordering::SeqCst) as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("healthy", Json::Num(healthy as f64)),
+        ("workers", Json::Arr(rows)),
+        ("requests", obj(vec![
+            ("tcp", Json::Num(router.metrics.requests[0].get() as f64)),
+            ("http", Json::Num(router.metrics.requests[1].get() as f64)),
+        ])),
+        ("retries", Json::Num(router.metrics.retries.get() as f64)),
+    ])
+}
+
+/// `POST /v1/generate` at the router: hash the prompt for stickiness,
+/// forward the raw client body (workers validate; their 400s relay
+/// verbatim), and re-emit the worker's SSE frames under the router's own
+/// monotone `id:` counter.
+fn handle_http_generate(router: &Router, req: &HttpRequest, writer: &mut TcpStream) {
+    router.metrics.requests[1].inc();
+    // prompt for stickiness only — an unparseable body still forwards
+    // (hashed whole) so the worker's error response stays authoritative
+    let prompt_hash = std::str::from_utf8(&req.body)
+        .ok()
+        .and_then(|s| Json::parse(s).ok())
+        .and_then(|j| {
+            j.get("prompt").and_then(Json::as_str).map(|p| {
+                prefix_hash(p.as_bytes(), router.cfg.sticky_prefix)
+            })
+        })
+        .unwrap_or_else(|| prefix_hash(&req.body, router.cfg.sticky_prefix));
+    let body = String::from_utf8_lossy(&req.body).into_owned();
+    let sse_head = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-store\r\nConnection: close\r\n\r\n";
+    let mut head_written = false;
+    let mut sink = |id: u64, event: &str, data: &str| -> bool {
+        if !head_written {
+            if writer.write_all(sse_head.as_bytes()).is_err() {
+                return false;
+            }
+            head_written = true;
+        }
+        let frame = format!("id: {id}\nevent: {event}\ndata: {data}\n\n");
+        writer.write_all(frame.as_bytes()).is_ok() && writer.flush().is_ok()
+    };
+    match router.relay_generation(&body, prompt_hash, &mut sink) {
+        Relay::Finished | Relay::ClientGone => {}
+        Relay::Aborted { next_id } => {
+            // same terminal frame a dying single server writes
+            if head_written {
+                let _ = writer
+                    .write_all(format!("id: {next_id}\nevent: error\ndata: aborted\n\n").as_bytes());
+            }
+        }
+        Relay::NoWorkers => {
+            if !head_written {
+                respond_json(
+                    writer,
+                    503,
+                    "Service Unavailable",
+                    &error_json("no healthy workers"),
+                    true,
+                );
+            } else {
+                let _ = writer.write_all(b"id: 0\nevent: error\ndata: no healthy workers\n\n");
+            }
+        }
+        Relay::Rejected { status, body } => {
+            if !head_written {
+                respond(writer, status, reason_for(status), "application/json", body.as_bytes(), true);
+            } else {
+                let _ = writer.write_all(
+                    format!("id: 0\nevent: error\ndata: {}\n\n", error_text(&body)).as_bytes(),
+                );
+            }
+        }
+    }
+}
+
+/// One HTTP session at the router: same endpoints as a worker where they
+/// make sense (`/v1/generate`, `/v1/score`, `/v1/stats`, `/v1/metrics`),
+/// plus the fleet-management pair (`GET`/`POST /v1/workers`).
+fn run_http_session(router: &Router, stream: TcpStream) {
+    let _conn = router.metrics.connection_guard(1);
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Incoming::Req(r)) => r,
+            Ok(Incoming::Eof) | Err(_) => return,
+            Ok(Incoming::Oversized) => {
+                respond_json(
+                    &mut writer,
+                    413,
+                    "Payload Too Large",
+                    &error_json("request head or body too large"),
+                    true,
+                );
+                drain_unread(&mut reader);
+                return;
+            }
+            Ok(Incoming::Malformed(msg)) => {
+                respond_json(&mut writer, 400, "Bad Request", &error_json(msg), true);
+                drain_unread(&mut reader);
+                return;
+            }
+        };
+        let close = req.wants_close();
+        let keep = match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/v1/generate") => {
+                handle_http_generate(router, &req, &mut writer);
+                false // SSE stream is delimited by connection close
+            }
+            ("POST", "/v1/score") => {
+                router.metrics.requests[1].inc();
+                match router.forward_score(&req.body) {
+                    Some((status, body)) => respond(
+                        &mut writer,
+                        status,
+                        reason_for(status),
+                        "application/json",
+                        body.as_bytes(),
+                        close,
+                    ),
+                    None => respond_json(
+                        &mut writer,
+                        503,
+                        "Service Unavailable",
+                        &error_json("no healthy workers"),
+                        close,
+                    ),
+                }
+            }
+            ("GET", "/v1/stats") => {
+                respond_json(&mut writer, 200, "OK", &fleet_stats_json(router), close)
+            }
+            ("GET", "/v1/metrics") => {
+                let text = router.metrics.render();
+                respond(
+                    &mut writer,
+                    200,
+                    "OK",
+                    "text/plain; version=0.0.4; charset=utf-8",
+                    text.as_bytes(),
+                    close,
+                )
+            }
+            ("GET", "/v1/workers") => {
+                respond_json(&mut writer, 200, "OK", &fleet_stats_json(router), close)
+            }
+            ("POST", "/v1/workers") => {
+                let add = std::str::from_utf8(&req.body)
+                    .ok()
+                    .and_then(|s| Json::parse(s).ok())
+                    .and_then(|j| j.get("add").and_then(Json::as_str).map(String::from));
+                match add {
+                    Some(addr) => {
+                        router.add_worker(&addr);
+                        // poll immediately so the new replica is
+                        // placeable before the next health tick — the
+                        // chaos harness adds a replacement and expects
+                        // traffic to land on it right away
+                        router.poll_all();
+                        respond_json(&mut writer, 200, "OK", &fleet_stats_json(router), close)
+                    }
+                    None => respond_json(
+                        &mut writer,
+                        400,
+                        "Bad Request",
+                        &error_json("usage: {\"add\": \"host:port\"}"),
+                        close,
+                    ),
+                }
+            }
+            (_, "/v1/generate") | (_, "/v1/score") | (_, "/v1/stats") | (_, "/v1/metrics")
+            | (_, "/v1/workers") => respond_json(
+                &mut writer,
+                405,
+                "Method Not Allowed",
+                &error_json("wrong method for this endpoint (see docs/API.md)"),
+                close,
+            ),
+            _ => respond_json(
+                &mut writer,
+                404,
+                "Not Found",
+                &error_json("no such endpoint (see docs/API.md)"),
+                close,
+            ),
+        };
+        if !keep || close {
+            return;
+        }
+    }
+}
+
+/// Accept sessions from one router listener until its budget is spent
+/// (forever for `None`), then join every session so callers observe a
+/// quiesced connection gauge.
+fn accept_router(
+    listener: TcpListener,
+    max_conns: Option<usize>,
+    router: Arc<Router>,
+    tcp_front: bool,
+) {
+    let mut sessions = Vec::new();
+    let mut served = 0usize;
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let r = router.clone();
+                sessions.push(std::thread::spawn(move || {
+                    if tcp_front {
+                        run_tcp_session(&r, s)
+                    } else {
+                        run_http_session(&r, s)
+                    }
+                }));
+                served += 1;
+                if let Some(max) = max_conns {
+                    if served >= max {
+                        break;
+                    }
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    for s in sessions {
+        s.join().ok();
+    }
+}
+
+/// Run the router tier: front-end listeners (TCP line protocol and/or
+/// HTTP, each with an optional connection budget) over a fleet of worker
+/// addresses. Blocks until every budgeted front is exhausted and its
+/// sessions have drained (forever with `None` budgets — the CLI path).
+/// Workers are polled once before accepting so the first request can
+/// place; after that the health loop owns liveness. Returns the router's
+/// metrics bundle for the caller's shutdown summary.
+pub fn run_router(
+    tcp: Option<(TcpListener, Option<usize>)>,
+    http: Option<(TcpListener, Option<usize>)>,
+    workers: Vec<String>,
+    cfg: RouterConfig,
+) -> Result<Arc<RouterMetrics>> {
+    let metrics = Arc::new(RouterMetrics::new());
+    let router = Arc::new(Router::new(cfg, metrics.clone()));
+    for w in &workers {
+        router.add_worker(w);
+    }
+    router.poll_all();
+    let stop = Arc::new(AtomicBool::new(false));
+    let health = {
+        let r = router.clone();
+        let s = stop.clone();
+        std::thread::spawn(move || {
+            while !s.load(Ordering::SeqCst) {
+                std::thread::sleep(r.cfg.health_interval);
+                r.poll_all();
+            }
+        })
+    };
+    let mut accepts = Vec::new();
+    if let Some((listener, max)) = tcp {
+        let r = router.clone();
+        accepts.push(std::thread::spawn(move || accept_router(listener, max, r, true)));
+    }
+    if let Some((listener, max)) = http {
+        let r = router.clone();
+        accepts.push(std::thread::spawn(move || accept_router(listener, max, r, false)));
+    }
+    for a in accepts {
+        a.join().ok();
+    }
+    stop.store(true, Ordering::SeqCst);
+    health.join().ok();
+    Ok(metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_hash_depends_only_on_the_window() {
+        let window = 8;
+        let a = prefix_hash(b"system: abc TAIL ONE", window);
+        let b = prefix_hash(b"system: abc TAIL TWO", window);
+        assert_eq!(a, b, "same first {window} bytes must hash identically");
+        assert_ne!(
+            prefix_hash(b"system: x", window),
+            prefix_hash(b"system: y", window),
+            "differing windows should (overwhelmingly) differ"
+        );
+        // shorter than the window: the whole prompt is the key
+        assert_eq!(prefix_hash(b"hi", window), prefix_hash(b"hi", 64));
+    }
+
+    #[test]
+    fn rendezvous_is_deterministic_and_minimally_disruptive() {
+        let addrs = ["127.0.0.1:7001", "127.0.0.1:7002", "127.0.0.1:7003"];
+        assert_eq!(rendezvous_pick(42, &[] as &[&str]), None);
+        for h in 0..200u64 {
+            let pick = rendezvous_pick(h, &addrs).unwrap();
+            assert!(pick < addrs.len());
+            assert_eq!(rendezvous_pick(h, &addrs), Some(pick), "must be stable");
+            // HRW property: removing an address the key did NOT map to
+            // must not move the key (this is what keeps prompt-cache
+            // affinity intact when an unrelated replica dies)
+            for dead in 0..addrs.len() {
+                if dead == pick {
+                    continue;
+                }
+                let survivors: Vec<&str> =
+                    addrs.iter().enumerate().filter(|&(i, _)| i != dead).map(|(_, a)| *a).collect();
+                let re = rendezvous_pick(h, &survivors).unwrap();
+                assert_eq!(survivors[re], addrs[pick], "unrelated removal moved the key");
+            }
+        }
+    }
+
+    #[test]
+    fn rendezvous_spreads_keys_across_workers() {
+        let addrs = ["127.0.0.1:7001", "127.0.0.1:7002", "127.0.0.1:7003"];
+        let mut counts = [0usize; 3];
+        for h in 0..600u64 {
+            counts[rendezvous_pick(mix(h, 0x9e37), &addrs).unwrap()] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 60, "worker {i} got only {c}/600 keys — not a spread");
+        }
+    }
+
+    #[test]
+    fn placement_is_sticky_until_the_load_slack_is_exceeded() {
+        let cfg = RouterConfig { load_slack: 2, ..RouterConfig::default() };
+        let router = Router::new(cfg, Arc::new(RouterMetrics::new()));
+        for a in ["127.0.0.1:7001", "127.0.0.1:7002"] {
+            router.add_worker(a);
+        }
+        // mark both up by hand (no real workers in a unit test)
+        for w in router.snapshot() {
+            w.set_health(true, false, 0);
+        }
+        let hash = prefix_hash(b"shared prefix", 32);
+        let sticky = router.place(Some(hash)).unwrap().addr.clone();
+        for _ in 0..2 {
+            assert_eq!(router.place(Some(hash)).unwrap().addr, sticky, "affinity lost");
+        }
+        // place() bumped the sticky worker to load 3 while the other
+        // sits at 0 — past the slack, so the next placement balances
+        let spilled = router.place(Some(hash)).unwrap().addr.clone();
+        assert_ne!(spilled, sticky, "load_slack exceeded but placement did not spill");
+        // a draining worker is not placeable, however sticky
+        for w in router.snapshot() {
+            let stick_here = w.addr == sticky;
+            w.set_health(true, stick_here, 0);
+        }
+        assert_ne!(router.place(Some(hash)).unwrap().addr, sticky);
+        // nothing placeable -> None (the `no healthy workers` path)
+        for w in router.snapshot() {
+            w.set_health(false, false, 0);
+        }
+        assert!(router.place(Some(hash)).is_none());
+        assert!(router.place(None).is_none());
+    }
+
+    #[test]
+    fn gen_body_round_trips_the_full_seed_range() {
+        let body = gen_body("p", 4, 0.5, u64::MAX, Priority::Batch);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("seed").and_then(Json::as_str), Some(u64::MAX.to_string().as_str()));
+        assert_eq!(j.get("priority").and_then(Json::as_str), Some("batch"));
+        assert_eq!(j.get("max_new"), Some(&Json::Num(4.0)));
+    }
+
+    #[test]
+    fn error_text_unwraps_json_or_falls_back() {
+        assert_eq!(error_text("{\"error\":\"draining\"}"), "draining");
+        assert_eq!(error_text("not json at all\n"), "not json at all");
+    }
+}

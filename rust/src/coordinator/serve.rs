@@ -61,12 +61,53 @@ use crate::engine::Backend;
 use anyhow::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Decode steps a pending scoring batch waits for KV blocks before being
 /// flushed anyway (each step can evict and free blocks; after this many,
 /// the honest `kv exhausted` error beats further starvation).
 const SCORE_PATIENCE: usize = 128;
+
+/// How long an idle engine loop blocks per wait slice. Bounded (instead
+/// of a plain blocking `recv`) so a drain request — the `drain` verb,
+/// `POST /v1/drain`, or SIGTERM — wakes an idle engine promptly.
+const IDLE_POLL: Duration = Duration::from_millis(50);
+
+/// Process-wide drain latch, set by the SIGTERM handler. Distinct from
+/// the per-batcher latch ([`BatcherHandle::drain`]) because a signal has
+/// process semantics: every engine loop in the process observes it.
+static GLOBAL_DRAIN: AtomicBool = AtomicBool::new(false);
+
+/// Whether a process-wide drain (SIGTERM) has been requested.
+pub fn global_drain_requested() -> bool {
+    GLOBAL_DRAIN.load(Ordering::SeqCst)
+}
+
+/// Install a SIGTERM handler that requests a graceful drain of every
+/// engine loop in this process: admission closes, queued requests get
+/// `err draining`, active lanes finish, the prefix cache flushes, and
+/// [`run_engine`] returns so the process can exit cleanly. Hand-rolled
+/// `signal(2)` FFI — the only work in the handler is one atomic store,
+/// which is async-signal-safe. No-op on non-Unix targets.
+#[cfg(unix)]
+pub fn install_sigterm_drain() {
+    extern "C" fn on_term(_signum: i32) {
+        GLOBAL_DRAIN.store(true, Ordering::SeqCst);
+    }
+    const SIGTERM: i32 = 15;
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    unsafe {
+        signal(SIGTERM, on_term as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_sigterm_drain() {}
 
 /// Score a batch of texts: mean NLL/byte → perplexity per text.
 ///
@@ -228,6 +269,18 @@ impl ClientConn for LineConn {
             if line.is_empty() {
                 continue;
             }
+            // `drain` (the whole line, no arguments): request a graceful
+            // shutdown — admission closes, active lanes finish, then the
+            // engine exits. Acknowledged so orchestration scripts can
+            // tell the verb landed before the port goes away.
+            if line == "drain" {
+                handle.metrics().tcp_request("drain");
+                handle.drain();
+                if writer.write_all(b"ok draining\n").is_ok() {
+                    continue;
+                }
+                break;
+            }
             // `prio <level>` prefixes a gen verb with an admission tier;
             // anything else after it is a usage error (scoring has no
             // admission queue to prioritize)
@@ -327,13 +380,25 @@ pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
     let mut inbox: Vec<Work> = Vec::new();
     let mut connected = true;
     let mut score_waited = 0usize;
+    let mut queue_failed = false;
     loop {
+        // graceful drain (`drain` verb, `POST /v1/drain`, SIGTERM): close
+        // admission, fail everything still queued, finish active lanes,
+        // then fall out of the loop even while handles are alive
+        let draining = batcher.is_draining() || global_drain_requested();
+        if draining && !queue_failed {
+            queue_failed = true;
+            sched.fail_queued("draining");
+        }
         if connected {
-            if !sched.has_work() && scores.is_empty() {
-                // idle: block until traffic arrives or everyone hangs up
-                match batcher.recv() {
-                    Some(w) => inbox.push(w),
-                    None => connected = false,
+            if !sched.has_work() && scores.is_empty() && !draining {
+                // idle: wait in bounded slices so a drain wakes the loop
+                match batcher.recv_timeout(IDLE_POLL) {
+                    Ok(w) => inbox.push(w),
+                    Err(RecvTimeoutError::Timeout) => {
+                        continue; // re-check the drain latch
+                    }
+                    Err(RecvTimeoutError::Disconnected) => connected = false,
                 }
             }
             if connected && !batcher.drain_into(&mut inbox) {
@@ -341,31 +406,46 @@ pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
             }
             for w in inbox.drain(..) {
                 match w {
-                    Work::Score(r) => scores.push(r),
-                    Work::Generate(g) => sched.submit(g),
+                    Work::Score(r) => {
+                        if draining {
+                            let _ = r.reply.send(Err("draining".to_string()));
+                        } else {
+                            scores.push(r);
+                        }
+                    }
+                    Work::Generate(g) => {
+                        if draining {
+                            // rejected before submit: neither `started`
+                            // nor `finished` moves, so the drain
+                            // invariant started == finished still holds
+                            let _ = g.reply.send(GenEvent::Error("draining".to_string()));
+                        } else {
+                            sched.submit(g);
+                        }
+                    }
                     Work::Stats(tx) => {
-                        let _ = tx.send(Ok(snapshot(&sched, &*be)));
+                        let _ = tx.send(Ok(snapshot(&sched, &*be, draining)));
                     }
                 }
             }
             // scoring-only service: let a partial batch fill up briefly
             // (generation traffic ends the wait — decoding is the batching
             // window once lanes are busy)
-            if connected && !sched.has_work() && !scores.is_empty() {
+            if connected && !draining && !sched.has_work() && !scores.is_empty() {
                 connected = batcher.top_up_scores(&mut scores, |w| match w {
                     Work::Generate(g) => {
                         sched.submit(g);
                         false
                     }
                     Work::Stats(tx) => {
-                        let _ = tx.send(Ok(snapshot(&sched, &*be)));
+                        let _ = tx.send(Ok(snapshot(&sched, &*be, draining)));
                         true
                     }
                     Work::Score(_) => unreachable!("scoring work is batched, never forwarded"),
                 });
             }
         }
-        if !connected && !sched.has_work() && scores.is_empty() {
+        if (!connected || draining) && !sched.has_work() && scores.is_empty() {
             break;
         }
         // Scoring sweeps lane 0 over a full window, which on a metered
@@ -406,7 +486,7 @@ pub fn run_engine(batcher: Batcher, be: &mut dyn Backend) {
 
 /// The stats answer, built on the engine thread so scheduler queues and
 /// backend counters are read coherently between sweeps.
-fn snapshot(sched: &GenScheduler, be: &dyn Backend) -> StatsSnapshot {
+fn snapshot(sched: &GenScheduler, be: &dyn Backend, draining: bool) -> StatsSnapshot {
     StatsSnapshot {
         lanes: sched.lanes(),
         active: sched.active(),
@@ -418,6 +498,7 @@ fn snapshot(sched: &GenScheduler, be: &dyn Backend) -> StatsSnapshot {
             .collect(),
         kv: be.kv_stats(),
         spec: be.spec_stats(),
+        draining,
     }
 }
 
@@ -425,9 +506,15 @@ fn snapshot(sched: &GenScheduler, be: &dyn Backend) -> StatsSnapshot {
 /// spent, spawning a session thread per connection. Each session gets a
 /// handle with a fresh client id: generation admission rotates across
 /// clients, not raw request order.
-fn accept_loop(front: FrontEnd, handle: BatcherHandle) {
+fn accept_loop(front: FrontEnd, handle: BatcherHandle, stop: Arc<AtomicBool>) {
     let mut served = 0usize;
     for stream in front.listener.incoming() {
+        // checked after each accept returns: the engine's shutdown path
+        // pokes the listener with a throwaway connection precisely so a
+        // `max_conns: None` loop parked in `incoming()` gets here
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
         match stream {
             Ok(s) => {
                 let h = handle.connection();
@@ -465,15 +552,27 @@ pub fn serve_fronts(
 ) -> Result<Arc<ServeMetrics>> {
     let (batcher, handle) = Batcher::new(cfg);
     let metrics = batcher.metrics().clone();
+    let stop = Arc::new(AtomicBool::new(false));
+    // recorded before the listeners move into their threads: a drain can
+    // end the engine while `max_conns: None` accept loops are still
+    // parked in `incoming()`, and the only portable way to unpark them
+    // is a throwaway connection to their own address
+    let wake_addrs: Vec<std::net::SocketAddr> =
+        fronts.iter().filter_map(|f| f.listener.local_addr().ok()).collect();
     let accepts: Vec<std::thread::JoinHandle<()>> = fronts
         .into_iter()
         .map(|front| {
             let h = handle.clone();
-            std::thread::spawn(move || accept_loop(front, h))
+            let s = stop.clone();
+            std::thread::spawn(move || accept_loop(front, h, s))
         })
         .collect();
     drop(handle); // the engine loop's exit condition is the conn handles
     run_engine(batcher, be);
+    stop.store(true, Ordering::SeqCst);
+    for addr in wake_addrs {
+        let _ = TcpStream::connect(addr);
+    }
     for a in accepts {
         a.join().ok();
     }

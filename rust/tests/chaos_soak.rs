@@ -35,7 +35,7 @@
 //! correctly-ordered span timelines — the structural invariants are
 //! asserted unscaled.
 
-use hbllm::coordinator::{http, serve, BatcherConfig, SloSpec};
+use hbllm::coordinator::{http, serve, BatcherConfig, RouterConfig, SloSpec};
 use hbllm::engine::{Backend, NativeBackend, PackedModel, SpecConfig};
 use hbllm::model::testing::micro_weights;
 use hbllm::util::json::Json;
@@ -1011,4 +1011,176 @@ fn undersized_kv_arena_leaks_no_blocks() {
     assert!(hwm <= 2.0, "high-water {hwm} exceeds the 2-block arena");
     let st = be.kv_stats().expect("metered backend");
     assert_eq!(st.free_blocks, st.total_blocks, "KvBlockPool leaked blocks");
+}
+
+// ---------------------------------------------------------------------------
+// Router chaos: replica death + replacement under a live wave
+// ---------------------------------------------------------------------------
+
+mod router_util;
+
+/// Re-exec entry point for the worker processes the router wave spawns
+/// (see `tests/router_util`); a no-op under a normal test run.
+#[test]
+fn worker_process_entry() {
+    router_util::worker_entry_if_requested();
+}
+
+/// One routed TCP generation that tolerates the documented failure mode:
+/// `Ok(tokens)` for a clean finish, `Err(line)` carrying the terminal
+/// error line otherwise (callers pin it to `err aborted`).
+fn routed_gen(addr: SocketAddr, line_out: &str) -> Result<usize, String> {
+    let t = router_util::tcp_transcript(addr, line_out);
+    let last = t.lines().last().unwrap_or("").to_string();
+    match last.strip_prefix("done ") {
+        Some(n) => Ok(n.parse().unwrap()),
+        None => Err(last),
+    }
+}
+
+/// Chaos for the router tier, against real worker processes: a mixed
+/// TCP + SSE wave is in flight when one replica is SIGKILLed, and a
+/// replacement is enrolled through `POST /v1/workers` afterwards.
+/// Conservation laws, not schedules: every client observes exactly one
+/// terminal and the only failure any client may see is the documented
+/// retryable `aborted`; the replacement really takes sticky traffic;
+/// surviving workers end balanced (`started == finished`) and hand back
+/// their whole KV arena; the router's exposition agrees with its fleet
+/// stats once the connection gauges quiesce.
+#[test]
+fn router_chaos_replica_death_and_replacement_conserve_requests() {
+    let envs = [("HBLLM_TEST_WORKER_SEED", "63")];
+    let mut victim = router_util::spawn_worker(&envs);
+    let w1 = router_util::spawn_worker(&envs);
+    let victim_addr = victim.addr();
+    let cfg = RouterConfig::default();
+    let (rt_tcp, rt_http) =
+        router_util::start_router(vec![victim_addr.clone(), w1.addr()], cfg);
+    router_util::wait_for_stats(rt_http, Duration::from_secs(5), |j| {
+        j.get("healthy") == Some(&Json::Num(2.0))
+    });
+    let fleet = [victim_addr.clone(), w1.addr()];
+    let to_victim = router_util::find_sticky_prompt(&fleet, 0, cfg.sticky_prefix);
+    let to_survivor = router_util::find_sticky_prompt(&fleet, 1, cfg.sticky_prefix);
+
+    // wave 1: sticky traffic to both replicas on both fronts, plus one
+    // client that vanishes mid-stream, while the victim dies under it
+    let mut tcp_clients = Vec::new();
+    for i in 0..8usize {
+        let prompt = if i % 2 == 0 { to_victim.clone() } else { to_survivor.clone() };
+        tcp_clients
+            .push(std::thread::spawn(move || routed_gen(rt_tcp, &format!("gen 3 0 0 {prompt}\n"))));
+    }
+    let mut sse_clients = Vec::new();
+    for i in 0..4usize {
+        let prompt = if i % 2 == 0 { to_victim.clone() } else { to_survivor.clone() };
+        sse_clients.push(std::thread::spawn(move || {
+            read_sse(rt_http, &format!(r#"{{"prompt": "{prompt}", "max_new": 3}}"#), Duration::ZERO)
+        }));
+    }
+    let vanish_prompt = to_victim.clone();
+    let vanisher = std::thread::spawn(move || {
+        tcp_gen(rt_tcp, &format!("gen 3 0 0 {vanish_prompt}\n"), Some(1), Duration::ZERO)
+    });
+    std::thread::sleep(Duration::from_millis(4));
+    victim.kill(); // SIGKILL, somewhere inside the wave
+
+    let (mut done, mut aborted) = (0u64, 0u64);
+    for c in tcp_clients {
+        match c.join().expect("tcp client panicked") {
+            Ok(n) => {
+                assert_eq!(n, 3);
+                done += 1;
+            }
+            Err(term) => {
+                assert_eq!(term, "err aborted", "undocumented TCP failure leaked to a client");
+                aborted += 1;
+            }
+        }
+    }
+    for c in sse_clients {
+        let events = c.join().expect("sse client panicked");
+        match events.last().map(|(e, d)| (e.as_str(), d.as_str())) {
+            Some(("done", "3")) => done += 1,
+            Some(("error", "aborted")) => aborted += 1,
+            other => panic!("undocumented SSE terminal {other:?} ({events:?})"),
+        }
+    }
+    assert!(vanisher.join().expect("vanisher panicked").is_none());
+    assert_eq!(done + aborted, 12, "a client lost its terminal");
+
+    // the fleet heals: the replacement enrolls through the management
+    // endpoint, is immediately placeable, and takes its sticky traffic
+    let w2 = router_util::spawn_worker(&envs);
+    let (st, body) =
+        http_request(rt_http, "POST", "/v1/workers", &format!(r#"{{"add": "{}"}}"#, w2.addr()));
+    assert_eq!(st, 200, "worker enrollment failed: {body}");
+    assert_eq!(
+        Json::parse(&body).unwrap().get("healthy"),
+        Some(&Json::Num(2.0)),
+        "fleet after enrollment should be the survivor + the replacement: {body}"
+    );
+    let healthy = [w1.addr(), w2.addr()];
+    let to_new = router_util::find_sticky_prompt(&healthy, 1, cfg.sticky_prefix);
+    for i in 0..4usize {
+        let r = routed_gen(rt_tcp, &format!("gen 3 0 0 {to_new}\n"));
+        assert_eq!(r, Ok(3), "post-heal request {i} failed");
+    }
+    let started = |j: &Json| j.at(&["totals", "requests_started"]).and_then(Json::as_f64).unwrap();
+    assert_eq!(
+        started(&router_util::stats(w2.http)),
+        4.0,
+        "sticky wave 2 missed the replacement worker"
+    );
+
+    // router accounting: gauges quiesce (the scrape itself is the one
+    // live HTTP connection), the dead replica is down, the exposition
+    // and the fleet stats tell the same story
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let (st, text) = http_request(rt_http, "GET", "/v1/metrics", "");
+        assert_eq!(st, 200);
+        let m = parse_metrics(&text);
+        if metric(&m, "hbllm_router_connections_active{front=\"tcp\"}") == 0.0
+            && metric(&m, "hbllm_router_connections_active{front=\"http\"}") == 1.0
+        {
+            assert_eq!(
+                metric(&m, &format!("hbllm_router_worker_up{{worker=\"{victim_addr}\"}}")),
+                0.0
+            );
+            assert_eq!(
+                metric(&m, &format!("hbllm_router_worker_up{{worker=\"{}\"}}", w1.addr())),
+                1.0
+            );
+            assert_eq!(
+                metric(&m, &format!("hbllm_router_worker_up{{worker=\"{}\"}}", w2.addr())),
+                1.0
+            );
+            // requests: 8 + 1 vanisher + 4 post-heal on TCP, 4 SSE
+            assert_eq!(metric(&m, "hbllm_router_requests_total{front=\"tcp\"}"), 13.0);
+            assert_eq!(metric(&m, "hbllm_router_requests_total{front=\"http\"}"), 4.0);
+            // a replay is invisible to its client, so retries can never
+            // exceed the requests that were in flight around the kill
+            let retries = metric(&m, "hbllm_router_retries_total");
+            assert!(retries <= 13.0, "retry storm: {retries}");
+            let j = router_util::stats(rt_http);
+            assert_eq!(j.get("retries"), Some(&Json::Num(retries)));
+            assert_eq!(j.get("healthy"), Some(&Json::Num(2.0)));
+            break;
+        }
+        assert!(Instant::now() < deadline, "router connection gauges never quiesced");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // conservation at drain: each surviving worker balanced, whole
+    // arena back (the vanished client's generation still finishes
+    // server-side, so started == finished must converge on its own)
+    for w in [w1, w2] {
+        let addr = w.http;
+        router_util::wait_for_stats(addr, Duration::from_secs(5), |j| {
+            let t = |k: &str| j.at(&["totals", k]).and_then(Json::as_f64).unwrap_or(-1.0);
+            t("requests_started") >= 0.0 && t("requests_started") == t("requests_finished")
+        });
+        router_util::assert_clean_drain(w);
+    }
 }

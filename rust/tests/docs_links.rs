@@ -181,6 +181,14 @@ fn serving_docs_exist_and_are_linked() {
         "format=chrome",
         "\"latency\"",
         "id: 0",
+        "POST /v1/drain",
+        "\"draining\"",
+        "ok draining",
+        "no healthy workers",
+        "drain is not routed; drain workers directly",
+        "Router front-end",
+        "POST /v1/workers",
+        "\"retries\"",
     ] {
         assert!(api.contains(needle), "docs/API.md lost its {needle:?} coverage");
     }
@@ -195,6 +203,12 @@ fn serving_docs_exist_and_are_linked() {
         "HBLLM_KERNEL",
         "kernels_conformance",
         "bit-identity",
+        "Router tier",
+        "rendezvous",
+        "sticky_prefix",
+        "load_slack",
+        "router_failover",
+        "no healthy workers",
     ] {
         assert!(arch.contains(needle), "docs/ARCHITECTURE.md lost its {needle:?} coverage");
     }
@@ -217,8 +231,17 @@ fn serving_docs_exist_and_are_linked() {
         "HBLLM_SLO_SCALE",
         "INTERACTIVE_BURST",
         "Perfetto",
+        "hbllm_router_requests_total",
+        "hbllm_router_retries_total",
+        "hbllm_router_connections_active",
+        "hbllm_router_worker_up",
+        "router_chaos_replica_death_and_replacement_conserve_requests",
     ] {
         assert!(obs.contains(needle), "docs/OBSERVABILITY.md lost its {needle:?} coverage");
+    }
+    // the README advertises the multi-replica topology
+    for needle in ["router --workers", "/v1/drain", "docs/ARCHITECTURE.md#router-tier"] {
+        assert!(readme.contains(needle), "README.md lost its {needle:?} coverage");
     }
 }
 

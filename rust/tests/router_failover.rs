@@ -1,0 +1,638 @@
+//! Multi-process failover suite for the router tier (the tentpole's
+//! pinning tests). Every worker here is a REAL process — spawned by
+//! re-exec through `tests/router_util` — and the router runs over
+//! localhost TCP exactly as `hbllm router --workers …` deploys it.
+//!
+//! What is pinned:
+//!
+//! * **Transparency** — the byte streams a client sees through the
+//!   router (TCP line protocol and HTTP/SSE, greedy + speculative +
+//!   sampled + scoring + error paths) are identical to a direct worker
+//!   connection, `id:` lines included.
+//! * **Failover** — `SIGKILL` under two mid-flight streams surfaces the
+//!   documented retryable `aborted` on each (`docs/API.md` §Errors),
+//!   while a queued request that had produced no output replays
+//!   invisibly on a survivor (`hbllm_router_retries_total` counts it),
+//!   and later traffic keeps flowing.
+//! * **Stickiness** — requests sharing a prompt-prefix window land on
+//!   the worker [`rendezvous_pick`] predicts, concentrating that
+//!   worker's prefix-cache hits; the other replica sees nothing.
+//! * **Graceful drain** — a drained worker finishes active lanes,
+//!   returns every KV block, exits 0, and the router routes around it.
+//! * **Stats coherence** — `/v1/stats` under concurrent polling never
+//!   shows an incoherent snapshot, and flips to 503 once the engine is
+//!   gone.
+//!
+//! Teardown invariant everywhere: every gracefully-stopped worker must
+//! report `free == total` for its KV arena ([`assert_clean_drain`]).
+
+mod router_util;
+
+use hbllm::coordinator::{http, rendezvous_pick, serve, BatcherConfig, RouterConfig};
+use hbllm::engine::{Backend, NativeBackend, PackedModel};
+use hbllm::model::testing::synth_weights;
+use hbllm::util::json::Json;
+use router_util::*;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Re-exec entry point: a no-op under a normal test run, a full worker
+/// process when the harness spawns us with `HBLLM_TEST_WORKER=1`.
+#[test]
+fn worker_process_entry() {
+    router_util::worker_entry_if_requested();
+}
+
+// ---------------------------------------------------------------------------
+// Transparency: the router is invisible in the byte stream
+// ---------------------------------------------------------------------------
+
+#[test]
+fn router_front_is_byte_identical_to_a_direct_worker() {
+    let envs = [("HBLLM_TEST_WORKER_SEED", "41"), ("HBLLM_TEST_WORKER_SPEC_K", "2")];
+    let w0 = spawn_worker(&envs);
+    let w1 = spawn_worker(&envs);
+    let workers = vec![w0.addr(), w1.addr()];
+    let (rt_tcp, rt_http) = start_router(workers, RouterConfig::default());
+    wait_for_stats(rt_http, Duration::from_secs(5), |j| {
+        j.get("healthy") == Some(&Json::Num(2.0))
+    });
+
+    // Both workers share the model seed, so whichever replica the router
+    // places on, the bytes must match a direct w0 connection exactly.
+    // (prompt + max_new always fit the micro model's 12-position window)
+    let tcp_lines = [
+        "gen 5 0 0 ta kivo",        // greedy → the speculative path
+        "gen 4 0.8 12345 so lute",  // sampled with a pinned seed
+        "gen 0 0 0 ne",             // zero-token fast path
+        "prio batch gen 3 0 0 du pamo",
+        "prio interactive gen 4 0 0 remo",
+        "ppl ta kivo remo",         // scoring verb ({:.4} formatting)
+        "so lute pamo",             // legacy bare line scoring
+        "gen x",                    // usage error
+        "prio urgent gen 3 0 0 ta", // bad priority level
+    ];
+    for req in tcp_lines {
+        let line = format!("{req}\n");
+        let direct = tcp_transcript(w0.tcp, &line);
+        let routed = tcp_transcript(rt_tcp, &line);
+        assert!(!direct.is_empty(), "direct worker went silent for {req:?}");
+        assert_eq!(routed, direct, "TCP bytes diverged through the router for {req:?}");
+    }
+
+    // whole raw HTTP responses: status line, headers, SSE id: lines, all
+    let http_bodies = [
+        r#"{"prompt": "ta kivo", "max_new": 5}"#,
+        r#"{"prompt": "so", "max_new": 4, "temperature": 0.9, "seed": 7}"#,
+        "not json", // the worker's 400 relays verbatim
+    ];
+    for body in http_bodies {
+        let direct = sse_transcript(w0.http, body);
+        let routed = sse_transcript(rt_http, body);
+        assert_eq!(routed, direct, "HTTP bytes diverged through the router for {body:?}");
+    }
+
+    // the greedy requests really exercised speculation on the worker
+    let sj = stats(w0.http);
+    assert_eq!(sj.at(&["spec", "enabled"]), Some(&Json::Bool(true)));
+    assert!(
+        sj.at(&["spec", "drafted"]).and_then(Json::as_f64).unwrap() >= 1.0,
+        "speculative decoding never engaged"
+    );
+
+    // SSE ids through the router are contiguous from 0 (4 toks + done)
+    let raw = sse_transcript(rt_http, r#"{"prompt": "ne du", "max_new": 4}"#);
+    assert_eq!(sse_ids(&raw), vec![0, 1, 2, 3, 4], "router renumbered SSE ids:\n{raw}");
+
+    assert_clean_drain(w0);
+    assert_clean_drain(w1);
+}
+
+// ---------------------------------------------------------------------------
+// Fleet endpoints + fail-fast with an empty fleet
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_endpoints_account_the_fleet_and_requests_fail_fast_without_workers() {
+    let w = spawn_worker(&[("HBLLM_TEST_WORKER_SEED", "77")]);
+    let waddr = w.addr();
+    let (rt_tcp, rt_http) = start_router(vec![waddr.clone()], RouterConfig::default());
+    wait_for_stats(rt_http, Duration::from_secs(5), |j| {
+        j.get("healthy") == Some(&Json::Num(1.0))
+    });
+
+    // drain is a per-worker lifecycle verb, never routed
+    assert_eq!(
+        tcp_transcript(rt_tcp, "drain\n"),
+        "err drain is not routed; drain workers directly\n"
+    );
+    assert_eq!(
+        stats(w.http).get("draining"),
+        Some(&Json::Bool(false)),
+        "the router's refusal must not have touched the worker"
+    );
+
+    // one request per front so the counters move
+    let t = tcp_transcript(rt_tcp, "gen 2 0 0 ta\n");
+    assert!(t.ends_with("done 2\n"), "TCP gen failed: {t:?}");
+    let raw = sse_transcript(rt_http, r#"{"prompt": "so", "max_new": 2}"#);
+    assert!(raw.starts_with("HTTP/1.1 200 OK\r\n"), "SSE gen failed:\n{raw}");
+    assert_eq!(sse_ids(&raw), vec![0, 1, 2]);
+    let (st, body) = http_request(rt_http, "POST", "/v1/score", r#"{"texts": ["ta kivo"]}"#);
+    assert_eq!(st, 200, "routed scoring failed: {body}");
+    assert!(Json::parse(&body).unwrap().get("results").is_some());
+
+    // fleet stats and the router's own exposition agree
+    let j = stats(rt_http);
+    assert_eq!(j.get("healthy"), Some(&Json::Num(1.0)));
+    assert_eq!(j.at(&["requests", "tcp"]), Some(&Json::Num(1.0)));
+    assert_eq!(j.at(&["requests", "http"]), Some(&Json::Num(2.0)));
+    assert_eq!(j.get("retries"), Some(&Json::Num(0.0)));
+    let rows = j.get("workers").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].get("worker").and_then(Json::as_str), Some(waddr.as_str()));
+    assert_eq!(rows[0].get("up"), Some(&Json::Bool(true)));
+    assert_eq!(rows[0].get("draining"), Some(&Json::Bool(false)));
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        // connection gauges settle once the closed sessions unwind; the
+        // scrape's own connection holds the http gauge at exactly 1
+        let m = scrape(rt_http);
+        if metric(&m, "hbllm_router_connections_active{front=\"tcp\"}") == 0.0
+            && metric(&m, "hbllm_router_connections_active{front=\"http\"}") == 1.0
+        {
+            assert_eq!(metric(&m, "hbllm_router_requests_total{front=\"tcp\"}"), 1.0);
+            assert_eq!(metric(&m, "hbllm_router_requests_total{front=\"http\"}"), 2.0);
+            assert_eq!(metric(&m, "hbllm_router_retries_total"), 0.0);
+            assert_eq!(
+                metric(&m, &format!("hbllm_router_worker_up{{worker=\"{waddr}\"}}")),
+                1.0
+            );
+            break;
+        }
+        assert!(Instant::now() < deadline, "router connection gauges never settled: {m:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // fleet management: idempotent add, dead-address add, bad body
+    let (st, body) =
+        http_request(rt_http, "POST", "/v1/workers", &format!(r#"{{"add": "{waddr}"}}"#));
+    assert_eq!(st, 200);
+    assert_eq!(Json::parse(&body).unwrap().get("workers").unwrap().as_arr().unwrap().len(), 1);
+    let (st, body) = http_request(rt_http, "POST", "/v1/workers", r#"{"add": "127.0.0.1:1"}"#);
+    assert_eq!(st, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("workers").unwrap().as_arr().unwrap().len(), 2);
+    assert_eq!(j.get("healthy"), Some(&Json::Num(1.0)), "a dead address counted as healthy");
+    let (st, _) = http_request(rt_http, "POST", "/v1/workers", r#"{"nope": 1}"#);
+    assert_eq!(st, 400);
+    let (st, _) = http_request(rt_http, "GET", "/v1/workers", "");
+    assert_eq!(st, 200);
+    let (st, _) = http_request(rt_http, "GET", "/v1/generate", "");
+    assert_eq!(st, 405);
+    let (st, _) = http_request(rt_http, "GET", "/v1/nope", "");
+    assert_eq!(st, 404);
+
+    // empty fleet: fail fast with the documented error on every front
+    assert_clean_drain(w);
+    wait_for_stats(rt_http, Duration::from_secs(5), |j| {
+        j.get("healthy") == Some(&Json::Num(0.0))
+    });
+    assert_eq!(tcp_transcript(rt_tcp, "gen 2 0 0 ta\n"), "err no healthy workers\n");
+    assert_eq!(tcp_transcript(rt_tcp, "ppl ta kivo\n"), "err no healthy workers\n");
+    let (st, body) =
+        http_request(rt_http, "POST", "/v1/generate", r#"{"prompt": "x", "max_new": 1}"#);
+    assert_eq!(st, 503);
+    assert_eq!(
+        Json::parse(&body).unwrap().get("error").and_then(Json::as_str),
+        Some("no healthy workers")
+    );
+    let (st, _) = http_request(rt_http, "POST", "/v1/score", r#"{"texts": ["x"]}"#);
+    assert_eq!(st, 503);
+}
+
+// ---------------------------------------------------------------------------
+// Failover: replica death mid-stream
+// ---------------------------------------------------------------------------
+
+/// Read whatever is available until a read deadline passes; append to
+/// `acc`. Returns true on EOF. Raw reads (not line-framed) so a timeout
+/// can never discard a partially-read frame.
+#[cfg(unix)]
+fn slurp_until_stall(r: &mut BufReader<TcpStream>, acc: &mut String) -> bool {
+    let mut buf = [0u8; 4096];
+    loop {
+        match r.read(&mut buf) {
+            Ok(0) => return true,
+            Ok(n) => acc.push_str(std::str::from_utf8(&buf[..n]).expect("ASCII protocol")),
+            Err(_) => return false, // deadline: stream is stalled
+        }
+    }
+}
+
+#[cfg(unix)]
+fn has_terminal_line(acc: &str) -> bool {
+    acc.lines().any(|l| {
+        l.starts_with("done ")
+            || l.starts_with("err ")
+            || l == "event: done"
+            || l == "event: error"
+    })
+}
+
+/// The tentpole's failure semantics, against real process death:
+///
+/// * two streams (TCP + SSE) past their first token when the worker is
+///   SIGKILLed surface the documented retryable `aborted`;
+/// * a queued request with zero output replays invisibly on a survivor
+///   and its bytes match a direct survivor run;
+/// * the router marks the replica down, counts exactly one retry, and
+///   keeps serving.
+///
+/// The victim is frozen with SIGSTOP before the kill so "mid-stream" is
+/// verified, not raced: if either stream managed to finish before the
+/// freeze landed, the victim is thawed and the dance retries.
+#[cfg(unix)]
+#[test]
+fn worker_death_mid_stream_aborts_streams_and_replays_unstarted_requests() {
+    // a deliberately slower, longer-sequence shape than `micro`, so
+    // streams are reliably in flight when the freeze lands
+    let shape = [
+        ("HBLLM_TEST_WORKER_SEED", "7"),
+        ("HBLLM_TEST_WORKER_D", "48"),
+        ("HBLLM_TEST_WORKER_LAYERS", "4"),
+        ("HBLLM_TEST_WORKER_HEADS", "4"),
+        ("HBLLM_TEST_WORKER_DFF", "192"),
+        ("HBLLM_TEST_WORKER_SEQ", "160"),
+        ("HBLLM_TEST_WORKER_MAX_NEW", "150"),
+        ("HBLLM_TEST_WORKER_LANES", "2"),
+    ];
+    let mut victim = spawn_worker(&shape);
+    let survivor = spawn_worker(&shape);
+    let workers = vec![victim.addr(), survivor.addr()];
+    let cfg = RouterConfig::default();
+    let (rt_tcp, rt_http) = start_router(workers.clone(), cfg);
+    wait_for_stats(rt_http, Duration::from_secs(5), |j| {
+        j.get("healthy") == Some(&Json::Num(2.0))
+    });
+    // a prompt the router will stick to the victim — predicted through
+    // the same public functions the router's placement uses
+    let sticky = find_sticky_prompt(&workers, 0, cfg.sticky_prefix);
+
+    let mut frozen = None;
+    for _ in 0..40 {
+        // A: TCP stream through the router
+        let a = TcpStream::connect(rt_tcp).unwrap();
+        a.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        (&a).write_all(format!("gen 140 0.5 9 {sticky}\n").as_bytes()).unwrap();
+        let mut ar = BufReader::new(a.try_clone().unwrap());
+        // H: SSE stream through the router
+        let h = TcpStream::connect(rt_http).unwrap();
+        h.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        let hb = format!(
+            r#"{{"prompt": "{sticky}", "max_new": 140, "temperature": 0.5, "seed": 11}}"#
+        );
+        (&h).write_all(
+            format!(
+                "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{hb}",
+                hb.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut hr = BufReader::new(h.try_clone().unwrap());
+
+        // wait until BOTH streams have produced output, then freeze
+        let (mut a_text, mut h_text) = (String::new(), String::new());
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !(a_text.contains("tok ") && h_text.contains("event: tok")) {
+            slurp_until_stall(&mut ar, &mut a_text);
+            slurp_until_stall(&mut hr, &mut h_text);
+            assert!(
+                Instant::now() < deadline,
+                "streams never started: tcp={a_text:?} sse={h_text:?}"
+            );
+        }
+        signal_pid(victim.pid(), SIGSTOP);
+        // collect what was already in flight; if either stream reached a
+        // terminal frame the freeze was too late — thaw and retry
+        std::thread::sleep(Duration::from_millis(50));
+        slurp_until_stall(&mut ar, &mut a_text);
+        slurp_until_stall(&mut hr, &mut h_text);
+        if !has_terminal_line(&a_text) && !has_terminal_line(&h_text) {
+            frozen = Some((a, ar, a_text, h, hr, h_text));
+            break;
+        }
+        signal_pid(victim.pid(), SIGCONT);
+        // dropping a/h ends this attempt's router sessions client-side
+    }
+    let (a, mut ar, mut a_text, h, mut hr, mut h_text) =
+        frozen.expect("could not freeze the victim mid-stream in 40 attempts");
+
+    // B: sticky to the (frozen) victim — forwarded, zero frames produced
+    let bp = sticky.clone();
+    let b = std::thread::spawn(move || tcp_transcript(rt_tcp, &format!("gen 4 0 0 {bp}\n")));
+    std::thread::sleep(Duration::from_millis(300));
+
+    // real replica death (SIGKILL thaws and kills a stopped process)
+    victim.kill();
+
+    // A surfaces the documented retryable abort as its terminal line
+    a.set_read_timeout(Some(Duration::from_millis(250))).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !a_text.lines().any(|l| l == "err aborted") {
+        slurp_until_stall(&mut ar, &mut a_text);
+        assert!(Instant::now() < deadline, "TCP stream never aborted: {a_text:?}");
+    }
+    assert_eq!(a_text.lines().last(), Some("err aborted"), "abort was not terminal: {a_text:?}");
+    assert!(!a_text.lines().any(|l| l.starts_with("done ")));
+
+    // H gets the same abort as an SSE error frame, ids still contiguous
+    h.set_read_timeout(Some(Duration::from_millis(250))).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !slurp_until_stall(&mut hr, &mut h_text) {
+        assert!(Instant::now() < deadline, "SSE stream never closed: {h_text:?}");
+    }
+    let events = parse_events(&h_text);
+    assert_eq!(
+        events.last().map(|(e, d)| (e.as_str(), d.as_str())),
+        Some(("error", "aborted")),
+        "SSE stream did not abort:\n{h_text}"
+    );
+    assert!(events[..events.len() - 1].iter().all(|(e, _)| e == "tok"));
+    let ids = sse_ids(&h_text);
+    assert_eq!(ids.len(), events.len());
+    for (i, id) in ids.iter().enumerate() {
+        assert_eq!(*id, i as u64, "SSE ids lost monotonicity across the abort: {ids:?}");
+    }
+
+    // B replayed invisibly: same bytes as a direct run on the survivor
+    let bt = b.join().unwrap();
+    assert!(bt.ends_with("done 4\n"), "queued request did not survive the kill: {bt:?}");
+    assert!(!bt.contains("err "), "the replay leaked an error to the client: {bt:?}");
+    let direct = tcp_transcript(survivor.tcp, &format!("gen 4 0 0 {sticky}\n"));
+    assert_eq!(bt, direct, "replayed bytes diverged from a direct survivor run");
+
+    // router accounting: victim down, exactly one retry (B), fleet of 1
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let m = loop {
+        let m = scrape(rt_http);
+        if metric(&m, &format!("hbllm_router_worker_up{{worker=\"{}\"}}", workers[0])) == 0.0 {
+            break m;
+        }
+        assert!(Instant::now() < deadline, "router never marked the dead replica down");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert_eq!(metric(&m, &format!("hbllm_router_worker_up{{worker=\"{}\"}}", workers[1])), 1.0);
+    assert_eq!(
+        metric(&m, "hbllm_router_retries_total"),
+        1.0,
+        "exactly the one zero-frame request should have replayed"
+    );
+    let j = stats(rt_http);
+    assert_eq!(j.get("healthy"), Some(&Json::Num(1.0)));
+    assert_eq!(j.get("retries"), Some(&Json::Num(1.0)));
+
+    // queued traffic keeps draining on the survivor
+    for i in 0..3 {
+        let t = tcp_transcript(rt_tcp, &format!("gen 2 0 0 {sticky} {i}\n"));
+        assert!(t.ends_with("done 2\n"), "post-kill request {i} stalled: {t:?}");
+    }
+    assert_clean_drain(survivor);
+}
+
+// ---------------------------------------------------------------------------
+// Stickiness: prefix-sharing requests concentrate on one worker's cache
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sticky_prefix_routing_concentrates_cache_hits_on_one_worker() {
+    let envs = [("HBLLM_TEST_WORKER_SEED", "31"), ("HBLLM_TEST_WORKER_PREFIX_CACHE", "8")];
+    let w0 = spawn_worker(&envs);
+    let w1 = spawn_worker(&envs);
+    let workers = vec![w0.addr(), w1.addr()];
+    // an 8-byte sticky window == 2 KV blocks of shared prefix
+    let cfg = RouterConfig { sticky_prefix: 8, ..RouterConfig::default() };
+    let (rt_tcp, rt_http) = start_router(workers.clone(), cfg);
+    wait_for_stats(rt_http, Duration::from_secs(5), |j| {
+        j.get("healthy") == Some(&Json::Num(2.0))
+    });
+
+    let base = "ta kivo "; // exactly the sticky window
+    let predicted =
+        rendezvous_pick(hbllm::coordinator::prefix_hash(base.as_bytes(), 8), &workers).unwrap();
+
+    // seed the predicted worker's cache, then extend the prefix
+    let t = tcp_transcript(rt_tcp, &format!("gen 3 0 0 {base}\n"));
+    assert!(t.ends_with("done 3\n"), "seed request failed: {t:?}");
+    for ext in ["t", "s", "n"] {
+        let t = tcp_transcript(rt_tcp, &format!("gen 2 0 0 {base}{ext}\n"));
+        assert!(t.ends_with("done 2\n"), "extension {ext:?} failed: {t:?}");
+    }
+
+    let (hot, cold) = if predicted == 0 { (&w0, &w1) } else { (&w1, &w0) };
+    let tot = |j: &Json, k: &str| j.at(&["totals", k]).and_then(Json::as_f64).unwrap();
+    let hj = stats(hot.http);
+    let cj = stats(cold.http);
+    // all four requests landed where rendezvous predicted…
+    assert_eq!(tot(&hj, "requests_started"), 4.0, "sticky placement leaked off {predicted}");
+    assert_eq!(tot(&cj, "requests_started"), 0.0, "the cold worker saw sticky traffic");
+    // …so the seed misses once and every extension hits that cache
+    assert_eq!(tot(&hj, "prefix_cache_hits"), 3.0, "extensions missed the sticky cache");
+    assert_eq!(tot(&hj, "prefix_cache_misses"), 1.0);
+    assert_eq!(tot(&cj, "prefix_cache_hits"), 0.0);
+
+    assert_clean_drain(w0);
+    assert_clean_drain(w1);
+}
+
+// ---------------------------------------------------------------------------
+// Graceful drain: finish active lanes, return the arena, leave the fleet
+// ---------------------------------------------------------------------------
+
+#[test]
+fn graceful_drain_finishes_active_work_and_the_router_routes_around_it() {
+    let envs = [("HBLLM_TEST_WORKER_SEED", "57")];
+    let w0 = spawn_worker(&envs);
+    let w1 = spawn_worker(&envs);
+    let workers = vec![w0.addr(), w1.addr()];
+    let cfg = RouterConfig::default();
+    let (rt_tcp, rt_http) = start_router(workers.clone(), cfg);
+    wait_for_stats(rt_http, Duration::from_secs(5), |j| {
+        j.get("healthy") == Some(&Json::Num(2.0))
+    });
+
+    // a stream active on w0 while the drain lands: it must run to
+    // completion — drain closes admission, never active lanes
+    let w0_tcp = w0.tcp;
+    let active = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(w0_tcp).unwrap();
+        s.write_all(b"gen 5 0 0 ta kivo\n").unwrap();
+        let mut r = BufReader::new(s);
+        let mut out = String::new();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if r.read_line(&mut line).unwrap() == 0 {
+                break;
+            }
+            out.push_str(&line);
+            if line.starts_with("done ") || line.starts_with("err ") {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2)); // slow consumer
+        }
+        out
+    });
+    std::thread::sleep(Duration::from_millis(10));
+
+    let probe = w0.tcp;
+    let (free, total) = w0.drain_and_wait();
+    assert_eq!(free, total, "drained worker leaked KV blocks");
+    assert!(total > 0);
+    let transcript = active.join().unwrap();
+    assert!(
+        transcript.ends_with("done 5\n"),
+        "active stream did not finish under drain: {transcript:?}"
+    );
+    // exit was clean and complete: the port no longer accepts
+    assert!(TcpStream::connect(probe).is_err(), "drained worker still accepting connections");
+
+    // the router noticed and placement routes around the drained worker
+    let j = wait_for_stats(rt_http, Duration::from_secs(5), |j| {
+        j.get("healthy") == Some(&Json::Num(1.0))
+    });
+    let rows = j.get("workers").unwrap().as_arr().unwrap();
+    let row = rows
+        .iter()
+        .find(|r| r.get("worker").and_then(Json::as_str) == Some(workers[0].as_str()))
+        .expect("drained worker still listed");
+    assert!(
+        row.get("up") == Some(&Json::Bool(false))
+            || row.get("draining") == Some(&Json::Bool(true)),
+        "fleet stats still show the drained worker placeable: {row}"
+    );
+
+    // sticky-to-w0 traffic keeps flowing, failed over to w1
+    let sticky = find_sticky_prompt(&workers, 0, cfg.sticky_prefix);
+    let t = tcp_transcript(rt_tcp, &format!("gen 3 0 0 {sticky}\n"));
+    assert!(t.ends_with("done 3\n"), "traffic stalled after a graceful drain: {t:?}");
+    let started = stats(w1.http).at(&["totals", "requests_started"]).and_then(Json::as_f64);
+    assert!(started.unwrap() >= 1.0, "the survivor never saw the failed-over request");
+
+    assert_clean_drain(w1);
+}
+
+// ---------------------------------------------------------------------------
+// /v1/stats coherence under concurrent polling + the 503 engine-down path
+// ---------------------------------------------------------------------------
+
+/// In-process server (no router): hammer `/v1/stats` from several
+/// keep-alive connections while generations run, asserting every
+/// response is internally coherent, then pin the endpoint's 503 once
+/// `POST /v1/drain` has taken the engine down.
+#[test]
+fn stats_stay_coherent_under_concurrent_polling_then_503_when_engine_gone() {
+    let weights = synth_weights(21, 16, 2, 2, 32, 12);
+    let mut be =
+        NativeBackend::with_threads(PackedModel::from_weights(&weights, true).unwrap(), 1, 1);
+    be.set_lanes(2);
+    let block_len = 4usize;
+    let blocks = 2 * hbllm::engine::paged::blocks_for(be.seq(), block_len);
+    be.set_kv_blocks(Some(blocks), Some(block_len));
+    let (http_l, http_addr) = serve::bind("127.0.0.1:0").unwrap();
+
+    const GENS: usize = 4;
+    const POLLERS: usize = 3;
+    const POLLS: usize = 25;
+    let supervisor = std::thread::spawn(move || {
+        let mut threads = Vec::new();
+        for i in 0..GENS {
+            threads.push(std::thread::spawn(move || {
+                let body = format!(r#"{{"prompt": "ta kivo {i}", "max_new": 3}}"#);
+                let raw = sse_transcript(http_addr, &body);
+                let events = parse_events(&raw);
+                assert_eq!(
+                    events.last().map(|(e, d)| (e.as_str(), d.as_str())),
+                    Some(("done", "3")),
+                    "generation under polling failed:\n{raw}"
+                );
+            }));
+        }
+        for _ in 0..POLLERS {
+            threads.push(std::thread::spawn(move || {
+                let s = TcpStream::connect(http_addr).unwrap();
+                let mut reader = BufReader::new(s.try_clone().unwrap());
+                for _ in 0..POLLS {
+                    (&s).write_all(b"GET /v1/stats HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+                    let (status, body) = read_framed(&mut reader);
+                    assert_eq!(status, 200);
+                    let j = Json::parse(&body).unwrap();
+                    let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap();
+                    // a snapshot is taken atomically on the engine
+                    // thread: queued must equal the per-client depths,
+                    // active fit the lanes, and the KV ledger add up
+                    assert!(num("active") <= num("lanes"), "active lanes overflow: {body}");
+                    let depth_sum: f64 = j
+                        .get("clients")
+                        .and_then(Json::as_arr)
+                        .unwrap()
+                        .iter()
+                        .map(|c| c.get("depth").and_then(Json::as_f64).unwrap())
+                        .sum();
+                    assert_eq!(num("queued"), depth_sum, "queued != client depths: {body}");
+                    let free = j.at(&["kv", "free_blocks"]).and_then(Json::as_f64).unwrap();
+                    let total = j.at(&["kv", "total_blocks"]).and_then(Json::as_f64).unwrap();
+                    assert_eq!(total, blocks as f64);
+                    assert!(free <= total, "KV ledger overflow: {body}");
+                    // every active lane holds at least one block
+                    assert!(total - free >= num("active"), "active lanes without KV: {body}");
+                    assert_eq!(j.get("draining"), Some(&Json::Bool(false)));
+                    let ts = |k: &str| j.at(&["totals", k]).and_then(Json::as_f64).unwrap();
+                    assert!(ts("requests_started") >= ts("requests_finished"));
+                }
+            }));
+        }
+        for t in threads {
+            t.join().expect("stats-coherence client panicked");
+        }
+
+        // the 503 path, on one keep-alive connection: drain, then poll
+        // the same endpoint until the engine is gone
+        let s = TcpStream::connect(http_addr).unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        (&s).write_all(b"POST /v1/drain HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n")
+            .unwrap();
+        let (status, body) = read_framed(&mut reader);
+        assert_eq!(status, 200, "drain refused: {body}");
+        assert_eq!(Json::parse(&body).unwrap().get("draining"), Some(&Json::Bool(true)));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            (&s).write_all(b"GET /v1/stats HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+            let (status, body) = read_framed(&mut reader);
+            if status == 503 {
+                assert!(
+                    Json::parse(&body).unwrap().get("error").is_some(),
+                    "503 without an error body: {body}"
+                );
+                break;
+            }
+            // a pre-exit snapshot may still answer — it must say so
+            assert_eq!(status, 200);
+            assert_eq!(Json::parse(&body).unwrap().get("draining"), Some(&Json::Bool(true)));
+            assert!(Instant::now() < deadline, "stats never surfaced the engine-down 503");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    });
+
+    serve::serve_fronts(
+        vec![http::HttpConn::front_end(http_l, Some(GENS + POLLERS + 1))],
+        &mut be,
+        BatcherConfig::default(),
+    )
+    .unwrap();
+    supervisor.join().unwrap();
+    let st = be.kv_stats().expect("metered backend");
+    assert_eq!(st.free_blocks, st.total_blocks, "stats test leaked KV blocks");
+}

@@ -1,0 +1,386 @@
+//! Shared multi-process fleet harness for the router test suites
+//! (`tests/router_failover.rs`, `tests/chaos_soak.rs`).
+//!
+//! Workers are REAL processes: each test binary re-execs itself
+//! (`std::env::current_exe()`) with `HBLLM_TEST_WORKER=1`, which makes
+//! the `worker_process_entry` test in that binary run a full
+//! `serve_fronts` server instead of returning immediately. The child
+//! announces its bound ports on stdout (`worker tcp=A http=B`), serves
+//! until it is drained (`POST /v1/drain`) or killed, and — on a graceful
+//! exit — prints its final KV arena occupancy so the parent can assert
+//! `free == total` on every worker at teardown.
+//!
+//! The router itself runs in-process (it is the system under test and
+//! its state is asserted through its own `/v1/stats` + `/v1/metrics`
+//! endpoints), while every worker lives in its own process so `SIGSTOP`
+//! / `SIGKILL` exercise real replica death, not a simulation.
+#![allow(dead_code)]
+
+use hbllm::coordinator::{
+    http, prefix_hash, rendezvous_pick, run_router, serve, BatcherConfig, RouterConfig,
+};
+use hbllm::engine::{Backend, NativeBackend, PackedModel, SpecConfig};
+use hbllm::model::testing::synth_weights;
+use hbllm::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// The worker process body
+// ---------------------------------------------------------------------------
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The body of the re-exec'd worker process. Call this from a `#[test]`
+/// named `worker_process_entry` in each test binary that spawns workers;
+/// without `HBLLM_TEST_WORKER` in the environment it is a no-op, so the
+/// entry passes vacuously during a normal test run.
+///
+/// Model shape, lanes, spec and cache knobs come from
+/// `HBLLM_TEST_WORKER_*` variables (defaults mirror `micro_weights`).
+/// The KV arena is always metered, sized to the worst case
+/// (`lanes * blocks_for(seq)`), so a clean drain must return every block.
+pub fn worker_entry_if_requested() {
+    if std::env::var("HBLLM_TEST_WORKER").is_err() {
+        return;
+    }
+    let seed = env_u64("HBLLM_TEST_WORKER_SEED", 91);
+    let d = env_u64("HBLLM_TEST_WORKER_D", 16) as usize;
+    let layers = env_u64("HBLLM_TEST_WORKER_LAYERS", 2) as usize;
+    let heads = env_u64("HBLLM_TEST_WORKER_HEADS", 2) as usize;
+    let dff = env_u64("HBLLM_TEST_WORKER_DFF", 32) as usize;
+    let seq = env_u64("HBLLM_TEST_WORKER_SEQ", 12) as usize;
+    let lanes = env_u64("HBLLM_TEST_WORKER_LANES", 2) as usize;
+    let spec_k = env_u64("HBLLM_TEST_WORKER_SPEC_K", 0) as usize;
+    let prefix_cache = env_u64("HBLLM_TEST_WORKER_PREFIX_CACHE", 0) as usize;
+    let max_new_cap = env_u64("HBLLM_TEST_WORKER_MAX_NEW", 256) as usize;
+
+    let w = synth_weights(seed, d, layers, heads, dff, seq);
+    let mut be = NativeBackend::with_threads(PackedModel::from_weights(&w, true).unwrap(), 1, 1);
+    be.set_lanes(lanes);
+    let block_len = 4usize;
+    let blocks = lanes * hbllm::engine::paged::blocks_for(be.seq(), block_len);
+    be.set_kv_blocks(Some(blocks), Some(block_len));
+    let spec = be.set_spec(SpecConfig::with_k(spec_k));
+
+    let (tcp_l, tcp_addr) = serve::bind("127.0.0.1:0").unwrap();
+    let (http_l, http_addr) = serve::bind("127.0.0.1:0").unwrap();
+    // the parent scans stdout for this line to learn our ports
+    println!("worker tcp={tcp_addr} http={http_addr}");
+    let _ = std::io::stdout().flush();
+
+    serve::serve_fronts(
+        vec![serve::FrontEnd::line(tcp_l, None), http::HttpConn::front_end(http_l, None)],
+        &mut be,
+        BatcherConfig { spec, prefix_cache, max_new_cap, ..BatcherConfig::default() },
+    )
+    .unwrap();
+
+    // graceful exit: report the arena so the parent can assert free==total
+    let st = be.kv_stats().expect("worker backend is KV-metered");
+    println!("worker kv free={} total={}", st.free_blocks, st.total_blocks);
+    let _ = std::io::stdout().flush();
+}
+
+// ---------------------------------------------------------------------------
+// Spawning and steering worker processes
+// ---------------------------------------------------------------------------
+
+/// One worker process plus the stdout pipe the harness reads its
+/// announcements from.
+pub struct Worker {
+    pub child: Child,
+    pub tcp: SocketAddr,
+    pub http: SocketAddr,
+    reader: BufReader<ChildStdout>,
+}
+
+/// Re-exec the current test binary as a worker (see
+/// [`worker_entry_if_requested`]) and block until it announces its ports.
+pub fn spawn_worker(envs: &[(&str, &str)]) -> Worker {
+    let exe = std::env::current_exe().expect("current test binary");
+    let mut cmd = Command::new(exe);
+    // --nocapture: libtest must not swallow the child's address line
+    cmd.args(["worker_process_entry", "--exact", "--test-threads=1", "--nocapture"])
+        .env("HBLLM_TEST_WORKER", "1")
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null());
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    let mut child = cmd.spawn().expect("spawning worker process");
+    let mut reader = BufReader::new(child.stdout.take().expect("worker stdout piped"));
+    let mut line = String::new();
+    let (tcp, http) = loop {
+        line.clear();
+        if reader.read_line(&mut line).expect("reading worker stdout") == 0 {
+            panic!("worker exited before announcing its ports");
+        }
+        if let Some(rest) = line.trim_end().strip_prefix("worker tcp=") {
+            let (t, h) = rest.split_once(" http=").expect("worker address line shape");
+            break (t.parse().unwrap(), h.parse().unwrap());
+        }
+    };
+    Worker { child, tcp, http, reader }
+}
+
+impl Worker {
+    pub fn http_url(&self) -> String {
+        format!("http://{}", self.http)
+    }
+
+    /// The address string the router knows this worker by — feed the
+    /// same strings to [`rendezvous_pick`] to predict placement.
+    pub fn addr(&self) -> String {
+        self.http.to_string()
+    }
+
+    pub fn pid(&self) -> u32 {
+        self.child.id()
+    }
+
+    /// SIGKILL — abrupt replica death, no goodbye.
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+
+    /// Drain gracefully (`POST /v1/drain`), wait for a clean exit, and
+    /// return the worker's final KV arena as `(free, total)`. Panics if
+    /// the worker exits non-zero or never reports its arena.
+    pub fn drain_and_wait(mut self) -> (u64, u64) {
+        let _ = http::client_drain(&self.http_url());
+        let mut line = String::new();
+        let mut kv = None;
+        loop {
+            line.clear();
+            match self.reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+            if let Some(rest) = line.trim_end().strip_prefix("worker kv free=") {
+                let (free, total) = rest.split_once(" total=").expect("worker kv line shape");
+                kv = Some((free.parse().unwrap(), total.parse().unwrap()));
+            }
+        }
+        let status = self.child.wait().expect("waiting for drained worker");
+        assert!(status.success(), "drained worker exited with {status:?}");
+        kv.expect("worker never reported its KV arena")
+    }
+}
+
+/// Drain a worker and assert its arena came back whole — the teardown
+/// every fleet test ends with.
+pub fn assert_clean_drain(w: Worker) {
+    let addr = w.addr();
+    let (free, total) = w.drain_and_wait();
+    assert!(total > 0, "worker {addr} had no KV arena");
+    assert_eq!(free, total, "worker {addr} leaked KV blocks at drain");
+}
+
+#[cfg(unix)]
+pub fn signal_pid(pid: u32, sig: i32) {
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    let rc = unsafe { kill(pid as i32, sig) };
+    assert_eq!(rc, 0, "kill({pid}, {sig}) failed");
+}
+
+#[cfg(any(target_os = "linux", target_os = "android"))]
+pub const SIGSTOP: i32 = 19;
+#[cfg(any(target_os = "linux", target_os = "android"))]
+pub const SIGCONT: i32 = 18;
+#[cfg(all(unix, not(any(target_os = "linux", target_os = "android"))))]
+pub const SIGSTOP: i32 = 17; // BSD / macOS numbering
+#[cfg(all(unix, not(any(target_os = "linux", target_os = "android"))))]
+pub const SIGCONT: i32 = 19;
+
+// ---------------------------------------------------------------------------
+// The router under test
+// ---------------------------------------------------------------------------
+
+/// Start a router over `workers` on ephemeral ports; returns
+/// `(tcp_addr, http_addr)`. The router thread runs for the remainder of
+/// the test process (its listeners have no connection budget), which is
+/// exactly the CLI deployment shape.
+pub fn start_router(workers: Vec<String>, cfg: RouterConfig) -> (SocketAddr, SocketAddr) {
+    let (tcp_l, tcp_addr) = serve::bind("127.0.0.1:0").unwrap();
+    let (http_l, http_addr) = serve::bind("127.0.0.1:0").unwrap();
+    std::thread::spawn(move || {
+        run_router(Some((tcp_l, None)), Some((http_l, None)), workers, cfg).unwrap();
+    });
+    (tcp_addr, http_addr)
+}
+
+/// Search prompts until one's sticky hash lands on `workers[target]` —
+/// placement prediction through the same public functions the router
+/// uses, so the tests and the router cannot drift apart.
+pub fn find_sticky_prompt(workers: &[String], target: usize, sticky_prefix: usize) -> String {
+    // fixed-width so the prompt length never depends on how many
+    // candidates were rejected (micro workers only have 12 positions)
+    for i in 0u64..1000 {
+        let p = format!("ta kv {i:03}");
+        if rendezvous_pick(prefix_hash(p.as_bytes(), sticky_prefix), workers) == Some(target) {
+            return p;
+        }
+    }
+    panic!("no sticky prompt for worker {target} in 1000 candidates")
+}
+
+// ---------------------------------------------------------------------------
+// Wire helpers (framing identical to tests/chaos_soak.rs)
+// ---------------------------------------------------------------------------
+
+/// Read one `Content-Length`-framed HTTP response off `reader`.
+pub fn read_framed(reader: &mut BufReader<TcpStream>) -> (u16, String) {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("bad status line {line:?}"))
+        .parse()
+        .unwrap();
+    let mut clen = 0usize;
+    loop {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let t = line.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        let low = t.to_ascii_lowercase();
+        if let Some(v) = low.strip_prefix("content-length:") {
+            clen = v.trim().parse().unwrap();
+        }
+    }
+    let mut body = vec![0u8; clen];
+    reader.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}
+
+/// One framed HTTP exchange on its own connection.
+pub fn http_request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(
+            format!(
+                "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    let mut reader = BufReader::new(stream);
+    read_framed(&mut reader)
+}
+
+/// `GET /v1/stats`, parsed.
+pub fn stats(addr: SocketAddr) -> Json {
+    let (status, body) = http_request(addr, "GET", "/v1/stats", "");
+    assert_eq!(status, 200, "stats endpoint failed: {body}");
+    Json::parse(&body).expect("stats is JSON")
+}
+
+/// Poll `GET /v1/stats` until `pred` holds (or panic after `timeout`).
+pub fn wait_for_stats(addr: SocketAddr, timeout: Duration, pred: impl Fn(&Json) -> bool) -> Json {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let j = stats(addr);
+        if pred(&j) {
+            return j;
+        }
+        assert!(Instant::now() < deadline, "stats condition never held; last: {j}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// One TCP line-protocol exchange: send `request` (must end in `\n`),
+/// return the raw response bytes through the terminal line
+/// (`done …` / `err …` / `ppl …`). Raw so byte-identity can be asserted.
+pub fn tcp_transcript(addr: SocketAddr, request: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(request.as_bytes()).unwrap();
+    let mut reader = BufReader::new(s);
+    let mut out = String::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line).unwrap() == 0 {
+            break;
+        }
+        out.push_str(&line);
+        let t = line.trim_end();
+        if t.starts_with("done ") || t.starts_with("err ") || t.starts_with("ppl ") {
+            break;
+        }
+    }
+    out
+}
+
+/// One `POST /v1/generate`, returning the ENTIRE raw response — status
+/// line, headers, and SSE frames with their `id:` lines — read to EOF.
+pub fn sse_transcript(addr: SocketAddr, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(
+        format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    let mut out = String::new();
+    BufReader::new(s).read_to_string(&mut out).unwrap();
+    out
+}
+
+/// Parse an SSE body into (event, data) pairs.
+pub fn parse_events(body: &str) -> Vec<(String, String)> {
+    let mut events = Vec::new();
+    let mut ev = String::new();
+    for line in body.lines() {
+        if let Some(e) = line.strip_prefix("event: ") {
+            ev = e.to_string();
+        } else if let Some(d) = line.strip_prefix("data: ") {
+            events.push((ev.clone(), d.to_string()));
+        }
+    }
+    events
+}
+
+/// The `id:` sequence of an SSE transcript.
+pub fn sse_ids(body: &str) -> Vec<u64> {
+    body.lines().filter_map(|l| l.strip_prefix("id: ")).map(|v| v.parse().unwrap()).collect()
+}
+
+/// Parse Prometheus text exposition into name{labels} -> value.
+pub fn parse_metrics(text: &str) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        if line.starts_with('#') || line.is_empty() {
+            continue;
+        }
+        if let Some((key, val)) = line.rsplit_once(' ') {
+            out.insert(key.to_string(), val.parse().unwrap_or(f64::NAN));
+        }
+    }
+    out
+}
+
+pub fn metric(m: &BTreeMap<String, f64>, key: &str) -> f64 {
+    *m.get(key).unwrap_or(&0.0)
+}
+
+/// Scrape an HTTP endpoint's `/v1/metrics`, parsed.
+pub fn scrape(addr: SocketAddr) -> BTreeMap<String, f64> {
+    let (status, body) = http_request(addr, "GET", "/v1/metrics", "");
+    assert_eq!(status, 200);
+    parse_metrics(&body)
+}
